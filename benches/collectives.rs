@@ -1,0 +1,45 @@
+//! Perf bench: ring collective throughput over the in-memory channels —
+//! the trainer's DP-reduction substrate. Run via `cargo bench --bench collectives`.
+
+use std::thread;
+use std::time::Instant;
+
+use lga_mpp::collective::ring_group;
+
+fn bench_all_reduce(n: usize, len: usize, iters: usize) -> f64 {
+    let comms = ring_group(n);
+    let handles: Vec<_> = comms
+        .into_iter()
+        .map(|mut c| {
+            thread::spawn(move || {
+                let mut d = vec![1.0f32; len];
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    c.all_reduce(&mut d);
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).fold(0.0, f64::max)
+}
+
+fn main() {
+    println!("{:>6} {:>12} {:>12} {:>12}", "ranks", "elements", "ms/op", "GB/s eff");
+    for n in [2usize, 4, 8] {
+        for len in [1 << 14, 1 << 18, 1 << 22] {
+            let iters = if len >= 1 << 22 { 5 } else { 20 };
+            let secs = bench_all_reduce(n, len, iters);
+            // Effective algorithm bandwidth: 2·(n−1)/n·len·4 bytes moved
+            // per rank per op.
+            let bytes = 2.0 * (n as f64 - 1.0) / n as f64 * len as f64 * 4.0;
+            println!(
+                "{:>6} {:>12} {:>12.3} {:>12.2}",
+                n,
+                len,
+                secs * 1e3,
+                bytes / secs / 1e9
+            );
+        }
+    }
+}

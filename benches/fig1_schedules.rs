@@ -1,0 +1,94 @@
+//! Bench + regeneration for Figures 1, 2 and 3: simulate the four
+//! scheduling policies, compare measured bubble/overlap against the
+//! paper's closed forms, and time the simulator.
+//! Run via `cargo bench --bench fig1_schedules`.
+
+use std::time::Instant;
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::schedule::{layered_ga, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{simulate, CostTable};
+
+fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
+    let cfg = TrainConfig {
+        strategy: if partition { Strategy::Improved } else { Strategy::Baseline },
+        n_b,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu: 1.0,
+        offload: false,
+        partition,
+    };
+    CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
+}
+
+fn main() {
+    // --- Figure 1: reduction overlap ------------------------------------
+    let spec = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: false, data_parallel: true };
+    let c = costs(8, 1, 8, false);
+    let rs = simulate(&standard_ga(&spec), &c);
+    let rl = simulate(&layered_ga(&spec), &c);
+    println!(
+        "Figure 1 | exposed reduction tail: standard {:.3} ms, layered {:.3} ms; \
+         makespan {:.3} vs {:.3} ms",
+        rs.exposed_network_tail() * 1e3,
+        rl.exposed_network_tail() * 1e3,
+        rs.makespan * 1e3,
+        rl.makespan * 1e3
+    );
+    assert!(rl.exposed_network_tail() < rs.exposed_network_tail() * 0.3);
+
+    // --- Figure 2: partition traffic ------------------------------------
+    let spec_p = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: true, data_parallel: true };
+    let cp = costs(8, 1, 8, true);
+    let s2 = standard_ga(&spec_p);
+    let l2 = layered_ga(&spec_p);
+    let restores = |s: &lga_mpp::schedule::Schedule| {
+        s.count(|o| matches!(o, lga_mpp::schedule::Op::RestoreParams { .. }))
+    };
+    println!(
+        "Figure 2 | restores: standard {} vs layered {} ({}x); makespan {:.3} vs {:.3} ms",
+        restores(&s2),
+        restores(&l2),
+        restores(&s2) / restores(&l2),
+        simulate(&s2, &cp).makespan * 1e3,
+        simulate(&l2, &cp).makespan * 1e3
+    );
+    assert_eq!(restores(&s2), 8 * restores(&l2));
+
+    // --- Figure 3: pipeline bubble --------------------------------------
+    let spec3 = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let c3 = costs(1, 4, 8, false);
+    let rn = simulate(&standard_ga(&spec3), &c3);
+    let rm = simulate(&modular_pipeline(&spec3), &c3);
+    let rf = simulate(&one_f_one_b(&spec3), &c3);
+    println!(
+        "Figure 3 | bubble: contiguous {:.4} (closed form 0.375), modular {:.4} \
+         (closed form 0.094), 1f1b {:.4}",
+        rn.bubble_fraction(),
+        rm.bubble_fraction(),
+        rf.bubble_fraction()
+    );
+    assert!(rm.makespan < rn.makespan);
+
+    // --- simulator timing ------------------------------------------------
+    let big = ScheduleSpec { d_l: 160, n_l: 5, n_mu: 32, partition: true, data_parallel: true };
+    let cb = costs(16, 5, 32, true);
+    let sched = modular_pipeline(&big);
+    let n_ops = sched.len();
+    let mut best = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let r = simulate(&sched, &cb);
+        std::hint::black_box(r.makespan);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!(
+        "[bench] simulate modular X_160-shape ({n_ops} ops): {:.3} ms ({:.2} M ops/s)",
+        best * 1e3,
+        n_ops as f64 / best / 1e6
+    );
+}

@@ -1,0 +1,50 @@
+//! Bench + regeneration for Figures 4, 5 and 8: the scaling sweeps
+//! (training time and memory vs model size) on the three clusters.
+//! Run via `cargo bench --bench fig45_scaling`.
+
+use std::time::Instant;
+
+use lga_mpp::costmodel::Strategy;
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::report::{ascii_plot, scaling_figure, Series};
+
+fn main() {
+    let max_x = 320;
+    for (cluster, name) in [
+        (ClusterSpec::reference(), "Figure 4 (node <= 16, InfiniBand)"),
+        (ClusterSpec::unlimited_node(), "Figure 5 (no node-size limit)"),
+        (ClusterSpec::ethernet(), "Figure 8 (25 Gb/s Ethernet)"),
+    ] {
+        let t0 = Instant::now();
+        let fig = scaling_figure(&cluster, name, max_x);
+        let dt = t0.elapsed().as_secs_f64();
+        println!("== {name} ==  (sweep took {dt:.2}s)");
+        let series: Vec<(&str, &Series)> =
+            fig.time_days.iter().map(|(s, v)| (s.name(), v)).collect();
+        println!("{}", ascii_plot(&series, 72, 18, "training time, days"));
+        let series: Vec<(&str, &Series)> =
+            fig.memory_gib.iter().map(|(s, v)| (s.name(), v)).collect();
+        println!("{}", ascii_plot(&series, 72, 14, "GPU-resident memory, GiB"));
+        for (s, v) in &fig.time_days {
+            if let Some((x, t)) = v.last() {
+                print!("  {}@X_{x}: {t:.1} d", s.name());
+            }
+        }
+        println!("\n");
+
+        // Shape check: improved beats baseline at the largest scale.
+        let t = |strategy: Strategy| {
+            fig.time_days
+                .iter()
+                .find(|(s, _)| *s == strategy)
+                .and_then(|(_, v)| v.last().map(|&(_, t)| t))
+                .unwrap_or(f64::NAN)
+        };
+        assert!(
+            t(Strategy::Improved) <= t(Strategy::Baseline) * 1.02,
+            "{name}: improved {:.1} vs baseline {:.1}",
+            t(Strategy::Improved),
+            t(Strategy::Baseline)
+        );
+    }
+}

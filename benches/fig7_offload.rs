@@ -1,0 +1,45 @@
+//! Bench + regeneration for Figures 6 and 7: the no-memory-wall ratio and
+//! the offload-intensity analysis. Run via `cargo bench --bench fig7_offload`.
+
+use std::time::Instant;
+
+use lga_mpp::hardware::{ClusterSpec, LinkKind};
+use lga_mpp::report::{ascii_plot, figure6, figure7, Series};
+
+fn main() {
+    let cluster = ClusterSpec::reference();
+
+    let t0 = Instant::now();
+    let f6 = figure6(&cluster, 640);
+    println!("== Figure 6: memory/compute ratio for one-month training ({:.2}s) ==", t0.elapsed().as_secs_f64());
+    println!("{}", ascii_plot(&[("bytes per flop/s", &f6)], 72, 16, "memory/compute"));
+    // No memory wall: the ratio falls with scale.
+    let first = f6[2].1;
+    let last = f6.last().unwrap().1;
+    println!("ratio: {first:.3e} (small) -> {last:.3e} (large); falls: {}", last < first);
+    assert!(last < first, "memory wall detected?!");
+
+    let t0 = Instant::now();
+    let pts = figure7(&cluster, 640);
+    println!("\n== Figure 7: offload arithmetic intensity ({:.2}s) ==", t0.elapsed().as_secs_f64());
+    let state: Series = pts.iter().map(|&(x, s, _)| (x, s)).collect();
+    let ckpt: Series = pts.iter().map(|&(x, _, c)| (x, c)).collect();
+    println!("{}", ascii_plot(&[("state", &state), ("checkpoint", &ckpt)], 72, 16, "flops/B"));
+    let gpu = cluster.gpu;
+    for (tier_name, thr) in [
+        ("CPU", LinkKind::CpuGpu.intensity_threshold(&gpu)),
+        ("NVMe", LinkKind::DiskNvme.intensity_threshold(&gpu)),
+        ("Ethernet", LinkKind::Ethernet.intensity_threshold(&gpu)),
+        ("HDD", LinkKind::DiskHdd.intensity_threshold(&gpu)),
+    ] {
+        let first_free = pts.iter().find(|&&(_, s, _)| s >= thr).map(|&(x, _, _)| x);
+        println!(
+            "  state offload to {tier_name:<9} free from X_{}",
+            first_free.map(|x| x.to_string()).unwrap_or_else(|| "never".into())
+        );
+    }
+    // §8.2: at the trillion scale (x = 160) even HDDs keep up.
+    let hdd = LinkKind::DiskHdd.intensity_threshold(&gpu);
+    let x160 = pts.iter().find(|&&(x, _, _)| x >= 160).unwrap();
+    assert!(x160.1 > hdd);
+}

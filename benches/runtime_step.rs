@@ -1,0 +1,51 @@
+//! Perf bench: real trainer step latency on the tiny preset, broken into
+//! PJRT execute time vs coordination overhead — the §Perf L3 target is
+//! PJRT-dominated steps (coordination < 10% once compute is non-trivial).
+//! Run via `cargo bench --bench runtime_step` (needs `make artifacts`).
+
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::trainer::{train, Policy, TrainerConfig};
+
+fn run(policy: Policy, n_b: usize, n_l: usize, n_mu: usize, partition: bool) {
+    let mut cfg = TrainerConfig::quick("tiny");
+    cfg.steps = 10;
+    cfg.n_b = n_b;
+    cfg.n_l = n_l;
+    cfg.n_mu = n_mu;
+    cfg.policy = policy;
+    cfg.partition = partition;
+    cfg.lr = LrSchedule::constant(1e-3);
+    match train(&cfg) {
+        Ok(r) => {
+            let workers = (n_b * n_l) as f64;
+            let step_ms = r.wall_secs / cfg.steps as f64 * 1e3;
+            let exec_frac = r.execute_secs / (r.wall_secs * workers);
+            println!(
+                "{:<9} dp={n_b} pp={n_l} mb={n_mu} part={partition:<5} | {:>8.2} ms/step | \
+                 PJRT {:>5.1}% of worker time | {:>6} calls | {:>6.2} M coll elems",
+                policy.name(),
+                step_ms,
+                exec_frac * 100.0,
+                r.execute_calls,
+                r.collective_elems_sent as f64 / 1e6,
+            );
+        }
+        Err(e) => println!("skipped ({e:#})"),
+    }
+}
+
+fn main() {
+    if !TrainerConfig::quick("tiny").artifacts_root.join("tiny/manifest.json").exists() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    println!("== trainer step latency (tiny preset, 10-step runs) ==");
+    run(Policy::Improved, 1, 1, 2, false);
+    run(Policy::Baseline, 1, 1, 2, false);
+    run(Policy::Improved, 2, 1, 4, false);
+    run(Policy::Improved, 2, 1, 4, true);
+    run(Policy::Baseline, 2, 1, 4, true);
+    run(Policy::Improved, 2, 2, 4, true);
+    run(Policy::Baseline, 2, 2, 4, false);
+    run(Policy::OneFOneB, 2, 2, 4, false);
+}

@@ -1,0 +1,55 @@
+//! Perf bench: discrete-event simulator throughput (ops scheduled per
+//! second) across schedule shapes — the §Perf L3 target is ≥ 1 M ops/s.
+//! Run via `cargo bench --bench sim_engine`.
+
+use std::time::Instant;
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::schedule::{modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{simulate, CostTable};
+
+fn main() {
+    let cluster = ClusterSpec::reference();
+    let cases: Vec<(&str, usize, usize, usize, bool)> = vec![
+        ("small  (16L/4S/8mb)", 16, 4, 8, false),
+        ("medium (64L/8S/16mb)", 64, 8, 16, false),
+        ("x160   (160L/5S/32mb, part)", 160, 5, 32, true),
+        ("deep   (256L/16S/64mb)", 256, 16, 64, false),
+        ("wide-mb(64L/8S/256mb)", 64, 8, 256, false),
+    ];
+    println!("{:<30} {:>8} {:>10} {:>12}", "case", "ops", "ms", "Mops/s");
+    let mut worst = f64::MAX;
+    for (name, d_l, n_l, n_mu, part) in cases {
+        let spec = ScheduleSpec { d_l, n_l, n_mu, partition: part, data_parallel: true };
+        let cfg = TrainConfig {
+            strategy: if part { Strategy::Improved } else { Strategy::Baseline },
+            n_b: 8,
+            n_l,
+            n_a: 1,
+            n_mu,
+            b_mu: 1.0,
+            offload: false,
+            partition: part,
+        };
+        let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
+        for (policy, sched) in [
+            ("modular", modular_pipeline(&spec)),
+            ("gpipe", standard_ga(&spec)),
+            ("1f1b", one_f_one_b(&spec)),
+        ] {
+            let n_ops = sched.len();
+            let mut best = f64::MAX;
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                std::hint::black_box(simulate(&sched, &costs).makespan);
+                best = best.min(t0.elapsed().as_secs_f64());
+            }
+            let mops = n_ops as f64 / best / 1e6;
+            worst = worst.min(mops);
+            println!("{:<30} {:>8} {:>10.3} {:>12.2}  [{policy}]", name, n_ops, best * 1e3, mops);
+        }
+    }
+    println!("\nworst-case throughput: {worst:.2} M ops/s (target >= 1.0)");
+}

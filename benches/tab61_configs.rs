@@ -1,0 +1,54 @@
+//! Bench + regeneration for Tables 6.1, 6.2 and 6.3 (run via
+//! `cargo bench --bench tab61_configs`).
+//!
+//! Prints the same rows the paper reports, checks the headline shape
+//! (Improved ≈ 2x faster at 3d; memory a tiny fraction of the GPU), and
+//! times the planner paths (criterion is unavailable offline; timings use
+//! a simple best-of-N harness).
+
+use std::time::Instant;
+
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::report;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    let mut best = f64::MAX;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    println!("[bench] {name}: best of {iters} = {:.3} ms", best * 1e3);
+}
+
+fn main() {
+    let model = XModel::x160();
+    let cluster = ClusterSpec::reference();
+
+    let t61 = report::table61(&model, &cluster);
+    let t62 = report::table62(&model, &cluster);
+    println!("{t61}");
+    println!("{t62}");
+    let t63 = report::table63(&model, &cluster);
+    println!("{t63}");
+
+    // Headline shape checks (paper vs regenerated).
+    let rows: Vec<&str> = t61.trim_end().lines().collect();
+    let improved_3d = rows.last().unwrap();
+    assert!(improved_3d.contains("38640"), "improved 3d GPU count: {improved_3d}");
+    let base_3d = rows[rows.len() - 2];
+    let days = |line: &str| -> f64 {
+        line.split_whitespace().rev().nth(1).unwrap().parse().unwrap()
+    };
+    let speedup = days(base_3d) / days(improved_3d);
+    println!("3d speedup improved vs baseline: {speedup:.2}x (paper: 13 d / 6.8 d = 1.9x)");
+    assert!(speedup > 1.6);
+
+    bench("table 6.1 (9 closed-form plans)", 20, || {
+        std::hint::black_box(report::table61(&model, &cluster));
+    });
+    bench("table 6.3 (7 constrained searches)", 3, || {
+        std::hint::black_box(report::table63(&model, &cluster));
+    });
+}

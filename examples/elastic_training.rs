@@ -1,0 +1,82 @@
+//! §8 walkthrough: elastic training with a dynamic critical batch size
+//! ("don't decay the learning rate, increase the cluster size") and
+//! real-time checkpoints.
+//!
+//! Run with: `cargo run --release --example elastic_training`
+
+use lga_mpp::costmodel::{ParallelismMenu, Strategy};
+use lga_mpp::elastic::{
+    cluster_schedule, default_phases, resize_downtime_secs, run_elastic, run_fixed,
+};
+use lga_mpp::hardware::{ClusterSpec, LinkKind, GIB};
+use lga_mpp::model::XModel;
+use lga_mpp::offload::{state_offload_feasibility, TIERS};
+use lga_mpp::planner::fastest_plan;
+
+fn main() {
+    let model = XModel::x160();
+    let cluster = ClusterSpec::reference();
+    let plan = fastest_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D)
+        .expect("plan");
+    let n_max = plan.cfg.n_gpu();
+
+    // --- §8.1: cluster-size schedule ------------------------------------
+    println!("== §8.1: dynamic critical batch -> dynamic cluster size ==");
+    println!("late-training plan: {} GPUs (b_c = {:.0})", n_max, model.critical_batch_size());
+    for (f, n) in cluster_schedule(&model, n_max, 8, 0.05) {
+        let bar = "#".repeat((n * 40 / n_max).max(1));
+        println!("  progress {f:.2}  {n:>6} GPUs {bar}");
+    }
+    let phases = default_phases(200);
+    let fixed = run_fixed(&phases, 0.05);
+    let elastic = run_elastic(&phases, 0.05);
+    println!(
+        "cost (GPU-time units): fixed {:.2} vs elastic {:.2} ({:.0}% saved); \
+         wall: {:.2} vs {:.2}",
+        fixed.samples,
+        elastic.samples,
+        100.0 * (1.0 - elastic.samples / fixed.samples),
+        fixed.wall,
+        elastic.wall
+    );
+
+    // --- §8.2: real-time checkpoints -------------------------------------
+    println!("\n== §8.2: offload / real-time checkpoint feasibility (X_160) ==");
+    let feas = state_offload_feasibility(&model.shape(), &plan.cfg, &cluster.gpu);
+    for f in &feas {
+        println!(
+            "  state -> {:<22} nu_op {:.3e} vs threshold {:.3e} : {}",
+            f.tier.name(),
+            f.nu_op,
+            f.nu_net,
+            if f.is_free() { "FREE (fully hidden)" } else { "exposed" }
+        );
+    }
+    let state_bytes = 12.0 * model.params();
+    println!(
+        "  full training state: {:.0} GiB; classic checkpoint stall to NVMe: {:.0} s;\n  \
+         with streamed (real-time) checkpoints: {:.0} s and the loss window is one batch",
+        state_bytes / GIB,
+        resize_downtime_secs(state_bytes / plan.cfg.n_b as f64, LinkKind::DiskNvme.bandwidth(), false),
+        resize_downtime_secs(state_bytes, LinkKind::DiskNvme.bandwidth(), true),
+    );
+    let _ = TIERS;
+
+    // --- §8.3: Ethernet ---------------------------------------------------
+    println!("\n== §8.3: Ethernet is enough (fastest plans per fabric) ==");
+    for (c, name) in [(ClusterSpec::reference(), "InfiniBand"), (ClusterSpec::ethernet(), "Ethernet 25 Gb/s")] {
+        for s in [Strategy::Baseline, Strategy::Improved] {
+            if let Some(p) =
+                lga_mpp::planner::search_fastest(&model, &c, s, ParallelismMenu::THREE_D)
+            {
+                println!(
+                    "  {name:<18} {:<9} {:>6} GPUs  eff {:.2}  {:>7.1} days",
+                    s.name(),
+                    p.cfg.n_gpu(),
+                    p.speed.efficiency,
+                    p.speed.training_days()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Cluster-planning walkthrough: §6's "smaller clusters" analysis as a
+//! runnable tool. Sweeps time budgets for a model and prints, for each
+//! strategy, the smallest cluster that meets the deadline — plus the §8.3
+//! Ethernet variant and the §7 node-size ablation.
+//!
+//! Run with: `cargo run --release --example plan_cluster -- [x]`
+
+use lga_mpp::costmodel::{ParallelismMenu, Strategy};
+use lga_mpp::hardware::{ClusterSpec, SECS_PER_DAY};
+use lga_mpp::model::XModel;
+use lga_mpp::planner::{min_gpu_plan, search_fastest};
+
+fn main() {
+    let x: usize = std::env::args().nth(1).and_then(|v| v.parse().ok()).unwrap_or(160);
+    let model = XModel::new(x);
+    println!(
+        "model X_{x}: {:.3e} params, critical batch {:.0}, {} layers\n",
+        model.params(),
+        model.critical_batch_size(),
+        model.shape().d_l
+    );
+
+    let clusters = [
+        (ClusterSpec::reference(), "InfiniBand, node<=16"),
+        (ClusterSpec::ethernet(), "25 Gb/s Ethernet"),
+        (ClusterSpec::unlimited_node(), "unlimited NVLink node"),
+    ];
+    println!("== fastest possible (3d parallelism) ==");
+    for (cluster, name) in &clusters {
+        for strategy in [Strategy::Baseline, Strategy::Improved] {
+            if let Some(p) =
+                search_fastest(&model, cluster, strategy, ParallelismMenu::THREE_D)
+            {
+                println!(
+                    "  {name:<24} {:<9} {:>7} GPUs  eff {:.2}  {:>8.1} days",
+                    strategy.name(),
+                    p.cfg.n_gpu(),
+                    p.speed.efficiency,
+                    p.speed.training_days()
+                );
+            }
+        }
+    }
+
+    println!("\n== smallest cluster per time budget (Table 6.3 generalised) ==");
+    let cluster = ClusterSpec::reference();
+    for days in [33.0, 62.0, 181.0, 365.0] {
+        println!("  budget {days:.0} days:");
+        for (strategy, menu) in [
+            (Strategy::Partitioned, ParallelismMenu::DATA_TENSOR),
+            (Strategy::Baseline, ParallelismMenu::THREE_D),
+            (Strategy::Improved, ParallelismMenu::THREE_D),
+            (Strategy::Improved, ParallelismMenu::DATA_PIPE),
+        ] {
+            match min_gpu_plan(&model, &cluster, strategy, menu, days * SECS_PER_DAY) {
+                Some(cp) => println!(
+                    "    {:<12} {:<13} {:>7} GPUs  b={:<6} eff {:.2}  {:>6.1} d",
+                    strategy.name(),
+                    menu.name(),
+                    cp.plan.cfg.n_gpu(),
+                    cp.plan.cfg.batch_size() as u64,
+                    cp.plan.speed.efficiency,
+                    cp.plan.speed.training_days()
+                ),
+                None => println!(
+                    "    {:<12} {:<13} infeasible",
+                    strategy.name(),
+                    menu.name()
+                ),
+            }
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Quickstart: the library's three faces in one file.
+//!
+//! 1. Plan: find the fastest training configuration for a model.
+//! 2. Simulate: run the paper's schedules on the simulated cluster.
+//! 3. Train: real distributed training via PJRT (needs `make artifacts`).
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use lga_mpp::costmodel::{ParallelismMenu, Strategy};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::planner::fastest_plan;
+use lga_mpp::schedule::{modular_pipeline, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{simulate, CostTable};
+use lga_mpp::trainer::{train, TrainerConfig};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. Plan the trillion-parameter run (Table 6.1's headline) ------
+    let model = XModel::x160();
+    let cluster = ClusterSpec::reference();
+    for strategy in [Strategy::Baseline, Strategy::Improved] {
+        let plan = fastest_plan(&model, &cluster, strategy, ParallelismMenu::THREE_D)
+            .expect("plan");
+        println!(
+            "{:<9} 3d: {} GPUs, efficiency {:.2}, trains X_160 in {:.1} days",
+            strategy.name(),
+            plan.cfg.n_gpu(),
+            plan.speed.efficiency,
+            plan.speed.training_days()
+        );
+    }
+
+    // --- 2. Simulate the schedules (Figure 3 in numbers) ----------------
+    let spec = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let cfg = lga_mpp::costmodel::TrainConfig {
+        strategy: Strategy::Baseline,
+        n_b: 1,
+        n_l: 4,
+        n_a: 1,
+        n_mu: 8,
+        b_mu: 1.0,
+        offload: false,
+        partition: false,
+    };
+    let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
+    let naive = simulate(&standard_ga(&spec), &costs);
+    let modular = simulate(&modular_pipeline(&spec), &costs);
+    println!(
+        "\npipeline bubble, 16 layers over 4 stages, 8 micro-batches:\n  \
+         contiguous {:.3}  |  modular {:.3}  ({:.1}x smaller)",
+        naive.bubble_fraction(),
+        modular.bubble_fraction(),
+        naive.bubble_fraction() / modular.bubble_fraction()
+    );
+
+    // --- 3. Real training (tiny preset; skipped if artifacts missing) ---
+    let mut tcfg = TrainerConfig::quick("tiny");
+    tcfg.steps = 10;
+    tcfg.n_b = 2;
+    tcfg.n_l = 2;
+    tcfg.n_mu = 2;
+    tcfg.partition = true;
+    if tcfg.artifacts_root.join("tiny/manifest.json").exists() {
+        let report = train(&tcfg)?;
+        println!(
+            "\nreal LGA+modular-pipeline training (2 dp x 2 stages, ZeRO partition):\n  \
+             loss {:.3} -> {:.3} over {} steps ({:.1}s)",
+            report.losses[0],
+            report.losses.last().unwrap(),
+            report.losses.len(),
+            report.wall_secs
+        );
+    } else {
+        println!("\n(skipping real training: run `make artifacts` first)");
+    }
+    Ok(())
+}

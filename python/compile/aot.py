@@ -1,0 +1,154 @@
+"""AOT compiler: lower the L2 model's per-layer functions to HLO text
+artifacts the Rust runtime loads via PJRT.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects; the text parser reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --preset tiny --out ../artifacts
+    python -m compile.aot --preset e2e --out ../artifacts
+
+Writes  <out>/<preset>/<name>.hlo.txt  plus  <out>/<preset>/manifest.json
+describing every artifact's argument shapes/dtypes and the model config
+(the Rust side trusts the manifest, never re-deriving shapes).
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (
+    LAYER_PARAM_NAMES,
+    PRESETS,
+    ModelConfig,
+    embed_bwd,
+    embed_fwd,
+    head_loss_grad,
+    layer_bwd,
+    layer_fwd,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True so the
+    Rust side can uniformly unwrap tuples)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(cfg: ModelConfig, batch: int):
+    """Return {name: (callable, example_args)} for every artifact."""
+    b, s, d, v = batch, cfg.d_seq, cfg.d_model, cfg.vocab
+    layer_shapes = [cfg.layer_param_shapes()[n] for n in LAYER_PARAM_NAMES]
+    layer_specs = [_spec(sh) for sh in layer_shapes]
+
+    arts = {}
+    arts["embed_fwd"] = (
+        embed_fwd,
+        (_spec((v, d)), _spec((s, d)), _spec((b, s), jnp.int32)),
+    )
+    arts["embed_bwd"] = (
+        functools.partial(embed_bwd, vocab=v),
+        (_spec((b, s, d)), _spec((b, s), jnp.int32)),
+    )
+    arts["layer_fwd"] = (
+        lambda *a: layer_fwd(a[:12], a[12], cfg),
+        (*layer_specs, _spec((b, s, d))),
+    )
+    arts["layer_bwd"] = (
+        lambda *a: layer_bwd(a[:12], a[12], a[13], cfg),
+        (*layer_specs, _spec((b, s, d)), _spec((b, s, d))),
+    )
+    arts["head_loss_grad"] = (
+        head_loss_grad,
+        (_spec((d, v)), _spec((b, s, d)), _spec((b, s), jnp.int32)),
+    )
+    return arts
+
+
+def _manifest_io(args, fn):
+    """Describe an artifact's inputs and outputs for the manifest."""
+    out = jax.eval_shape(fn, *args)
+    leaves = jax.tree_util.tree_leaves(out)
+    return (
+        [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in args],
+        [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in leaves],
+    )
+
+
+def compile_preset(preset: str, out_dir: str, batch: int) -> dict:
+    cfg = PRESETS[preset]
+    os.makedirs(os.path.join(out_dir, preset), exist_ok=True)
+    arts = build_artifacts(cfg, batch)
+    manifest = {
+        "preset": preset,
+        "batch": batch,
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_seq": cfg.d_seq,
+            "n_layers": cfg.n_layers,
+            "d_ffn": cfg.d_ffn,
+            "total_params": int(cfg.total_params()),
+        },
+        "layer_param_names": list(LAYER_PARAM_NAMES),
+        "layer_param_shapes": {
+            n: list(cfg.layer_param_shapes()[n]) for n in LAYER_PARAM_NAMES
+        },
+        "artifacts": {},
+    }
+    for name, (fn, args) in arts.items():
+        # keep_unused: a VJP may not read some parameter *values* (e.g.
+        # biases), but the Rust runtime passes every argument — the
+        # artifact signature must stay stable.
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        rel = f"{preset}/{name}.hlo.txt"
+        with open(os.path.join(out_dir, rel), "w") as f:
+            f.write(text)
+        inputs, outputs = _manifest_io(args, fn)
+        manifest["artifacts"][name] = {
+            "file": rel,
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  {preset}/{name}: {len(text)} chars, "
+              f"{len(inputs)} inputs -> {len(outputs)} outputs")
+    with open(os.path.join(out_dir, preset, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="all", choices=["all", *PRESETS])
+    ap.add_argument("--batch", type=int, default=0,
+                    help="micro-batch size baked into the artifacts "
+                         "(default: 2 for tiny, 1 for e2e)")
+    args = ap.parse_args()
+    presets = list(PRESETS) if args.preset == "all" else [args.preset]
+    for p in presets:
+        batch = args.batch or (2 if p == "tiny" else 1)
+        print(f"compiling preset {p} (micro-batch {batch})")
+        m = compile_preset(p, args.out, batch)
+        print(f"  model: {m['model']['total_params']:,} params")
+
+
+if __name__ == "__main__":
+    main()

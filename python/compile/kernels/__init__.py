@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 model's HLO)."""
+
+from .attention import attention
+from .fused_ffn import fused_ffn
+from .layernorm import layernorm
+
+__all__ = ["attention", "fused_ffn", "layernorm"]

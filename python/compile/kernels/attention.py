@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: causal scaled-dot-product attention with an online
+softmax over key blocks (flash-attention-style streaming).
+
+TPU mapping: grid = (heads, q-blocks). Each program streams the K/V
+sequence in blocks through VMEM, maintaining the running max/denominator
+pair, so the [S, S] score matrix never materialises in HBM — the same
+memory-motion insight flash-attention expresses with CUDA threadblocks,
+restated as a BlockSpec + fori_loop schedule for the MXU.
+
+interpret=True for CPU-PJRT execution (see fused_ffn.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, seq_len, causal):
+    q = q_ref[...]  # [bq, d]
+    bq, d = q.shape
+    scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    q_idx = pl.program_id(1)
+
+    neg = jnp.finfo(q.dtype).min
+
+    def body(start, carry):
+        acc, m, l = carry
+        k = pl.load(k_ref, (pl.dslice(start * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(start * block_k, block_k), slice(None)))
+        s = (q @ k.T) * scale  # [bq, bk]
+        if causal:
+            q_pos = q_idx * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+            k_pos = start * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return acc_new, m_new, l_new
+
+    n_blocks = seq_len // block_k
+    acc = jnp.zeros((bq, d), dtype=q.dtype)
+    m0 = jnp.full((bq,), neg, dtype=q.dtype)
+    l0 = jnp.zeros((bq,), dtype=q.dtype)
+    acc, m, l = jax.lax.fori_loop(0, n_blocks, body, (acc, m0, l0))
+    o_ref[...] = acc / l[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal"))
+def attention(q, k, v, block_q=64, block_k=64, causal=True):
+    """Streaming attention.
+
+    Args:
+      q, k, v: [h, s, d] (batch folded into the head axis by callers).
+    Returns:
+      [h, s, d] attention output.
+    """
+    h, s, d = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    if s % bq != 0:
+        bq = s
+    if s % bk != 0:
+        bk = s
+    grid = (h, s // bq)
+    kernel = functools.partial(_attn_kernel, block_k=bk, seq_len=s, causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+            pl.BlockSpec((None, s, d), lambda hi, qi: (hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, d), lambda hi, qi: (hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: fused transformer feed-forward network.
+
+Computes ``gelu(x @ w1 + b1) @ w2 + b2`` in one kernel so the [N, d_I]
+intermediate never round-trips through HBM — the paper's hot spot is the
+dense-layer matmul pair (Appendix C.1: the FFN holds 2/3 of the flops for
+n_I = 4).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the token
+axis; each program holds an (BN, D) input block, both weight matrices and
+the (BN, d_I) intermediate in VMEM, feeding the MXU with [BN, D] x [D, d_I]
+tiles. For the e2e shapes (D=1024, d_I=4096, BN=128, f32) the VMEM
+footprint is 128*1024*4 + 1024*4096*4 + 128*4096*4 + 4096*1024*4 + 128*1024*4
+≈ 36 MB in f32 — on a real TPU this would be bf16 weights (18 MB) double
+buffered across two cores' 2x16 MB VMEM, or D-axis-split; under
+interpret=True the BlockSpec still expresses that schedule.
+
+interpret=True is mandatory here: real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...]) + b1_ref[...]
+    # tanh-GELU, same constants as ref.gelu.
+    g = 0.5 * h * (1.0 + jnp.tanh(0.7978845608028654 * (h + 0.044715 * h**3)))
+    o_ref[...] = jnp.dot(g, w2_ref[...]) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def fused_ffn(x, w1, b1, w2, b2, block_n=128):
+    """Fused FFN over tokens.
+
+    Args:
+      x: [n, d] activations (token-major; callers flatten batch x seq).
+      w1: [d, d_i]; b1: [d_i]; w2: [d_i, d]; b2: [d].
+      block_n: token-block size (grid tile along n).
+    Returns:
+      [n, d] output.
+    """
+    n, d = x.shape
+    d_i = w1.shape[1]
+    bn = min(block_n, n)
+    if n % bn != 0:
+        # Fall back to one block for ragged sizes (shapes are static at
+        # AOT time, so this is a compile-time choice, not a runtime one).
+        bn = n
+    grid = (n // bn,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, d_i), lambda i: (0, 0)),
+            pl.BlockSpec((d_i,), lambda i: (0,)),
+            pl.BlockSpec((d_i, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes(n_block, d, d_i, dtype_bytes=4):
+    """Static VMEM footprint estimate for one program (used by the
+    DESIGN.md / EXPERIMENTS.md §Perf analysis)."""
+    x = n_block * d
+    w = 2 * d * d_i
+    b = d_i + d
+    inter = n_block * d_i
+    out = n_block * d
+    return (x + w + b + inter + out) * dtype_bytes
+
+
+def mxu_utilisation_estimate(n_block, d, d_i):
+    """Fraction of MXU-issue slots doing useful work for one program,
+    assuming a 128x128 systolic array: full when all three matmul dims
+    are multiples of 128."""
+    def eff(dim):
+        return dim / (((dim + 127) // 128) * 128)
+
+    return eff(n_block) * eff(d) * eff(d_i)

@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: fused LayerNorm over the feature axis.
+
+One pass per token block: mean/variance reduction and the normalise +
+affine transform fused, so x is read once from HBM instead of three times
+(the memory-bound op the paper's §2.3 arithmetic-intensity discussion
+flags — LN is ~1/6 flops/B and lives deep in the bandwidth-bound regime).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) / jnp.sqrt(var + eps) * g_ref[...] + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "eps"))
+def layernorm(x, gamma, beta, block_n=256, eps=1e-5):
+    """LayerNorm over the last axis of [n, d] activations."""
+    n, d = x.shape
+    bn = min(block_n, n)
+    if n % bn != 0:
+        bn = n
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=True,
+    )(x, gamma, beta)

@@ -1,0 +1,43 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has an entry here with identical semantics.
+pytest asserts allclose(kernel, ref) across shapes/dtypes (hypothesis
+sweeps); the backward-pass artifacts are derived from these references via
+``jax.vjp``, so ref.py is the single source of mathematical truth for the
+whole stack.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    """tanh-approximation GELU (matches the kernel implementation)."""
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ffn(x, w1, b1, w2, b2):
+    """Two-layer feed-forward network with GELU: gelu(x@w1+b1)@w2+b2."""
+    return gelu(x @ w1 + b1) @ w2 + b2
+
+
+def attention(q, k, v, causal=True):
+    """Scaled-dot-product attention.
+
+    q, k, v: [heads, seq, head_dim] (batch folded into heads by callers).
+    """
+    d = q.shape[-1]
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(d).astype(q.dtype)
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask, scores, jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)

@@ -1,0 +1,211 @@
+"""L2: the transformer language model, built on the L1 Pallas kernels.
+
+The model is decomposed into the per-layer / per-boundary functions the
+Rust coordinator schedules independently (layered gradient accumulation
+and modular pipeline parallelism need layer-granular artifacts, not one
+monolithic train step):
+
+  * ``embed_fwd``   — token + positional embedding lookup;
+  * ``layer_fwd``   — one pre-LN transformer layer (Pallas kernels);
+  * ``layer_bwd``   — VJP of the layer w.r.t. params and input, with the
+                      activation recomputed from the checkpoint (the
+                      paper's activation-checkpointing cost model: the
+                      backward costs 3x the forward, Appendix C.1);
+  * ``head_loss_grad`` — LM head + softmax cross-entropy, returning the
+                      loss, input gradient and head-weight gradient;
+  * ``embed_bwd``   — scatter-add gradient for the embedding tables.
+
+Forward functions use the Pallas kernels; backward functions are the
+``jax.vjp`` of the mathematically-identical jnp reference (kernels are
+asserted equal to the reference in python/tests), so gradients are exact
+for the function the forward computes.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, fused_ffn, layernorm
+from .kernels import ref
+
+# Per-layer parameter layout, shared with the Rust runtime via the AOT
+# manifest. Order matters.
+LAYER_PARAM_NAMES = (
+    "ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_o", "b_o",
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static model shape (baked into the AOT artifacts)."""
+
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_seq: int
+    n_layers: int
+    n_i: int = 4  # FFN expansion factor (paper Appendix B uses 4)
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ffn(self):
+        return self.n_i * self.d_model
+
+    def layer_param_shapes(self):
+        d, di = self.d_model, self.d_ffn
+        return {
+            "ln1_g": (d,), "ln1_b": (d,),
+            "w_qkv": (d, 3 * d), "b_qkv": (3 * d,),
+            "w_o": (d, d), "b_o": (d,),
+            "ln2_g": (d,), "ln2_b": (d,),
+            "w1": (d, di), "b1": (di,),
+            "w2": (di, d), "b2": (d,),
+        }
+
+    def params_per_layer(self):
+        return sum(
+            int(jnp.prod(jnp.array(s))) for s in self.layer_param_shapes().values()
+        )
+
+    def total_params(self):
+        embed = self.vocab * self.d_model + self.d_seq * self.d_model
+        head = self.d_model * self.vocab
+        return self.n_layers * self.params_per_layer() + embed + head
+
+
+# Presets: "tiny" for tests, "mid" for loss-curve runs on the 1-core CI
+# substrate, "e2e" is the ~100M-parameter end-to-end model.
+PRESETS = {
+    "tiny": ModelConfig(vocab=256, d_model=64, n_heads=4, d_seq=32, n_layers=2),
+    "mid": ModelConfig(vocab=4096, d_model=512, n_heads=8, d_seq=64, n_layers=8),
+    "e2e": ModelConfig(vocab=4096, d_model=1024, n_heads=16, d_seq=64, n_layers=8),
+}
+
+
+def _split_heads(x, n_heads):
+    """[b, s, d] -> [b*h, s, d_head]."""
+    b, s, d = x.shape
+    x = x.reshape(b, s, n_heads, d // n_heads)
+    return x.transpose(0, 2, 1, 3).reshape(b * n_heads, s, d // n_heads)
+
+
+def _merge_heads(x, b):
+    """[b*h, s, d_head] -> [b, s, d]."""
+    bh, s, dh = x.shape
+    h = bh // b
+    return x.reshape(b, h, s, dh).transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _layer(x, p, cfg: ModelConfig, *, use_pallas: bool):
+    """One pre-LN transformer layer. `p` is a dict of the 12 params."""
+    ln = layernorm if use_pallas else ref.layernorm
+    ffn_fn = fused_ffn if use_pallas else ref.ffn
+    attn_fn = attention if use_pallas else ref.attention
+
+    b, s, d = x.shape
+    flat = lambda t: t.reshape(b * s, d)
+    unflat = lambda t: t.reshape(b, s, d)
+
+    h = unflat(ln(flat(x), p["ln1_g"], p["ln1_b"]))
+    qkv = h @ p["w_qkv"] + p["b_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q, k, v = (_split_heads(t, cfg.n_heads) for t in (q, k, v))
+    ctx = _merge_heads(attn_fn(q, k, v), b)
+    x = x + ctx @ p["w_o"] + p["b_o"]
+
+    h2 = ln(flat(x), p["ln2_g"], p["ln2_b"])
+    x = x + unflat(ffn_fn(h2, p["w1"], p["b1"], p["w2"], p["b2"]))
+    return x
+
+
+def layer_fwd(params, x, cfg: ModelConfig):
+    """Forward through one layer (Pallas kernels). `params`: tuple in
+    LAYER_PARAM_NAMES order; x: [b, s, d]."""
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    return _layer(x, p, cfg, use_pallas=True)
+
+
+def layer_fwd_ref(params, x, cfg: ModelConfig):
+    """Reference forward (pure jnp) — the function layer_bwd differentiates."""
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    return _layer(x, p, cfg, use_pallas=False)
+
+
+def layer_bwd(params, x, dy, cfg: ModelConfig):
+    """VJP of the layer w.r.t. (params, x). Recomputes the forward from
+    the checkpoint `x` — activation checkpointing semantics."""
+    _, vjp = jax.vjp(lambda ps, xx: layer_fwd_ref(ps, xx, cfg), params, x)
+    dparams, dx = vjp(dy)
+    return (*dparams, dx)
+
+
+def embed_fwd(table, pos, tokens):
+    """Token + positional embedding: [v,d],[s,d],[b,s]i32 -> [b,s,d]."""
+    return table[tokens] + pos[None, :, :]
+
+
+def embed_bwd(dx, tokens, vocab):
+    """Gradients of embed_fwd: scatter-add into the token table, sum over
+    batch for the positional table."""
+    d_table = jnp.zeros((vocab, dx.shape[-1]), dx.dtype).at[tokens].add(dx)
+    d_pos = dx.sum(axis=0)
+    return d_table, d_pos
+
+
+def head_loss(w_out, x, targets):
+    """Mean softmax cross-entropy of the LM head logits x @ w_out."""
+    logits = x @ w_out
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def head_loss_grad(w_out, x, targets):
+    """(loss, dx, dw_out) for the LM head + loss."""
+    loss, vjp = jax.vjp(lambda w, xx: head_loss(w, xx, targets), w_out, x)
+    dw, dx = vjp(jnp.ones((), x.dtype))
+    return loss, dx, dw
+
+
+# ---------------------------------------------------------------------------
+# Whole-model reference (used by tests and by aot.py's self-check, never
+# exported to Rust — the Rust coordinator composes the per-layer pieces).
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    """Initialise the full parameter set as (embed, pos, layers, head)."""
+    keys = jax.random.split(key, 3 + cfg.n_layers)
+    scale = 0.02
+    table = scale * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model), jnp.float32)
+    pos = scale * jax.random.normal(keys[1], (cfg.d_seq, cfg.d_model), jnp.float32)
+    head = scale * jax.random.normal(keys[2], (cfg.d_model, cfg.vocab), jnp.float32)
+    layers = []
+    for i in range(cfg.n_layers):
+        lk = jax.random.split(keys[3 + i], 12)
+        shapes = cfg.layer_param_shapes()
+        layer = []
+        for j, name in enumerate(LAYER_PARAM_NAMES):
+            shape = shapes[name]
+            if name.endswith("_g"):
+                layer.append(jnp.ones(shape, jnp.float32))
+            elif len(shape) == 1:
+                layer.append(jnp.zeros(shape, jnp.float32))
+            else:
+                layer.append(scale * jax.random.normal(lk[j], shape, jnp.float32))
+        layers.append(tuple(layer))
+    return table, pos, tuple(layers), head
+
+
+def model_loss(params, tokens, targets, cfg: ModelConfig, use_pallas=False):
+    """Full-model loss (reference composition of the per-layer pieces)."""
+    table, pos, layers, head = params
+    x = embed_fwd(table, pos, tokens)
+    fwd = layer_fwd if use_pallas else layer_fwd_ref
+    for lp in layers:
+        x = fwd(lp, x, cfg)
+    return head_loss(head, x, targets)

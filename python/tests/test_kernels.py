@@ -1,0 +1,142 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracles in
+ref.py, swept over shapes and dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, fused_ffn, layernorm
+from compile.kernels import ref
+from compile.kernels.fused_ffn import mxu_utilisation_estimate, vmem_bytes
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape, scale=1.0, dtype=jnp.float32):
+    return jnp.asarray(rng.normal(size=shape) * scale, dtype=dtype)
+
+
+TOL = {jnp.float32: 2e-5}
+
+
+# ---------------------------------------------------------------------------
+# fused FFN
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 3, 16, 64, 130]),
+    d=st.sampled_from([8, 16, 64]),
+    n_i=st.sampled_from([2, 4]),
+    block=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_matches_ref(n, d, n_i, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d)
+    w1 = rand(rng, d, n_i * d, scale=d**-0.5)
+    b1 = rand(rng, n_i * d, scale=0.1)
+    w2 = rand(rng, n_i * d, d, scale=(n_i * d) ** -0.5)
+    b2 = rand(rng, d, scale=0.1)
+    got = fused_ffn(x, w1, b1, w2, b2, block_n=block)
+    want = ref.ffn(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, atol=5e-5, rtol=5e-5)
+
+
+def test_ffn_block_size_does_not_change_result():
+    rng = np.random.default_rng(7)
+    x = rand(rng, 256, 32)
+    w1, b1 = rand(rng, 32, 128, scale=0.2), rand(rng, 128, scale=0.1)
+    w2, b2 = rand(rng, 128, 32, scale=0.1), rand(rng, 32, scale=0.1)
+    outs = [fused_ffn(x, w1, b1, w2, b2, block_n=bn) for bn in (16, 32, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-5, rtol=1e-5)
+
+
+def test_ffn_vmem_estimate_monotone_in_block():
+    assert vmem_bytes(128, 1024, 4096) < vmem_bytes(256, 1024, 4096)
+
+
+def test_ffn_mxu_estimate_full_for_aligned_shapes():
+    assert mxu_utilisation_estimate(128, 1024, 4096) == 1.0
+    assert mxu_utilisation_estimate(100, 1024, 4096) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([1, 5, 32, 257]),
+    d=st.sampled_from([4, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_layernorm_matches_ref(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, n, d, scale=3.0)
+    g = rand(rng, d, scale=1.0)
+    b = rand(rng, d, scale=0.5)
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm(x, g, b), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_layernorm_output_is_normalised():
+    rng = np.random.default_rng(3)
+    x = rand(rng, 64, 128, scale=10.0)
+    y = layernorm(x, jnp.ones(128), jnp.zeros(128))
+    np.testing.assert_allclose(np.mean(y, axis=-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.std(y, axis=-1), 1.0, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=16, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 8]),
+    s=st.sampled_from([16, 64, 96]),
+    d=st.sampled_from([4, 16, 32]),
+    block=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_attention_matches_ref(h, s, d, block, causal, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = (rand(rng, h, s, d) for _ in range(3))
+    got = attention(q, k, v, block_q=block, block_k=block, causal=causal)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_causality():
+    """Changing a future key/value must not change earlier outputs."""
+    rng = np.random.default_rng(11)
+    q, k, v = (rand(rng, 2, 32, 8) for _ in range(3))
+    base = attention(q, k, v, block_q=16, block_k=16, causal=True)
+    k2 = k.at[:, -1, :].set(99.0)
+    v2 = v.at[:, -1, :].set(-99.0)
+    pert = attention(q, k2, v2, block_q=16, block_k=16, causal=True)
+    np.testing.assert_allclose(base[:, :-1], pert[:, :-1], atol=1e-6)
+    assert not np.allclose(base[:, -1], pert[:, -1])
+
+
+def test_attention_softmax_rows_bounded():
+    """Output rows are convex combinations of V rows (within fp error)."""
+    rng = np.random.default_rng(5)
+    q, k = rand(rng, 1, 32, 8), rand(rng, 1, 32, 8)
+    v = jnp.ones((1, 32, 8), jnp.float32)
+    out = attention(q, k, v, causal=False)
+    np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+
+def test_attention_block_invariance():
+    rng = np.random.default_rng(13)
+    q, k, v = (rand(rng, 4, 64, 16) for _ in range(3))
+    a = attention(q, k, v, block_q=64, block_k=64)
+    b = attention(q, k, v, block_q=16, block_k=32)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)

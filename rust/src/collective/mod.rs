@@ -1,0 +1,9 @@
+//! In-memory collectives for the real trainer: ring all-reduce,
+//! reduce-scatter and all-gather over std mpsc channels, one `Comm` per
+//! rank. The ring algorithm is the bandwidth-optimal one the paper's
+//! C.4.1 traffic accounting assumes (each rank sends/receives
+//! 2·(n−1)/n of the buffer for an all-reduce).
+
+pub mod ring;
+
+pub use ring::{ring_group, Comm};

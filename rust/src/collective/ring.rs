@@ -1,0 +1,256 @@
+//! Ring collectives over mpsc channels.
+//!
+//! `ring_group(n)` builds the communicators; each participating thread
+//! then calls the same sequence of collective ops (SPMD style). Chunk
+//! boundaries are deterministic, so results are bit-identical across
+//! ranks and across runs.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
+
+/// Per-rank communicator for a ring of `n` members.
+pub struct Comm {
+    pub rank: usize,
+    pub n: usize,
+    tx_next: Sender<Vec<f32>>,
+    rx_prev: Receiver<Vec<f32>>,
+    barrier: Arc<Barrier>,
+    /// Total payload elements sent by this rank (traffic accounting).
+    pub sent_elems: u64,
+}
+
+/// Build communicators for an `n`-rank ring. Index i talks to i+1 mod n.
+pub fn ring_group(n: usize) -> Vec<Comm> {
+    assert!(n >= 1);
+    let barrier = Arc::new(Barrier::new(n));
+    let mut txs: Vec<Option<Sender<Vec<f32>>>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(Some(tx));
+        rxs.push(Some(rx));
+    }
+    // rank r sends on channel r (to r+1), receives on channel (r-1+n)%n.
+    let mut comms = Vec::with_capacity(n);
+    let mut rx_rot: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n);
+    for r in 0..n {
+        rx_rot.push(rxs[(r + n - 1) % n].take());
+    }
+    for (r, rx) in rx_rot.into_iter().enumerate() {
+        comms.push(Comm {
+            rank: r,
+            n,
+            tx_next: txs[r].take().unwrap(),
+            rx_prev: rx.unwrap(),
+            barrier: barrier.clone(),
+            sent_elems: 0,
+        });
+    }
+    comms
+}
+
+/// Chunk boundaries: `n` nearly-equal chunks of a `len`-element buffer.
+fn chunk_bounds(len: usize, n: usize, i: usize) -> (usize, usize) {
+    let base = len / n;
+    let rem = len % n;
+    let start = i * base + i.min(rem);
+    let size = base + usize::from(i < rem);
+    (start, start + size)
+}
+
+impl Comm {
+    /// Synchronisation barrier across the group.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    fn send(&mut self, data: Vec<f32>) {
+        self.sent_elems += data.len() as u64;
+        // Receiver outliving sender is guaranteed by trainer shutdown
+        // ordering; a send on a closed ring is a bug.
+        self.tx_next.send(data).expect("ring peer hung up");
+    }
+
+    fn recv(&mut self) -> Vec<f32> {
+        self.rx_prev.recv().expect("ring peer hung up")
+    }
+
+    /// Ring all-reduce (sum): reduce-scatter then all-gather.
+    /// All ranks end with identical, fully-summed buffers.
+    pub fn all_reduce(&mut self, data: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        self.reduce_scatter(data);
+        self.all_gather_owned(data);
+    }
+
+    /// Ring reduce-scatter: afterwards, rank r holds the fully-reduced
+    /// chunk `owned_chunk()` (other chunks are partial — callers either
+    /// continue with `all_gather_owned` or use only their own chunk, as
+    /// the ZeRO-style partition does).
+    pub fn reduce_scatter(&mut self, data: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        let n = self.n;
+        for step in 0..n - 1 {
+            let send_idx = (self.rank + n - step) % n;
+            let recv_idx = (self.rank + n - step - 1) % n;
+            let (a, b) = chunk_bounds(data.len(), n, send_idx);
+            self.send(data[a..b].to_vec());
+            let incoming = self.recv();
+            let (a, b) = chunk_bounds(data.len(), n, recv_idx);
+            for (d, x) in data[a..b].iter_mut().zip(&incoming) {
+                *d += x;
+            }
+        }
+    }
+
+    /// The chunk index rank `rank` owns after [`Self::reduce_scatter`].
+    pub fn owned_chunk(&self) -> usize {
+        (self.rank + 1) % self.n
+    }
+
+    /// Element range of this rank's owned chunk in a `len` buffer.
+    pub fn owned_range(&self, len: usize) -> (usize, usize) {
+        chunk_bounds(len, self.n, self.owned_chunk())
+    }
+
+    /// Ring all-gather assuming each rank's `owned_chunk()` is complete
+    /// (the state `reduce_scatter` leaves). Afterwards all chunks are
+    /// complete everywhere.
+    pub fn all_gather_owned(&mut self, data: &mut [f32]) {
+        if self.n == 1 {
+            return;
+        }
+        let n = self.n;
+        for step in 0..n - 1 {
+            let send_idx = (self.rank + 1 + n - step) % n;
+            let recv_idx = (self.rank + n - step) % n;
+            let (a, b) = chunk_bounds(data.len(), n, send_idx);
+            self.send(data[a..b].to_vec());
+            let incoming = self.recv();
+            let (a, b) = chunk_bounds(data.len(), n, recv_idx);
+            data[a..b].copy_from_slice(&incoming);
+        }
+    }
+
+    /// Broadcast from `root` around the ring.
+    pub fn broadcast(&mut self, data: &mut [f32], root: usize) {
+        if self.n == 1 {
+            return;
+        }
+        // Pass the buffer around the ring n-1 hops starting at root.
+        let hops_from_root = (self.rank + self.n - root) % self.n;
+        if hops_from_root == 0 {
+            self.send(data.to_vec());
+            let _ = self.recv(); // swallow the returning copy
+        } else {
+            let incoming = self.recv();
+            data.copy_from_slice(&incoming);
+            self.send(incoming);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn run_group<F>(n: usize, f: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&mut Comm, &mut Vec<f32>) + Send + Sync + Copy + 'static,
+    {
+        let comms = ring_group(n);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let mut data: Vec<f32> =
+                        (0..10).map(|i| (c.rank * 100 + i) as f32).collect();
+                    f(&mut c, &mut data);
+                    data
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_sums_across_ranks() {
+        for n in [1, 2, 3, 4, 7] {
+            let results = run_group(n, |c, d| c.all_reduce(d));
+            let want: Vec<f32> = (0..10)
+                .map(|i| (0..n).map(|r| (r * 100 + i) as f32).sum())
+                .collect();
+            for (r, res) in results.iter().enumerate() {
+                assert_eq!(res, &want, "n={n} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_owned_chunk_is_complete() {
+        let n = 4;
+        let results = run_group(n, |c, d| {
+            c.reduce_scatter(d);
+            // Zero everything but the owned chunk, then all-gather to
+            // verify the owned chunks alone reconstruct the full sum.
+            let (a, b) = c.owned_range(d.len());
+            for (i, v) in d.iter_mut().enumerate() {
+                if i < a || i >= b {
+                    *v = 0.0;
+                }
+            }
+            c.all_gather_owned(d);
+        });
+        let want: Vec<f32> =
+            (0..10).map(|i| (0..n).map(|r| (r * 100 + i) as f32).sum()).collect();
+        for res in &results {
+            assert_eq!(res, &want);
+        }
+    }
+
+    #[test]
+    fn broadcast_copies_root_buffer() {
+        let results = run_group(3, |c, d| c.broadcast(d, 1));
+        let want: Vec<f32> = (0..10).map(|i| (100 + i) as f32).collect();
+        for res in &results {
+            assert_eq!(res, &want);
+        }
+    }
+
+    #[test]
+    fn traffic_matches_ring_bound() {
+        // All-reduce traffic per rank = 2·(n−1)/n·len elements.
+        let comms = ring_group(4);
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|mut c| {
+                thread::spawn(move || {
+                    let mut d = vec![1.0f32; 1000];
+                    c.all_reduce(&mut d);
+                    c.sent_elems
+                })
+            })
+            .collect();
+        for h in handles {
+            let sent = h.join().unwrap();
+            assert_eq!(sent, 2 * 3 * 250); // 2·(n−1)·chunk
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_are_handled() {
+        let results = run_group(3, |c, d| {
+            d.truncate(7); // 7 elements over 3 ranks: chunks 3,2,2
+            c.all_reduce(d);
+        });
+        let want: Vec<f32> = (0..7).map(|i| (0..3).map(|r| (r * 100 + i) as f32).sum()).collect();
+        for res in &results {
+            assert_eq!(res, &want);
+        }
+    }
+}

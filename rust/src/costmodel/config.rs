@@ -1,0 +1,183 @@
+//! Training-configuration description shared by the cost model, the
+//! planner, the simulator and the real trainer.
+
+use std::fmt;
+
+/// The three training strategies compared throughout the paper (§5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Standard data + pipeline parallelism: contiguous layer split,
+    /// per-micro-batch gradient accumulation, no state partition.
+    Baseline,
+    /// Baseline plus ZeRO-3-style training-state partition in the
+    /// data-parallel direction (no pipeline parallelism — the paper finds
+    /// the combination counter-productive for this strategy).
+    Partitioned,
+    /// This paper's contribution: layered gradient accumulation +
+    /// modular pipeline parallelism, with the state partitioned unless
+    /// `partition: false` is set explicitly (§5).
+    Improved,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 3] = [Strategy::Baseline, Strategy::Partitioned, Strategy::Improved];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Baseline => "Baseline",
+            Strategy::Partitioned => "Partitioned",
+            Strategy::Improved => "Improved",
+        }
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Which parallelism dimensions a configuration may use (the "Parallelism"
+/// column of Tables 6.1–6.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParallelismMenu {
+    pub data: bool,
+    pub pipeline: bool,
+    pub tensor: bool,
+}
+
+impl ParallelismMenu {
+    pub const NONE: Self = Self { data: false, pipeline: false, tensor: false };
+    pub const DATA: Self = Self { data: true, pipeline: false, tensor: false };
+    pub const DATA_PIPE: Self = Self { data: true, pipeline: true, tensor: false };
+    pub const DATA_TENSOR: Self = Self { data: true, pipeline: false, tensor: true };
+    pub const PIPE_TENSOR: Self = Self { data: false, pipeline: true, tensor: true };
+    pub const THREE_D: Self = Self { data: true, pipeline: true, tensor: true };
+
+    pub fn name(self) -> &'static str {
+        match (self.data, self.pipeline, self.tensor) {
+            (false, false, false) => "None",
+            (true, false, false) => "Data",
+            (true, true, false) => "Data + pipe",
+            (true, false, true) => "Data + tensor",
+            (false, true, true) => "Pipe + tensor",
+            (true, true, true) => "3d",
+            (false, true, false) => "Pipe",
+            (false, false, true) => "Tensor",
+        }
+    }
+}
+
+impl fmt::Display for ParallelismMenu {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A concrete distributed-training configuration (one row of Table 6.1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrainConfig {
+    pub strategy: Strategy,
+    /// Data-parallel degree n_b.
+    pub n_b: usize,
+    /// Pipeline-parallel degree n_l.
+    pub n_l: usize,
+    /// Tensor-parallel degree n_a.
+    pub n_a: usize,
+    /// Micro-batch count n_μ (sequential micro-batches per data-parallel
+    /// instance).
+    pub n_mu: usize,
+    /// Micro-batch size b_μ, sequences.
+    pub b_mu: f64,
+    /// Whether the training state + activation checkpoints are offloaded
+    /// to CPU memory.
+    pub offload: bool,
+    /// Whether the training state is partitioned in the data-parallel
+    /// direction (always true for `Partitioned`; default true for
+    /// `Improved`; always false for `Baseline`).
+    pub partition: bool,
+}
+
+impl TrainConfig {
+    /// Global batch size b = n_b · n_μ · b_μ.
+    pub fn batch_size(&self) -> f64 {
+        self.n_b as f64 * self.n_mu as f64 * self.b_mu
+    }
+
+    /// Total device count n_gpu = n_b · n_l · n_a.
+    pub fn n_gpu(&self) -> usize {
+        self.n_b * self.n_l * self.n_a
+    }
+
+    /// Whether this config uses layered gradient accumulation / modular
+    /// pipeline scheduling.
+    pub fn is_improved(&self) -> bool {
+        self.strategy == Strategy::Improved
+    }
+
+    /// The parallelism menu implied by the degrees.
+    pub fn menu(&self) -> ParallelismMenu {
+        ParallelismMenu { data: self.n_b > 1, pipeline: self.n_l > 1, tensor: self.n_a > 1 }
+    }
+
+    /// Consistency checks: degrees positive, micro-batch positive, the
+    /// partition flag consistent with the strategy.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_b == 0 || self.n_l == 0 || self.n_a == 0 || self.n_mu == 0 {
+            return Err(format!("zero parallelism degree in {self:?}"));
+        }
+        if self.b_mu <= 0.0 {
+            return Err(format!("non-positive micro-batch size in {self:?}"));
+        }
+        if self.strategy == Strategy::Baseline && self.partition {
+            return Err("Baseline strategy cannot partition the state".into());
+        }
+        if self.strategy == Strategy::Partitioned && !self.partition {
+            return Err("Partitioned strategy must partition the state".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 483,
+            n_l: 5,
+            n_a: 16,
+            n_mu: 5,
+            b_mu: 1.0,
+            offload: false,
+            partition: true,
+        }
+    }
+
+    #[test]
+    fn batch_and_gpu_arithmetic() {
+        let c = cfg();
+        assert_eq!(c.batch_size(), 2415.0);
+        assert_eq!(c.n_gpu(), 38_640);
+        assert_eq!(c.menu(), ParallelismMenu::THREE_D);
+    }
+
+    #[test]
+    fn validation_rejects_inconsistent_partition() {
+        let mut c = cfg();
+        c.strategy = Strategy::Baseline;
+        assert!(c.validate().is_err());
+        c.partition = false;
+        assert!(c.validate().is_ok());
+        c.strategy = Strategy::Partitioned;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn menu_names_match_paper() {
+        assert_eq!(ParallelismMenu::THREE_D.name(), "3d");
+        assert_eq!(ParallelismMenu::DATA_PIPE.name(), "Data + pipe");
+    }
+}

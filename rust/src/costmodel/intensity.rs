@@ -1,0 +1,243 @@
+//! Arithmetic-intensity formulas for every network stream (paper
+//! Appendix C.4) and for CPU-GPU offload traffic (Appendix C.5).
+//!
+//! Each formula returns the operation intensity ν_op (flops per byte of
+//! transfer). A stream is hideable behind compute when ν_op ≥ ν_net, the
+//! link's intensity threshold (eq. 3); the relative overhead otherwise is
+//! ν_net / ν_op (eq. 4 discussion).
+
+use crate::model::TransformerShape;
+
+use super::config::TrainConfig;
+
+/// Data-parallel gradient-reduction intensity (C.4.1, eqs. 5–9), and
+/// whether the paper treats the stream as overlapped with compute.
+///
+/// * Baseline, no pipeline: reduction overlaps the backward pass of the
+///   last micro-batch — ν = 3 b d_s / (4 n_b n_μ) (eq. 5).
+/// * Baseline with pipeline: overlap is impractical (the last micro-batch
+///   is spread across stages), treat as non-overlapped — ν = b d_s / n_b
+///   (eq. 6).
+/// * Partitioned: restore/reduce repeat per micro-batch, overlapping all
+///   of them — ν = b d_s / (2 n_b n_μ) (eq. 7).
+/// * Improved (layered gradient accumulation): reduction spreads over the
+///   whole backward pass — ν = 3 b d_s / (4 n_b) non-partitioned (eq. 8)
+///   or b d_s / (2 n_b) partitioned (eq. 9).
+pub fn data_parallel_intensity(shape: &TransformerShape, cfg: &TrainConfig) -> StreamIntensity {
+    let b = cfg.batch_size();
+    let d_s = shape.d_s as f64;
+    let n_b = cfg.n_b as f64;
+    let n_mu = cfg.n_mu as f64;
+    if cfg.n_b == 1 {
+        return StreamIntensity::absent();
+    }
+    let (nu, overlapped) = if cfg.is_improved() {
+        if cfg.partition {
+            (b * d_s / (2.0 * n_b), true)
+        } else {
+            (3.0 * b * d_s / (4.0 * n_b), true)
+        }
+    } else if cfg.partition {
+        (b * d_s / (2.0 * n_b * n_mu), true)
+    } else if cfg.n_l > 1 {
+        (b * d_s / n_b, false)
+    } else {
+        (3.0 * b * d_s / (4.0 * n_b * n_mu), true)
+    };
+    StreamIntensity { nu, overlapped }
+}
+
+/// Pipeline-parallel activation-transfer intensity (C.4.2, eqs. 10–11).
+///
+/// * Baseline (contiguous split): one boundary transfer per d_l/n_l
+///   layers — ν = (4 + 2 n_I) d_m d_l / (2 n_l); overlapped by running
+///   slightly more micro-batches than stages.
+/// * Improved (modular split): a transfer after every layer —
+///   ν = (4 + 2 n_I) d_m / 2 (eq. 11, = (2+n_I) d_m for n_I = 4);
+///   the paper prefers *not* to overlap it (n_μ is small; an extra
+///   micro-batch would cost more than the exposed transfer).
+pub fn pipeline_parallel_intensity(shape: &TransformerShape, cfg: &TrainConfig) -> StreamIntensity {
+    if cfg.n_l == 1 {
+        return StreamIntensity::absent();
+    }
+    let d_m = shape.d_m() as f64;
+    let n_i = shape.n_i as f64;
+    let per_layer = (4.0 + 2.0 * n_i) * d_m / 2.0;
+    if cfg.is_improved() {
+        // Modular: boundary after every layer; not overlapped unless the
+        // planner allocated slack micro-batches (n_μ > n_l).
+        StreamIntensity { nu: per_layer, overlapped: cfg.n_mu > cfg.n_l }
+    } else {
+        let chunk = shape.d_l as f64 / cfg.n_l as f64;
+        StreamIntensity { nu: per_layer * chunk, overlapped: true }
+    }
+}
+
+/// Tensor-parallel all-reduce intensity (C.4.3, eq. 12): six all-reduces
+/// per layer per micro-batch (2 fwd + 2 bwd + 2 recompute), never
+/// overlapped with compute in the Megatron-LM scheme.
+pub fn tensor_parallel_intensity(shape: &TransformerShape, cfg: &TrainConfig) -> StreamIntensity {
+    if cfg.n_a == 1 {
+        return StreamIntensity::absent();
+    }
+    let d_m = shape.d_m() as f64;
+    let n_i = shape.n_i as f64;
+    let n_a = cfg.n_a as f64;
+    StreamIntensity { nu: (4.0 + 2.0 * n_i) * d_m / (3.0 * (n_a - 1.0)), overlapped: false }
+}
+
+/// CPU-GPU training-state offload intensity (C.5, eq. 13). The transfer
+/// overlaps the compute of the neighbouring layer; the bottleneck is the
+/// forward pass. Layered gradient accumulation moves the state once per
+/// batch instead of once per micro-batch, and the partition shrinks the
+/// moved state by n_b.
+pub fn state_offload_intensity(shape: &TransformerShape, cfg: &TrainConfig) -> StreamIntensity {
+    if !cfg.offload {
+        return StreamIntensity::absent();
+    }
+    let b = cfg.batch_size();
+    let d_s = shape.d_s as f64;
+    let n_b = cfg.n_b as f64;
+    let n_mu = cfg.n_mu as f64;
+    let nu = match (cfg.is_improved(), cfg.partition) {
+        (false, false) => b * d_s / (n_mu * n_b),
+        (false, true) => b * d_s / n_mu,
+        (true, false) => b * d_s / n_b,
+        (true, true) => b * d_s,
+    };
+    StreamIntensity { nu, overlapped: true }
+}
+
+/// Activation-checkpoint offload intensity (C.5, eq. 14): the checkpoint
+/// write/read overlaps the layer compute, ν = (4 + 2 n_I) d_m.
+pub fn checkpoint_offload_intensity(shape: &TransformerShape) -> f64 {
+    (4.0 + 2.0 * shape.n_i as f64) * shape.d_m() as f64
+}
+
+/// An individual data stream: its operation intensity and whether it is
+/// overlapped with compute.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamIntensity {
+    /// Operation arithmetic intensity ν_op, flops/byte. `f64::INFINITY`
+    /// when the stream does not exist for this configuration.
+    pub nu: f64,
+    /// Whether the stream runs concurrently with compute.
+    pub overlapped: bool,
+}
+
+impl StreamIntensity {
+    pub fn absent() -> Self {
+        StreamIntensity { nu: f64::INFINITY, overlapped: true }
+    }
+
+    pub fn is_absent(&self) -> bool {
+        self.nu.is_infinite()
+    }
+
+    /// Relative time overhead of this stream given the link's intensity
+    /// threshold ν_net:
+    /// * absent → 0;
+    /// * overlapped → max(0, ν_net/ν − 1) (the stream only costs time when
+    ///   it is slower than the compute it hides behind);
+    /// * non-overlapped → ν_net/ν (the transfer is serialized).
+    pub fn overhead(&self, nu_net: f64) -> f64 {
+        if self.is_absent() {
+            0.0
+        } else if self.overlapped {
+            (nu_net / self.nu - 1.0).max(0.0)
+        } else {
+            nu_net / self.nu
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::config::Strategy;
+    use crate::model::XModel;
+
+    fn x160_cfg(strategy: Strategy, n_b: usize, n_l: usize, n_a: usize, n_mu: usize, b_mu: f64, partition: bool) -> TrainConfig {
+        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload: false, partition }
+    }
+
+    #[test]
+    fn improved_dp_intensity_is_n_mu_times_baseline() {
+        // LGA spreads the reduction over the whole backward pass: ν gains
+        // a factor n_μ over per-micro-batch overlap (eq. 5 vs eq. 8).
+        let shape = XModel::x160().shape();
+        let base = x160_cfg(Strategy::Baseline, 10, 1, 1, 8, 4.0, false);
+        let impr = x160_cfg(Strategy::Improved, 10, 1, 1, 8, 4.0, false);
+        let nb = data_parallel_intensity(&shape, &base);
+        let ni = data_parallel_intensity(&shape, &impr);
+        assert!((ni.nu / nb.nu - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_dp_with_pipeline_is_not_overlapped() {
+        let shape = XModel::x160().shape();
+        let c = x160_cfg(Strategy::Baseline, 3, 160, 1, 201, 4.0, false);
+        let s = data_parallel_intensity(&shape, &c);
+        assert!(!s.overlapped);
+        // eq. 6: ν = b d_s / n_b = 2412·2560/3.
+        assert!((s.nu - 2412.0 * 2560.0 / 3.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn modular_pipeline_intensity_matches_eq_11() {
+        // ν_l^impr = (2 + n_I) d_m = 6 · 25600 for X_160 (n_I = 4).
+        let shape = XModel::x160().shape();
+        let c = x160_cfg(Strategy::Improved, 483, 5, 16, 5, 1.0, true);
+        let s = pipeline_parallel_intensity(&shape, &c);
+        assert!((s.nu - 6.0 * 25_600.0).abs() < 1e-6);
+        assert!(!s.overlapped, "n_mu == n_l leaves no slack to overlap");
+    }
+
+    #[test]
+    fn naive_pipeline_intensity_gains_chunk_factor() {
+        let shape = XModel::x160().shape();
+        let naive = x160_cfg(Strategy::Baseline, 3, 8, 1, 10, 4.0, false);
+        let modular = x160_cfg(Strategy::Improved, 3, 8, 1, 10, 4.0, true);
+        let sn = pipeline_parallel_intensity(&shape, &naive);
+        let sm = pipeline_parallel_intensity(&shape, &modular);
+        // d_l / n_l = 160/8 = 20x more compute per boundary transfer.
+        assert!((sn.nu / sm.nu - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_parallel_overhead_at_16_ways_is_about_7_percent() {
+        // The Table 6.1 "Data + tensor" rows show efficiency 0.93 from the
+        // TP all-reduce overhead alone: ν_net(NVLink)/ν_a ≈ 0.071.
+        use crate::hardware::{ClusterSpec, LinkKind};
+        let shape = XModel::x160().shape();
+        let c = x160_cfg(Strategy::Baseline, 483, 1, 16, 1, 5.0, false);
+        let s = tensor_parallel_intensity(&shape, &c);
+        let nu_net = LinkKind::NvLink.intensity_threshold(&ClusterSpec::reference().gpu);
+        let overhead = s.overhead(nu_net);
+        assert!((overhead - 0.0709).abs() < 0.002, "overhead = {overhead:.4}");
+    }
+
+    #[test]
+    fn lga_state_offload_needs_no_microbatch_scaling() {
+        // eq. 13: improved+partitioned intensity is b·d_s — independent of
+        // n_μ, which is the whole point of layered gradient accumulation.
+        let shape = XModel::x160().shape();
+        let mut c = x160_cfg(Strategy::Improved, 483, 5, 1, 5, 1.0, true);
+        c.offload = true;
+        let s1 = state_offload_intensity(&shape, &c);
+        c.n_mu = 50;
+        c.b_mu = 0.1;
+        let s2 = state_offload_intensity(&shape, &c);
+        assert!((s1.nu - s2.nu).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overhead_semantics() {
+        let over = StreamIntensity { nu: 100.0, overlapped: true };
+        assert_eq!(over.overhead(50.0), 0.0); // hidden
+        assert!((over.overhead(200.0) - 1.0).abs() < 1e-12); // 2x data-bound
+        let serial = StreamIntensity { nu: 100.0, overlapped: false };
+        assert!((serial.overhead(50.0) - 0.5).abs() < 1e-12);
+        assert_eq!(StreamIntensity::absent().overhead(1e9), 0.0);
+    }
+}

@@ -1,0 +1,180 @@
+//! Per-device memory model (paper §2.5 and Appendix C.3) — reproduces
+//! Table 6.2 digit-for-digit.
+//!
+//! Four categories:
+//! * **training state** — parameters + Adam moments, fp32, 12 bytes/param;
+//!   split across model-parallel instances, or across every device when
+//!   partitioned (ZeRO-3 style);
+//! * **activation checkpoints** — one fp16 layer output per layer,
+//!   2·b·d_s·d_m·d_l bytes total, split across all devices;
+//! * **parameter/gradient buffers** — mixed buffering (Appendix C.2):
+//!   two fp16 parameter buffers + one fp16 gradient buffer of one layer,
+//!   split in the tensor-parallel direction;
+//! * **layer activations** — intermediate activations + their gradients
+//!   between two checkpoints, m₀ bytes/token (see
+//!   [`TransformerShape::m0_bytes_per_token`]).
+//!
+//! State and checkpoints are offloadable to CPU memory; buffers and live
+//! activations are not (§2.5, C.3).
+
+use crate::hardware::Bytes;
+use crate::model::TransformerShape;
+
+use super::config::TrainConfig;
+
+/// Per-device memory usage breakdown, bytes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemoryBreakdown {
+    pub state: Bytes,
+    pub checkpoints: Bytes,
+    pub buffers: Bytes,
+    pub activations: Bytes,
+}
+
+impl MemoryBreakdown {
+    /// Evaluate the Appendix C.3 formulas for a shape + configuration.
+    pub fn evaluate(shape: &TransformerShape, cfg: &TrainConfig) -> Self {
+        let p = shape.params();
+        let p_l = shape.params_per_layer();
+        let b = cfg.batch_size();
+        let (n_b, n_l, n_a) = (cfg.n_b as f64, cfg.n_l as f64, cfg.n_a as f64);
+        let n_gpu = cfg.n_gpu() as f64;
+        let n_mu = cfg.n_mu as f64;
+
+        // Training state: 12 bytes/param (fp32 params + Adam mean and
+        // variance; gradients folded away by eager weight updates, C.3).
+        let state = if cfg.partition { 12.0 * p / n_gpu } else { 12.0 * p / (n_l * n_a) };
+
+        // Activation checkpoints: fp16 layer outputs for the whole batch,
+        // split across data, pipeline and tensor dimensions (C.3).
+        let checkpoints = shape.checkpoint_bytes(b) * shape.d_l as f64 / n_gpu;
+
+        // Mixed buffering (C.2): 2 parameter + 1 gradient buffer, one
+        // layer each, fp16, split in the tensor-parallel direction.
+        let buffers = 6.0 * p_l / n_a;
+
+        // Live layer activations + gradients for one micro-batch,
+        // split across tensor-parallel instances (C.3).
+        let activations = cfg.b_mu.max(b / (n_b * n_mu)) * shape.d_s as f64
+            * shape.m0_bytes_per_token()
+            / n_a;
+
+        MemoryBreakdown { state, checkpoints, buffers, activations }
+    }
+
+    /// Memory that can be offloaded to CPU (state + checkpoints).
+    pub fn offloadable(&self) -> Bytes {
+        self.state + self.checkpoints
+    }
+
+    /// Memory that must stay on the GPU (buffers + live activations).
+    pub fn non_offloadable(&self) -> Bytes {
+        self.buffers + self.activations
+    }
+
+    /// Total footprint if nothing is offloaded.
+    pub fn total(&self) -> Bytes {
+        self.offloadable() + self.non_offloadable()
+    }
+
+    /// GPU-resident footprint for a configuration (respects the offload
+    /// flag).
+    pub fn gpu_resident(&self, offload: bool) -> Bytes {
+        if offload {
+            self.non_offloadable()
+        } else {
+            self.total()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::config::Strategy;
+    use crate::hardware::GIB;
+    use crate::model::XModel;
+
+    fn cfg(
+        strategy: Strategy,
+        n_b: usize,
+        n_l: usize,
+        n_a: usize,
+        n_mu: usize,
+        b_mu: f64,
+        offload: bool,
+        partition: bool,
+    ) -> TrainConfig {
+        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition }
+    }
+
+    /// Full check of Table 6.2 (all 9 rows, all 6 columns), tolerance 1%.
+    #[test]
+    fn table_6_2_memory_breakdown() {
+        use Strategy::*;
+        let shape = XModel::x160().shape();
+        // (cfg, state, ckpt, buffers, acts, offloadable, non-offloadable)
+        // — memory values in GiB, straight from Table 6.2.
+        #[allow(clippy::type_complexity)]
+        let rows: [(TrainConfig, [f64; 6]); 9] = [
+            (cfg(Baseline, 1, 1, 1, 604, 4.0, true, false),
+             [14.1e3, 47.2e3, 43.9, 24.9, 61.2e3, 68.8]),
+            (cfg(Baseline, 483, 1, 1, 1, 5.0, true, false),
+             [14.1e3, 97.7, 43.9, 31.1, 14.2e3, 75.1]),
+            (cfg(Partitioned, 483, 1, 1, 1, 5.0, true, true),
+             [29.1, 97.7, 43.9, 31.1, 127.0, 75.1]),
+            (cfg(Baseline, 3, 160, 1, 201, 4.0, true, false),
+             [87.9, 98.1, 43.9, 24.9, 186.0, 68.8]),
+            (cfg(Improved, 483, 5, 1, 5, 1.0, false, true),
+             [5.82, 19.5, 43.9, 6.23, 25.4, 50.2]),
+            (cfg(Baseline, 483, 1, 16, 1, 5.0, true, false),
+             [879.0, 6.10, 2.75, 1.95, 885.0, 4.69]),
+            (cfg(Partitioned, 483, 1, 16, 1, 5.0, false, true),
+             [1.82, 6.10, 2.75, 1.95, 7.92, 4.69]),
+            (cfg(Baseline, 14, 160, 16, 172, 1.0, false, false),
+             [5.49, 1.31, 2.75, 0.389, 6.81, 3.14]),
+            (cfg(Improved, 483, 5, 16, 5, 1.0, false, true),
+             [0.364, 1.22, 2.75, 0.389, 1.58, 3.14]),
+        ];
+        for (i, (c, want)) in rows.iter().enumerate() {
+            let m = MemoryBreakdown::evaluate(&shape, c);
+            let got = [
+                m.state / GIB,
+                m.checkpoints / GIB,
+                m.buffers / GIB,
+                m.activations / GIB,
+                m.offloadable() / GIB,
+                m.non_offloadable() / GIB,
+            ];
+            for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    (g / w - 1.0).abs() < 0.011,
+                    "row {i} col {j}: got {g:.4}, want {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn partition_divides_state_by_data_parallel_degree() {
+        let shape = XModel::x160().shape();
+        let base = cfg(Strategy::Baseline, 483, 1, 1, 1, 5.0, true, false);
+        let part = cfg(Strategy::Partitioned, 483, 1, 1, 1, 5.0, true, true);
+        let mb = MemoryBreakdown::evaluate(&shape, &base);
+        let mp = MemoryBreakdown::evaluate(&shape, &part);
+        assert!((mb.state / mp.state - 483.0).abs() < 1e-6);
+        // Non-state categories are unaffected by the partition.
+        assert_eq!(mb.checkpoints, mp.checkpoints);
+        assert_eq!(mb.buffers, mp.buffers);
+        assert_eq!(mb.activations, mp.activations);
+    }
+
+    #[test]
+    fn gpu_resident_respects_offload_flag() {
+        let shape = XModel::x160().shape();
+        let c = cfg(Strategy::Baseline, 483, 1, 1, 1, 5.0, true, false);
+        let m = MemoryBreakdown::evaluate(&shape, &c);
+        assert!(m.gpu_resident(true) < m.gpu_resident(false));
+        assert_eq!(m.gpu_resident(false), m.total());
+    }
+}

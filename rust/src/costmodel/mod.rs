@@ -1,0 +1,16 @@
+//! The paper's analytical cost model (Appendix C): memory usage,
+//! arithmetic intensities of every network stream, pipeline bubble, and
+//! training-time estimation.
+
+pub mod config;
+pub mod efficiency;
+pub mod intensity;
+pub mod memory;
+
+pub use config::{ParallelismMenu, Strategy, TrainConfig};
+pub use efficiency::{bubble_fraction, estimate, overheads, Overheads, SpeedEstimate};
+pub use intensity::{
+    checkpoint_offload_intensity, data_parallel_intensity, pipeline_parallel_intensity,
+    state_offload_intensity, tensor_parallel_intensity, StreamIntensity,
+};
+pub use memory::MemoryBreakdown;

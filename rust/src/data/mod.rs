@@ -1,0 +1,5 @@
+//! Synthetic data pipeline: deterministic seedable corpus + batching.
+
+pub mod corpus;
+
+pub use corpus::{Batch, Corpus, Rng};

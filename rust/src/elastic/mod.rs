@@ -1,0 +1,155 @@
+//! Elastic training (paper §8): dynamic critical batch size ("don't decay
+//! the learning rate, increase the cluster size", §8.1) and the
+//! cluster-resize replanning that real-time checkpoints make nearly free
+//! (§8.2).
+//!
+//! Model, following McCandlish et al. (the paper's [15]): reaching a
+//! given loss requires E "effective samples"; training at batch size b
+//! when the critical batch size is b_c consumes E·(1 + b/b_c) actual
+//! samples. The critical batch size grows during training; a fixed-size
+//! cluster therefore trains far above b_c early on and wastes compute,
+//! while an elastic cluster sized to b ≈ b_c(t) stays efficient.
+
+use crate::model::XModel;
+
+/// Critical-batch-size trajectory: b_c at progress fraction f ∈ [0, 1],
+/// relative to the late-training value the paper's tables use.
+/// McCandlish et al. observe b_c roughly proportional to L^(-~4), which
+/// over a typical LM run maps to a steep ramp; we use b_c(f) ≈
+/// b_c_final · max(f, f0) as a serviceable first-order model.
+pub fn bc_fraction(f: f64, f0: f64) -> f64 {
+    f.clamp(f0, 1.0)
+}
+
+/// One phase of the elastic-vs-fixed comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    /// Progress fraction at the phase midpoint.
+    pub f: f64,
+    /// Effective samples required by the phase (arbitrary units).
+    pub effective: f64,
+}
+
+/// Outcome of running the phases with a policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ElasticOutcome {
+    /// Total samples processed (∝ GPU-hours ∝ cost).
+    pub samples: f64,
+    /// Total wall-clock (arbitrary units; rate ∝ cluster size).
+    pub wall: f64,
+    /// Peak cluster size used (fraction of the maximum).
+    pub peak_cluster: f64,
+}
+
+/// Phases for the comparison. Effective-sample demand grows with
+/// progress (∝ f): late training, where gradients are noisy and b_c is
+/// large, consumes most of the sample budget — the same observation that
+/// drives the critical-batch-size growth itself.
+pub fn default_phases(n: usize) -> Vec<Phase> {
+    let norm: f64 = (0..n).map(|i| (i as f64 + 0.5) / n as f64).sum();
+    (0..n)
+        .map(|i| {
+            let f = (i as f64 + 0.5) / n as f64;
+            Phase { f, effective: f / norm }
+        })
+        .collect()
+}
+
+/// Fixed-size cluster: batch pinned to the late-training b_c.
+pub fn run_fixed(phases: &[Phase], f0: f64) -> ElasticOutcome {
+    let mut samples = 0.0;
+    let mut wall = 0.0;
+    for p in phases {
+        let ratio = 1.0 / bc_fraction(p.f, f0); // b / b_c(f)
+        let s = p.effective * (1.0 + ratio);
+        samples += s;
+        wall += s; // cluster size 1.0 (normalised), rate ∝ size
+    }
+    ElasticOutcome { samples, wall, peak_cluster: 1.0 }
+}
+
+/// Elastic cluster: batch (and cluster) scaled to b_c(f).
+pub fn run_elastic(phases: &[Phase], f0: f64) -> ElasticOutcome {
+    let mut samples = 0.0;
+    let mut wall = 0.0;
+    let mut peak: f64 = 0.0;
+    for p in phases {
+        let size = bc_fraction(p.f, f0); // cluster ∝ b = b_c(f)
+        let s = p.effective * 2.0; // b = b_c -> (1 + b/b_c) = 2
+        samples += s;
+        wall += s / size;
+        peak = peak.max(size);
+    }
+    ElasticOutcome { samples, wall, peak_cluster: peak }
+}
+
+/// §8.2: downtime for a cluster-resize event, seconds. Classic
+/// checkpointing stalls the whole cluster for a save + load; with
+/// real-time (streamed) checkpoints the new node loads its shard on the
+/// fly and the rest keep training.
+pub fn resize_downtime_secs(state_bytes: f64, tier_bandwidth: f64, realtime: bool) -> f64 {
+    if realtime {
+        0.0
+    } else {
+        2.0 * state_bytes / tier_bandwidth // save + load
+    }
+}
+
+/// The §8.1 cluster-size schedule for a model: GPUs to use at progress f,
+/// given the fastest-plan cluster size at the late-training b_c.
+pub fn cluster_schedule(model: &XModel, n_gpu_max: usize, steps: usize, f0: f64) -> Vec<(f64, usize)> {
+    let _ = model;
+    (0..steps)
+        .map(|i| {
+            let f = (i as f64 + 0.5) / steps as f64;
+            (f, ((n_gpu_max as f64) * bc_fraction(f, f0)).round().max(1.0) as usize)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elastic_is_cheaper_without_being_much_slower() {
+        // §8.1: "reduces the cost of training without significantly
+        // affecting the training time".
+        let phases = default_phases(100);
+        let fixed = run_fixed(&phases, 0.05);
+        let elastic = run_elastic(&phases, 0.05);
+        assert!(
+            elastic.samples < 0.75 * fixed.samples,
+            "cost: elastic {} vs fixed {}",
+            elastic.samples,
+            fixed.samples
+        );
+        assert!(
+            elastic.wall < 1.5 * fixed.wall,
+            "wall: elastic {} vs fixed {}",
+            elastic.wall,
+            fixed.wall
+        );
+    }
+
+    #[test]
+    fn elastic_peak_cluster_matches_fixed() {
+        let phases = default_phases(50);
+        let e = run_elastic(&phases, 0.1);
+        assert!((e.peak_cluster - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn realtime_checkpoints_eliminate_resize_downtime() {
+        let classic = resize_downtime_secs(2e12, 3.2e9, false);
+        assert!(classic > 600.0); // 20+ minutes for a 2 TB state on NVMe
+        assert_eq!(resize_downtime_secs(2e12, 3.2e9, true), 0.0);
+    }
+
+    #[test]
+    fn cluster_schedule_is_monotone() {
+        let sched = cluster_schedule(&XModel::x160(), 38_640, 20, 0.05);
+        assert!(sched.windows(2).all(|w| w[0].1 <= w[1].1));
+        assert_eq!(sched.last().unwrap().1, 37_674); // ~n_max at the end
+    }
+}

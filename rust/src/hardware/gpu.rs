@@ -1,0 +1,98 @@
+//! GPU device specification (paper Appendix A).
+//!
+//! The paper's reference device is the NVIDIA A100 80 GB: 312 Tflop/s peak
+//! fp16 compute, 80 GB HBM at 2039 GB/s. All cost-model results are
+//! expressed relative to this device; other devices can be described with
+//! the same struct (used by the ablation benches).
+
+/// Floating-point operations per second (flop/s).
+pub type Flops = f64;
+/// Bytes (we keep everything in f64 — the cost model works with continuous
+/// quantities, and the largest values exceed u64-safe integer arithmetic
+/// conveniences anyway).
+pub type Bytes = f64;
+
+/// One gibibyte. The paper quotes device memory in "GB" but all of its
+/// derived numbers are binary: the Table 6.2 memory rows are GiB (12p/483
+/// bytes for X_160 = 29.1 GiB exactly), and the Table A.1 arithmetic
+/// intensity thresholds divide 312 Tflop/s by the quoted "GB/s" scaled by
+/// 2^30 (312e12 / (50 * 2^30) = 5.81k flops/B for InfiniBand, as printed).
+/// We follow the same convention so tables match digit-for-digit.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+/// One decimal gigabyte.
+pub const GB: f64 = 1e9;
+/// Seconds per day, for training-time reporting.
+pub const SECS_PER_DAY: f64 = 86_400.0;
+
+/// A single accelerator device.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GpuSpec {
+    /// Peak half-precision compute, flop/s.
+    pub peak_flops: Flops,
+    /// Device memory capacity, bytes.
+    pub memory_bytes: Bytes,
+    /// Device memory bandwidth, bytes/s (input + output).
+    pub memory_bandwidth: f64,
+}
+
+impl GpuSpec {
+    /// The paper's reference device: NVIDIA A100 80 GB (Appendix A).
+    /// Bandwidths are stored in the paper's GiB-scaled convention (see
+    /// [`GIB`]) so that intensity thresholds reproduce Table A.1.
+    pub const fn a100_80gb() -> Self {
+        GpuSpec {
+            peak_flops: 312e12,
+            memory_bytes: 80.0 * GIB,
+            memory_bandwidth: 2039.0 * GIB,
+        }
+    }
+
+    /// A100 40 GB variant (ablations).
+    pub const fn a100_40gb() -> Self {
+        GpuSpec { memory_bytes: 40.0 * GIB, ..Self::a100_80gb() }
+    }
+
+    /// V100 16 GB (ablations; 125 Tflop/s tensor-core fp16, 900 GB/s HBM2).
+    pub const fn v100_16gb() -> Self {
+        GpuSpec { peak_flops: 125e12, memory_bytes: 16.0 * GIB, memory_bandwidth: 900.0 * GIB }
+    }
+
+    /// Arithmetic-intensity threshold (flops/byte) of the device memory
+    /// itself — Table A.1 first row: 143 flops/B for the A100.
+    pub fn hbm_intensity_threshold(&self) -> f64 {
+        self.peak_flops / self.memory_bandwidth
+    }
+
+    /// Arithmetic-intensity threshold implied by an external link of the
+    /// given bandwidth (bytes/s): compute/transfer ratio above which a
+    /// perfectly-overlapped transfer is hidden by compute (§2.3).
+    pub fn intensity_threshold(&self, link_bandwidth: f64) -> f64 {
+        self.peak_flops / link_bandwidth
+    }
+}
+
+impl Default for GpuSpec {
+    fn default() -> Self {
+        Self::a100_80gb()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a100_hbm_threshold_matches_table_a1() {
+        // Table A.1: GPU memory row — 143 flops/B.
+        let g = GpuSpec::a100_80gb();
+        assert!((g.hbm_intensity_threshold() - 142.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn intensity_threshold_scales_inversely_with_bandwidth() {
+        let g = GpuSpec::a100_80gb();
+        let t1 = g.intensity_threshold(50e9);
+        let t2 = g.intensity_threshold(25e9);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Hardware model: devices, links and cluster topology (paper Appendix A).
+
+pub mod gpu;
+pub mod network;
+pub mod topology;
+
+pub use gpu::{Bytes, Flops, GpuSpec, GB, GIB, SECS_PER_DAY};
+pub use network::{InterNode, LinkKind};
+pub use topology::ClusterSpec;

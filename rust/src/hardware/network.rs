@@ -1,0 +1,138 @@
+//! Interconnect and storage link specifications (paper Table A.1).
+//!
+//! Each link is described by its input+output bandwidth. Bandwidths are
+//! stored in the paper's GiB-scaled convention (see [`super::gpu::GIB`])
+//! so that the derived arithmetic-intensity thresholds reproduce the
+//! printed table exactly.
+
+use super::gpu::{GpuSpec, GIB};
+
+/// The kinds of link that appear in the paper's analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// On-device HBM (2039 GB/s on the A100).
+    GpuMemory,
+    /// NVLink / NVSwitch intra-node fabric (600 GB/s per A100).
+    NvLink,
+    /// PCI-express 4.0 x16 (63 GB/s), shared between CPU and NIC traffic.
+    PciExpress,
+    /// 200 Gb/s InfiniBand NIC (50 GB/s in+out per GPU).
+    InfiniBand,
+    /// Effective CPU<->GPU path on an HGX node (31.5 GB/s — half of PCIe
+    /// because one x16 link serves two GPUs plus two NICs, Appendix A).
+    CpuGpu,
+    /// 25 Gb/s-per-GPU Ethernet (§8.3; 400 Gb/s per 16-GPU node).
+    Ethernet,
+    /// NVMe SSD (3.2 GB/s).
+    DiskNvme,
+    /// Spinning hard drive (0.1 GB/s).
+    DiskHdd,
+}
+
+impl LinkKind {
+    /// All kinds, in Table A.1 order.
+    pub const ALL: [LinkKind; 8] = [
+        LinkKind::GpuMemory,
+        LinkKind::NvLink,
+        LinkKind::PciExpress,
+        LinkKind::InfiniBand,
+        LinkKind::CpuGpu,
+        LinkKind::Ethernet,
+        LinkKind::DiskNvme,
+        LinkKind::DiskHdd,
+    ];
+
+    /// Bandwidth quoted in the paper, "GB/s" (input + output).
+    pub fn quoted_gb_per_s(self) -> f64 {
+        match self {
+            LinkKind::GpuMemory => 2039.0,
+            LinkKind::NvLink => 600.0,
+            LinkKind::PciExpress => 63.0,
+            LinkKind::InfiniBand => 50.0,
+            LinkKind::CpuGpu => 31.5,
+            LinkKind::Ethernet => 6.25,
+            LinkKind::DiskNvme => 3.2,
+            LinkKind::DiskHdd => 0.1,
+        }
+    }
+
+    /// Bandwidth in bytes/s under the paper's GiB-scaled convention.
+    pub fn bandwidth(self) -> f64 {
+        self.quoted_gb_per_s() * GIB
+    }
+
+    /// Human-readable name, as printed in Table A.1.
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkKind::GpuMemory => "GPU memory",
+            LinkKind::NvLink => "NVLINK",
+            LinkKind::PciExpress => "PCI-express",
+            LinkKind::InfiniBand => "InfiniBand (200 Gb/s)",
+            LinkKind::CpuGpu => "CPU-GPU",
+            LinkKind::Ethernet => "Ethernet (25 Gb/s)",
+            LinkKind::DiskNvme => "Disk (NVMe)",
+            LinkKind::DiskHdd => "Disk (Hard drive)",
+        }
+    }
+
+    /// Arithmetic-intensity threshold of this link w.r.t. a device
+    /// (Table A.1 right column): compute/byte ratio above which a
+    /// perfectly-overlapped transfer over this link is hidden.
+    pub fn intensity_threshold(self, gpu: &GpuSpec) -> f64 {
+        gpu.peak_flops / self.bandwidth()
+    }
+}
+
+/// The inter-node link used for data-parallel / pipeline-parallel traffic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InterNode {
+    InfiniBand,
+    Ethernet,
+}
+
+impl InterNode {
+    pub fn link(self) -> LinkKind {
+        match self {
+            InterNode::InfiniBand => LinkKind::InfiniBand,
+            InterNode::Ethernet => LinkKind::Ethernet,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_a1_intensity_thresholds() {
+        // Paper Table A.1, right column (flops/B @ 312 Tflop/s).
+        let gpu = GpuSpec::a100_80gb();
+        let expect = [
+            (LinkKind::GpuMemory, 143.0, 0.01),
+            (LinkKind::NvLink, 484.0, 0.01),
+            (LinkKind::PciExpress, 4.61e3, 0.01),
+            (LinkKind::InfiniBand, 5.81e3, 0.01),
+            (LinkKind::CpuGpu, 9.22e3, 0.01),
+            (LinkKind::Ethernet, 46.5e3, 0.01),
+            (LinkKind::DiskNvme, 90.8e3, 0.01),
+            (LinkKind::DiskHdd, 2.91e6, 0.01),
+        ];
+        for (kind, want, tol) in expect {
+            let got = kind.intensity_threshold(&gpu);
+            assert!(
+                (got / want - 1.0).abs() < tol,
+                "{}: got {got:.4e}, want {want:.4e}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn all_kinds_have_distinct_bandwidths() {
+        for (i, a) in LinkKind::ALL.iter().enumerate() {
+            for b in &LinkKind::ALL[i + 1..] {
+                assert_ne!(a.bandwidth(), b.bandwidth());
+            }
+        }
+    }
+}

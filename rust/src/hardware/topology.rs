@@ -1,0 +1,106 @@
+//! Cluster topology description (paper Appendix A).
+//!
+//! The reference cluster is built from 16-GPU DGX/HGX-style A100 nodes:
+//! GPUs inside a node are fully connected through NVSwitch; nodes connect
+//! through InfiniBand (one 200 Gb/s NIC effectively usable per GPU) or
+//! 25 Gb/s-per-GPU Ethernet (§8.3). The CPU<->GPU path shares the PCIe
+//! link with the NIC, which creates the offload bottleneck analysed in
+//! Appendix C.5.
+
+use super::gpu::GpuSpec;
+use super::network::{InterNode, LinkKind};
+
+/// Static description of the cluster a training job runs on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClusterSpec {
+    /// Per-device specification.
+    pub gpu: GpuSpec,
+    /// Maximum GPUs per NVLink island (16 for DGX/HGX; `usize::MAX` for the
+    /// Figure 5 "no node-size limit" scenario).
+    pub max_node_size: usize,
+    /// Inter-node fabric used for data/pipeline-parallel traffic.
+    pub inter_node: InterNode,
+    /// CPU memory available per GPU for offloading, bytes. The paper
+    /// assumes "a large amount"; 2 TB/node / 16 GPUs by default.
+    pub cpu_memory_per_gpu: f64,
+    /// Whether CPU-GPU offload traffic shares PCIe with the NIC
+    /// (true for the HGX reference design, Appendix A).
+    pub pcie_shared_with_nic: bool,
+}
+
+impl ClusterSpec {
+    /// The paper's reference cluster: 16-GPU A100 nodes over InfiniBand.
+    pub const fn reference() -> Self {
+        ClusterSpec {
+            gpu: GpuSpec::a100_80gb(),
+            max_node_size: 16,
+            inter_node: InterNode::InfiniBand,
+            cpu_memory_per_gpu: 128.0e9,
+            pcie_shared_with_nic: true,
+        }
+    }
+
+    /// Figure 5 scenario: node-size limit removed (ring NVLink topology).
+    pub const fn unlimited_node() -> Self {
+        ClusterSpec { max_node_size: usize::MAX, ..Self::reference() }
+    }
+
+    /// §8.3 scenario: 25 Gb/s-per-GPU Ethernet instead of InfiniBand.
+    pub const fn ethernet() -> Self {
+        ClusterSpec { inter_node: InterNode::Ethernet, ..Self::reference() }
+    }
+
+    /// The link carrying data-parallel gradient traffic. Tensor parallelism
+    /// always stays on NVLink (when it fits in a node); data and pipeline
+    /// parallel cross nodes.
+    pub fn inter_node_link(&self) -> LinkKind {
+        self.inter_node.link()
+    }
+
+    /// The intensity threshold for the inter-node link.
+    pub fn inter_node_threshold(&self) -> f64 {
+        self.inter_node_link().intensity_threshold(&self.gpu)
+    }
+
+    /// Tensor-parallel link for a given tensor-parallel degree: NVLink
+    /// while the group fits in a node, the inter-node fabric otherwise
+    /// (the §7 "extreme scale" scenario).
+    pub fn tensor_parallel_link(&self, n_a: usize) -> LinkKind {
+        if n_a <= self.max_node_size {
+            LinkKind::NvLink
+        } else {
+            self.inter_node_link()
+        }
+    }
+}
+
+impl Default for ClusterSpec {
+    fn default() -> Self {
+        Self::reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_uses_nvlink_for_small_tp_groups() {
+        let c = ClusterSpec::reference();
+        assert_eq!(c.tensor_parallel_link(16), LinkKind::NvLink);
+        assert_eq!(c.tensor_parallel_link(32), LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn unlimited_node_keeps_nvlink() {
+        let c = ClusterSpec::unlimited_node();
+        assert_eq!(c.tensor_parallel_link(1024), LinkKind::NvLink);
+    }
+
+    #[test]
+    fn ethernet_threshold_is_higher_than_ib() {
+        let eth = ClusterSpec::ethernet();
+        let ib = ClusterSpec::reference();
+        assert!(eth.inter_node_threshold() > ib.inter_node_threshold());
+    }
+}

@@ -1,0 +1,35 @@
+//! # lga-mpp — Layered Gradient Accumulation & Modular Pipeline Parallelism
+//!
+//! A full reproduction of *"Layered gradient accumulation and modular
+//! pipeline parallelism: fast and efficient training of large language
+//! models"* (Lamy-Poirier, 2021).
+//!
+//! The crate has two halves:
+//!
+//! * an **analytical half** ([`model`], [`costmodel`], [`planner`],
+//!   [`offload`], [`elastic`], [`report`]) that reimplements the paper's
+//!   cost model and regenerates every table and figure, plus a
+//!   **discrete-event simulator** ([`schedule`], [`sim`]) that validates
+//!   the closed forms by executing the actual schedules against the
+//!   Appendix A hardware model;
+//! * an **executable half** ([`runtime`], [`collective`], [`partition`],
+//!   [`optim`], [`data`], [`trainer`]) — a real multi-worker training
+//!   runtime where the schedules drive numeric training of a transformer
+//!   whose per-layer compute is AOT-compiled from JAX (+ Pallas kernels)
+//!   to HLO and executed via PJRT, with Python never on the hot path.
+
+pub mod collective;
+pub mod costmodel;
+pub mod data;
+pub mod elastic;
+pub mod hardware;
+pub mod model;
+pub mod offload;
+pub mod optim;
+pub mod partition;
+pub mod planner;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod sim;
+pub mod trainer;

@@ -1,0 +1,300 @@
+//! `repro` — the leader CLI.
+//!
+//! Subcommands:
+//!   table 6.1|6.2|6.3|a.1|b.1        regenerate a paper table
+//!   figure 4|5|6|7|8                 regenerate a paper figure (ASCII)
+//!   schedule [--policy P] [...]      simulate + render a schedule Gantt
+//!   train [--preset tiny|e2e] [...]  run real distributed training
+//!   plan [--x N] [--ethernet] [...]  plan the fastest configuration
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use lga_mpp::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use lga_mpp::hardware::{ClusterSpec, SECS_PER_DAY};
+use lga_mpp::model::XModel;
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::planner::search_fastest;
+use lga_mpp::report;
+use lga_mpp::schedule::{modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{render, simulate, CostTable};
+use lga_mpp::trainer::{train, Policy, TrainerConfig};
+
+/// Tiny flag parser: positionals + `--key value` / `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn cluster_from(args: &Args) -> ClusterSpec {
+    if args.has("ethernet") {
+        ClusterSpec::ethernet()
+    } else if args.has("unlimited-node") {
+        ClusterSpec::unlimited_node()
+    } else {
+        ClusterSpec::reference()
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{}", HELP);
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "table" => cmd_table(&args),
+        "figure" => cmd_figure(&args),
+        "schedule" => cmd_schedule(&args),
+        "train" => cmd_train(&args),
+        "plan" => cmd_plan(&args),
+        other => bail!("unknown subcommand '{other}' (see `repro help`)"),
+    }
+}
+
+const HELP: &str = "\
+repro — 'Layered gradient accumulation and modular pipeline parallelism'
+usage:
+  repro table <6.1|6.2|6.3|a.1|b.1>   [--x N] [--ethernet|--unlimited-node]
+  repro figure <4|5|6|7|8>            [--max-x N]
+  repro schedule [--policy baseline|improved|1f1b] [--layers N] [--stages N]
+                 [--mb N] [--partition] [--x N] [--width N]
+  repro train [--preset tiny|e2e] [--dp N] [--pp N] [--mb N] [--steps N]
+              [--policy baseline|improved|1f1b] [--partition] [--lr F]
+              [--artifacts DIR]
+  repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
+             [--budget-days D]
+";
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("6.1");
+    let x = args.get_usize("x", 160)?;
+    let model = XModel::new(x);
+    let cluster = cluster_from(args);
+    let out = match which {
+        "6.1" => report::table61(&model, &cluster),
+        "6.2" => report::table62(&model, &cluster),
+        "6.3" => report::table63(&model, &cluster),
+        "a.1" | "A.1" => report::table_a1(&cluster.gpu),
+        "b.1" | "B.1" => report::table_b1(),
+        other => bail!("unknown table {other}"),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_figure(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(String::as_str).unwrap_or("4");
+    let max_x = args.get_usize("max-x", 320)?;
+    match which {
+        "4" | "5" | "8" => {
+            let (cluster, name) = match which {
+                "4" => (ClusterSpec::reference(), "Figure 4 (node <= 16, InfiniBand)"),
+                "5" => (ClusterSpec::unlimited_node(), "Figure 5 (no node limit)"),
+                _ => (ClusterSpec::ethernet(), "Figure 8 (25 Gb/s Ethernet)"),
+            };
+            let fig = report::scaling_figure(&cluster, name, max_x);
+            println!("{name}");
+            let series: Vec<(&str, &report::Series)> =
+                fig.time_days.iter().map(|(s, v)| (s.name(), v)).collect();
+            println!("{}", report::ascii_plot(&series, 72, 20, "training time, days"));
+            let series: Vec<(&str, &report::Series)> =
+                fig.memory_gib.iter().map(|(s, v)| (s.name(), v)).collect();
+            println!("{}", report::ascii_plot(&series, 72, 20, "GPU-resident memory, GiB"));
+            for (s, v) in &fig.time_days {
+                if let Some((x, t)) = v.last() {
+                    println!("  {} @ X_{x}: {:.1} days", s.name(), t);
+                }
+            }
+        }
+        "6" => {
+            let s = report::figure6(&ClusterSpec::reference(), max_x);
+            println!("Figure 6: memory/compute ratio for one-month training");
+            println!("{}", report::ascii_plot(&[("ratio", &s)], 72, 18, "bytes per flop/s"));
+        }
+        "7" => {
+            let pts = report::figure7(&ClusterSpec::reference(), max_x);
+            println!("Figure 7: offload arithmetic intensity (flops/B) vs scale");
+            let state: report::Series = pts.iter().map(|&(x, s, _)| (x, s)).collect();
+            let ckpt: report::Series = pts.iter().map(|&(x, _, c)| (x, c)).collect();
+            println!(
+                "{}",
+                report::ascii_plot(&[("state", &state), ("checkpoints", &ckpt)], 72, 18, "flops/B")
+            );
+        }
+        other => bail!("unknown figure {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let policy = args.get("policy").unwrap_or("improved");
+    let d_l = args.get_usize("layers", 16)?;
+    let n_l = args.get_usize("stages", 4)?;
+    let n_mu = args.get_usize("mb", 8)?;
+    let x = args.get_usize("x", 32)?;
+    let width = args.get_usize("width", 110)?;
+    let spec = ScheduleSpec {
+        d_l,
+        n_l,
+        n_mu,
+        partition: args.has("partition"),
+        data_parallel: true,
+    };
+    let s = match policy {
+        "baseline" => standard_ga(&spec),
+        "improved" => {
+            if n_l == 1 {
+                lga_mpp::schedule::layered_ga(&spec)
+            } else {
+                modular_pipeline(&spec)
+            }
+        }
+        "1f1b" => one_f_one_b(&spec),
+        other => bail!("unknown policy {other}"),
+    };
+    let cfg = TrainConfig {
+        strategy: if policy == "improved" { Strategy::Improved } else { Strategy::Baseline },
+        n_b: 8,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu: 1.0,
+        offload: false,
+        partition: args.has("partition"),
+    };
+    let costs = CostTable::new(&XModel::new(x).shape(), &cfg, &ClusterSpec::reference());
+    let r = simulate(&s, &costs);
+    println!("schedule: {} (d_l={d_l}, n_l={n_l}, n_mu={n_mu})", s.name);
+    println!(
+        "makespan {:.3} ms | compute efficiency {:.3} | measured bubble {:.3}",
+        r.makespan * 1e3,
+        r.compute_efficiency(),
+        r.bubble_fraction()
+    );
+    println!("{}", render(&r, width));
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let preset = args.get("preset").unwrap_or("tiny").to_string();
+    let mut cfg = TrainerConfig::quick(&preset);
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_root = dir.into();
+    }
+    cfg.n_b = args.get_usize("dp", 1)?;
+    cfg.n_l = args.get_usize("pp", 1)?;
+    cfg.n_mu = args.get_usize("mb", 2)?;
+    cfg.steps = args.get_usize("steps", 20)?;
+    cfg.partition = args.has("partition");
+    cfg.policy = match args.get("policy").unwrap_or("improved") {
+        "baseline" => Policy::Baseline,
+        "improved" => Policy::Improved,
+        "1f1b" => Policy::OneFOneB,
+        other => bail!("unknown policy {other}"),
+    };
+    let lr: f32 = args.get("lr").unwrap_or("3e-3").parse()?;
+    cfg.lr = LrSchedule {
+        base_lr: lr,
+        warmup_steps: 10,
+        total_steps: cfg.steps as u64,
+        min_ratio: 0.1,
+    };
+    println!(
+        "training preset={preset} dp={} pp={} mb={} policy={} partition={} steps={}",
+        cfg.n_b,
+        cfg.n_l,
+        cfg.n_mu,
+        cfg.policy.name(),
+        cfg.partition,
+        cfg.steps
+    );
+    let r = train(&cfg)?;
+    for (i, l) in r.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == r.losses.len() {
+            println!("step {i:>5}  loss {l:.4}");
+        }
+    }
+    println!(
+        "done: {:.1}s wall | {} PJRT calls ({:.1}s, {:.0}% of wall) | {:.1} M collective elems",
+        r.wall_secs,
+        r.execute_calls,
+        r.execute_secs,
+        100.0 * r.execute_secs / r.wall_secs.max(1e-9),
+        r.collective_elems_sent as f64 / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let x = args.get_usize("x", 160)?;
+    let model = XModel::new(x);
+    let cluster = cluster_from(args);
+    let strategy = match args.get("strategy").unwrap_or("improved") {
+        "baseline" => Strategy::Baseline,
+        "partitioned" => Strategy::Partitioned,
+        _ => Strategy::Improved,
+    };
+    let menu = match args.get("menu").unwrap_or("3d") {
+        "data" => ParallelismMenu::DATA,
+        "data+pipe" => ParallelismMenu::DATA_PIPE,
+        "data+tensor" => ParallelismMenu::DATA_TENSOR,
+        _ => ParallelismMenu::THREE_D,
+    };
+    if let Some(days) = args.get("budget-days") {
+        let days: f64 = days.parse()?;
+        match lga_mpp::planner::min_gpu_plan(&model, &cluster, strategy, menu, days * SECS_PER_DAY)
+        {
+            Some(cp) => println!("{}", report::explain(&model, &cluster, &cp.plan.cfg)),
+            None => println!("no feasible plan within {days} days"),
+        }
+        return Ok(());
+    }
+    match search_fastest(&model, &cluster, strategy, menu) {
+        Some(p) => println!("{}", report::explain(&model, &cluster, &p.cfg)),
+        None => println!("no feasible plan"),
+    }
+    Ok(())
+}

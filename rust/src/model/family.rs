@@ -1,0 +1,140 @@
+//! The X_[x] model family (paper Appendix B, eq. 1) and the empirical
+//! critical-batch-size law (eq. 2).
+//!
+//! The family is parametrised by a single integer x:
+//!   d_a = x/2, d_h = 2x, d_l = x, d_s = 16x, d_m = x², d_I = 4x².
+//! Closed forms: p = 12x⁵ + 13x³ and b_c = 82.0 x^(2/3).
+
+use super::transformer::TransformerShape;
+
+/// A member of the X_[x] family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct XModel {
+    /// The family parameter x (must be even so that d_a = x/2 is integral).
+    pub x: usize,
+}
+
+impl XModel {
+    /// Construct X_[x]. Panics if `x` is odd or zero.
+    pub fn new(x: usize) -> Self {
+        assert!(x >= 2 && x % 2 == 0, "X_[x] requires even x >= 2, got {x}");
+        XModel { x }
+    }
+
+    /// The trillion-parameter example model of §6 (1.26 T parameters).
+    pub fn x160() -> Self {
+        Self::new(160)
+    }
+
+    /// Transformer shape per eq. 1.
+    pub fn shape(&self) -> TransformerShape {
+        TransformerShape {
+            d_l: self.x,
+            d_a: self.x / 2,
+            d_h: 2 * self.x,
+            d_s: 16 * self.x,
+            n_i: 4,
+        }
+    }
+
+    /// Parameter count (exact; equals 12x⁵ + 13x³).
+    pub fn params(&self) -> f64 {
+        self.shape().params()
+    }
+
+    /// Critical batch size in sequences, b_c ≈ 82.0 x^(2/3) (eq. 2).
+    pub fn critical_batch_size(&self) -> f64 {
+        82.0 * (self.x as f64).powf(2.0 / 3.0)
+    }
+
+    /// Critical batch size in tokens: 573 p^(1/3) (eq. 2, first form).
+    pub fn critical_batch_tokens(&self) -> f64 {
+        self.critical_batch_size() * (16 * self.x) as f64
+    }
+
+    /// Total training flops for the paper's standard 100k-step run at
+    /// batch size `b` (§6: 6.24e24 flops for X_160 at b = b_c).
+    pub fn training_flops(&self, b: f64, steps: f64) -> f64 {
+        self.shape().batch_flops(b) * steps
+    }
+}
+
+/// Standard number of training steps assumed throughout the paper (§6).
+pub const TRAINING_STEPS: f64 = 100_000.0;
+
+/// Sweep helper: the even x values used in the scaling figures,
+/// log-spaced from X_2 (488 params) past the quadrillion scale.
+pub fn sweep_xs(max_x: usize) -> Vec<usize> {
+    let mut xs = Vec::new();
+    let mut x = 2usize;
+    while x <= max_x {
+        xs.push(x);
+        // ~1.25x log spacing, snapped to even.
+        let next = ((x as f64 * 1.26).ceil() as usize + 1) & !1usize;
+        x = next.max(x + 2);
+    }
+    xs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_b1_parameter_counts() {
+        // (x, p) rows from Table B.1.
+        let rows = [
+            (2, 488.0),
+            (32, 403e6),
+            (64, 12.9e9),
+            (108, 176e9),
+            (160, 1.26e12),
+        ];
+        for (x, p) in rows {
+            let got = XModel::new(x).params();
+            assert!((got / p - 1.0).abs() < 0.005, "X_{x}: got {got:.4e}, want {p:.4e}");
+        }
+    }
+
+    #[test]
+    fn table_b1_critical_batch_sizes() {
+        let rows = [(2, 130.0), (32, 826.0), (64, 1310.0), (108, 1860.0), (160, 2420.0)];
+        for (x, bc) in rows {
+            let got = XModel::new(x).critical_batch_size();
+            assert!((got / bc - 1.0).abs() < 0.005, "X_{x}: got {got:.1}, want {bc}");
+        }
+    }
+
+    #[test]
+    fn x160_shape_matches_section_6() {
+        let s = XModel::x160().shape();
+        assert_eq!(s.d_l, 160);
+        assert_eq!(s.d_a, 80);
+        assert_eq!(s.d_h, 320);
+        assert_eq!(s.d_m(), 25_600);
+        assert_eq!(s.d_s, 2560);
+    }
+
+    #[test]
+    fn x160_training_flops() {
+        // §6: training X_160 for 100k steps at b_c ≈ 2420 requires
+        // 6.24e24 flops.
+        let m = XModel::x160();
+        let flops = m.training_flops(m.critical_batch_size(), TRAINING_STEPS);
+        assert!((flops / 6.24e24 - 1.0).abs() < 0.01, "{flops:.4e}");
+    }
+
+    #[test]
+    fn sweep_is_monotone_even() {
+        let xs = sweep_xs(2000);
+        assert!(xs.windows(2).all(|w| w[0] < w[1]));
+        assert!(xs.iter().all(|x| x % 2 == 0));
+        assert!(xs.len() > 20);
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_x_panics() {
+        XModel::new(3);
+    }
+}

@@ -1,0 +1,8 @@
+//! Model shape arithmetic: the transformer cost primitives (Appendix C.1)
+//! and the X_[x] scaling family (Appendix B).
+
+pub mod family;
+pub mod transformer;
+
+pub use family::{sweep_xs, XModel, TRAINING_STEPS};
+pub use transformer::TransformerShape;

@@ -1,0 +1,129 @@
+//! Transformer shape arithmetic (paper §5 "Model" and Appendix C.1).
+//!
+//! The paper analyses a transformer encoder of `d_l` identical layers,
+//! each a multi-head attention module (d_a heads of size d_h, width
+//! d_m = d_a * d_h) followed by a two-layer feed-forward network with
+//! intermediate size d_I = n_I * d_m. The embedding layer and LM head are
+//! excluded from the parameter counts, as in the paper.
+
+use crate::hardware::Bytes;
+
+/// Shape of a transformer encoder/decoder stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TransformerShape {
+    /// Number of layers, d_l.
+    pub d_l: usize,
+    /// Attention heads per layer, d_a.
+    pub d_a: usize,
+    /// Head size, d_h.
+    pub d_h: usize,
+    /// Sequence length, d_s.
+    pub d_s: usize,
+    /// FFN intermediate expansion factor, n_I (d_I = n_I * d_m).
+    pub n_i: usize,
+}
+
+impl TransformerShape {
+    /// Layer width d_m = d_a * d_h.
+    pub fn d_m(&self) -> usize {
+        self.d_a * self.d_h
+    }
+
+    /// FFN intermediate size d_I = n_I * d_m.
+    pub fn d_i(&self) -> usize {
+        self.n_i * self.d_m()
+    }
+
+    /// Parameters in one layer: the paper's leading term
+    /// p_l ≈ (4 + 2 n_I) d_m², plus the attention score path correction
+    /// that makes the X_[x] closed form 12x⁵ + 13x³ (Table B.1): the
+    /// sub-leading 13x³ term corresponds to per-layer biases and
+    /// layer-norm parameters, ≈ 13 d_m x / x² per layer. We count the
+    /// exact dense weights + biases + layernorms:
+    ///   QKV: 3 d_m² + 3 d_m ; proj: d_m² + d_m ;
+    ///   FFN: 2 n_I d_m² + (n_I + 1) d_m ; 2 layernorms: 4 d_m.
+    pub fn params_per_layer(&self) -> f64 {
+        let d_m = self.d_m() as f64;
+        let n_i = self.n_i as f64;
+        (4.0 + 2.0 * n_i) * d_m * d_m + (n_i + 9.0) * d_m
+    }
+
+    /// Total parameters p = d_l * p_l (embedding/LM head excluded).
+    pub fn params(&self) -> f64 {
+        self.d_l as f64 * self.params_per_layer()
+    }
+
+    /// Forward-pass flops for `tokens` input tokens: 2 flops per token
+    /// per parameter (Appendix C.1; attention-score matmuls neglected).
+    pub fn fwd_flops(&self, tokens: f64) -> f64 {
+        2.0 * tokens * self.params()
+    }
+
+    /// Flops for one full batch of size `b` with activation
+    /// recomputation: 8 b d_s p (Appendix C.1 — 2 forward, 2+2 backward,
+    /// 2 recompute).
+    pub fn batch_flops(&self, b: f64) -> f64 {
+        8.0 * b * self.d_s as f64 * self.params()
+    }
+
+    /// Per-token activation footprint of a single layer (activations plus
+    /// their gradients, half precision), bytes — the paper's `m₀`
+    /// (Appendix C.3, symbol defined but value elided in the text).
+    ///
+    /// Counting fp16 values alive between two activation checkpoints:
+    /// attention input (1 d_m), QKV (3), scores + softmax
+    /// (2 · d_a d_s / d_m), context (1), proj out (1), residual+LN (2),
+    /// FFN in (1), intermediate + GELU (2 n_I), FFN out (1) ≈
+    /// (10 + 2 n_I + 2 d_a d_s / d_m) values at 2 bytes each, times a
+    /// 1.5 peak factor for the concurrently-live gradients during the
+    /// backward pass (gradients of consumed activations are freed as the
+    /// backward proceeds, so the peak is ~half the activation set, not
+    /// all of it). For the X_[x] family (d_a d_s / d_m = 8, n_I = 4) this
+    /// gives m₀ = 102 d_m bytes/token — the value that reproduces
+    /// Table 6.2's activation column exactly (e.g. 24.9 GiB for the
+    /// X_160 single-GPU baseline with b_μ = 4).
+    pub fn m0_bytes_per_token(&self) -> Bytes {
+        let d_m = self.d_m() as f64;
+        let score = 2.0 * (self.d_a * self.d_s) as f64 / d_m;
+        let values = 10.0 + 2.0 * self.n_i as f64 + score;
+        1.5 * 2.0 * values * d_m
+    }
+
+    /// Bytes of one activation checkpoint for `b` sequences: the layer
+    /// output, 2 b d_s d_m (fp16).
+    pub fn checkpoint_bytes(&self, b: f64) -> Bytes {
+        2.0 * b * (self.d_s * self.d_m()) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bertish() -> TransformerShape {
+        TransformerShape { d_l: 24, d_a: 16, d_h: 64, d_s: 512, n_i: 4 }
+    }
+
+    #[test]
+    fn bert_large_param_count() {
+        // BERT-large encoder stack ≈ 302M parameters (Table B.1: 301 M).
+        let p = bertish().params();
+        assert!((p / 301e6 - 1.0).abs() < 0.01, "p = {p:.3e}");
+    }
+
+    #[test]
+    fn batch_flops_is_four_times_forward() {
+        let s = bertish();
+        let b = 32.0;
+        let fwd = s.fwd_flops(b * s.d_s as f64);
+        assert!((s.batch_flops(b) / fwd - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn m0_closed_form_for_family_ratios() {
+        // For shapes with d_a d_s = 8 d_m and n_I = 4, m₀ = 102 d_m.
+        let s = TransformerShape { d_l: 160, d_a: 80, d_h: 320, d_s: 2560, n_i: 4 };
+        assert_eq!(s.d_m(), 25_600);
+        assert!((s.m0_bytes_per_token() - 102.0 * 25_600.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,114 @@
+//! Adam optimizer over flat f32 buffers, with support for updating only a
+//! shard of the parameter vector (the ZeRO-3-style partition updates each
+//! rank's owned range only).
+
+/// Adam hyper-parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdamConfig {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Default for AdamConfig {
+    fn default() -> Self {
+        AdamConfig { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.0 }
+    }
+}
+
+/// Adam state for one flat parameter buffer (or one shard of it).
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub cfg: AdamConfig,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(len: usize, cfg: AdamConfig) -> Self {
+        Adam { cfg, m: vec![0.0; len], v: vec![0.0; len], t: 0 }
+    }
+
+    /// Number of state elements (2 moments per parameter).
+    pub fn state_elements(&self) -> usize {
+        self.m.len() + self.v.len()
+    }
+
+    /// One Adam step over the whole buffer.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), self.m.len());
+        assert_eq!(grads.len(), self.m.len());
+        self.t += 1;
+        let b1 = self.cfg.beta1;
+        let b2 = self.cfg.beta2;
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grads[i] + self.cfg.weight_decay * params[i];
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            params[i] -= lr * mh / (vh.sqrt() + self.cfg.eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimise f(x) = sum((x - 3)^2) from x = 0.
+        let mut adam = Adam::new(4, AdamConfig::default());
+        let mut x = vec![0.0f32; 4];
+        for _ in 0..2000 {
+            let g: Vec<f32> = x.iter().map(|v| 2.0 * (v - 3.0)).collect();
+            adam.step(&mut x, &g, 0.05);
+        }
+        for v in &x {
+            assert!((v - 3.0).abs() < 1e-2, "{v}");
+        }
+    }
+
+    #[test]
+    fn first_step_moves_by_lr() {
+        // With bias correction, the first Adam step is ~lr·sign(g).
+        let mut adam = Adam::new(2, AdamConfig::default());
+        let mut x = vec![0.0f32, 0.0];
+        adam.step(&mut x, &[0.5, -2.0], 0.01);
+        assert!((x[0] + 0.01).abs() < 1e-4);
+        assert!((x[1] - 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn weight_decay_pulls_towards_zero() {
+        let cfg = AdamConfig { weight_decay: 0.1, ..Default::default() };
+        let mut adam = Adam::new(1, cfg);
+        let mut x = vec![5.0f32];
+        for _ in 0..100 {
+            adam.step(&mut x, &[0.0], 0.05);
+        }
+        assert!(x[0] < 5.0);
+    }
+
+    #[test]
+    fn sharded_updates_match_full_update() {
+        // Updating two half-shards with independent Adam states equals
+        // one full update (Adam is elementwise).
+        let g: Vec<f32> = (0..10).map(|i| (i as f32 - 5.0) * 0.1).collect();
+        let mut full = vec![1.0f32; 10];
+        let mut adam_full = Adam::new(10, AdamConfig::default());
+        adam_full.step(&mut full, &g, 0.01);
+
+        let mut sharded = vec![1.0f32; 10];
+        let mut a0 = Adam::new(5, AdamConfig::default());
+        let mut a1 = Adam::new(5, AdamConfig::default());
+        a0.step(&mut sharded[0..5], &g[0..5], 0.01);
+        a1.step(&mut sharded[5..10], &g[5..10], 0.01);
+        assert_eq!(full, sharded);
+    }
+}

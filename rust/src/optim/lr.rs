@@ -1,0 +1,59 @@
+//! Learning-rate schedule: linear warmup then cosine decay — the standard
+//! large-LM schedule the paper's training setups assume.
+
+/// Warmup + cosine decay schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LrSchedule {
+    pub base_lr: f32,
+    pub warmup_steps: u64,
+    pub total_steps: u64,
+    /// Floor as a fraction of base_lr.
+    pub min_ratio: f32,
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f32) -> Self {
+        LrSchedule { base_lr: lr, warmup_steps: 0, total_steps: u64::MAX, min_ratio: 1.0 }
+    }
+
+    pub fn lr(&self, step: u64) -> f32 {
+        if self.warmup_steps > 0 && step < self.warmup_steps {
+            return self.base_lr * (step + 1) as f32 / self.warmup_steps as f32;
+        }
+        if self.total_steps == u64::MAX {
+            return self.base_lr;
+        }
+        let progress = ((step - self.warmup_steps) as f32
+            / (self.total_steps.saturating_sub(self.warmup_steps)).max(1) as f32)
+            .clamp(0.0, 1.0);
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * progress).cos());
+        self.base_lr * (self.min_ratio + (1.0 - self.min_ratio) * cos)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_is_linear() {
+        let s = LrSchedule { base_lr: 1.0, warmup_steps: 10, total_steps: 100, min_ratio: 0.1 };
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(4) - 0.5).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_decays_to_floor() {
+        let s = LrSchedule { base_lr: 1.0, warmup_steps: 10, total_steps: 100, min_ratio: 0.1 };
+        assert!((s.lr(100) - 0.1).abs() < 1e-5);
+        assert!(s.lr(50) < s.lr(20));
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::constant(0.3);
+        assert_eq!(s.lr(0), 0.3);
+        assert_eq!(s.lr(1_000_000), 0.3);
+    }
+}

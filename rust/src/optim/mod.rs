@@ -1,0 +1,51 @@
+//! Optimizer: Adam with fp32 master state (the paper's assumed optimizer,
+//! §2.5 — 12 bytes/parameter of training state) plus a warmup+cosine
+//! learning-rate schedule and gradient clipping.
+
+pub mod adam;
+pub mod lr;
+
+pub use adam::{Adam, AdamConfig};
+pub use lr::LrSchedule;
+
+/// Global-norm gradient clipping. Returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [&mut [f32]], max_norm: f32) -> f32 {
+    let sq: f32 = grads.iter().flat_map(|g| g.iter()).map(|v| v * v).sum();
+    let norm = sq.sqrt();
+    if norm > max_norm && norm > 0.0 {
+        let scale = max_norm / norm;
+        for g in grads.iter_mut() {
+            for v in g.iter_mut() {
+                *v *= scale;
+            }
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_scales_to_max_norm() {
+        let mut a = vec![3.0f32, 0.0];
+        let mut b = vec![0.0f32, 4.0];
+        let norm = {
+            let mut views: Vec<&mut [f32]> = vec![&mut a, &mut b];
+            clip_grad_norm(&mut views, 1.0)
+        };
+        assert!((norm - 5.0).abs() < 1e-6);
+        let new_sq: f32 = a.iter().chain(b.iter()).map(|v| v * v).sum();
+        assert!((new_sq.sqrt() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clip_leaves_small_gradients_alone() {
+        let mut a = vec![0.1f32, 0.1];
+        let orig = a.clone();
+        let mut views: Vec<&mut [f32]> = vec![&mut a];
+        clip_grad_norm(&mut views, 1.0);
+        assert_eq!(a, orig);
+    }
+}

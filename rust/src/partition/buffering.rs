@@ -1,0 +1,164 @@
+//! Mixed parameter/gradient buffering (paper Appendix C.2, Table C.1).
+//!
+//! With a partitioned or offloaded state, fp16 working copies of a
+//! layer's parameters live in transient buffers. The *mixed* method uses
+//! two parameter buffers (so the next layer's restore overlaps the
+//! current layer's compute — double buffering) and a single gradient
+//! buffer (the reduce of layer i overlaps the gradient compute of layer
+//! i−1). This module is the state machine enforcing those invariants;
+//! the trainer drives it and the memory accounting reads its high-water
+//! marks.
+
+/// Buffer classes of Table C.1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferKind {
+    Param,
+    Grad,
+}
+
+/// The mixed-buffering state machine.
+#[derive(Debug, Clone)]
+pub struct MixedBuffering {
+    /// Layers currently holding a parameter buffer.
+    param_holders: Vec<usize>,
+    /// Layer currently holding the gradient buffer, if any.
+    grad_holder: Option<usize>,
+    max_params: usize,
+    peak_params: usize,
+}
+
+impl Default for MixedBuffering {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MixedBuffering {
+    pub fn new() -> Self {
+        MixedBuffering { param_holders: Vec::new(), grad_holder: None, max_params: 2, peak_params: 0 }
+    }
+
+    /// Acquire a parameter buffer for `layer` (restore starting).
+    /// Errors when both buffers are held — the schedule violated the
+    /// double-buffering depth.
+    pub fn acquire_param(&mut self, layer: usize) -> Result<(), String> {
+        if self.param_holders.contains(&layer) {
+            return Err(format!("layer {layer} already holds a param buffer"));
+        }
+        if self.param_holders.len() >= self.max_params {
+            return Err(format!(
+                "param buffers exhausted (held by {:?}, wanted {layer})",
+                self.param_holders
+            ));
+        }
+        self.param_holders.push(layer);
+        self.peak_params = self.peak_params.max(self.param_holders.len());
+        Ok(())
+    }
+
+    /// Release `layer`'s parameter buffer (compute finished with it).
+    pub fn release_param(&mut self, layer: usize) -> Result<(), String> {
+        match self.param_holders.iter().position(|&l| l == layer) {
+            Some(i) => {
+                self.param_holders.remove(i);
+                Ok(())
+            }
+            None => Err(format!("layer {layer} holds no param buffer")),
+        }
+    }
+
+    /// Acquire the single gradient buffer.
+    pub fn acquire_grad(&mut self, layer: usize) -> Result<(), String> {
+        if let Some(h) = self.grad_holder {
+            return Err(format!("grad buffer busy (layer {h}, wanted {layer})"));
+        }
+        self.grad_holder = Some(layer);
+        Ok(())
+    }
+
+    /// Release the gradient buffer (reduce finished).
+    pub fn release_grad(&mut self, layer: usize) -> Result<(), String> {
+        if self.grad_holder == Some(layer) {
+            self.grad_holder = None;
+            Ok(())
+        } else {
+            Err(format!("grad buffer not held by layer {layer}"))
+        }
+    }
+
+    /// High-water mark of simultaneously-held parameter buffers.
+    pub fn peak_param_buffers(&self) -> usize {
+        self.peak_params
+    }
+
+    /// Total transient buffer bytes for a layer of `p_l` parameters,
+    /// fp16: 2 param + 1 grad buffers = 6·p_l (C.3).
+    pub fn buffer_bytes(p_l: f64) -> f64 {
+        6.0 * p_l
+    }
+}
+
+/// Drive the state machine through one backward pass in the Table C.1
+/// order, verifying the schedule respects the buffer depths. Returns the
+/// peak parameter-buffer count.
+pub fn simulate_backward_pass(layers: usize) -> Result<usize, String> {
+    let mut mb = MixedBuffering::new();
+    // Prologue: restore the last layer.
+    mb.acquire_param(layers - 1)?;
+    for l in (0..layers).rev() {
+        // Restore(l-1) overlaps Gradients(l): second param buffer.
+        if l > 0 {
+            mb.acquire_param(l - 1)?;
+        }
+        // Gradients(l) into the grad buffer.
+        mb.acquire_grad(l)?;
+        // Activations/recompute(l) overlaps Reduce(l): grad buffer
+        // released once the reduce drains, param buffer after use.
+        mb.release_param(l)?;
+        mb.release_grad(l)?;
+    }
+    Ok(mb.peak_param_buffers())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backward_pass_fits_in_two_param_buffers() {
+        // Table C.1: the whole pass runs within 2 param + 1 grad buffers.
+        let peak = simulate_backward_pass(8).unwrap();
+        assert_eq!(peak, 2);
+    }
+
+    #[test]
+    fn triple_buffering_is_rejected() {
+        let mut mb = MixedBuffering::new();
+        mb.acquire_param(0).unwrap();
+        mb.acquire_param(1).unwrap();
+        assert!(mb.acquire_param(2).is_err());
+    }
+
+    #[test]
+    fn grad_buffer_is_exclusive() {
+        let mut mb = MixedBuffering::new();
+        mb.acquire_grad(3).unwrap();
+        assert!(mb.acquire_grad(2).is_err());
+        mb.release_grad(3).unwrap();
+        mb.acquire_grad(2).unwrap();
+    }
+
+    #[test]
+    fn double_release_is_an_error() {
+        let mut mb = MixedBuffering::new();
+        mb.acquire_param(0).unwrap();
+        mb.release_param(0).unwrap();
+        assert!(mb.release_param(0).is_err());
+        assert!(mb.release_grad(0).is_err());
+    }
+
+    #[test]
+    fn buffer_bytes_matches_c3() {
+        assert_eq!(MixedBuffering::buffer_bytes(1000.0), 6000.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! ZeRO-3-style training-state partition bookkeeping (paper §2.4/§2.5 and
+//! Appendix C.2): shard ownership across the data-parallel group and the
+//! mixed parameter/gradient buffering state machine of Table C.1.
+
+pub mod buffering;
+pub mod owner;
+
+pub use buffering::{BufferKind, MixedBuffering};
+pub use owner::ShardMap;

@@ -1,0 +1,96 @@
+//! Shard ownership: which data-parallel rank stores (and updates) which
+//! slice of each layer's flattened parameter vector.
+//!
+//! The split matches [`crate::collective::Comm`]'s ring chunking so that
+//! a reduce-scatter leaves exactly the owned slice fully reduced on its
+//! owner, and an all-gather restores the full vector — the partitioned
+//! data flow of Figure 2 (bottom).
+
+/// Shard map for one flattened buffer of `len` elements over `n` ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    pub len: usize,
+    pub n: usize,
+}
+
+impl ShardMap {
+    pub fn new(len: usize, n: usize) -> Self {
+        assert!(n >= 1);
+        ShardMap { len, n }
+    }
+
+    /// Chunk boundaries identical to the ring collective's chunking.
+    pub fn range(&self, chunk: usize) -> (usize, usize) {
+        let base = self.len / self.n;
+        let rem = self.len % self.n;
+        let start = chunk * base + chunk.min(rem);
+        (start, start + base + usize::from(chunk < rem))
+    }
+
+    /// The chunk rank `r` owns after a ring reduce-scatter
+    /// (= `Comm::owned_chunk`).
+    pub fn owned_chunk_of_rank(&self, rank: usize) -> usize {
+        (rank + 1) % self.n
+    }
+
+    /// The range rank `r` owns.
+    pub fn owned_range(&self, rank: usize) -> (usize, usize) {
+        self.range(self.owned_chunk_of_rank(rank))
+    }
+
+    /// Bytes of fp32 Adam state (12 B/param) rank `r` must hold — the
+    /// partitioned "State" column of Table 6.2 at this micro-scale.
+    pub fn state_bytes_of_rank(&self, rank: usize) -> usize {
+        let (a, b) = self.owned_range(rank);
+        12 * (b - a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_partition_the_buffer() {
+        for (len, n) in [(10, 3), (100, 7), (5, 5), (3, 4), (1000, 1)] {
+            let m = ShardMap::new(len, n);
+            let mut covered = vec![false; len];
+            for c in 0..n {
+                let (a, b) = m.range(c);
+                for item in covered.iter_mut().take(b).skip(a) {
+                    assert!(!*item, "overlap at chunk {c}");
+                    *item = true;
+                }
+            }
+            assert!(covered.iter().all(|&x| x), "{len}/{n} gap");
+        }
+    }
+
+    #[test]
+    fn owner_map_is_a_bijection() {
+        let m = ShardMap::new(100, 8);
+        let mut seen = vec![false; 8];
+        for r in 0..8 {
+            let c = m.owned_chunk_of_rank(r);
+            assert!(!seen[c]);
+            seen[c] = true;
+        }
+    }
+
+    #[test]
+    fn matches_comm_chunking() {
+        use crate::collective::ring_group;
+        let comms = ring_group(4);
+        let m = ShardMap::new(37, 4);
+        for c in &comms {
+            assert_eq!(m.owned_range(c.rank), c.owned_range(37));
+        }
+    }
+
+    #[test]
+    fn partitioned_state_is_one_nth() {
+        let m = ShardMap::new(1000, 4);
+        let total: usize = (0..4).map(|r| m.state_bytes_of_rank(r)).sum();
+        assert_eq!(total, 12 * 1000);
+    }
+}

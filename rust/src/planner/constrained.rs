@@ -1,0 +1,192 @@
+//! Time-constrained planning (paper §6 "Smaller clusters", Table 6.3):
+//! find the smallest cluster that trains the model within a wall-clock
+//! budget, per strategy.
+//!
+//! Because the total training compute is fixed (b·steps is invariant below
+//! the critical batch size), the GPU count needed for a time budget T is
+//! `total_flops / (T · peak · efficiency)`; the planner enumerates
+//! configuration structures, computes each one's efficiency, and keeps the
+//! structure minimising the GPU count (tie-breaking on lower batch size,
+//! which the paper counts as an implicit efficiency gain).
+
+use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use crate::hardware::ClusterSpec;
+use crate::model::{XModel, TRAINING_STEPS};
+
+use super::rules::{max_tensor_parallel, Plan};
+
+/// A plan selected under a time constraint.
+#[derive(Debug, Clone)]
+pub struct ConstrainedPlan {
+    pub plan: Plan,
+    /// The requested wall-clock budget, seconds.
+    pub budget_secs: f64,
+}
+
+/// Smallest-cluster plan meeting `budget_secs` for a strategy+menu.
+pub fn min_gpu_plan(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    budget_secs: f64,
+) -> Option<ConstrainedPlan> {
+    let shape = model.shape();
+    let bc = model.critical_batch_size();
+    let total_flops = model.training_flops(bc, TRAINING_STEPS);
+    let d_l = shape.d_l;
+
+    let n_a_cands: Vec<usize> = {
+        let cap = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+        let mut v: Vec<usize> = [1, 2, 4, 8, 16, 32].iter().copied().filter(|&a| a <= cap).collect();
+        if !v.contains(&cap) {
+            v.push(cap);
+        }
+        v
+    };
+    let n_l_cands: Vec<usize> = if menu.pipeline {
+        [1usize, 2, 4, 5, 8, 10, 16, 20, 32, 40, 80, 160]
+            .iter()
+            .copied()
+            .filter(|&l| l <= d_l)
+            .collect()
+    } else {
+        vec![1]
+    };
+    let b_mu_cands = [1.0, 2.0, 4.0, 5.0, 8.0, 10.0, 16.0];
+    let n_mu_factors = [1.0, 1.25, 2.0, 4.0];
+
+    let mut best: Option<Plan> = None;
+    for &n_a in &n_a_cands {
+        for &n_l in &n_l_cands {
+            if strategy == Strategy::Partitioned && n_l > 1 {
+                continue;
+            }
+            for &f in &n_mu_factors {
+                let n_mu = ((n_l as f64 * f).round() as usize).max(1);
+                for &b_mu in &b_mu_cands {
+                    for offload in [false, true] {
+                        // Find the smallest n_b meeting the budget for
+                        // this structure by fixed-point iteration on the
+                        // efficiency (which itself depends on n_b through
+                        // the batch size).
+                        let partition = strategy != Strategy::Baseline;
+                        let n_b_cap = if menu.data {
+                            ((bc / (n_mu as f64 * b_mu)).floor() as usize).max(1)
+                        } else {
+                            1
+                        };
+                        let mut n_b: usize = 1;
+                        let mut plan: Option<Plan> = None;
+                        for _ in 0..12 {
+                            let cfg = TrainConfig {
+                                strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition,
+                            };
+                            if cfg.validate().is_err() {
+                                break;
+                            }
+                            let p = Plan::build_pub(model, cfg, cluster);
+                            let need = total_flops
+                                / (budget_secs * cluster.gpu.peak_flops * p.speed.efficiency);
+                            let need_b = ((need / (n_l * n_a) as f64).ceil() as usize)
+                                .max(1)
+                                .min(n_b_cap);
+                            if !menu.data && need_b > 1 {
+                                plan = None;
+                                break; // menu forbids data parallelism
+                            }
+                            if need_b == n_b {
+                                plan = Some(p);
+                                break;
+                            }
+                            n_b = need_b;
+                            plan = Some(p);
+                        }
+                        let Some(p) = plan else { continue };
+                        // Feasibility: batch within the critical budget,
+                        // memory fits, actually meets the deadline.
+                        if p.cfg.batch_size() > bc * 1.001 {
+                            continue;
+                        }
+                        if !p.fits_gpu(cluster) {
+                            continue;
+                        }
+                        if p.speed.training_secs > budget_secs * 1.02 {
+                            continue;
+                        }
+                        let better = match &best {
+                            None => true,
+                            Some(b) => {
+                                p.cfg.n_gpu() < b.cfg.n_gpu()
+                                    || (p.cfg.n_gpu() == b.cfg.n_gpu()
+                                        && p.cfg.batch_size() < b.cfg.batch_size())
+                            }
+                        };
+                        if better {
+                            best = Some(p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    best.map(|plan| ConstrainedPlan { plan, budget_secs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware::SECS_PER_DAY;
+
+    /// Table 6.3 shape: one-month training of X_160 needs ~7-10k GPUs,
+    /// six-month needs ~1.3k, with high efficiency for the improved
+    /// method.
+    #[test]
+    fn table_6_3_cluster_sizes() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let month = 33.0 * SECS_PER_DAY;
+        let half_year = 180.0 * SECS_PER_DAY;
+
+        let p1 = min_gpu_plan(&model, &cluster, Strategy::Partitioned, ParallelismMenu::DATA_TENSOR, month)
+            .expect("one-month partitioned plan");
+        assert!(
+            (p1.plan.cfg.n_gpu() as f64 / 7728.0 - 1.0).abs() < 0.10,
+            "one-month data+tensor: {} GPUs (paper: 7728)",
+            p1.plan.cfg.n_gpu()
+        );
+
+        let p2 = min_gpu_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D, half_year)
+            .expect("six-month improved plan");
+        assert!(
+            (p2.plan.cfg.n_gpu() as f64 / 1320.0 - 1.0).abs() < 0.15,
+            "six-month 3d improved: {} GPUs (paper: ~1320)",
+            p2.plan.cfg.n_gpu()
+        );
+        assert!(p2.plan.speed.efficiency > 0.90);
+    }
+
+    #[test]
+    fn improved_trains_without_tensor_parallelism_in_six_months() {
+        // Table 6.3: "for the six-month training it is the only one able
+        // to train without tensor parallelism".
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let half_year = 181.0 * SECS_PER_DAY;
+        let p = min_gpu_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::DATA_PIPE, half_year);
+        assert!(p.is_some());
+        let p = p.unwrap();
+        assert_eq!(p.plan.cfg.n_a, 1);
+        assert!(p.plan.speed.training_secs <= half_year * 1.02);
+    }
+
+    #[test]
+    fn tighter_budget_needs_more_gpus() {
+        let model = XModel::new(64);
+        let cluster = ClusterSpec::reference();
+        let fast = min_gpu_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D, 5.0 * SECS_PER_DAY);
+        let slow = min_gpu_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D, 50.0 * SECS_PER_DAY);
+        let (f, s) = (fast.unwrap(), slow.unwrap());
+        assert!(f.plan.cfg.n_gpu() > s.plan.cfg.n_gpu());
+    }
+}

@@ -1,0 +1,14 @@
+//! Training-configuration planner (paper §5 "Optimal configuration").
+//!
+//! Implements the paper's selection rules for the fastest configuration of
+//! each (strategy × parallelism-menu) pair, a constrained planner for the
+//! time-budgeted Table 6.3, and a grid search used for the scaling
+//! figures where the closed-form rules need to adapt (e.g. Ethernet).
+
+pub mod constrained;
+pub mod rules;
+pub mod search;
+
+pub use constrained::{min_gpu_plan, ConstrainedPlan};
+pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
+pub use search::search_fastest;

@@ -1,0 +1,386 @@
+//! The paper's §5 closed-form configuration selection rules.
+//!
+//! These rules reproduce the configuration columns of Table 6.1 exactly
+//! (see the tests). The general procedure:
+//!
+//! * train at (or just below) the critical batch size b_c;
+//! * tensor parallelism: the largest n_a within the node whose all-reduce
+//!   overhead stays under 25%;
+//! * baseline pipeline: n_l = d_l, with enough extra micro-batches to
+//!   overlap the boundary transfers, and the rest of the batch budget
+//!   spent on more micro-batches (smaller bubble);
+//! * improved pipeline: b_μ = 1, the smallest n_μ = n_l that satisfies the
+//!   gradient-reduction overlap bound, data parallelism maximised first;
+//! * offload when (and only when) the un-offloaded footprint exceeds GPU
+//!   memory; micro-batch sizes are bumped until the CPU-GPU (and shared
+//!   PCIe) transfer is hidden.
+
+use crate::costmodel::{
+    estimate, MemoryBreakdown, ParallelismMenu, SpeedEstimate, Strategy, TrainConfig,
+};
+use crate::hardware::{ClusterSpec, InterNode, LinkKind};
+use crate::model::XModel;
+
+/// Maximum tolerated overhead for the tensor-parallel all-reduce and the
+/// non-overlapped gradient reduction (§5: "we impose a maximum overhead of
+/// 25%").
+pub const MAX_OVERHEAD: f64 = 0.25;
+
+/// A planned configuration with its predicted resources.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub cfg: TrainConfig,
+    pub speed: SpeedEstimate,
+    pub memory: MemoryBreakdown,
+    /// True when the plan needs more CPU memory than the cluster provides
+    /// per GPU (the paper flags but does not forbid this).
+    pub cpu_memory_exceeded: bool,
+}
+
+impl Plan {
+    fn build(model: &XModel, cfg: TrainConfig, cluster: &ClusterSpec) -> Self {
+        let memory = MemoryBreakdown::evaluate(&model.shape(), &cfg);
+        let speed = estimate(model, &cfg, cluster);
+        let cpu_memory_exceeded =
+            cfg.offload && memory.offloadable() > cluster.cpu_memory_per_gpu;
+        Plan { cfg, speed, memory, cpu_memory_exceeded }
+    }
+
+    /// Whether the GPU-resident footprint fits in device memory.
+    pub fn fits_gpu(&self, cluster: &ClusterSpec) -> bool {
+        self.memory.gpu_resident(self.cfg.offload) <= cluster.gpu.memory_bytes
+    }
+}
+
+/// Largest tensor-parallel degree with all-reduce overhead ≤ 25%
+/// (Appendix C.4.3): ν_a = (4+2n_I)·d_m/(3(n_a−1)) against the TP link
+/// threshold, capped by the node size and the head count.
+pub fn max_tensor_parallel(model: &XModel, cluster: &ClusterSpec) -> usize {
+    let shape = model.shape();
+    let d_m = shape.d_m() as f64;
+    let n_i = shape.n_i as f64;
+    let thr_nvlink = LinkKind::NvLink.intensity_threshold(&cluster.gpu);
+    // overhead = thr·3(n_a−1)/((4+2n_I)d_m) ≤ MAX_OVERHEAD
+    let by_overhead = |thr: f64| 1.0 + MAX_OVERHEAD * (4.0 + 2.0 * n_i) * d_m / (3.0 * thr);
+    let cap = shape.d_a.max(1);
+    let in_node = (by_overhead(thr_nvlink).floor() as usize)
+        .min(cluster.max_node_size)
+        .min(cap)
+        .max(1);
+    // §7: at extreme scales tensor parallelism can spill past the node
+    // over the inter-node fabric.
+    let thr_inter = cluster.inter_node_threshold();
+    let beyond = (by_overhead(thr_inter).floor() as usize).min(cap).max(1);
+    if beyond > cluster.max_node_size {
+        beyond
+    } else {
+        in_node
+    }
+}
+
+/// The fastest configuration for a (strategy, menu) pair per the paper's
+/// §5 rules. Returns `None` when the pair is meaningless (e.g. a
+/// Partitioned strategy with no data parallelism) or cannot fit.
+pub fn fastest_plan(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+) -> Option<Plan> {
+    match strategy {
+        Strategy::Baseline => baseline_plan(model, cluster, menu),
+        Strategy::Partitioned => partitioned_plan(model, cluster, menu),
+        Strategy::Improved => improved_plan(model, cluster, menu, true),
+    }
+}
+
+/// The improved plan with the partition disabled (§8.3 dotted line).
+pub fn improved_unpartitioned_plan(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    menu: ParallelismMenu,
+) -> Option<Plan> {
+    improved_plan(model, cluster, menu, false)
+}
+
+fn inter_threshold(cluster: &ClusterSpec) -> f64 {
+    cluster.inter_node_threshold()
+}
+
+/// Smallest integer micro-batch size ≥ `min_f` (at least 1).
+fn ceil_bmu(min_f: f64) -> f64 {
+    min_f.max(1.0).ceil()
+}
+
+fn baseline_plan(model: &XModel, cluster: &ClusterSpec, menu: ParallelismMenu) -> Option<Plan> {
+    let shape = model.shape();
+    let d_s = shape.d_s as f64;
+    let bc = model.critical_batch_size();
+    let n_a = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+    let n_l = if menu.pipeline { shape.d_l } else { 1 };
+    let thr = inter_threshold(cluster);
+    let thr_cpu = LinkKind::CpuGpu.intensity_threshold(&cluster.gpu);
+    let thr_pcie = LinkKind::PciExpress.intensity_threshold(&cluster.gpu);
+
+    // Iterate on the offload decision (it feeds back into b_μ).
+    let mut offload = false;
+    for _ in 0..3 {
+        // --- micro-batch size ---
+        let mut b_mu_min: f64 = 1.0;
+        if offload {
+            // ν_s^base = b_μ·d_s must beat the CPU-GPU threshold (eq. 13).
+            b_mu_min = b_mu_min.max(thr_cpu / d_s);
+        }
+        if menu.data && n_l == 1 {
+            // Overlapped reduction, n_μ = 1: ν_b = 3 b_μ d_s/4 (eq. 5).
+            b_mu_min = b_mu_min.max(4.0 * thr / (3.0 * d_s));
+            if offload
+                && cluster.pcie_shared_with_nic
+                && cluster.inter_node == InterNode::InfiniBand
+            {
+                // Shared-PCIe harmonic constraint: 3 b_μ d_s / 7 ≥ ν_pcie.
+                b_mu_min = b_mu_min.max(7.0 * thr_pcie / (3.0 * d_s));
+            }
+        }
+        let b_mu = ceil_bmu(b_mu_min);
+
+        // --- micro-batch count & data parallel degree ---
+        let (n_b, n_mu) = if n_l > 1 {
+            // Enough extra micro-batches to overlap boundary transfers
+            // (C.4.2), then spend the rest of the batch budget on more
+            // micro-batches to shrink the bubble.
+            let nu_l = (4.0 + 2.0 * shape.n_i as f64) * shape.d_m() as f64 / 2.0
+                * (shape.d_l as f64 / n_l as f64);
+            let n_mu_min = ((n_l as f64) * (1.0 + thr / nu_l)).ceil() as usize;
+            let n_b = if menu.data {
+                ((bc / (n_mu_min as f64 * b_mu)).floor() as usize).max(1)
+            } else {
+                1
+            };
+            let n_mu = ((bc / (n_b as f64 * b_mu)).floor() as usize).max(n_mu_min);
+            (n_b, n_mu)
+        } else if menu.data {
+            let n_b = ((bc / b_mu).floor() as usize).max(1);
+            (n_b, 1)
+        } else {
+            (1, ((bc / b_mu).floor() as usize).max(1))
+        };
+
+        let cfg = TrainConfig {
+            strategy: Strategy::Baseline,
+            n_b,
+            n_l,
+            n_a,
+            n_mu,
+            b_mu,
+            offload,
+            partition: false,
+        };
+        let plan = Plan::build(model, cfg, cluster);
+        if plan.fits_gpu(cluster) {
+            return Some(plan);
+        }
+        if offload {
+            // Even offloaded it does not fit: infeasible.
+            return Some(plan);
+        }
+        offload = true;
+    }
+    None
+}
+
+fn partitioned_plan(model: &XModel, cluster: &ClusterSpec, menu: ParallelismMenu) -> Option<Plan> {
+    if !menu.data {
+        return None; // the partition is a data-parallel-direction concept
+    }
+    if menu.pipeline {
+        return None; // §5: "we do not consider pipeline parallelism as it
+                     // leads to worse results" for the partitioned approach
+    }
+    let shape = model.shape();
+    let d_s = shape.d_s as f64;
+    let bc = model.critical_batch_size();
+    let n_a = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+    let thr = inter_threshold(cluster);
+
+    // ν_b^base-part = b_μ d_s / 2 ≥ thr (eq. 7 with n_μ = 1).
+    let b_mu = ceil_bmu(2.0 * thr / d_s);
+    let n_b = ((bc / b_mu).floor() as usize).max(1);
+
+    let mut cfg = TrainConfig {
+        strategy: Strategy::Partitioned,
+        n_b,
+        n_l: 1,
+        n_a,
+        n_mu: 1,
+        b_mu,
+        offload: false,
+        partition: true,
+    };
+    let mut plan = Plan::build(model, cfg, cluster);
+    if !plan.fits_gpu(cluster) {
+        cfg.offload = true;
+        plan = Plan::build(model, cfg, cluster);
+    }
+    Some(plan)
+}
+
+fn improved_plan(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    menu: ParallelismMenu,
+    partition: bool,
+) -> Option<Plan> {
+    if !menu.pipeline && !menu.data {
+        return None;
+    }
+    let shape = model.shape();
+    let d_s = shape.d_s as f64;
+    let bc = model.critical_batch_size();
+    let n_a = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+    let thr = inter_threshold(cluster);
+    let b_mu = 1.0;
+
+    // Gradient-reduction overlap bound (eqs. 8–9 with b = n_b·n_μ):
+    // partitioned: n_μ ≥ 2 thr / d_s ; plain: n_μ ≥ 4 thr / (3 d_s).
+    let n_mu_req = if menu.data {
+        let f = if partition { 2.0 * thr / d_s } else { 4.0 * thr / (3.0 * d_s) };
+        (f.ceil() as usize).max(1)
+    } else {
+        1
+    };
+
+    // Candidate A: n_l = n_μ (minimal bubble-free-ish, transfers exposed).
+    // Candidate B: extra micro-batches so the modular boundary transfers
+    // overlap (useful on slow networks / small models).
+    let mut best: Option<Plan> = None;
+    let d_l = shape.d_l;
+    let candidates: Vec<(usize, usize)> = if menu.pipeline {
+        let n_l_a = n_mu_req.clamp(2, d_l);
+        let n_mu_a = n_mu_req.max(n_l_a);
+        let n_mu_b = n_mu_a + (n_l_a as f64 * 0.25).ceil() as usize;
+        vec![(n_l_a, n_mu_a), (n_l_a, n_mu_b)]
+    } else {
+        vec![(1, n_mu_req)]
+    };
+    for (n_l, n_mu) in candidates {
+        let n_b = if menu.data {
+            ((bc / (n_mu as f64 * b_mu)).floor() as usize).max(1)
+        } else {
+            1
+        };
+        if partition && n_b == 1 && menu.data {
+            // partition over one instance is a no-op but harmless
+        }
+        let mut cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b,
+            n_l,
+            n_a,
+            n_mu,
+            b_mu,
+            offload: false,
+            partition,
+        };
+        let mut plan = Plan::build(model, cfg, cluster);
+        if !plan.fits_gpu(cluster) {
+            cfg.offload = true;
+            plan = Plan::build(model, cfg, cluster);
+            if !plan.fits_gpu(cluster) {
+                continue;
+            }
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => plan.speed.training_secs < b.speed.training_secs,
+        };
+        if better {
+            best = Some(plan);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The §5 rules reproduce the configuration columns of Table 6.1.
+    #[test]
+    fn table_6_1_configurations() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        // (strategy, menu, b, b_mu, n_mu, n_gpu, n_b, n_l, n_a, offload)
+        let rows: Vec<(Strategy, ParallelismMenu, f64, f64, usize, usize, usize, usize, usize, bool)> = vec![
+            (Strategy::Baseline, ParallelismMenu::NONE, 2416.0, 4.0, 604, 1, 1, 1, 1, true),
+            (Strategy::Baseline, ParallelismMenu::DATA, 2415.0, 5.0, 1, 483, 483, 1, 1, true),
+            (Strategy::Partitioned, ParallelismMenu::DATA, 2415.0, 5.0, 1, 483, 483, 1, 1, true),
+            (Strategy::Baseline, ParallelismMenu::DATA_PIPE, 2412.0, 4.0, 201, 480, 3, 160, 1, true),
+            (Strategy::Improved, ParallelismMenu::DATA_PIPE, 2415.0, 1.0, 5, 2415, 483, 5, 1, false),
+            (Strategy::Baseline, ParallelismMenu::DATA_TENSOR, 2415.0, 5.0, 1, 7728, 483, 1, 16, true),
+            (Strategy::Partitioned, ParallelismMenu::DATA_TENSOR, 2415.0, 5.0, 1, 7728, 483, 1, 16, false),
+            (Strategy::Baseline, ParallelismMenu::THREE_D, 2408.0, 1.0, 172, 35840, 14, 160, 16, false),
+            (Strategy::Improved, ParallelismMenu::THREE_D, 2415.0, 1.0, 5, 38640, 483, 5, 16, false),
+        ];
+        for (i, (s, m, b, b_mu, n_mu, n_gpu, n_b, n_l, n_a, offload)) in
+            rows.into_iter().enumerate()
+        {
+            let plan = fastest_plan(&model, &cluster, s, m)
+                .unwrap_or_else(|| panic!("row {i}: no plan"));
+            let c = plan.cfg;
+            assert_eq!(c.n_b, n_b, "row {i} n_b");
+            assert_eq!(c.n_l, n_l, "row {i} n_l");
+            assert_eq!(c.n_a, n_a, "row {i} n_a");
+            assert_eq!(c.n_mu, n_mu, "row {i} n_mu");
+            assert_eq!(c.b_mu, b_mu, "row {i} b_mu");
+            assert_eq!(c.n_gpu(), n_gpu, "row {i} n_gpu");
+            assert_eq!(c.offload, offload, "row {i} offload");
+            assert!((c.batch_size() - b).abs() < 0.5, "row {i} batch");
+        }
+    }
+
+    #[test]
+    fn max_tp_is_16_for_large_models_in_a_node() {
+        // §5: for models above ~50B parameters the 25% bound allows the
+        // practical node limit n_a = 16.
+        let cluster = ClusterSpec::reference();
+        assert_eq!(max_tensor_parallel(&XModel::x160(), &cluster), 16);
+        assert_eq!(max_tensor_parallel(&XModel::new(108), &cluster), 16);
+        // Tiny models cannot use 16-way TP efficiently.
+        assert!(max_tensor_parallel(&XModel::new(4), &cluster) < 16);
+    }
+
+    #[test]
+    fn unlimited_node_allows_larger_tp() {
+        let na = max_tensor_parallel(&XModel::x160(), &ClusterSpec::unlimited_node());
+        assert!(na > 16, "got {na}");
+    }
+
+    #[test]
+    fn improved_beats_baseline_at_x160_for_every_shared_menu() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        for menu in [ParallelismMenu::DATA_PIPE, ParallelismMenu::THREE_D] {
+            let b = fastest_plan(&model, &cluster, Strategy::Baseline, menu).unwrap();
+            let i = fastest_plan(&model, &cluster, Strategy::Improved, menu).unwrap();
+            assert!(
+                i.speed.training_secs < b.speed.training_secs,
+                "{menu}: improved {:.1}d vs baseline {:.1}d",
+                i.speed.training_days(),
+                b.speed.training_days()
+            );
+        }
+    }
+
+    #[test]
+    fn improved_3d_memory_is_a_tiny_fraction_of_the_gpu() {
+        // §6: "lowest memory footprint of 4.72 GB, 17 times less than an
+        // 80 GB A100" (1.58 offloadable + 3.14 non-offloadable GiB).
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let p = fastest_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D)
+            .unwrap();
+        let total = p.memory.total();
+        assert!(total < cluster.gpu.memory_bytes / 15.0);
+    }
+}

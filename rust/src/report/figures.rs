@@ -1,0 +1,211 @@
+//! Figure data series (4, 5, 6, 7, 8) and a small ASCII line plot.
+
+use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use crate::hardware::{ClusterSpec, GIB, SECS_PER_DAY};
+use crate::model::{sweep_xs, XModel, TRAINING_STEPS};
+use crate::offload::figure7_point;
+use crate::planner::search_fastest;
+
+/// One sweep series: (x, value) points.
+pub type Series = Vec<(usize, f64)>;
+
+/// Figures 4/5/8: training time (days) and memory (GiB, gpu-resident)
+/// vs model scale for the three strategies on a cluster.
+pub struct ScalingFigure {
+    pub cluster_name: String,
+    pub time_days: Vec<(Strategy, Series)>,
+    pub memory_gib: Vec<(Strategy, Series)>,
+}
+
+/// Menu used in the scaling figures: the fastest available for each
+/// strategy (3d for baseline/improved, data+tensor for partitioned).
+fn menu_for(strategy: Strategy) -> ParallelismMenu {
+    match strategy {
+        Strategy::Partitioned => ParallelismMenu::DATA_TENSOR,
+        _ => ParallelismMenu::THREE_D,
+    }
+}
+
+/// Build a scaling figure (Figure 4 with the reference cluster, Figure 5
+/// with `unlimited_node`, Figure 8 with `ethernet`).
+pub fn scaling_figure(cluster: &ClusterSpec, name: &str, max_x: usize) -> ScalingFigure {
+    let xs = sweep_xs(max_x);
+    let mut fig = ScalingFigure {
+        cluster_name: name.to_string(),
+        time_days: Vec::new(),
+        memory_gib: Vec::new(),
+    };
+    for s in Strategy::ALL {
+        let mut time = Vec::new();
+        let mut mem = Vec::new();
+        for &x in &xs {
+            let m = XModel::new(x);
+            if let Some(p) = search_fastest(&m, cluster, s, menu_for(s)) {
+                time.push((x, p.speed.training_secs / SECS_PER_DAY));
+                mem.push((x, p.memory.gpu_resident(p.cfg.offload) / GIB));
+            }
+        }
+        fig.time_days.push((s, time));
+        fig.memory_gib.push((s, mem));
+    }
+    fig
+}
+
+/// Figure 6: memory-to-compute ratio (bytes per flop/s) needed to train
+/// in a fixed month, as a function of model size. The paper's point: the
+/// ratio *decreases* with scale — there is no memory wall.
+pub fn figure6(cluster: &ClusterSpec, max_x: usize) -> Series {
+    let month = 30.0 * SECS_PER_DAY;
+    sweep_xs(max_x)
+        .into_iter()
+        .filter_map(|x| {
+            let m = XModel::new(x);
+            let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
+            // Compute power needed to hit one month at this efficiency.
+            let flops = m.training_flops(m.critical_batch_size(), TRAINING_STEPS);
+            let needed_rate = flops / (month * p.speed.efficiency);
+            let n_gpu_needed = needed_rate / cluster.gpu.peak_flops;
+            // Memory per unit compute: per-GPU resident bytes over
+            // per-GPU flops (scaled to the hypothetical cluster).
+            let resident = p.memory.gpu_resident(p.cfg.offload) * p.cfg.n_gpu() as f64;
+            Some((x, resident / (n_gpu_needed * cluster.gpu.peak_flops)))
+        })
+        .collect()
+}
+
+/// Figure 7: offload arithmetic intensity vs scale for the improved
+/// partitioned configuration; returns (x, state ν, checkpoint ν).
+pub fn figure7(cluster: &ClusterSpec, max_x: usize) -> Vec<(usize, f64, f64)> {
+    sweep_xs(max_x)
+        .into_iter()
+        .filter_map(|x| {
+            let m = XModel::new(x);
+            let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
+            let mut cfg: TrainConfig = p.cfg;
+            cfg.offload = true;
+            let (_, s, c) = figure7_point(x, &cfg);
+            Some((x, s, c))
+        })
+        .collect()
+}
+
+/// ASCII log-log plot of several series.
+pub fn ascii_plot(series: &[(&str, &Series)], width: usize, height: usize, ylabel: &str) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for (_, s) in series {
+        for &(x, y) in s.iter() {
+            if y > 0.0 {
+                pts.push(((x as f64).ln(), y.ln()));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return "(empty plot)".into();
+    }
+    let (x0, x1) = pts.iter().fold((f64::MAX, f64::MIN), |a, p| (a.0.min(p.0), a.1.max(p.0)));
+    let (y0, y1) = pts.iter().fold((f64::MAX, f64::MIN), |a, p| (a.0.min(p.1), a.1.max(p.1)));
+    let mut grid = vec![vec![' '; width]; height];
+    let marks = ['B', 'P', 'I', '4', '5', '6'];
+    for (si, (_, s)) in series.iter().enumerate() {
+        for &(x, y) in s.iter() {
+            if y <= 0.0 {
+                continue;
+            }
+            let (lx, ly) = ((x as f64).ln(), y.ln());
+            let cx = (((lx - x0) / (x1 - x0).max(1e-9)) * (width - 1) as f64) as usize;
+            let cy = (((ly - y0) / (y1 - y0).max(1e-9)) * (height - 1) as f64) as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{ylabel} (log-log; x = model scale parameter)\n");
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("  {} = {}\n", marks[si % marks.len()], name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure4_improved_dominates_baseline() {
+        // Figure 4's core shape: the improved method trains faster than
+        // the baseline at every swept scale (node limit 16).
+        let fig = scaling_figure(&ClusterSpec::reference(), "fig4", 160);
+        let get = |s: Strategy| {
+            fig.time_days.iter().find(|(st, _)| *st == s).map(|(_, v)| v.clone()).unwrap()
+        };
+        let base = get(Strategy::Baseline);
+        let impr = get(Strategy::Improved);
+        for ((x, tb), (x2, ti)) in base.iter().zip(&impr) {
+            assert_eq!(x, x2);
+            if *x < 32 {
+                continue; // §9: sub-BERT scales are dominated by
+                          // communication either way; the paper's claim
+                          // targets BERT-scale (x = 32) and above.
+            }
+            assert!(
+                ti <= &(tb * 1.02),
+                "x={x}: improved {ti:.3} d vs baseline {tb:.3} d"
+            );
+        }
+        // And at the trillion scale the gap is ~2x (Table 6.1).
+        let tb = base.last().unwrap().1;
+        let ti = impr.last().unwrap().1;
+        assert!(tb / ti > 1.6, "ratio {:.2}", tb / ti);
+    }
+
+    #[test]
+    fn figure5_unlimited_node_is_faster_at_scale() {
+        let lim = scaling_figure(&ClusterSpec::reference(), "fig4", 160);
+        let unl = scaling_figure(&ClusterSpec::unlimited_node(), "fig5", 160);
+        let t = |f: &ScalingFigure| {
+            f.time_days
+                .iter()
+                .find(|(s, _)| *s == Strategy::Improved)
+                .unwrap()
+                .1
+                .last()
+                .unwrap()
+                .1
+        };
+        assert!(t(&unl) < t(&lim) * 0.8, "unl {} vs lim {}", t(&unl), t(&lim));
+    }
+
+    #[test]
+    fn figure6_no_memory_wall() {
+        // The memory/compute ratio decreases with scale (§7).
+        let s = figure6(&ClusterSpec::reference(), 320);
+        assert!(s.len() >= 6);
+        let first = s[2].1; // skip tiny models where buffers dominate oddly
+        let last = s.last().unwrap().1;
+        assert!(
+            last < first,
+            "ratio should fall: {first:.3e} -> {last:.3e} ({s:?})"
+        );
+    }
+
+    #[test]
+    fn figure7_state_offloadable_to_slower_tiers_at_scale() {
+        use crate::hardware::LinkKind;
+        let pts = figure7(&ClusterSpec::reference(), 160);
+        let gpu = ClusterSpec::reference().gpu;
+        let hdd = LinkKind::DiskHdd.intensity_threshold(&gpu);
+        let (_, s_last, _) = pts.last().unwrap();
+        assert!(*s_last > hdd, "trillion-scale state streams to HDD");
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let s1: Series = vec![(2, 1.0), (16, 10.0), (160, 100.0)];
+        let p = ascii_plot(&[("demo", &s1)], 40, 10, "time");
+        assert!(p.contains('B'));
+        assert!(p.lines().count() >= 11);
+    }
+}

@@ -1,0 +1,8 @@
+//! Report rendering: every table and figure of the paper, regenerated
+//! from the cost model, planner and offload analysis.
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{ascii_plot, figure6, figure7, scaling_figure, ScalingFigure, Series};
+pub use tables::{explain, sweep, table61, table61_rows, table62, table63, table_a1, table_b1};

@@ -1,0 +1,252 @@
+//! Render the paper's tables from the cost model / planner, row-for-row.
+
+use crate::costmodel::{estimate, MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
+use crate::hardware::{ClusterSpec, GpuSpec, LinkKind, GIB, SECS_PER_DAY};
+use crate::model::XModel;
+use crate::planner::{fastest_plan, min_gpu_plan, Plan};
+
+/// The nine (strategy, menu) rows of Tables 6.1/6.2, in paper order.
+pub fn table61_rows() -> Vec<(Strategy, ParallelismMenu)> {
+    use ParallelismMenu as M;
+    use Strategy as S;
+    vec![
+        (S::Baseline, M::NONE),
+        (S::Baseline, M::DATA),
+        (S::Partitioned, M::DATA),
+        (S::Baseline, M::DATA_PIPE),
+        (S::Improved, M::DATA_PIPE),
+        (S::Baseline, M::DATA_TENSOR),
+        (S::Partitioned, M::DATA_TENSOR),
+        (S::Baseline, M::THREE_D),
+        (S::Improved, M::THREE_D),
+    ]
+}
+
+fn fmt_time(secs: f64) -> String {
+    let days = secs / SECS_PER_DAY;
+    if days > 365.25 {
+        format!("{:.1} y", days / 365.25)
+    } else {
+        format!("{:.1} d", days)
+    }
+}
+
+fn fmt_gib(bytes: f64) -> String {
+    let g = bytes / GIB;
+    if g >= 1000.0 {
+        format!("{:.1} K", g / 1024.0)
+    } else if g >= 10.0 {
+        format!("{:.1}", g)
+    } else {
+        format!("{:.3}", g)
+    }
+}
+
+/// Table 6.1: fastest training configuration per strategy for X_160.
+pub fn table61(model: &XModel, cluster: &ClusterSpec) -> String {
+    let mut out = String::from(
+        "Table 6.1: fastest training configurations\n\
+         Parallelism     Method       Off b      b_mu n_mu  n_gpu  n_b  n_l n_a  Eff   Time\n",
+    );
+    for (s, m) in table61_rows() {
+        let Some(p) = fastest_plan(model, cluster, s, m) else { continue };
+        let c = p.cfg;
+        out.push_str(&format!(
+            "{:<15} {:<12} {:<3} {:<6} {:<4} {:<5} {:<6} {:<4} {:<3} {:<4} {:.2}  {}\n",
+            m.name(),
+            s.name(),
+            if c.offload { "Y" } else { "n" },
+            c.batch_size() as u64,
+            c.b_mu as u64,
+            c.n_mu,
+            c.n_gpu(),
+            c.n_b,
+            c.n_l,
+            c.n_a,
+            p.speed.efficiency,
+            fmt_time(p.speed.training_secs),
+        ));
+    }
+    out
+}
+
+/// Table 6.2: memory usage breakdown for the same configurations (GiB).
+pub fn table62(model: &XModel, cluster: &ClusterSpec) -> String {
+    let mut out = String::from(
+        "Table 6.2: memory usage breakdown (GiB)\n\
+         Parallelism     Method       State    Ckpt     Buffers  Acts     Offl     Non-offl\n",
+    );
+    for (s, m) in table61_rows() {
+        let Some(p) = fastest_plan(model, cluster, s, m) else { continue };
+        let mem = p.memory;
+        out.push_str(&format!(
+            "{:<15} {:<12} {:<8} {:<8} {:<8} {:<8} {:<8} {:<8}\n",
+            m.name(),
+            s.name(),
+            fmt_gib(mem.state),
+            fmt_gib(mem.checkpoints),
+            fmt_gib(mem.buffers),
+            fmt_gib(mem.activations),
+            fmt_gib(mem.offloadable()),
+            fmt_gib(mem.non_offloadable()),
+        ));
+    }
+    out
+}
+
+/// Table 6.3: minimum-cluster configurations for time budgets.
+pub fn table63(model: &XModel, cluster: &ClusterSpec) -> String {
+    use ParallelismMenu as M;
+    use Strategy as S;
+    let mut out = String::from(
+        "Table 6.3: time-budgeted configurations\n\
+         Budget  Parallelism     Method       b      n_a  n_gpu  Offl     Non-offl Eff   Time\n",
+    );
+    for (days, rows) in [
+        (33.0, vec![
+            (S::Partitioned, M::DATA_TENSOR),
+            (S::Baseline, M::THREE_D),
+            (S::Improved, M::THREE_D),
+        ]),
+        (181.0, vec![
+            (S::Partitioned, M::DATA_TENSOR),
+            (S::Baseline, M::PIPE_TENSOR),
+            (S::Improved, M::THREE_D),
+            (S::Improved, M::DATA_PIPE),
+        ]),
+    ] {
+        for (s, m) in rows {
+            let Some(cp) = min_gpu_plan(model, cluster, s, m, days * SECS_PER_DAY) else {
+                out.push_str(&format!(
+                    "{:<7} {:<15} {:<12} infeasible\n",
+                    days,
+                    m.name(),
+                    s.name()
+                ));
+                continue;
+            };
+            let p = &cp.plan;
+            let c = p.cfg;
+            out.push_str(&format!(
+                "{:<7} {:<15} {:<12} {:<6} {:<4} {:<6} {:<8} {:<8} {:.2}  {}\n",
+                days,
+                m.name(),
+                s.name(),
+                c.batch_size() as u64,
+                c.n_a,
+                c.n_gpu(),
+                fmt_gib(p.memory.offloadable()),
+                fmt_gib(p.memory.non_offloadable()),
+                p.speed.efficiency,
+                fmt_time(p.speed.training_secs),
+            ));
+        }
+    }
+    out
+}
+
+/// Table A.1: link bandwidths and intensity thresholds.
+pub fn table_a1(gpu: &GpuSpec) -> String {
+    let mut out = String::from(
+        "Table A.1: bandwidth and arithmetic intensity (A100, 312 Tflop/s)\n\
+         Network                   GB/s     flops/B\n",
+    );
+    for kind in LinkKind::ALL {
+        out.push_str(&format!(
+            "{:<25} {:<8} {:.3e}\n",
+            kind.name(),
+            kind.quoted_gb_per_s(),
+            kind.intensity_threshold(gpu),
+        ));
+    }
+    out
+}
+
+/// Table B.1: X_[x] configuration examples.
+pub fn table_b1() -> String {
+    let mut out = String::from(
+        "Table B.1: X_[x] model family\n\
+         Model   p          b_c    d_s    d_a  d_h  d_m    d_l\n",
+    );
+    for x in [2usize, 32, 64, 108, 160, 250] {
+        let m = XModel::new(x);
+        let s = m.shape();
+        out.push_str(&format!(
+            "X_{:<5} {:<10.3e} {:<6.0} {:<6} {:<4} {:<4} {:<6} {}\n",
+            x,
+            m.params(),
+            m.critical_batch_size(),
+            s.d_s,
+            s.d_a,
+            s.d_h,
+            s.d_m(),
+            s.d_l,
+        ));
+    }
+    out
+}
+
+/// One fully-described row (used by `repro explain` and the benches).
+pub fn explain(model: &XModel, cluster: &ClusterSpec, cfg: &TrainConfig) -> String {
+    let shape = model.shape();
+    let sp = estimate(model, cfg, cluster);
+    let mem = MemoryBreakdown::evaluate(&shape, cfg);
+    format!(
+        "config: {:?}\n  b = {}, n_gpu = {}\n  overheads: bubble {:.4}, dp {:.4}, pp {:.4}, tp {:.4}, offload {:.4}, pcie {:.4}\n  efficiency {:.3}, training {}\n  memory: state {} + ckpt {} + buffers {} + acts {} GiB (gpu-resident {})\n",
+        cfg,
+        cfg.batch_size(),
+        cfg.n_gpu(),
+        sp.overheads.bubble,
+        sp.overheads.data_parallel,
+        sp.overheads.pipeline_parallel,
+        sp.overheads.tensor_parallel,
+        sp.overheads.offload,
+        sp.overheads.pcie_contention,
+        sp.efficiency,
+        fmt_time(sp.training_secs),
+        fmt_gib(mem.state),
+        fmt_gib(mem.checkpoints),
+        fmt_gib(mem.buffers),
+        fmt_gib(mem.activations),
+        fmt_gib(mem.gpu_resident(cfg.offload)),
+    )
+}
+
+/// All plans for the figure sweeps: (x, plan) per strategy.
+pub fn sweep(
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    xs: &[usize],
+) -> Vec<(usize, Option<Plan>)> {
+    xs.iter()
+        .map(|&x| {
+            let m = XModel::new(x);
+            (x, crate::planner::search_fastest(&m, cluster, strategy, menu))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_without_panicking() {
+        let m = XModel::x160();
+        let c = ClusterSpec::reference();
+        for t in [table61(&m, &c), table62(&m, &c), table_a1(&c.gpu), table_b1()] {
+            assert!(t.lines().count() >= 5, "{t}");
+        }
+    }
+
+    #[test]
+    fn table61_contains_headline_rows() {
+        let t = table61(&XModel::x160(), &ClusterSpec::reference());
+        assert!(t.contains("3d"));
+        assert!(t.contains("Improved"));
+        // The improved 3d row trains in under 8 days.
+        let line = t.lines().last().unwrap();
+        assert!(line.contains("38640"), "{line}");
+    }
+}

@@ -1,0 +1,288 @@
+//! PJRT execution engine: loads the HLO-text artifacts, compiles them once
+//! on the CPU PJRT client, and executes them from the Rust hot path.
+//!
+//! One `Engine` per worker thread (the PJRT client wrapper is not Sync);
+//! compilation results are cached per engine. Host tensors are plain
+//! `Vec<f32>` / `Vec<i32>`; conversion to/from `xla::Literal` happens at
+//! the call boundary.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest, TensorSpec};
+
+/// A host-side tensor (f32 or i32), shape-carrying.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            DType::F32 => HostTensor::f32(spec.shape.clone(), vec![0.0; spec.elements()]),
+            DType::I32 => HostTensor::i32(spec.shape.clone(), vec![0; spec.elements()]),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            bail!("not a scalar: {} elements", d.len());
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Upload to a device buffer. Buffers are Rust-owned (freed on Drop);
+    /// the literal-based `execute` path in the C wrapper leaks its
+    /// transient per-call device buffers (§Perf L3 / EXPERIMENTS.md), so
+    /// the hot path always goes through buffers + `execute_b`.
+    fn to_buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let b = match self {
+            HostTensor::F32 { shape, data } => {
+                client.buffer_from_host_buffer::<f32>(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                client.buffer_from_host_buffer::<i32>(data, shape, None)?
+            }
+        };
+        Ok(b)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit
+            .array_shape()?
+            .dims()
+            .iter()
+            .map(|&d| d as usize)
+            .collect::<Vec<_>>();
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(HostTensor::F32 { shape, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostTensor::I32 { shape, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+
+    fn matches(&self, spec: &TensorSpec) -> bool {
+        let dt_ok = matches!(
+            (self, spec.dtype),
+            (HostTensor::F32 { .. }, DType::F32) | (HostTensor::I32 { .. }, DType::I32)
+        );
+        dt_ok && self.shape() == spec.shape.as_slice()
+    }
+}
+
+/// A compiled artifact plus its manifest spec.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The PJRT execution engine for one worker.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, Compiled>,
+    /// Cumulative PJRT execute time (profiling; §Perf).
+    pub execute_secs: f64,
+    pub execute_calls: u64,
+}
+
+impl Engine {
+    /// Create an engine and eagerly compile the named artifacts
+    /// (compile-once semantics: the hot path never compiles).
+    pub fn new(root: impl AsRef<Path>, preset: &str, artifact_names: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(root, preset)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut engine = Engine {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+            execute_secs: 0.0,
+            execute_calls: 0,
+        };
+        for name in artifact_names {
+            engine.compile(name)?;
+        }
+        Ok(engine)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (and cache) one artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.compiled.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = spec
+            .file
+            .to_str()
+            .context("artifact path not utf-8")?
+            .to_string();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.compiled.insert(name.to_string(), Compiled { exe, spec });
+        Ok(())
+    }
+
+    /// Execute an artifact with shape-checked inputs; returns its outputs
+    /// as host tensors (the artifact's HLO returns a tuple).
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let c = self
+            .compiled
+            .get(name)
+            .with_context(|| format!("artifact {name} not compiled"))?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "{name}: {} inputs given, manifest says {}",
+                inputs.len(),
+                c.spec.inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
+            if !t.matches(spec) {
+                bail!(
+                    "{name}: input {i} shape {:?} does not match manifest {:?} ({:?})",
+                    t.shape(),
+                    spec.shape,
+                    spec.dtype
+                );
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> =
+            inputs.iter().map(|t| t.to_buffer(&self.client)).collect::<Result<_>>()?;
+        let result = c.exe.execute_b::<xla::PjRtBuffer>(&buffers)?[0][0].to_literal_sync()?;
+        self.execute_secs += t0.elapsed().as_secs_f64();
+        self.execute_calls += 1;
+        let parts = result.to_tuple()?;
+        let outs: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        if outs.len() != c.spec.outputs.len() {
+            bail!("{name}: {} outputs, manifest says {}", outs.len(), c.spec.outputs.len());
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_root().join("tiny/manifest.json").exists()
+    }
+
+    #[test]
+    fn embed_fwd_executes_and_checks_shapes() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = Engine::new(artifacts_root(), "tiny", &["embed_fwd"]).unwrap();
+        let m = e.manifest().model;
+        let (v, d, s, b) = (m.vocab, m.d_model, m.d_seq, e.manifest().batch);
+        let table = HostTensor::f32(vec![v, d], (0..v * d).map(|i| i as f32 * 1e-4).collect());
+        let pos = HostTensor::f32(vec![s, d], vec![0.5; s * d]);
+        let tokens = HostTensor::i32(vec![b, s], vec![3; b * s]);
+        let out = e.execute("embed_fwd", &[table.clone(), pos, tokens]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[b, s, d]);
+        // x[b,s,:] = table[3,:] + 0.5
+        let x = out[0].as_f32().unwrap();
+        let want0 = (3 * d) as f32 * 1e-4 + 0.5;
+        assert!((x[0] - want0).abs() < 1e-6, "{} vs {}", x[0], want0);
+
+        // Wrong shape must be rejected before reaching PJRT.
+        let bad = HostTensor::i32(vec![b, s + 1], vec![0; b * (s + 1)]);
+        let table2 = HostTensor::f32(vec![v, d], vec![0.0; v * d]);
+        let pos2 = HostTensor::f32(vec![s, d], vec![0.0; s * d]);
+        assert!(e.execute("embed_fwd", &[table2, pos2, bad]).is_err());
+    }
+
+    #[test]
+    fn layer_roundtrip_fwd_bwd_shapes() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut e = Engine::new(artifacts_root(), "tiny", &["layer_fwd", "layer_bwd"]).unwrap();
+        let specs = e.manifest().artifact("layer_fwd").unwrap().inputs.clone();
+        let params: Vec<HostTensor> = specs[..12]
+            .iter()
+            .map(|s| {
+                let n = s.elements();
+                HostTensor::f32(s.shape.clone(), (0..n).map(|i| (i % 7) as f32 * 0.01).collect())
+            })
+            .collect();
+        let x = HostTensor::zeros(&specs[12]);
+        let mut inputs = params.clone();
+        inputs.push(x.clone());
+        let y = e.execute("layer_fwd", &inputs).unwrap();
+        assert_eq!(y[0].shape(), x.shape());
+
+        let mut bwd_in = params;
+        bwd_in.push(x.clone());
+        bwd_in.push(y[0].clone());
+        let grads = e.execute("layer_bwd", &bwd_in).unwrap();
+        assert_eq!(grads.len(), 13);
+        assert_eq!(grads[12].shape(), x.shape());
+        // Gradients must be finite.
+        for g in &grads {
+            assert!(g.as_f32().unwrap().iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! AOT manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. The manifest carries every artifact's argument
+//! shapes/dtypes and the model configuration; the Rust side never
+//! re-derives shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// Tensor dtype (the subset the model uses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one artifact argument or result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .req("shape")?
+            .as_arr()
+            .context("shape not an array")?
+            .iter()
+            .map(|v| v.as_usize().context("shape element"))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = DType::parse(j.req("dtype")?.as_str().context("dtype")?)?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One compiled artifact's description.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Model configuration (mirrors python `ModelConfig`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_seq: usize,
+    pub n_layers: usize,
+    pub d_ffn: usize,
+    pub total_params: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub preset: String,
+    pub batch: usize,
+    pub model: ModelInfo,
+    pub layer_param_names: Vec<String>,
+    pub layer_param_shapes: Vec<Vec<usize>>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    /// Directory the artifact files are relative to.
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<root>/<preset>/manifest.json`.
+    pub fn load(root: impl AsRef<Path>, preset: &str) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join(preset).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+
+        let m = j.req("model")?;
+        let geti = |k: &str| -> Result<usize> {
+            m.req(k)?.as_usize().with_context(|| format!("model.{k}"))
+        };
+        let model = ModelInfo {
+            vocab: geti("vocab")?,
+            d_model: geti("d_model")?,
+            n_heads: geti("n_heads")?,
+            d_seq: geti("d_seq")?,
+            n_layers: geti("n_layers")?,
+            d_ffn: geti("d_ffn")?,
+            total_params: geti("total_params")?,
+        };
+
+        let layer_param_names: Vec<String> = j
+            .req("layer_param_names")?
+            .as_arr()
+            .context("layer_param_names")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or_default().to_string())
+            .collect();
+        let shapes_obj = j.req("layer_param_shapes")?;
+        let layer_param_shapes = layer_param_names
+            .iter()
+            .map(|n| -> Result<Vec<usize>> {
+                Ok(shapes_obj
+                    .req(n)?
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect())
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, art) in j.req("artifacts")?.as_obj().context("artifacts")? {
+            let file = root.join(art.req("file")?.as_str().context("file")?);
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                art.req(key)?
+                    .as_arr()
+                    .context("tensor list")?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { file, inputs: parse_list("inputs")?, outputs: parse_list("outputs")? },
+            );
+        }
+
+        Ok(Manifest {
+            preset: j.req("preset")?.as_str().context("preset")?.to_string(),
+            batch: j.req("batch")?.as_usize().context("batch")?,
+            model,
+            layer_param_names,
+            layer_param_shapes,
+            artifacts,
+            root,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    /// Parameter element-count of one transformer layer.
+    pub fn layer_param_elements(&self) -> usize {
+        self.layer_param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_root() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_tiny_manifest() {
+        let root = artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&root, "tiny").unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.model.d_model, 64);
+        assert_eq!(m.layer_param_names.len(), 12);
+        assert_eq!(m.artifacts.len(), 5);
+        let lf = m.artifact("layer_fwd").unwrap();
+        assert_eq!(lf.inputs.len(), 13);
+        assert_eq!(lf.outputs.len(), 1);
+        assert_eq!(lf.outputs[0].shape, vec![m.batch, m.model.d_seq, m.model.d_model]);
+        assert!(lf.file.exists());
+    }
+
+    #[test]
+    fn layer_param_elements_matches_python_count() {
+        let root = artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root, "tiny").unwrap();
+        // tiny: d=64, di=256 — same formula as python ModelConfig.
+        let (d, di) = (64usize, 256usize);
+        let want =
+            2 * d + d * 3 * d + 3 * d + d * d + d + 2 * d + d * di + di + di * d + d;
+        assert_eq!(m.layer_param_elements(), want);
+    }
+
+    #[test]
+    fn missing_preset_gives_helpful_error() {
+        let err = Manifest::load(artifacts_root(), "nonexistent").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

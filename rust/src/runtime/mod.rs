@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest, HLO loading/compilation, and the
+//! execution engine the trainer's hot path calls. Python never runs here
+//! — artifacts are produced once by `make artifacts`.
+
+pub mod executor;
+pub mod json;
+pub mod manifest;
+
+pub use executor::{Engine, HostTensor};
+pub use json::{Json, JsonError};
+pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec};

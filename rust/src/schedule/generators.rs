@@ -1,0 +1,403 @@
+//! Schedule generators: the four policies compared in Figures 1–3, plus
+//! 1F1B as an ablation baseline.
+//!
+//! All generators emit one batch worth of ops. Conventions:
+//! * `RecvAct`/`SendAct` appear only at stage boundaries (the producing
+//!   stage sends, the consuming stage receives);
+//! * with `partition` (or offload), `RestoreParams { layer }` precedes the
+//!   first use of a layer in each pass, and is re-issued *per micro-batch*
+//!   in the standard schedules (the redundancy Figure 2 shows LGA
+//!   eliminating);
+//! * `ReduceGrad { layer }` is issued as soon as the layer's gradient is
+//!   complete: after the last micro-batch of that layer's backward.
+
+use super::ir::{LayerAssignment, Op, Schedule};
+
+/// Parameters shared by all generators.
+#[derive(Debug, Clone, Copy)]
+pub struct ScheduleSpec {
+    /// Total layers d_l (must be divisible by n_l).
+    pub d_l: usize,
+    /// Pipeline stages n_l.
+    pub n_l: usize,
+    /// Micro-batches n_μ.
+    pub n_mu: usize,
+    /// Whether the training state is partitioned / offloaded (emit
+    /// RestoreParams + per-layer reduce-scatter semantics).
+    pub partition: bool,
+    /// Whether to emit data-parallel ReduceGrad ops (n_b > 1).
+    pub data_parallel: bool,
+}
+
+impl ScheduleSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_l == 0 || self.d_l == 0 || self.n_mu == 0 {
+            return Err("zero dimension".into());
+        }
+        if self.d_l % self.n_l != 0 {
+            return Err(format!("d_l = {} not divisible by n_l = {}", self.d_l, self.n_l));
+        }
+        if self.n_mu < self.n_l {
+            return Err(format!("n_mu = {} < n_l = {} starves the pipeline", self.n_mu, self.n_l));
+        }
+        Ok(())
+    }
+}
+
+/// Standard gradient accumulation (Figure 1 top, single stage; GPipe-style
+/// when n_l > 1 — Figure 3 top with contiguous layer chunks).
+///
+/// Each micro-batch runs through all local layers before the next starts.
+/// With a partition, every (layer, micro-batch) pair needs its own
+/// parameter restoration — the bandwidth pathology of Figure 2 (top).
+pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
+    spec.validate().expect("invalid schedule spec");
+    let assignment = LayerAssignment::Contiguous;
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); spec.n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let layers = assignment.layers_of(stage, spec.d_l, spec.n_l);
+        // Forward: every micro-batch through the whole local chunk.
+        for mb in 0..spec.n_mu {
+            for &l in &layers {
+                if spec.partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
+                    stage_ops.push(Op::RecvAct { layer: l, mb });
+                }
+                stage_ops.push(Op::Fwd { layer: l, mb });
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
+                    stage_ops.push(Op::SendAct { layer: l, mb });
+                }
+            }
+        }
+        // Backward: micro-batches in order, layers reversed.
+        for mb in 0..spec.n_mu {
+            for &l in layers.iter().rev() {
+                if spec.partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
+                    stage_ops.push(Op::RecvGrad { layer: l, mb });
+                }
+                stage_ops.push(Op::Bwd { layer: l, mb });
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
+                    stage_ops.push(Op::SendGrad { layer: l, mb });
+                }
+                // Gradient complete only after the last micro-batch:
+                // the reduction bunches at the end (Figure 1 top).
+                if mb + 1 == spec.n_mu && (spec.data_parallel || spec.partition) {
+                    stage_ops.push(Op::ReduceGrad { layer: l });
+                }
+            }
+        }
+        // Optimizer steps go last: they depend on the reductions but must
+        // not block the remaining backward computes (an in-order executor
+        // would otherwise serialise the reductions into the compute
+        // stream).
+        for &l in &layers {
+            stage_ops.push(Op::OptimStep { layer: l });
+        }
+    }
+    Schedule {
+        name: if spec.n_l > 1 { "standard-pipeline".into() } else { "standard-ga".into() },
+        n_stages: spec.n_l,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment,
+        ops,
+        partitioned: spec.partition,
+    }
+}
+
+/// Layered gradient accumulation (Figure 1 bottom; §3): all micro-batches
+/// of a layer before the next layer. Single-stage only — combining LGA
+/// with a pipeline requires the modular split (§3 last paragraph), which
+/// is [`modular_pipeline`].
+pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
+    assert_eq!(spec.n_l, 1, "layered GA without modular split is single-stage (§3)");
+    spec.validate().expect("invalid schedule spec");
+    let mut ops = vec![Vec::new()];
+    let stage_ops = &mut ops[0];
+    for l in 0..spec.d_l {
+        if spec.partition {
+            stage_ops.push(Op::RestoreParams { layer: l }); // once per layer!
+        }
+        for mb in 0..spec.n_mu {
+            stage_ops.push(Op::Fwd { layer: l, mb });
+        }
+    }
+    for l in (0..spec.d_l).rev() {
+        if spec.partition {
+            stage_ops.push(Op::RestoreParams { layer: l });
+        }
+        for mb in 0..spec.n_mu {
+            stage_ops.push(Op::Bwd { layer: l, mb });
+        }
+        // Gradient for layer l is complete here — the reduction spreads
+        // over the whole backward pass (Figure 1 bottom).
+        if spec.data_parallel || spec.partition {
+            stage_ops.push(Op::ReduceGrad { layer: l });
+        }
+    }
+    for l in 0..spec.d_l {
+        stage_ops.push(Op::OptimStep { layer: l });
+    }
+    Schedule {
+        name: "layered-ga".into(),
+        n_stages: 1,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment: LayerAssignment::Contiguous,
+        ops,
+        partitioned: spec.partition,
+    }
+}
+
+/// Modular pipeline parallelism (Figure 3 bottom; §4): layers are assigned
+/// round-robin and each stage processes all micro-batches of a layer
+/// before moving to its next layer (layered scheduling). A micro-batch
+/// reaches the last stage after n_l − 1 single layers instead of
+/// d_l·(1 − 1/n_l), shrinking the bubble by d_l/n_l.
+pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
+    spec.validate().expect("invalid schedule spec");
+    let assignment = LayerAssignment::Modular;
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); spec.n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let layers = assignment.layers_of(stage, spec.d_l, spec.n_l);
+        for &l in &layers {
+            if spec.partition {
+                stage_ops.push(Op::RestoreParams { layer: l }); // once per layer
+            }
+            for mb in 0..spec.n_mu {
+                if l > 0 {
+                    stage_ops.push(Op::RecvAct { layer: l, mb });
+                }
+                stage_ops.push(Op::Fwd { layer: l, mb });
+                if l + 1 < spec.d_l {
+                    stage_ops.push(Op::SendAct { layer: l, mb });
+                }
+            }
+        }
+        for &l in layers.iter().rev() {
+            if spec.partition {
+                stage_ops.push(Op::RestoreParams { layer: l });
+            }
+            for mb in 0..spec.n_mu {
+                if l + 1 < spec.d_l {
+                    stage_ops.push(Op::RecvGrad { layer: l, mb });
+                }
+                stage_ops.push(Op::Bwd { layer: l, mb });
+                if l > 0 {
+                    stage_ops.push(Op::SendGrad { layer: l, mb });
+                }
+            }
+            if spec.data_parallel || spec.partition {
+                stage_ops.push(Op::ReduceGrad { layer: l });
+            }
+        }
+        for &l in &layers {
+            stage_ops.push(Op::OptimStep { layer: l });
+        }
+    }
+    Schedule {
+        name: "modular-pipeline".into(),
+        n_stages: spec.n_l,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment,
+        ops,
+        partitioned: spec.partition,
+    }
+}
+
+/// 1F1B (PipeDream-flush) over contiguous chunks — the scheduling used by
+/// Megatron-LM, included as an ablation comparator. Same bubble as GPipe
+/// but bounded activation memory (at most n_l in-flight micro-batches per
+/// stage).
+pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
+    spec.validate().expect("invalid schedule spec");
+    let assignment = LayerAssignment::Contiguous;
+    let n_l = spec.n_l;
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let layers = assignment.layers_of(stage, spec.d_l, n_l);
+        let warmup = (n_l - 1 - stage).min(spec.n_mu);
+        let mut emitted_f = 0usize;
+        let mut emitted_b = 0usize;
+        let fwd_chunk = |stage_ops: &mut Vec<Op>, mb: usize| {
+            for &l in &layers {
+                if spec.partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::RecvAct { layer: l, mb });
+                }
+                stage_ops.push(Op::Fwd { layer: l, mb });
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::SendAct { layer: l, mb });
+                }
+            }
+        };
+        let bwd_chunk = |stage_ops: &mut Vec<Op>, mb: usize, last: bool, partition: bool, dp: bool| {
+            for &l in layers.iter().rev() {
+                if partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::RecvGrad { layer: l, mb });
+                }
+                stage_ops.push(Op::Bwd { layer: l, mb });
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::SendGrad { layer: l, mb });
+                }
+                if last && (dp || partition) {
+                    stage_ops.push(Op::ReduceGrad { layer: l });
+                }
+            }
+        };
+        // Warmup forwards.
+        for _ in 0..warmup {
+            fwd_chunk(stage_ops, emitted_f);
+            emitted_f += 1;
+        }
+        // Steady 1F1B.
+        while emitted_b < spec.n_mu {
+            if emitted_f < spec.n_mu {
+                fwd_chunk(stage_ops, emitted_f);
+                emitted_f += 1;
+            }
+            let last = emitted_b + 1 == spec.n_mu;
+            bwd_chunk(stage_ops, emitted_b, last, spec.partition, spec.data_parallel);
+            emitted_b += 1;
+        }
+        for &l in &layers {
+            stage_ops.push(Op::OptimStep { layer: l });
+        }
+    }
+    Schedule {
+        name: "1f1b".into(),
+        n_stages: n_l,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment,
+        ops,
+        partitioned: spec.partition,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
+        ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true }
+    }
+
+    fn count_fwd(s: &Schedule) -> usize {
+        s.count(|o| matches!(o, Op::Fwd { .. }))
+    }
+
+    fn count_restore(s: &Schedule) -> usize {
+        s.count(|o| matches!(o, Op::RestoreParams { .. }))
+    }
+
+    #[test]
+    fn all_generators_emit_every_fwd_bwd_pair() {
+        let sp = spec(8, 4, 8, false);
+        for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+            assert_eq!(count_fwd(&s), 8 * 8, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::Bwd { .. })), 8 * 8, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 8, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::OptimStep { .. })), 8, "{}", s.name);
+        }
+        let single = spec(8, 1, 8, false);
+        for s in [standard_ga(&single), layered_ga(&single)] {
+            assert_eq!(count_fwd(&s), 8 * 8, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn lga_restores_each_layer_twice_standard_restores_per_microbatch() {
+        // Figure 2: with a partitioned state, standard GA restores a
+        // layer's parameters for every micro-batch (2·d_l·n_μ restores),
+        // LGA only once per pass (2·d_l).
+        let sp = spec(6, 1, 10, true);
+        let std_s = standard_ga(&sp);
+        let lga_s = layered_ga(&sp);
+        assert_eq!(count_restore(&std_s), 2 * 6 * 10);
+        assert_eq!(count_restore(&lga_s), 2 * 6);
+    }
+
+    #[test]
+    fn modular_pipeline_keeps_lga_restore_economy() {
+        let sp = spec(8, 4, 8, true);
+        let s = modular_pipeline(&sp);
+        // Each of the 8 layers restored once per pass, twice total.
+        assert_eq!(count_restore(&s), 2 * 8);
+    }
+
+    #[test]
+    fn standard_ga_reduces_only_after_last_microbatch() {
+        // All ReduceGrad ops must sit after the final Bwd of their layer
+        // AND after the final Bwd of the last micro-batch index.
+        let sp = spec(4, 1, 6, false);
+        let s = standard_ga(&sp);
+        let ops = &s.ops[0];
+        let first_reduce = ops.iter().position(|o| matches!(o, Op::ReduceGrad { .. })).unwrap();
+        let bwds_before: usize = ops[..first_reduce]
+            .iter()
+            .filter(|o| matches!(o, Op::Bwd { mb, .. } if *mb + 1 < 6))
+            .count();
+        // Every non-final micro-batch backward happens before any
+        // reduction: the reduction window is only the last micro-batch.
+        assert_eq!(bwds_before, 4 * 5);
+    }
+
+    #[test]
+    fn layered_ga_interleaves_reduction_with_backward() {
+        // In LGA the first reduction (last layer) happens after only
+        // n_μ backward ops — the reduction is spread across the pass.
+        let sp = spec(4, 1, 6, false);
+        let s = layered_ga(&sp);
+        let ops = &s.ops[0];
+        let first_reduce = ops.iter().position(|o| matches!(o, Op::ReduceGrad { .. })).unwrap();
+        let bwds_before =
+            ops[..first_reduce].iter().filter(|o| matches!(o, Op::Bwd { .. })).count();
+        assert_eq!(bwds_before, 6, "reduction of the last layer right after its n_mu bwd ops");
+    }
+
+    #[test]
+    fn modular_sends_after_every_layer_contiguous_after_chunks() {
+        let sp = spec(16, 4, 8, false);
+        let modular = modular_pipeline(&sp);
+        let contiguous = standard_ga(&sp);
+        let sends = |s: &Schedule| s.count(|o| matches!(o, Op::SendAct { .. }));
+        // Modular: every layer except the last sends, for every mb.
+        assert_eq!(sends(&modular), 15 * 8);
+        // Contiguous: only 3 chunk boundaries send.
+        assert_eq!(sends(&contiguous), 3 * 8);
+    }
+
+    #[test]
+    fn one_f_one_b_matches_fwd_bwd_counts_and_orders() {
+        let sp = spec(8, 4, 12, false);
+        let s = one_f_one_b(&sp);
+        for (stage, ops) in s.ops.iter().enumerate() {
+            // Within a stage, Bwd k must come after Fwd k.
+            let pos = |pred: &dyn Fn(&Op) -> bool| ops.iter().position(|o| pred(o)).unwrap();
+            for mb in 0..12 {
+                let f = pos(&|o: &Op| matches!(o, Op::Fwd { mb: m, .. } if *m == mb));
+                let b = pos(&|o: &Op| matches!(o, Op::Bwd { mb: m, .. } if *m == mb));
+                assert!(f < b, "stage {stage} mb {mb}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn starved_pipeline_rejected() {
+        let sp = spec(8, 4, 2, false);
+        modular_pipeline(&sp);
+    }
+}

@@ -1,0 +1,220 @@
+//! Schedule intermediate representation.
+//!
+//! A [`Schedule`] is, for every pipeline stage, an *ordered* list of
+//! operations. The order **is** the scheduling policy (standard vs layered
+//! gradient accumulation, contiguous vs modular pipeline); timing is not
+//! part of the IR — it emerges when the discrete-event simulator executes
+//! the schedule against a hardware model (ops block until their data
+//! dependencies are satisfied, which is what produces the pipeline
+//! bubble), or when the real trainer executes it against PJRT.
+
+use std::fmt;
+
+/// One schedulable operation on a pipeline stage.
+///
+/// `layer` indices are global (0..d_l); `mb` is the micro-batch index
+/// (0..n_μ). Compute ops run on the device's compute stream; transfer ops
+/// run on the network streams and overlap with compute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Forward pass of one layer for one micro-batch (stores the
+    /// activation checkpoint).
+    Fwd { layer: usize, mb: usize },
+    /// Backward pass of one layer for one micro-batch, including the
+    /// activation recomputation (costed at 3x forward, Appendix C.1).
+    Bwd { layer: usize, mb: usize },
+    /// Send a micro-batch's activations to the stage owning `layer + 1`.
+    SendAct { layer: usize, mb: usize },
+    /// Receive the activations of `layer - 1` (i.e. this stage's input
+    /// for `layer`).
+    RecvAct { layer: usize, mb: usize },
+    /// Send the input-gradient of `layer` back to the stage owning
+    /// `layer - 1`.
+    SendGrad { layer: usize, mb: usize },
+    /// Receive the output-gradient for `layer` from the stage owning
+    /// `layer + 1`.
+    RecvGrad { layer: usize, mb: usize },
+    /// Data-parallel gradient reduction for one layer's parameters
+    /// (ring reduce-scatter + all-gather, or reduce-scatter only when the
+    /// state is partitioned).
+    ReduceGrad { layer: usize },
+    /// Restore (all-gather) one layer's fp16 parameters from the
+    /// partitioned training state (ZeRO-3) or from CPU memory (offload).
+    RestoreParams { layer: usize },
+    /// Six tensor-parallel all-reduces amortised into one op per layer
+    /// per micro-batch phase (2 fwd / 4 bwd with recompute; C.4.3).
+    TensorAllReduce { layer: usize, mb: usize, bwd: bool },
+    /// Move one layer's state shard GPU -> CPU (offload write-back).
+    OffloadStore { layer: usize },
+    /// Optimizer update for one layer (runs once the layer's gradients
+    /// are reduced; negligible compute in the paper's accounting).
+    OptimStep { layer: usize },
+}
+
+impl Op {
+    /// True for ops that occupy the compute stream.
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. })
+    }
+
+    /// True for ops that occupy a network/transfer stream.
+    pub fn is_transfer(&self) -> bool {
+        !self.is_compute()
+    }
+
+    /// The layer the op concerns.
+    pub fn layer(&self) -> usize {
+        match *self {
+            Op::Fwd { layer, .. }
+            | Op::Bwd { layer, .. }
+            | Op::SendAct { layer, .. }
+            | Op::RecvAct { layer, .. }
+            | Op::SendGrad { layer, .. }
+            | Op::RecvGrad { layer, .. }
+            | Op::ReduceGrad { layer }
+            | Op::RestoreParams { layer }
+            | Op::TensorAllReduce { layer, .. }
+            | Op::OffloadStore { layer }
+            | Op::OptimStep { layer } => layer,
+        }
+    }
+}
+
+impl fmt::Display for Op {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Op::Fwd { layer, mb } => write!(f, "F{layer}.{mb}"),
+            Op::Bwd { layer, mb } => write!(f, "B{layer}.{mb}"),
+            Op::SendAct { layer, mb } => write!(f, "sa{layer}.{mb}"),
+            Op::RecvAct { layer, mb } => write!(f, "ra{layer}.{mb}"),
+            Op::SendGrad { layer, mb } => write!(f, "sg{layer}.{mb}"),
+            Op::RecvGrad { layer, mb } => write!(f, "rg{layer}.{mb}"),
+            Op::ReduceGrad { layer } => write!(f, "R{layer}"),
+            Op::RestoreParams { layer } => write!(f, "G{layer}"),
+            Op::TensorAllReduce { layer, mb, bwd } => {
+                write!(f, "t{}{layer}.{mb}", if bwd { "b" } else { "f" })
+            }
+            Op::OffloadStore { layer } => write!(f, "O{layer}"),
+            Op::OptimStep { layer } => write!(f, "U{layer}"),
+        }
+    }
+}
+
+/// How layers map onto pipeline stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerAssignment {
+    /// Contiguous chunks: stage s owns layers [s·d_l/n_l, (s+1)·d_l/n_l).
+    Contiguous,
+    /// Modular (round-robin): stage s owns layers {l : l ≡ s (mod n_l)}
+    /// (§4).
+    Modular,
+}
+
+impl LayerAssignment {
+    /// The stage owning a given layer.
+    pub fn stage_of(&self, layer: usize, d_l: usize, n_l: usize) -> usize {
+        match self {
+            LayerAssignment::Contiguous => layer * n_l / d_l,
+            LayerAssignment::Modular => layer % n_l,
+        }
+    }
+
+    /// The layers owned by a stage, in forward order.
+    pub fn layers_of(&self, stage: usize, d_l: usize, n_l: usize) -> Vec<usize> {
+        (0..d_l).filter(|&l| self.stage_of(l, d_l, n_l) == stage).collect()
+    }
+}
+
+/// A complete static schedule for one training batch.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Human-readable policy name (e.g. "layered-ga", "modular-pipeline").
+    pub name: String,
+    /// Pipeline stages (n_l).
+    pub n_stages: usize,
+    /// Total layers d_l.
+    pub d_l: usize,
+    /// Micro-batches per batch n_μ.
+    pub n_mu: usize,
+    /// Layer-to-stage assignment.
+    pub assignment: LayerAssignment,
+    /// Ordered op list per stage.
+    pub ops: Vec<Vec<Op>>,
+    /// Whether the training state is partitioned (RestoreParams ops are
+    /// all-gathers over the data-parallel group).
+    pub partitioned: bool,
+}
+
+impl Schedule {
+    /// Total number of ops across all stages.
+    pub fn len(&self) -> usize {
+        self.ops.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Count ops matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.ops.iter().flatten().filter(|o| pred(o)).count()
+    }
+
+    /// The stage that owns a layer under this schedule's assignment.
+    pub fn stage_of(&self, layer: usize) -> usize {
+        self.assignment.stage_of(layer, self.d_l, self.n_stages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_assignment_chunks() {
+        let a = LayerAssignment::Contiguous;
+        // 8 layers over 4 stages: [0,1],[2,3],[4,5],[6,7].
+        assert_eq!(a.layers_of(0, 8, 4), vec![0, 1]);
+        assert_eq!(a.layers_of(3, 8, 4), vec![6, 7]);
+        assert_eq!(a.stage_of(5, 8, 4), 2);
+    }
+
+    #[test]
+    fn modular_assignment_round_robin() {
+        let a = LayerAssignment::Modular;
+        // 8 layers over 4 stages: {0,4},{1,5},{2,6},{3,7}.
+        assert_eq!(a.layers_of(0, 8, 4), vec![0, 4]);
+        assert_eq!(a.layers_of(3, 8, 4), vec![3, 7]);
+        assert_eq!(a.stage_of(6, 8, 4), 2);
+    }
+
+    #[test]
+    fn every_layer_owned_exactly_once() {
+        for a in [LayerAssignment::Contiguous, LayerAssignment::Modular] {
+            for (d_l, n_l) in [(8, 4), (16, 4), (160, 5), (12, 3)] {
+                let mut owned = vec![0usize; d_l];
+                for s in 0..n_l {
+                    for l in a.layers_of(s, d_l, n_l) {
+                        owned[l] += 1;
+                    }
+                }
+                assert!(owned.iter().all(|&c| c == 1), "{a:?} {d_l}/{n_l}");
+            }
+        }
+    }
+
+    #[test]
+    fn op_stream_classification() {
+        assert!(Op::Fwd { layer: 0, mb: 0 }.is_compute());
+        assert!(Op::Bwd { layer: 0, mb: 0 }.is_compute());
+        assert!(Op::SendAct { layer: 0, mb: 0 }.is_transfer());
+        assert!(Op::ReduceGrad { layer: 0 }.is_transfer());
+        assert!(Op::RestoreParams { layer: 0 }.is_transfer());
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(Op::Fwd { layer: 3, mb: 1 }.to_string(), "F3.1");
+        assert_eq!(Op::ReduceGrad { layer: 7 }.to_string(), "R7");
+    }
+}

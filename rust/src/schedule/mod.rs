@@ -1,0 +1,14 @@
+//! Schedule IR, generators and validation.
+//!
+//! The four scheduling policies of Figures 1–3 (standard/layered gradient
+//! accumulation × contiguous/modular pipeline split) plus 1F1B, expressed
+//! as per-stage ordered op lists that both the discrete-event simulator
+//! ([`crate::sim`]) and the real trainer ([`crate::trainer`]) execute.
+
+pub mod generators;
+pub mod ir;
+pub mod validate;
+
+pub use generators::{layered_ga, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+pub use ir::{LayerAssignment, Op, Schedule};
+pub use validate::{validate, ScheduleError};

@@ -1,0 +1,186 @@
+//! Static schedule validation: data-dependency closure and send/recv
+//! matching. A schedule that passes these checks cannot deadlock in the
+//! simulator or the real trainer.
+
+use std::collections::HashSet;
+
+use super::ir::{Op, Schedule};
+
+/// Errors found by [`validate`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// A layer/micro-batch forward appears on a stage that does not own
+    /// the layer.
+    WrongStage { stage: usize, op: String },
+    /// Fwd/Bwd for a (layer, mb) pair is missing or duplicated.
+    BadComputeCount { layer: usize, mb: usize, fwd: usize, bwd: usize },
+    /// A SendAct has no matching RecvAct on the consuming stage (or vice
+    /// versa).
+    UnmatchedTransfer { op: String },
+    /// Within a stage, an op consumes data produced later on the same
+    /// stage (guaranteed deadlock).
+    LocalOrderViolation { stage: usize, consumer: String, producer: String },
+}
+
+/// Validate a schedule's structural invariants.
+pub fn validate(s: &Schedule) -> Result<(), Vec<ScheduleError>> {
+    let mut errors = Vec::new();
+
+    // 1. Ownership: compute ops only on the owning stage.
+    for (stage, ops) in s.ops.iter().enumerate() {
+        for op in ops {
+            if op.is_compute() && s.stage_of(op.layer()) != stage {
+                errors.push(ScheduleError::WrongStage { stage, op: op.to_string() });
+            }
+        }
+    }
+
+    // 2. Exactly one Fwd and one Bwd per (layer, mb).
+    let mut fwd = vec![vec![0usize; s.n_mu]; s.d_l];
+    let mut bwd = vec![vec![0usize; s.n_mu]; s.d_l];
+    for op in s.ops.iter().flatten() {
+        match *op {
+            Op::Fwd { layer, mb } => fwd[layer][mb] += 1,
+            Op::Bwd { layer, mb } => bwd[layer][mb] += 1,
+            _ => {}
+        }
+    }
+    for l in 0..s.d_l {
+        for mb in 0..s.n_mu {
+            if fwd[l][mb] != 1 || bwd[l][mb] != 1 {
+                errors.push(ScheduleError::BadComputeCount {
+                    layer: l,
+                    mb,
+                    fwd: fwd[l][mb],
+                    bwd: bwd[l][mb],
+                });
+            }
+        }
+    }
+
+    // 3. Send/Recv matching across stage boundaries.
+    let mut sends: HashSet<(usize, usize, bool)> = HashSet::new(); // (layer, mb, grad?)
+    let mut recvs: HashSet<(usize, usize, bool)> = HashSet::new();
+    for op in s.ops.iter().flatten() {
+        match *op {
+            Op::SendAct { layer, mb } => {
+                sends.insert((layer, mb, false));
+            }
+            // RecvAct{layer} receives the *output of layer-1*.
+            Op::RecvAct { layer, mb } => {
+                recvs.insert((layer - 1, mb, false));
+            }
+            Op::SendGrad { layer, mb } => {
+                sends.insert((layer, mb, true));
+            }
+            // RecvGrad{layer} receives the gradient of layer+1's input.
+            Op::RecvGrad { layer, mb } => {
+                recvs.insert((layer + 1, mb, true));
+            }
+            _ => {}
+        }
+    }
+    for miss in sends.symmetric_difference(&recvs) {
+        errors.push(ScheduleError::UnmatchedTransfer {
+            op: format!(
+                "{}{} layer {} mb {}",
+                if miss.2 { "grad" } else { "act" },
+                if sends.contains(miss) { " send" } else { " recv" },
+                miss.0,
+                miss.1
+            ),
+        });
+    }
+
+    // 4. Same-stage ordering: Fwd(l, mb) before Fwd(l', mb) for owned
+    //    consecutive layers, Bwd(l, mb) after Fwd(l, mb), SendAct after
+    //    its Fwd, RecvAct before its Fwd.
+    for (stage, ops) in s.ops.iter().enumerate() {
+        let index_of = |pred: &dyn Fn(&Op) -> bool| ops.iter().position(|o| pred(o));
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::SendAct { layer, mb } => {
+                    if let Some(j) = index_of(&|o: &Op| *o == Op::Fwd { layer, mb }) {
+                        if j > i {
+                            errors.push(ScheduleError::LocalOrderViolation {
+                                stage,
+                                consumer: op.to_string(),
+                                producer: format!("F{layer}.{mb}"),
+                            });
+                        }
+                    }
+                }
+                Op::Bwd { layer, mb } => {
+                    if let Some(j) = index_of(&|o: &Op| *o == Op::Fwd { layer, mb }) {
+                        if j > i {
+                            errors.push(ScheduleError::LocalOrderViolation {
+                                stage,
+                                consumer: op.to_string(),
+                                producer: format!("F{layer}.{mb}"),
+                            });
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generators::*;
+    use super::*;
+
+    #[test]
+    fn all_generated_schedules_validate() {
+        for (d_l, n_l, n_mu) in [(8, 4, 8), (16, 4, 6), (12, 3, 3), (8, 1, 4), (160, 5, 5)] {
+            for partition in [false, true] {
+                let sp = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
+                if n_l == 1 {
+                    validate(&layered_ga(&sp)).expect("layered");
+                } else {
+                    validate(&modular_pipeline(&sp)).expect("modular");
+                    validate(&one_f_one_b(&sp)).expect("1f1b");
+                }
+                validate(&standard_ga(&sp)).expect("standard");
+            }
+        }
+    }
+
+    #[test]
+    fn detects_missing_bwd() {
+        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let mut s = modular_pipeline(&sp);
+        // Drop one backward op.
+        let pos = s.ops[0].iter().position(|o| matches!(o, Op::Bwd { .. })).unwrap();
+        s.ops[0].remove(pos);
+        let errs = validate(&s).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::BadComputeCount { .. })));
+    }
+
+    #[test]
+    fn detects_unmatched_send() {
+        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let mut s = modular_pipeline(&sp);
+        let pos = s.ops[0].iter().position(|o| matches!(o, Op::SendAct { .. })).unwrap();
+        s.ops[0].remove(pos);
+        let errs = validate(&s).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::UnmatchedTransfer { .. })));
+    }
+
+    #[test]
+    fn detects_wrong_stage() {
+        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let mut s = modular_pipeline(&sp);
+        s.ops[0].push(Op::Fwd { layer: 1, mb: 0 }); // layer 1 belongs to stage 1
+        let errs = validate(&s).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::WrongStage { .. })));
+    }
+}

@@ -1,0 +1,201 @@
+//! Op cost table: how long each schedule op takes on a device, derived
+//! from the Appendix A hardware model and the Appendix C traffic
+//! formulas. The simulator multiplies these against the schedule; no
+//! timing lives in the schedule itself.
+
+use crate::costmodel::TrainConfig;
+use crate::hardware::{ClusterSpec, LinkKind};
+use crate::model::TransformerShape;
+use crate::schedule::Op;
+
+/// Which per-device stream an op occupies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    /// The compute cores.
+    Compute,
+    /// Outbound inter-device traffic (pipeline sends, gradient reduction).
+    NetOut,
+    /// Inbound inter-device traffic (pipeline receives, parameter
+    /// restoration).
+    NetIn,
+    /// The CPU-GPU (PCIe) link used for offload traffic.
+    CpuLink,
+}
+
+pub const STREAMS: [Stream; 4] = [Stream::Compute, Stream::NetOut, Stream::NetIn, Stream::CpuLink];
+
+/// Precomputed durations (seconds) for every op kind.
+#[derive(Debug, Clone)]
+pub struct CostTable {
+    pub fwd: f64,
+    pub bwd: f64,
+    pub send_act: f64,
+    pub send_grad: f64,
+    pub reduce_grad: f64,
+    pub restore_params: f64,
+    pub offload_store: f64,
+    pub optim_step: f64,
+    /// Checkpoint bytes stored by one Fwd (freed by the matching Bwd).
+    pub checkpoint_bytes: f64,
+    /// Live working-set bytes while a compute op runs.
+    pub live_activation_bytes: f64,
+}
+
+impl CostTable {
+    /// Build the table for a model shape + training config on a cluster.
+    pub fn new(shape: &TransformerShape, cfg: &TrainConfig, cluster: &ClusterSpec) -> Self {
+        let peak = cluster.gpu.peak_flops;
+        let inter_bw = cluster.inter_node_link().bandwidth();
+        let cpu_bw = LinkKind::CpuGpu.bandwidth();
+
+        let b_mu = cfg.b_mu;
+        let d_s = shape.d_s as f64;
+        let d_m = shape.d_m() as f64;
+        let n_a = cfg.n_a as f64;
+        let n_b = cfg.n_b as f64;
+        let p_l = shape.params_per_layer();
+
+        // Compute: 2 flops/token/param forward; backward = 3x (includes
+        // the activation recomputation), Appendix C.1.
+        let fwd_flops = 2.0 * b_mu * d_s * p_l / n_a;
+        let fwd = fwd_flops / peak;
+        let bwd = 3.0 * fwd;
+
+        // Pipeline boundary transfer: fp16 activations of one micro-batch.
+        let act_bytes = 2.0 * b_mu * d_s * d_m / n_a;
+        let send_act = act_bytes / inter_bw;
+        let send_grad = send_act; // gradient of the same tensor
+
+        // Data-parallel gradient handling for one layer's parameters
+        // (fp16, split over the tensor-parallel group):
+        //  * plain all-reduce: ring scatter-reduce + all-gather,
+        //    2 · 2 bytes · (n_b−1)/n_b per parameter;
+        //  * partitioned: reduce-scatter only (the optimizer shard is
+        //    local), half the traffic; the all-gather moved into
+        //    RestoreParams.
+        let ring = (n_b - 1.0).max(0.0) / n_b.max(1.0);
+        let reduce_bytes =
+            if cfg.partition { 2.0 * p_l / n_a * ring } else { 4.0 * p_l / n_a * ring };
+        let reduce_grad = if n_b > 1.0 || cfg.partition { reduce_bytes / inter_bw } else { 0.0 };
+
+        // Parameter restoration: fp16 all-gather over the data-parallel
+        // group (partition), or a CPU->GPU fetch (offload), or both —
+        // the slower path dominates when both apply.
+        let restore_bytes = 2.0 * p_l / n_a;
+        let restore_part = if cfg.partition { restore_bytes * ring / inter_bw } else { 0.0 };
+        let restore_off = if cfg.offload { restore_bytes / cpu_bw } else { 0.0 };
+        let restore_params = restore_part.max(restore_off);
+
+        let offload_store = if cfg.offload { restore_bytes / cpu_bw } else { 0.0 };
+
+        // Optimizer step: fp32 state read-modify-write at HBM bandwidth,
+        // negligible next to the layer compute but not zero.
+        let optim_step = 12.0 * p_l / n_a / cluster.gpu.memory_bandwidth;
+
+        let checkpoint_bytes = 2.0 * b_mu * d_s * d_m / n_a;
+        let live_activation_bytes = b_mu * d_s * shape.m0_bytes_per_token() / n_a;
+
+        CostTable {
+            fwd,
+            bwd,
+            send_act,
+            send_grad,
+            reduce_grad,
+            restore_params,
+            offload_store,
+            optim_step,
+            checkpoint_bytes,
+            live_activation_bytes,
+        }
+    }
+
+    /// The stream an op occupies.
+    pub fn stream(op: &Op) -> Stream {
+        match op {
+            Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. } => Stream::Compute,
+            Op::SendAct { .. } | Op::SendGrad { .. } | Op::ReduceGrad { .. } => Stream::NetOut,
+            Op::RecvAct { .. } | Op::RecvGrad { .. } | Op::RestoreParams { .. } => Stream::NetIn,
+            Op::TensorAllReduce { .. } => Stream::Compute, // serialized with compute (C.4.3)
+            Op::OffloadStore { .. } => Stream::CpuLink,
+        }
+    }
+
+    /// Duration of an op, seconds.
+    pub fn duration(&self, op: &Op) -> f64 {
+        match op {
+            Op::Fwd { .. } => self.fwd,
+            Op::Bwd { .. } => self.bwd,
+            Op::SendAct { .. } => self.send_act,
+            Op::SendGrad { .. } => self.send_grad,
+            // Receives are completion points of the matching send; the
+            // wire time is charged on the sender side.
+            Op::RecvAct { .. } | Op::RecvGrad { .. } => 0.0,
+            Op::ReduceGrad { .. } => self.reduce_grad,
+            Op::RestoreParams { .. } => self.restore_params,
+            Op::OffloadStore { .. } => self.offload_store,
+            Op::OptimStep { .. } => self.optim_step,
+            Op::TensorAllReduce { .. } => 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::Strategy;
+    use crate::model::XModel;
+
+    fn setup() -> (TransformerShape, TrainConfig, ClusterSpec) {
+        let shape = XModel::new(32).shape();
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 8,
+            n_l: 4,
+            n_a: 1,
+            n_mu: 8,
+            b_mu: 1.0,
+            offload: false,
+            partition: true,
+        };
+        (shape, cfg, ClusterSpec::reference())
+    }
+
+    #[test]
+    fn backward_is_three_times_forward() {
+        let (shape, cfg, cluster) = setup();
+        let t = CostTable::new(&shape, &cfg, &cluster);
+        assert!((t.bwd / t.fwd - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partitioned_reduce_is_half_of_plain() {
+        let (shape, mut cfg, cluster) = setup();
+        let part = CostTable::new(&shape, &cfg, &cluster);
+        cfg.partition = false;
+        cfg.strategy = Strategy::Baseline;
+        let plain = CostTable::new(&shape, &cfg, &cluster);
+        assert!((plain.reduce_grad / part.reduce_grad - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_parallel_scales_compute_and_transfers() {
+        let (shape, mut cfg, cluster) = setup();
+        let t1 = CostTable::new(&shape, &cfg, &cluster);
+        cfg.n_a = 4;
+        let t4 = CostTable::new(&shape, &cfg, &cluster);
+        assert!((t1.fwd / t4.fwd - 4.0).abs() < 1e-9);
+        assert!((t1.send_act / t4.send_act - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn offload_uses_cpu_link_timing() {
+        let (shape, mut cfg, cluster) = setup();
+        cfg.offload = true;
+        cfg.partition = false;
+        cfg.strategy = Strategy::Baseline;
+        let t = CostTable::new(&shape, &cfg, &cluster);
+        let expect = 2.0 * shape.params_per_layer() / LinkKind::CpuGpu.bandwidth();
+        assert!((t.restore_params / expect - 1.0).abs() < 1e-9);
+        assert!(t.offload_store > 0.0);
+    }
+}

@@ -1,0 +1,108 @@
+//! ASCII Gantt rendering of simulated timelines — the reproduction of the
+//! paper's Figures 1–3 scheduling diagrams.
+//!
+//! Each stage gets two rows: a compute row and a network row. Time is
+//! quantised into character cells; each cell shows the micro-batch digit
+//! for forward ops, the digit in brackets style for backward (lowercase
+//! letters f/b prefix dropped for width), `R` for gradient reduction,
+//! `G` for parameter restoration, `·` for idle.
+
+use crate::schedule::Op;
+
+use super::cost::Stream;
+use super::engine::{SimResult, TimedOp};
+
+/// Character used for an op's cells.
+fn glyph(op: &Op) -> char {
+    match op {
+        Op::Fwd { mb, .. } => char::from_digit((*mb % 10) as u32, 10).unwrap(),
+        Op::Bwd { mb, .. } => {
+            // Backward shown as letters a..j to distinguish from forward.
+            (b'a' + (*mb % 10) as u8) as char
+        }
+        Op::SendAct { .. } => '>',
+        Op::RecvAct { .. } => '<',
+        Op::SendGrad { .. } => '}',
+        Op::RecvGrad { .. } => '{',
+        Op::ReduceGrad { .. } => 'R',
+        Op::RestoreParams { .. } => 'G',
+        Op::OffloadStore { .. } => 'O',
+        Op::OptimStep { .. } => 'U',
+        Op::TensorAllReduce { .. } => 't',
+    }
+}
+
+/// Render a simulated timeline as ASCII, `width` characters across.
+pub fn render(result: &SimResult, width: usize) -> String {
+    let span = result.makespan.max(1e-30);
+    let scale = width as f64 / span;
+    let mut out = String::new();
+    for stage in 0..result.n_stages {
+        for (stream, label) in [(Stream::Compute, "comp"), (Stream::NetOut, "nout"), (Stream::NetIn, "nin ")] {
+            let mut row = vec!['·'; width];
+            for t in result.timeline.iter().filter(|t| t.stage == stage && t.stream == stream) {
+                paint(&mut row, t, scale);
+            }
+            // Skip all-idle network rows to keep small figures compact.
+            if stream != Stream::Compute && row.iter().all(|&c| c == '·') {
+                continue;
+            }
+            out.push_str(&format!("s{stage} {label} |{}|\n", row.iter().collect::<String>()));
+        }
+    }
+    out
+}
+
+fn paint(row: &mut [char], t: &TimedOp, scale: f64) {
+    let width = row.len();
+    let a = ((t.start * scale).floor() as usize).min(width.saturating_sub(1));
+    let b = ((t.end * scale).ceil() as usize).clamp(a + 1, width);
+    let g = glyph(&t.op);
+    for cell in row.iter_mut().take(b).skip(a) {
+        *cell = g;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::{Strategy, TrainConfig};
+    use crate::hardware::ClusterSpec;
+    use crate::model::XModel;
+    use crate::schedule::{modular_pipeline, standard_ga, ScheduleSpec};
+    use crate::sim::cost::CostTable;
+    use crate::sim::engine::simulate;
+
+    fn render_policy(modular: bool) -> String {
+        let sp = ScheduleSpec { d_l: 8, n_l: 4, n_mu: 6, partition: false, data_parallel: false };
+        let s = if modular { modular_pipeline(&sp) } else { standard_ga(&sp) };
+        let cfg = TrainConfig {
+            strategy: if modular { Strategy::Improved } else { Strategy::Baseline },
+            n_b: 1,
+            n_l: 4,
+            n_a: 1,
+            n_mu: 6,
+            b_mu: 1.0,
+            offload: false,
+            partition: false,
+        };
+        let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &ClusterSpec::reference());
+        render(&simulate(&s, &costs), 100)
+    }
+
+    #[test]
+    fn renders_all_stages() {
+        let g = render_policy(false);
+        for stage in 0..4 {
+            assert!(g.contains(&format!("s{stage} comp")), "{g}");
+        }
+    }
+
+    #[test]
+    fn modular_figure_has_less_idle_than_naive() {
+        let naive = render_policy(false);
+        let modular = render_policy(true);
+        let idle = |s: &str| s.lines().filter(|l| l.contains("comp")).map(|l| l.matches('·').count()).sum::<usize>();
+        assert!(idle(&modular) < idle(&naive), "modular:\n{modular}\nnaive:\n{naive}");
+    }
+}

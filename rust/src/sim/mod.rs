@@ -1,0 +1,11 @@
+//! Discrete-event simulator: executes schedules against the Appendix A
+//! hardware model, measuring the bubble, communication overlap and peak
+//! memory that the closed-form cost model predicts.
+
+pub mod cost;
+pub mod engine;
+pub mod gantt;
+
+pub use cost::{CostTable, Stream};
+pub use engine::{simulate, SimResult, TimedOp};
+pub use gantt::render;

@@ -1,0 +1,102 @@
+//! Trainer configuration and the schedule-policy switch.
+
+use std::path::PathBuf;
+
+use crate::optim::LrSchedule;
+use crate::schedule::{
+    layered_ga, modular_pipeline, one_f_one_b, standard_ga, Schedule, ScheduleSpec,
+};
+
+/// Which scheduling policy drives the workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Standard gradient accumulation / contiguous (GPipe-style) pipeline.
+    Baseline,
+    /// Layered gradient accumulation + modular pipeline (this paper).
+    Improved,
+    /// 1F1B (PipeDream-flush) ablation.
+    OneFOneB,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::Baseline => "baseline",
+            Policy::Improved => "improved",
+            Policy::OneFOneB => "1f1b",
+        }
+    }
+}
+
+/// Full configuration of a real training run.
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub artifacts_root: PathBuf,
+    pub preset: String,
+    /// Data-parallel degree.
+    pub n_b: usize,
+    /// Pipeline stages.
+    pub n_l: usize,
+    /// Micro-batches per step per data-parallel instance.
+    pub n_mu: usize,
+    pub policy: Policy,
+    /// ZeRO-3-style state partition over the data-parallel group.
+    pub partition: bool,
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub seed: u64,
+}
+
+impl TrainerConfig {
+    pub fn quick(preset: &str) -> Self {
+        TrainerConfig {
+            artifacts_root: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            preset: preset.to_string(),
+            n_b: 1,
+            n_l: 1,
+            n_mu: 1,
+            policy: Policy::Improved,
+            partition: false,
+            steps: 10,
+            lr: LrSchedule::constant(1e-3),
+            seed: 0,
+        }
+    }
+
+    /// Build the schedule for `d_l` model layers under this config.
+    pub fn build_schedule(&self, d_l: usize) -> Schedule {
+        let spec = ScheduleSpec {
+            d_l,
+            n_l: self.n_l,
+            n_mu: self.n_mu,
+            partition: self.partition,
+            data_parallel: self.n_b > 1,
+        };
+        match (self.policy, self.n_l) {
+            (Policy::Improved, 1) => layered_ga(&spec),
+            (Policy::Improved, _) => modular_pipeline(&spec),
+            (Policy::Baseline, _) => standard_ga(&spec),
+            (Policy::OneFOneB, _) => one_f_one_b(&spec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_schedule_mapping() {
+        let mut c = TrainerConfig::quick("tiny");
+        c.n_mu = 2;
+        assert_eq!(c.build_schedule(2).name, "layered-ga");
+        c.policy = Policy::Baseline;
+        assert_eq!(c.build_schedule(2).name, "standard-ga");
+        c.n_l = 2;
+        assert_eq!(c.build_schedule(2).name, "standard-pipeline");
+        c.policy = Policy::Improved;
+        assert_eq!(c.build_schedule(2).name, "modular-pipeline");
+        c.policy = Policy::OneFOneB;
+        assert_eq!(c.build_schedule(2).name, "1f1b");
+    }
+}

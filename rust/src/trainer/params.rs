@@ -1,0 +1,134 @@
+//! Host-side model parameters: flattened fp32 buffers per layer (fusing
+//! the 12 tensors into one contiguous allocation — the paper's §2.5
+//! pre-allocation/fusion recommendation, which also makes the ring
+//! collectives and Adam run over single slices).
+
+use crate::data::Rng;
+use crate::runtime::{HostTensor, Manifest};
+
+/// Byte/element layout of one layer's flattened parameter buffer.
+#[derive(Debug, Clone)]
+pub struct LayerLayout {
+    pub names: Vec<String>,
+    pub shapes: Vec<Vec<usize>>,
+    pub offsets: Vec<usize>,
+    pub total: usize,
+}
+
+impl LayerLayout {
+    pub fn from_manifest(m: &Manifest) -> Self {
+        let names = m.layer_param_names.clone();
+        let shapes = m.layer_param_shapes.clone();
+        let mut offsets = Vec::with_capacity(shapes.len());
+        let mut total = 0usize;
+        for s in &shapes {
+            offsets.push(total);
+            total += s.iter().product::<usize>();
+        }
+        LayerLayout { names, shapes, offsets, total }
+    }
+
+    /// Slice tensor `i` out of a flat buffer as a HostTensor (copy).
+    pub fn tensor(&self, flat: &[f32], i: usize) -> HostTensor {
+        let n: usize = self.shapes[i].iter().product();
+        let a = self.offsets[i];
+        HostTensor::f32(self.shapes[i].clone(), flat[a..a + n].to_vec())
+    }
+
+    /// All 12 tensors of a flat buffer, in artifact argument order.
+    pub fn tensors(&self, flat: &[f32]) -> Vec<HostTensor> {
+        (0..self.shapes.len()).map(|i| self.tensor(flat, i)).collect()
+    }
+
+    /// Scatter per-tensor gradients back into a flat accumulator.
+    pub fn accumulate(&self, acc: &mut [f32], grads: &[HostTensor]) {
+        assert_eq!(grads.len(), self.shapes.len());
+        for (i, g) in grads.iter().enumerate() {
+            let data = g.as_f32().expect("grad dtype");
+            let a = self.offsets[i];
+            for (dst, src) in acc[a..a + data.len()].iter_mut().zip(data) {
+                *dst += src;
+            }
+        }
+    }
+
+    /// Deterministic initialisation of one layer's flat buffer:
+    /// matrices ~ N(0, 0.02²), layernorm gains 1, biases 0 — matching
+    /// python `init_params` semantics (not bitwise: each side owns its
+    /// RNG; equivalence is established statistically and by loss curves).
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut flat = vec![0.0f32; self.total];
+        for (i, name) in self.names.iter().enumerate() {
+            let a = self.offsets[i];
+            let n: usize = self.shapes[i].iter().product();
+            if name.ends_with("_g") {
+                flat[a..a + n].fill(1.0);
+            } else if self.shapes[i].len() >= 2 {
+                for v in flat[a..a + n].iter_mut() {
+                    *v = 0.02 * rng.normal() as f32;
+                }
+            } // 1-d biases stay 0
+        }
+        flat
+    }
+}
+
+/// Initialise an embedding-like matrix.
+pub fn init_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f32> {
+    (0..rows * cols).map(|_| scale * rng.normal() as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(root, "tiny").ok()
+    }
+
+    #[test]
+    fn layout_offsets_are_contiguous() {
+        let Some(m) = manifest() else { return };
+        let l = LayerLayout::from_manifest(&m);
+        assert_eq!(l.names.len(), 12);
+        for i in 1..l.offsets.len() {
+            let prev: usize = l.shapes[i - 1].iter().product();
+            assert_eq!(l.offsets[i], l.offsets[i - 1] + prev);
+        }
+        assert_eq!(l.total, m.layer_param_elements());
+    }
+
+    #[test]
+    fn roundtrip_tensor_accumulate() {
+        let Some(m) = manifest() else { return };
+        let l = LayerLayout::from_manifest(&m);
+        let flat: Vec<f32> = (0..l.total).map(|i| i as f32).collect();
+        let tensors = l.tensors(&flat);
+        let mut acc = vec![0.0f32; l.total];
+        l.accumulate(&mut acc, &tensors);
+        assert_eq!(acc, flat);
+    }
+
+    #[test]
+    fn init_respects_param_roles() {
+        let Some(m) = manifest() else { return };
+        let l = LayerLayout::from_manifest(&m);
+        let mut rng = Rng::new(1);
+        let flat = l.init(&mut rng);
+        for (i, name) in l.names.iter().enumerate() {
+            let a = l.offsets[i];
+            let n: usize = l.shapes[i].iter().product();
+            let slice = &flat[a..a + n];
+            if name.ends_with("_g") {
+                assert!(slice.iter().all(|&v| v == 1.0), "{name}");
+            } else if l.shapes[i].len() == 1 {
+                assert!(slice.iter().all(|&v| v == 0.0), "{name}");
+            } else {
+                let std = (slice.iter().map(|v| v * v).sum::<f32>() / n as f32).sqrt();
+                assert!((std - 0.02).abs() < 0.01, "{name}: std {std}");
+            }
+        }
+    }
+}

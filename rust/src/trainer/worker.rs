@@ -1,0 +1,350 @@
+//! Stage worker: executes a schedule's op stream against the PJRT engine,
+//! the pipeline channels and the data-parallel collectives. One worker =
+//! one (dp_rank, stage) pair = one OS thread.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::Comm;
+use crate::data::Corpus;
+use crate::optim::{Adam, AdamConfig, LrSchedule};
+use crate::partition::ShardMap;
+use crate::runtime::{Engine, HostTensor};
+use crate::schedule::{Op, Schedule};
+
+use super::params::{init_matrix, LayerLayout};
+
+/// A pipeline message: (consumer layer, micro-batch, payload).
+pub type PipeMsg = (usize, usize, Vec<f32>);
+
+/// Everything a worker thread needs (all Send; the PJRT engine is
+/// created inside the thread).
+pub struct WorkerCtx {
+    pub dp_rank: usize,
+    pub stage: usize,
+    pub n_b: usize,
+    pub n_mu: usize,
+    pub seed: u64,
+    pub steps: usize,
+    pub lr: LrSchedule,
+    pub partition: bool,
+    pub schedule: Schedule,
+    pub artifacts_root: std::path::PathBuf,
+    pub preset: String,
+    /// Forward-activation ring channels.
+    pub act_tx: Sender<PipeMsg>,
+    pub act_rx: Receiver<PipeMsg>,
+    /// Backward-gradient ring channels.
+    pub grad_tx: Sender<PipeMsg>,
+    pub grad_rx: Receiver<PipeMsg>,
+    /// Data-parallel communicator for this stage group (None if n_b = 1).
+    pub comm: Option<Comm>,
+    /// Where the last stage of each dp rank reports (step, loss).
+    pub loss_tx: Sender<(usize, usize, f64)>,
+}
+
+/// Post-run statistics from one worker.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerStats {
+    pub execute_secs: f64,
+    pub execute_calls: u64,
+    pub collective_elems_sent: u64,
+    pub wall_secs: f64,
+}
+
+/// Run the worker to completion (all steps). Returns its stats.
+pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
+    let t0 = std::time::Instant::now();
+    let owns_first = ctx.schedule.stage_of(0) == ctx.stage;
+    let d_l = ctx.schedule.d_l;
+    let owns_last = ctx.schedule.stage_of(d_l - 1) == ctx.stage;
+
+    let mut names: Vec<&str> = vec!["layer_fwd", "layer_bwd"];
+    if owns_first {
+        names.extend(["embed_fwd", "embed_bwd"]);
+    }
+    if owns_last {
+        names.push("head_loss_grad");
+    }
+    let mut engine = Engine::new(&ctx.artifacts_root, &ctx.preset, &names)?;
+    let m = engine.manifest().model;
+    let batch = engine.manifest().batch;
+    let layout = LayerLayout::from_manifest(engine.manifest());
+    let corpus = Corpus::new(m.vocab);
+
+    // --- parameter state -------------------------------------------------
+    let my_layers: Vec<usize> =
+        (0..d_l).filter(|&l| ctx.schedule.stage_of(l) == ctx.stage).collect();
+    let mut params: HashMap<usize, Vec<f32>> = HashMap::new();
+    let mut grads: HashMap<usize, Vec<f32>> = HashMap::new();
+    let mut adam: HashMap<usize, Adam> = HashMap::new();
+    let shard = ShardMap::new(layout.total, ctx.n_b);
+    for &l in &my_layers {
+        // Same seed across dp ranks -> replicated initial params.
+        let mut rng = crate::data::Rng::new(ctx.seed ^ (0x517c_c1b7_2722_0a95 + l as u64));
+        params.insert(l, layout.init(&mut rng));
+        grads.insert(l, vec![0.0; layout.total]);
+        let n = if ctx.partition && ctx.n_b > 1 {
+            let (a, b) = shard.owned_range(ctx.dp_rank);
+            b - a
+        } else {
+            layout.total
+        };
+        adam.insert(l, Adam::new(n, AdamConfig::default()));
+    }
+
+    // Embedding / head state (first / last stage only; never partitioned
+    // — they are small and the paper's partition concerns the layers).
+    let mut rng_e = crate::data::Rng::new(ctx.seed ^ 0xabcd_ef01);
+    let (mut table, mut pos, mut d_table, mut d_pos, mut adam_table, mut adam_pos) =
+        if owns_first {
+            (
+                init_matrix(&mut rng_e, m.vocab, m.d_model, 0.02),
+                init_matrix(&mut rng_e, m.d_seq, m.d_model, 0.02),
+                vec![0.0f32; m.vocab * m.d_model],
+                vec![0.0f32; m.d_seq * m.d_model],
+                Some(Adam::new(m.vocab * m.d_model, AdamConfig::default())),
+                Some(Adam::new(m.d_seq * m.d_model, AdamConfig::default())),
+            )
+        } else {
+            (vec![], vec![], vec![], vec![], None, None)
+        };
+    let mut rng_h = crate::data::Rng::new(ctx.seed ^ 0x1234_5678);
+    let (mut head, mut d_head, mut adam_head) = if owns_last {
+        (
+            init_matrix(&mut rng_h, m.d_model, m.vocab, 0.02),
+            vec![0.0f32; m.d_model * m.vocab],
+            Some(Adam::new(m.d_model * m.vocab, AdamConfig::default())),
+        )
+    } else {
+        (vec![], vec![], None)
+    };
+
+    let act_shape = vec![batch, m.d_seq, m.d_model];
+    let act_elems: usize = act_shape.iter().product();
+
+    // --- step loop ---------------------------------------------------------
+    for step in 0..ctx.steps {
+        // Transient per-step state.
+        let mut inbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // input of (layer, mb)
+        let mut ckpt: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+        let mut outbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // output of (layer, mb)
+        let mut douts: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // dL/d out(layer, mb)
+        let mut goutbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // dL/d in(layer, mb)
+        let mut last_out: HashMap<usize, Vec<f32>> = HashMap::new();
+        let mut loss_sum = 0.0f64;
+        // Per-layer HostTensor views of the parameters, reused across
+        // micro-batches (§Perf L3: converting 12 tensors per PJRT call
+        // dominated tiny-model steps). Invalidated when the parameters
+        // change (OptimStep) or are re-gathered (RestoreParams).
+        let mut param_cache: HashMap<usize, Vec<HostTensor>> = HashMap::new();
+
+        let tokens_of = |mb: usize| {
+            corpus.batch(ctx.seed, step as u64, ctx.dp_rank as u64, mb as u64, batch, m.d_seq)
+        };
+
+        let ops: Vec<Op> = ctx.schedule.ops[ctx.stage].clone();
+        for op in ops {
+            match op {
+                Op::RestoreParams { layer } => {
+                    if ctx.partition {
+                        if let Some(c) = ctx.comm.as_mut() {
+                            c.all_gather_owned(params.get_mut(&layer).unwrap());
+                            param_cache.remove(&layer);
+                        }
+                    }
+                }
+                Op::Fwd { layer, mb } => {
+                    let x = if layer == 0 {
+                        let b = tokens_of(mb);
+                        let out = engine.execute(
+                            "embed_fwd",
+                            &[
+                                HostTensor::f32(vec![m.vocab, m.d_model], table.clone()),
+                                HostTensor::f32(vec![m.d_seq, m.d_model], pos.clone()),
+                                HostTensor::i32(vec![batch, m.d_seq], b.tokens),
+                            ],
+                        )?;
+                        out[0].as_f32()?.to_vec()
+                    } else {
+                        inbox
+                            .remove(&(layer, mb))
+                            .with_context(|| format!("missing input for F{layer}.{mb}"))?
+                    };
+                    let mut args = param_cache
+                        .entry(layer)
+                        .or_insert_with(|| layout.tensors(&params[&layer]))
+                        .clone();
+                    args.push(HostTensor::f32(act_shape.clone(), x.clone()));
+                    let y = engine.execute("layer_fwd", &args)?;
+                    let y = y[0].as_f32()?.to_vec();
+                    ckpt.insert((layer, mb), x);
+                    if layer + 1 == d_l {
+                        last_out.insert(mb, y);
+                    } else if ctx.schedule.stage_of(layer + 1) == ctx.stage {
+                        inbox.insert((layer + 1, mb), y);
+                    } else {
+                        outbox.insert((layer, mb), y);
+                    }
+                }
+                Op::SendAct { layer, mb } => {
+                    let y = outbox
+                        .remove(&(layer, mb))
+                        .with_context(|| format!("missing payload for sa{layer}.{mb}"))?;
+                    ctx.act_tx.send((layer + 1, mb, y)).ok().context("act ring closed")?;
+                }
+                Op::RecvAct { layer, mb } => {
+                    let (l, m_, y) = ctx.act_rx.recv().context("act ring closed")?;
+                    if l != layer || m_ != mb {
+                        bail!("act ring out of order: got ({l},{m_}), want ({layer},{mb})");
+                    }
+                    if y.len() != act_elems {
+                        bail!("bad act payload size");
+                    }
+                    inbox.insert((layer, mb), y);
+                }
+                Op::Bwd { layer, mb } => {
+                    let dy = if layer + 1 == d_l {
+                        let b = tokens_of(mb);
+                        let x_out = last_out
+                            .remove(&mb)
+                            .with_context(|| format!("missing head input for B{layer}.{mb}"))?;
+                        let outs = engine.execute(
+                            "head_loss_grad",
+                            &[
+                                HostTensor::f32(vec![m.d_model, m.vocab], head.clone()),
+                                HostTensor::f32(act_shape.clone(), x_out),
+                                HostTensor::i32(vec![batch, m.d_seq], b.targets),
+                            ],
+                        )?;
+                        loss_sum += outs[0].scalar_f32()? as f64;
+                        for (d, s) in d_head.iter_mut().zip(outs[2].as_f32()?) {
+                            *d += s;
+                        }
+                        outs[1].as_f32()?.to_vec()
+                    } else {
+                        douts
+                            .remove(&(layer, mb))
+                            .with_context(|| format!("missing dy for B{layer}.{mb}"))?
+                    };
+                    let x = ckpt
+                        .remove(&(layer, mb))
+                        .with_context(|| format!("missing checkpoint for B{layer}.{mb}"))?;
+                    let mut args = param_cache
+                        .entry(layer)
+                        .or_insert_with(|| layout.tensors(&params[&layer]))
+                        .clone();
+                    args.push(HostTensor::f32(act_shape.clone(), x));
+                    args.push(HostTensor::f32(act_shape.clone(), dy));
+                    let outs = engine.execute("layer_bwd", &args)?;
+                    layout.accumulate(grads.get_mut(&layer).unwrap(), &outs[..12]);
+                    let dx = outs[12].as_f32()?.to_vec();
+                    if layer == 0 {
+                        let b = tokens_of(mb);
+                        let outs = engine.execute(
+                            "embed_bwd",
+                            &[
+                                HostTensor::f32(act_shape.clone(), dx),
+                                HostTensor::i32(vec![batch, m.d_seq], b.tokens),
+                            ],
+                        )?;
+                        for (d, s) in d_table.iter_mut().zip(outs[0].as_f32()?) {
+                            *d += s;
+                        }
+                        for (d, s) in d_pos.iter_mut().zip(outs[1].as_f32()?) {
+                            *d += s;
+                        }
+                    } else if ctx.schedule.stage_of(layer - 1) == ctx.stage {
+                        douts.insert((layer - 1, mb), dx);
+                    } else {
+                        goutbox.insert((layer, mb), dx);
+                    }
+                }
+                Op::SendGrad { layer, mb } => {
+                    let g = goutbox
+                        .remove(&(layer, mb))
+                        .with_context(|| format!("missing payload for sg{layer}.{mb}"))?;
+                    ctx.grad_tx.send((layer - 1, mb, g)).ok().context("grad ring closed")?;
+                }
+                Op::RecvGrad { layer, mb } => {
+                    let (l, m_, g) = ctx.grad_rx.recv().context("grad ring closed")?;
+                    if l != layer || m_ != mb {
+                        bail!("grad ring out of order: got ({l},{m_}), want ({layer},{mb})");
+                    }
+                    douts.insert((layer, mb), g);
+                }
+                Op::ReduceGrad { layer } => {
+                    let g = grads.get_mut(&layer).unwrap();
+                    let scale = 1.0 / (ctx.n_b as f32 * ctx.n_mu as f32);
+                    for v in g.iter_mut() {
+                        *v *= scale;
+                    }
+                    if let Some(c) = ctx.comm.as_mut() {
+                        if ctx.partition {
+                            c.reduce_scatter(g);
+                        } else {
+                            c.all_reduce(g);
+                        }
+                    }
+                }
+                Op::OptimStep { layer } => {
+                    let lr = ctx.lr.lr(step as u64);
+                    let p = params.get_mut(&layer).unwrap();
+                    let g = grads.get_mut(&layer).unwrap();
+                    let a = adam.get_mut(&layer).unwrap();
+                    if ctx.partition && ctx.n_b > 1 {
+                        let (lo, hi) = shard.owned_range(ctx.dp_rank);
+                        a.step(&mut p[lo..hi], &g[lo..hi], lr);
+                    } else {
+                        a.step(p, g, lr);
+                    }
+                    g.fill(0.0);
+                    param_cache.remove(&layer);
+                }
+                Op::OffloadStore { .. } | Op::TensorAllReduce { .. } => {}
+            }
+        }
+
+        // Step epilogue: embedding / head parameters (reduced over DP).
+        let lr = ctx.lr.lr(step as u64);
+        let scale = 1.0 / (ctx.n_b as f32 * ctx.n_mu as f32);
+        if owns_first {
+            for g in [&mut d_table, &mut d_pos] {
+                for v in g.iter_mut() {
+                    *v *= scale;
+                }
+            }
+            if let Some(c) = ctx.comm.as_mut() {
+                c.all_reduce(&mut d_table);
+                c.all_reduce(&mut d_pos);
+            }
+            adam_table.as_mut().unwrap().step(&mut table, &d_table, lr);
+            adam_pos.as_mut().unwrap().step(&mut pos, &d_pos, lr);
+            d_table.fill(0.0);
+            d_pos.fill(0.0);
+        }
+        if owns_last {
+            for v in d_head.iter_mut() {
+                *v *= scale;
+            }
+            if let Some(c) = ctx.comm.as_mut() {
+                c.all_reduce(&mut d_head);
+            }
+            adam_head.as_mut().unwrap().step(&mut head, &d_head, lr);
+            d_head.fill(0.0);
+            let _ = ctx.loss_tx.send((step, ctx.dp_rank, loss_sum / ctx.n_mu as f64));
+        }
+        if let Some(c) = ctx.comm.as_mut() {
+            c.barrier();
+        }
+    }
+
+    Ok(WorkerStats {
+        execute_secs: engine.execute_secs,
+        execute_calls: engine.execute_calls,
+        collective_elems_sent: ctx.comm.as_ref().map(|c| c.sent_elems).unwrap_or(0),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}

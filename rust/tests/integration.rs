@@ -1,0 +1,235 @@
+//! Cross-module integration tests: planner ↔ simulator agreement, schedule
+//! → simulator → metrics pipelines, and end-to-end consistency checks that
+//! span more than one subsystem.
+
+use lga_mpp::costmodel::{
+    bubble_fraction, estimate, ParallelismMenu, Strategy, TrainConfig,
+};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::planner::{fastest_plan, search_fastest};
+use lga_mpp::schedule::{modular_pipeline, standard_ga, validate, ScheduleSpec};
+use lga_mpp::sim::{simulate, CostTable};
+
+/// The closed-form bubble (cost model) and the measured bubble (simulator)
+/// agree for both pipeline flavours across a grid of shapes.
+#[test]
+fn simulator_validates_costmodel_bubble() {
+    let shape = XModel::new(32).shape(); // d_l = 32
+    for (n_l, n_mu) in [(2usize, 4usize), (4, 8), (4, 16), (8, 8), (8, 32)] {
+        for improved in [false, true] {
+            let cfg = TrainConfig {
+                strategy: if improved { Strategy::Improved } else { Strategy::Baseline },
+                n_b: 1,
+                n_l,
+                n_a: 1,
+                n_mu,
+                b_mu: 1.0,
+                offload: false,
+                partition: false,
+            };
+            let spec = ScheduleSpec {
+                d_l: shape.d_l,
+                n_l,
+                n_mu,
+                partition: false,
+                data_parallel: false,
+            };
+            let sched = if improved { modular_pipeline(&spec) } else { standard_ga(&spec) };
+            validate(&sched).unwrap();
+            // Compute-only cost table isolates the bubble (the closed form
+            // ignores transfer and optimizer time).
+            let mut costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
+            costs.send_act = 0.0;
+            costs.send_grad = 0.0;
+            costs.reduce_grad = 0.0;
+            costs.restore_params = 0.0;
+            costs.optim_step = 0.0;
+            let measured = simulate(&sched, &costs).bubble_fraction();
+            let predicted = bubble_fraction(&shape, &cfg);
+            assert!(
+                (measured - predicted).abs() < 1e-9,
+                "n_l={n_l} n_mu={n_mu} improved={improved}: sim {measured:.6} vs model {predicted:.6}"
+            );
+        }
+    }
+}
+
+/// Planner output simulates at (or above) its predicted efficiency when
+/// run through the discrete-event engine with the same assumptions.
+#[test]
+fn planned_improved_config_simulates_efficiently() {
+    let model = XModel::new(64);
+    let cluster = ClusterSpec::reference();
+    let plan = fastest_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::DATA_PIPE)
+        .expect("plan");
+    let mut cfg = plan.cfg;
+    // The planner optimises over continuous structures; the executable
+    // schedule needs n_l | d_l. Snap to the nearest divisor.
+    let d_l = model.shape().d_l;
+    while d_l % cfg.n_l != 0 {
+        cfg.n_l -= 1;
+    }
+    cfg.n_mu = cfg.n_mu.max(cfg.n_l);
+    let spec = ScheduleSpec {
+        d_l,
+        n_l: cfg.n_l,
+        n_mu: cfg.n_mu,
+        partition: cfg.partition,
+        data_parallel: cfg.n_b > 1,
+    };
+    let sched = modular_pipeline(&spec);
+    let costs = CostTable::new(&model.shape(), &cfg, &cluster);
+    let r = simulate(&sched, &costs);
+    // The simulator adds costs the closed form ignores (optimizer step,
+    // exposed sends), so allow a modest gap.
+    assert!(
+        r.compute_efficiency() > plan.speed.efficiency * 0.8,
+        "sim eff {:.3} vs planned {:.3}",
+        r.compute_efficiency(),
+        plan.speed.efficiency
+    );
+}
+
+/// The improved strategy never loses to the baseline by more than noise at
+/// BERT scale and above, on every cluster variant — the paper's global
+/// claim assembled from planner + cost model.
+#[test]
+fn improved_dominates_across_clusters_and_scales() {
+    for (ci, cluster) in [
+        ClusterSpec::reference(),
+        ClusterSpec::ethernet(),
+        ClusterSpec::unlimited_node(),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for x in [32usize, 64, 108, 160] {
+            if ci == 1 && x < 64 {
+                // Ethernet at sub-GPT2 scale: both strategies sit at
+                // ~0.1 efficiency (fully comm-bound) and the winner is
+                // inside the cost model's noise — see EXPERIMENTS.md
+                // deviations.
+                continue;
+            }
+            let m = XModel::new(x);
+            let b = search_fastest(&m, &cluster, Strategy::Baseline, ParallelismMenu::THREE_D);
+            let i = search_fastest(&m, &cluster, Strategy::Improved, ParallelismMenu::THREE_D);
+            let (b, i) = (b.unwrap(), i.unwrap());
+            assert!(
+                i.speed.training_secs <= b.speed.training_secs * 1.02,
+                "x={x}: improved {:.1}d vs baseline {:.1}d",
+                i.speed.training_days(),
+                b.speed.training_days()
+            );
+        }
+    }
+}
+
+/// Memory accounting consistency: the simulator's peak checkpoint memory
+/// for a GPipe schedule matches the cost model's checkpoint formula.
+#[test]
+fn simulator_memory_matches_costmodel_checkpoints() {
+    let model = XModel::new(32);
+    let shape = model.shape();
+    let (n_l, n_mu, b_mu) = (4usize, 8usize, 2.0f64);
+    let cfg = TrainConfig {
+        strategy: Strategy::Baseline,
+        n_b: 1,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu,
+        offload: false,
+        partition: false,
+    };
+    let spec =
+        ScheduleSpec { d_l: shape.d_l, n_l, n_mu, partition: false, data_parallel: false };
+    let costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
+    let r = simulate(&standard_ga(&spec), &costs);
+    // GPipe: every stage holds all n_mu micro-batches' checkpoints for its
+    // d_l/n_l layers at the fwd/bwd boundary.
+    let expect = costs.checkpoint_bytes * (n_mu * shape.d_l / n_l) as f64;
+    let peak = r.peak_memory.iter().cloned().fold(0.0, f64::max) - costs.live_activation_bytes;
+    assert!(
+        (peak / expect - 1.0).abs() < 0.01,
+        "peak {peak:.3e} vs expected {expect:.3e}"
+    );
+}
+
+/// Cost-model estimate is monotone: adding tensor-parallel overhead can
+/// only reduce efficiency; more micro-batches can only shrink the bubble.
+#[test]
+fn estimate_monotonicity_properties() {
+    let model = XModel::x160();
+    let cluster = ClusterSpec::reference();
+    let base = TrainConfig {
+        strategy: Strategy::Improved,
+        n_b: 100,
+        n_l: 5,
+        n_a: 1,
+        n_mu: 5,
+        b_mu: 1.0,
+        offload: false,
+        partition: true,
+    };
+    let e1 = estimate(&model, &base, &cluster);
+    let mut tp = base;
+    tp.n_a = 16;
+    let e2 = estimate(&model, &tp, &cluster);
+    assert!(e2.efficiency < e1.efficiency);
+    let mut more_mu = base;
+    more_mu.n_mu = 20;
+    let e3 = estimate(&model, &more_mu, &cluster);
+    assert!(e3.overheads.bubble < e1.overheads.bubble);
+}
+
+/// Property sweep (hand-rolled, deterministic PRNG): every generated
+/// schedule across random shapes validates and simulates without
+/// deadlock, and modular never has a larger bubble than contiguous.
+#[test]
+fn property_random_schedules_validate_and_simulate() {
+    use lga_mpp::data::Rng;
+    let mut rng = Rng::new(0xfeed);
+    let shape = XModel::new(16).shape(); // d_l = 16
+    for _ in 0..25 {
+        let n_l = [1usize, 2, 4, 8, 16][rng.below(5)];
+        let n_mu = n_l + rng.below(12);
+        let partition = rng.below(2) == 1;
+        let spec = ScheduleSpec { d_l: 16, n_l, n_mu, partition, data_parallel: true };
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 4,
+            n_l,
+            n_a: 1,
+            n_mu,
+            b_mu: 1.0,
+            offload: false,
+            partition,
+        };
+        let costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
+        let schedules = if n_l == 1 {
+            vec![standard_ga(&spec), lga_mpp::schedule::layered_ga(&spec)]
+        } else {
+            vec![
+                standard_ga(&spec),
+                modular_pipeline(&spec),
+                lga_mpp::schedule::one_f_one_b(&spec),
+            ]
+        };
+        let mut bubbles = Vec::new();
+        for s in schedules {
+            validate(&s).unwrap_or_else(|e| panic!("{} {spec:?}: {e:?}", s.name));
+            let r = simulate(&s, &costs);
+            assert!(r.makespan.is_finite() && r.makespan > 0.0);
+            bubbles.push((s.name.clone(), r.bubble_fraction()));
+        }
+        if n_l > 1 {
+            let get = |n: &str| bubbles.iter().find(|(b, _)| b.contains(n)).unwrap().1;
+            assert!(
+                get("modular") <= get("standard") + 1e-9,
+                "{spec:?}: {bubbles:?}"
+            );
+        }
+    }
+}
