@@ -1,0 +1,101 @@
+//! Perf bench: `Schedule` → `ScheduleProgram` lowering throughput, and
+//! the cost of re-simulating an already-lowered program (the planner's
+//! simulate-in-the-loop pattern — lower once, price many cost tables).
+//!
+//! The acceptance config for the dependency-graph refactor is
+//! d_l=128, n_l=32, n_mu=128: the simulator must be no slower than the
+//! token-matching engine it replaced (seed target: ≥ 1 M ops/s; the
+//! pre-refactor engine rescanned dependencies per event, the rewritten
+//! one walks precomputed edges).
+//!
+//! Run via `cargo bench --bench schedule_program`.
+
+use std::time::Instant;
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::schedule::{
+    interleaved_1f1b, interleaved_applicable, lower, modular_pipeline, one_f_one_b, standard_ga,
+    Schedule, ScheduleSpec,
+};
+use lga_mpp::sim::{simulate_program, CostTable};
+
+fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn bench_one(name: &str, sched: &Schedule, costs: &CostTable) -> f64 {
+    let n_ops = sched.len();
+    let lower_t = best_of(7, || lower(sched).unwrap().n_edges() as f64);
+    let program = lower(sched).unwrap();
+    let exec_t = best_of(7, || simulate_program(&program, costs).makespan);
+    let lower_mops = n_ops as f64 / lower_t / 1e6;
+    let exec_mops = n_ops as f64 / exec_t / 1e6;
+    println!(
+        "{:<34} {:>8} ops {:>9} edges | lower {:>8.3} ms ({:>7.2} Mops/s) | sim {:>8.3} ms ({:>7.2} Mops/s)",
+        name,
+        n_ops,
+        program.n_edges(),
+        lower_t * 1e3,
+        lower_mops,
+        exec_t * 1e3,
+        exec_mops
+    );
+    exec_mops
+}
+
+fn main() {
+    let cluster = ClusterSpec::reference();
+    let mk_costs = |n_l: usize, n_mu: usize, part: bool| {
+        let cfg = TrainConfig {
+            strategy: if part { Strategy::Improved } else { Strategy::Baseline },
+            n_b: 8,
+            n_l,
+            n_a: 1,
+            n_mu,
+            b_mu: 1.0,
+            offload: false,
+            partition: part,
+        };
+        CostTable::new(&XModel::new(32).shape(), &cfg, &cluster)
+    };
+
+    println!("== lowering + precompiled-simulation throughput ==\n");
+    for (d_l, n_l, n_mu, part) in
+        [(16usize, 4usize, 8usize, false), (64, 8, 16, true), (160, 5, 32, true)]
+    {
+        let spec = ScheduleSpec { d_l, n_l, n_mu, partition: part, data_parallel: true };
+        let costs = mk_costs(n_l, n_mu, part);
+        bench_one(&format!("modular {d_l}L/{n_l}S/{n_mu}mb"), &modular_pipeline(&spec), &costs);
+        bench_one(&format!("gpipe   {d_l}L/{n_l}S/{n_mu}mb"), &standard_ga(&spec), &costs);
+        bench_one(&format!("1f1b    {d_l}L/{n_l}S/{n_mu}mb"), &one_f_one_b(&spec), &costs);
+        if interleaved_applicable(&spec, 2) {
+            bench_one(
+                &format!("inter2  {d_l}L/{n_l}S/{n_mu}mb"),
+                &interleaved_1f1b(&spec, 2),
+                &costs,
+            );
+        }
+    }
+
+    // Acceptance config: the planner's simulate-in-the-loop scale.
+    println!("\n== acceptance: d_l=128, n_l=32, n_mu=128 ==\n");
+    let spec =
+        ScheduleSpec { d_l: 128, n_l: 32, n_mu: 128, partition: false, data_parallel: true };
+    let costs = mk_costs(32, 128, false);
+    let mut worst = f64::MAX;
+    worst = worst.min(bench_one("modular 128L/32S/128mb", &modular_pipeline(&spec), &costs));
+    worst = worst.min(bench_one("gpipe   128L/32S/128mb", &standard_ga(&spec), &costs));
+    worst = worst.min(bench_one("1f1b    128L/32S/128mb", &one_f_one_b(&spec), &costs));
+    worst = worst.min(bench_one("inter2  128L/32S/128mb", &interleaved_1f1b(&spec, 2), &costs));
+    println!(
+        "\nworst-case precompiled simulator throughput: {worst:.2} M ops/s (seed engine target: 1.0)"
+    );
+}

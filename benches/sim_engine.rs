@@ -1,5 +1,13 @@
 //! Perf bench: discrete-event simulator throughput (ops scheduled per
 //! second) across schedule shapes — the §Perf L3 target is ≥ 1 M ops/s.
+//!
+//! Since the dependency-graph refactor, `simulate()` = `lower()` (build
+//! the `ScheduleProgram`) + `simulate_program()` (the O(V+E) event
+//! loop). The headline column times the fused path for comparability
+//! with the pre-refactor engine; the lower/exec columns show the split,
+//! and the planner-scale row (d_l=128, n_l=32, n_mu=128) is the
+//! acceptance config for simulate-in-the-loop planning.
+//!
 //! Run via `cargo bench --bench sim_engine`.
 
 use std::time::Instant;
@@ -7,8 +15,18 @@ use std::time::Instant;
 use lga_mpp::costmodel::{Strategy, TrainConfig};
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
-use lga_mpp::schedule::{modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
-use lga_mpp::sim::{simulate, CostTable};
+use lga_mpp::schedule::{lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{simulate, simulate_program, CostTable};
+
+fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
 
 fn main() {
     let cluster = ClusterSpec::reference();
@@ -18,8 +36,12 @@ fn main() {
         ("x160   (160L/5S/32mb, part)", 160, 5, 32, true),
         ("deep   (256L/16S/64mb)", 256, 16, 64, false),
         ("wide-mb(64L/8S/256mb)", 64, 8, 256, false),
+        ("planner(128L/32S/128mb)", 128, 32, 128, false),
     ];
-    println!("{:<30} {:>8} {:>10} {:>12}", "case", "ops", "ms", "Mops/s");
+    println!(
+        "{:<30} {:>8} {:>9} {:>9} {:>9} {:>10}",
+        "case", "ops", "lower ms", "exec ms", "full ms", "Mops/s"
+    );
     let mut worst = f64::MAX;
     for (name, d_l, n_l, n_mu, part) in cases {
         let spec = ScheduleSpec { d_l, n_l, n_mu, partition: part, data_parallel: true };
@@ -40,15 +62,21 @@ fn main() {
             ("1f1b", one_f_one_b(&spec)),
         ] {
             let n_ops = sched.len();
-            let mut best = f64::MAX;
-            for _ in 0..5 {
-                let t0 = Instant::now();
-                std::hint::black_box(simulate(&sched, &costs).makespan);
-                best = best.min(t0.elapsed().as_secs_f64());
-            }
-            let mops = n_ops as f64 / best / 1e6;
+            let lower_t = best_of(5, || lower(&sched).unwrap().len() as f64);
+            let program = lower(&sched).unwrap();
+            let exec_t = best_of(5, || simulate_program(&program, &costs).makespan);
+            let full_t = best_of(5, || simulate(&sched, &costs).makespan);
+            let mops = n_ops as f64 / full_t / 1e6;
             worst = worst.min(mops);
-            println!("{:<30} {:>8} {:>10.3} {:>12.2}  [{policy}]", name, n_ops, best * 1e3, mops);
+            println!(
+                "{:<30} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>10.2}  [{policy}]",
+                name,
+                n_ops,
+                lower_t * 1e3,
+                exec_t * 1e3,
+                full_t * 1e3,
+                mops
+            );
         }
     }
     println!("\nworst-case throughput: {worst:.2} M ops/s (target >= 1.0)");

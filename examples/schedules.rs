@@ -7,7 +7,10 @@
 use lga_mpp::costmodel::{Strategy, TrainConfig};
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
-use lga_mpp::schedule::{layered_ga, modular_pipeline, standard_ga, Schedule, ScheduleSpec};
+use lga_mpp::schedule::{
+    interleaved_1f1b, layered_ga, modular_pipeline, one_f_one_b, standard_ga, Schedule,
+    ScheduleSpec,
+};
 use lga_mpp::sim::{render, simulate, CostTable, SimResult};
 
 fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
@@ -87,5 +90,26 @@ fn main() {
         rn.bubble_fraction(),
         rm.bubble_fraction(),
         16 / 4
+    );
+
+    // §4 baseline: Megatron-LM's interleaved 1F1B shrinks the 1F1B bubble
+    // by the chunk count v; the modular pipeline is the v = d_l/n_l limit
+    // of the same idea, combined with layered accumulation.
+    println!("\n== §4 baseline: interleaved 1F1B (Megatron-LM) ==\n");
+    let spec = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let c = costs(1, 4, 8, false);
+    let fb = one_f_one_b(&spec);
+    let rf = simulate(&fb, &c);
+    show("1F1B (PipeDream-flush)", &fb, &rf);
+    let il = interleaved_1f1b(&spec, 2);
+    let ri = simulate(&il, &c);
+    show("interleaved 1F1B (v = 2)", &il, &ri);
+    let md = modular_pipeline(&spec);
+    let rmod = simulate(&md, &c);
+    println!(
+        "bubble: 1f1b {:.3} -> interleaved {:.3} (÷v) -> modular {:.3}",
+        rf.bubble_fraction(),
+        ri.bubble_fraction(),
+        rmod.bubble_fraction()
     );
 }

@@ -4,19 +4,43 @@
 //! pipeline parallelism: fast and efficient training of large language
 //! models"* (Lamy-Poirier, 2021).
 //!
-//! The crate has two halves:
+//! The crate has two halves joined by one scheduling compiler:
 //!
 //! * an **analytical half** ([`model`], [`costmodel`], [`planner`],
 //!   [`offload`], [`elastic`], [`report`]) that reimplements the paper's
-//!   cost model and regenerates every table and figure, plus a
-//!   **discrete-event simulator** ([`schedule`], [`sim`]) that validates
-//!   the closed forms by executing the actual schedules against the
-//!   Appendix A hardware model;
+//!   cost model and regenerates every table and figure;
 //! * an **executable half** ([`runtime`], [`collective`], [`partition`],
 //!   [`optim`], [`data`], [`trainer`]) — a real multi-worker training
 //!   runtime where the schedules drive numeric training of a transformer
 //!   whose per-layer compute is AOT-compiled from JAX (+ Pallas kernels)
 //!   to HLO and executed via PJRT, with Python never on the hot path.
+//!
+//! ## The scheduling pipeline: generate → lower → (validate | simulate | execute)
+//!
+//! Scheduling policy lives in [`schedule`]: generators emit each policy
+//! (standard/layered gradient accumulation × contiguous/modular pipeline,
+//! plus the 1F1B and Megatron-LM interleaved-1F1B baselines) as per-stage
+//! ordered op lists — pure policy, no timing. The lowering pass
+//! ([`schedule::lower`]) compiles a schedule once into a
+//! [`schedule::ScheduleProgram`]: a flat op arena with every data
+//! dependency (activation/gradient chains, send/recv pairing,
+//! restore-before-use, reduce-after-last-bwd, optim-after-reduce) as an
+//! explicit edge, per-stage/per-stream run queues, and a cycle check that
+//! is exactly the deadlock condition of an in-order executor.
+//!
+//! Three consumers share that one graph, so they cannot disagree about
+//! legality:
+//!
+//! * the **validator** ([`schedule::validate`]) reports lowering errors;
+//! * the **discrete-event simulator** ([`sim`]) walks the edges in
+//!   O(V+E), which is what lets the planner simulate candidate
+//!   configurations in the loop ([`planner::simloop`]) at
+//!   trillion-parameter layer counts;
+//! * the **real trainer** ([`trainer`]) dispatches each stage's run
+//!   queue over PJRT, checking the same edges before every op.
+//!
+//! New policies (e.g. interleaved 1F1B) are generator-only changes — the
+//! graph semantics downstream are untouched.
 
 pub mod collective;
 pub mod costmodel;

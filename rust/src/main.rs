@@ -17,8 +17,10 @@ use lga_mpp::model::XModel;
 use lga_mpp::optim::LrSchedule;
 use lga_mpp::planner::search_fastest;
 use lga_mpp::report;
-use lga_mpp::schedule::{modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
-use lga_mpp::sim::{render, simulate, CostTable};
+use lga_mpp::schedule::{
+    interleaved_1f1b, lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec,
+};
+use lga_mpp::sim::{render, simulate_program, CostTable};
 use lga_mpp::trainer::{train, Policy, TrainerConfig};
 
 /// Tiny flag parser: positionals + `--key value` / `--flag`.
@@ -98,9 +100,11 @@ const HELP: &str = "\
 repro — 'Layered gradient accumulation and modular pipeline parallelism'
 usage:
   repro table <6.1|6.2|6.3|a.1|b.1>   [--x N] [--ethernet|--unlimited-node]
+  repro table sched                   [--x N] [--layers N] [--stages N] [--mb N]
   repro figure <4|5|6|7|8>            [--max-x N]
-  repro schedule [--policy baseline|improved|1f1b] [--layers N] [--stages N]
-                 [--mb N] [--partition] [--x N] [--width N]
+  repro schedule [--policy baseline|improved|1f1b|interleaved] [--layers N]
+                 [--stages N] [--mb N] [--chunks V] [--partition] [--x N]
+                 [--width N]
   repro train [--preset tiny|e2e] [--dp N] [--pp N] [--mb N] [--steps N]
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
               [--artifacts DIR]
@@ -119,6 +123,17 @@ fn cmd_table(args: &Args) -> Result<()> {
         "6.3" => report::table63(&model, &cluster),
         "a.1" | "A.1" => report::table_a1(&cluster.gpu),
         "b.1" | "B.1" => report::table_b1(),
+        // Measured (simulated) schedule-policy comparison, incl. the
+        // Megatron-LM interleaved baseline. Uses --x for the layer
+        // costs like the other tables (default X_32: the comparison
+        // shapes are pipeline-sized, not the full X_160).
+        "sched" => report::schedule_comparison(
+            args.get_usize("x", 32)?,
+            args.get_usize("layers", 16)?,
+            args.get_usize("stages", 4)?,
+            args.get_usize("mb", 8)?,
+            &cluster,
+        ),
         other => bail!("unknown table {other}"),
     };
     println!("{out}");
@@ -193,6 +208,17 @@ fn cmd_schedule(args: &Args) -> Result<()> {
             }
         }
         "1f1b" => one_f_one_b(&spec),
+        "interleaved" => {
+            let chunks = args.get_usize("chunks", 2)?;
+            if !lga_mpp::schedule::interleaved_applicable(&spec, chunks) {
+                bail!(
+                    "interleaved needs --layers divisible by --stages * --chunks \
+                     ({d_l} vs {}) and --mb divisible by --stages ({n_mu} vs {n_l})",
+                    n_l * chunks
+                );
+            }
+            interleaved_1f1b(&spec, chunks)
+        }
         other => bail!("unknown policy {other}"),
     };
     let cfg = TrainConfig {
@@ -206,8 +232,14 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         partition: args.has("partition"),
     };
     let costs = CostTable::new(&XModel::new(x).shape(), &cfg, &ClusterSpec::reference());
-    let r = simulate(&s, &costs);
-    println!("schedule: {} (d_l={d_l}, n_l={n_l}, n_mu={n_mu})", s.name);
+    let program = lower(&s).map_err(|e| anyhow::anyhow!("invalid schedule: {e:?}"))?;
+    let r = simulate_program(&program, &costs);
+    println!(
+        "schedule: {} (d_l={d_l}, n_l={n_l}, n_mu={n_mu}) — program: {} ops, {} edges",
+        program.name,
+        program.len(),
+        program.n_edges()
+    );
     println!(
         "makespan {:.3} ms | compute efficiency {:.3} | measured bubble {:.3}",
         r.makespan * 1e3,

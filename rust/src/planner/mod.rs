@@ -8,7 +8,9 @@
 pub mod constrained;
 pub mod rules;
 pub mod search;
+pub mod simloop;
 
 pub use constrained::{min_gpu_plan, ConstrainedPlan};
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
 pub use search::search_fastest;
+pub use simloop::{lower_plan, rank_by_simulation, simulate_plan, SimulatedPlan};

@@ -5,4 +5,7 @@ pub mod figures;
 pub mod tables;
 
 pub use figures::{ascii_plot, figure6, figure7, scaling_figure, ScalingFigure, Series};
-pub use tables::{explain, sweep, table61, table61_rows, table62, table63, table_a1, table_b1};
+pub use tables::{
+    explain, schedule_comparison, sweep, table61, table61_rows, table62, table63, table_a1,
+    table_b1,
+};

@@ -1,9 +1,15 @@
-//! Render the paper's tables from the cost model / planner, row-for-row.
+//! Render the paper's tables from the cost model / planner, row-for-row,
+//! plus a measured schedule-policy comparison driven by the simulator.
 
 use crate::costmodel::{estimate, MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
 use crate::hardware::{ClusterSpec, GpuSpec, LinkKind, GIB, SECS_PER_DAY};
 use crate::model::XModel;
 use crate::planner::{fastest_plan, min_gpu_plan, Plan};
+use crate::schedule::{
+    interleaved_1f1b, interleaved_applicable, lower, modular_pipeline, one_f_one_b, standard_ga,
+    Schedule, ScheduleSpec,
+};
+use crate::sim::{simulate_program, CostTable};
 
 /// The nine (strategy, menu) rows of Tables 6.1/6.2, in paper order.
 pub fn table61_rows() -> Vec<(Strategy, ParallelismMenu)> {
@@ -186,6 +192,57 @@ pub fn table_b1() -> String {
     out
 }
 
+/// Measured comparison of every pipeline scheduling policy at one shape:
+/// each schedule is lowered to its dependency graph once and executed by
+/// the discrete-event simulator. Covers the paper's modular pipeline,
+/// the GPipe-style contiguous baseline, 1F1B and Megatron-LM's
+/// interleaved 1F1B (the §4 comparison).
+pub fn schedule_comparison(
+    x: usize,
+    d_l: usize,
+    n_l: usize,
+    n_mu: usize,
+    cluster: &ClusterSpec,
+) -> String {
+    let spec = ScheduleSpec { d_l, n_l, n_mu, partition: false, data_parallel: true };
+    let cfg = TrainConfig {
+        strategy: Strategy::Baseline,
+        n_b: 8,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu: 1.0,
+        offload: false,
+        partition: false,
+    };
+    let costs = CostTable::new(&XModel::new(x).shape(), &cfg, cluster);
+    let mut schedules: Vec<Schedule> =
+        vec![standard_ga(&spec), one_f_one_b(&spec), modular_pipeline(&spec)];
+    // Interleaved needs divisible shapes; include it whenever they fit.
+    if interleaved_applicable(&spec, 2) {
+        schedules.insert(2, interleaved_1f1b(&spec, 2));
+    }
+    let mut out = format!(
+        "Schedule comparison (d_l={d_l}, n_l={n_l}, n_mu={n_mu}, X_{x} layers)\n\
+         {:<20} {:>7} {:>8} {:>10} {:>8} {:>10}\n",
+        "policy", "ops", "edges", "makespan", "bubble", "net tail"
+    );
+    for s in &schedules {
+        let p = lower(s).expect("generated schedules lower");
+        let r = simulate_program(&p, &costs);
+        out.push_str(&format!(
+            "{:<20} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms\n",
+            p.name,
+            p.len(),
+            p.n_edges(),
+            r.makespan * 1e3,
+            r.bubble_fraction(),
+            r.exposed_network_tail() * 1e3,
+        ));
+    }
+    out
+}
+
 /// One fully-described row (used by `repro explain` and the benches).
 pub fn explain(model: &XModel, cluster: &ClusterSpec, cfg: &TrainConfig) -> String {
     let shape = model.shape();
@@ -237,6 +294,19 @@ mod tests {
         let c = ClusterSpec::reference();
         for t in [table61(&m, &c), table62(&m, &c), table_a1(&c.gpu), table_b1()] {
             assert!(t.lines().count() >= 5, "{t}");
+        }
+    }
+
+    #[test]
+    fn schedule_comparison_covers_all_policies() {
+        let t = schedule_comparison(32, 16, 4, 8, &ClusterSpec::reference());
+        // Match row starts, not substrings — "1f1b" must be its own row,
+        // not a hit inside "interleaved-1f1b".
+        for name in ["standard-pipeline", "1f1b", "interleaved-1f1b", "modular-pipeline"] {
+            assert!(
+                t.lines().any(|l| l.starts_with(name)),
+                "missing row {name} in:\n{t}"
+            );
         }
     }
 

@@ -1,5 +1,6 @@
 //! Schedule generators: the four policies compared in Figures 1–3, plus
-//! 1F1B as an ablation baseline.
+//! 1F1B and interleaved 1F1B (the Megatron-LM baseline of §4) as
+//! ablation comparators.
 //!
 //! All generators emit one batch worth of ops. Conventions:
 //! * `RecvAct`/`SendAct` appear only at stage boundaries (the producing
@@ -286,6 +287,146 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
     }
 }
 
+/// The interleaved-1F1B preconditions, with a message per failure: d_l
+/// must divide into n_l·chunks blocks and n_mu must be divisible by n_l
+/// (the Megatron-LM constraint on interleaved scheduling). The one
+/// source of truth — [`interleaved_applicable`] and the generator's
+/// panic path both delegate here.
+fn interleaved_check(spec: &ScheduleSpec, chunks: usize) -> Result<(), String> {
+    if chunks < 1 {
+        return Err("chunks (v) must be at least 1".into());
+    }
+    spec.validate()?;
+    if spec.d_l % (spec.n_l * chunks) != 0 {
+        return Err(format!(
+            "d_l = {} must divide into n_l * chunks = {} blocks",
+            spec.d_l,
+            spec.n_l * chunks
+        ));
+    }
+    if spec.n_mu % spec.n_l != 0 {
+        return Err(format!(
+            "interleaved 1F1B needs n_mu = {} divisible by n_l = {}",
+            spec.n_mu, spec.n_l
+        ));
+    }
+    Ok(())
+}
+
+/// Whether [`interleaved_1f1b`] accepts a spec with this chunk count —
+/// for call sites that conditionally include the interleaved policy.
+pub fn interleaved_applicable(spec: &ScheduleSpec, chunks: usize) -> bool {
+    interleaved_check(spec, chunks).is_ok()
+}
+
+/// Interleaved 1F1B (Megatron-LM's virtual-stage schedule, Narayanan et
+/// al. 2021) — the strongest published baseline the paper compares
+/// against in §4. Each stage owns `chunks` (v) non-contiguous blocks of
+/// d_l/(n_l·v) layers; micro-batches advance through the blocks in
+/// groups of n_l, shrinking the bubble by the factor v at the price of
+/// v× more pipeline traffic. Modular pipelining is the v = d_l/n_l
+/// limit of this family combined with layered accumulation.
+///
+/// Requires [`interleaved_applicable`] — panics otherwise.
+pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
+    interleaved_check(spec, chunks).unwrap_or_else(|e| panic!("{e}"));
+    let assignment = LayerAssignment::Interleaved { chunks };
+    let n_l = spec.n_l;
+    let v = chunks;
+    let block = spec.d_l / (n_l * v);
+    // Virtual iterations per stage: every micro-batch visits every chunk.
+    let total = spec.n_mu * v;
+
+    // Iteration -> (chunk, micro-batch): micro-batches advance in groups
+    // of n_l; within a group the stage sweeps chunk 0..v forward (and
+    // v-1..0 backward).
+    let fwd_of = |k: usize| -> (usize, usize) {
+        let group = k / (n_l * v);
+        let within = k % (n_l * v);
+        (within / n_l, group * n_l + within % n_l)
+    };
+    let bwd_of = |k: usize| -> (usize, usize) {
+        let group = k / (n_l * v);
+        let within = k % (n_l * v);
+        (v - 1 - within / n_l, group * n_l + within % n_l)
+    };
+
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let chunk_base = |c: usize| (c * n_l + stage) * block;
+        let emit_fwd = |stage_ops: &mut Vec<Op>, c: usize, mb: usize| {
+            for l in chunk_base(c)..chunk_base(c) + block {
+                if spec.partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::RecvAct { layer: l, mb });
+                }
+                stage_ops.push(Op::Fwd { layer: l, mb });
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::SendAct { layer: l, mb });
+                }
+            }
+        };
+        let mut bwd_done = vec![0usize; spec.d_l];
+        let mut emit_bwd = |stage_ops: &mut Vec<Op>, c: usize, mb: usize| {
+            for l in (chunk_base(c)..chunk_base(c) + block).rev() {
+                if spec.partition {
+                    stage_ops.push(Op::RestoreParams { layer: l });
+                }
+                if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::RecvGrad { layer: l, mb });
+                }
+                stage_ops.push(Op::Bwd { layer: l, mb });
+                if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
+                    stage_ops.push(Op::SendGrad { layer: l, mb });
+                }
+                bwd_done[l] += 1;
+                // Gradient complete after the layer's last micro-batch.
+                if bwd_done[l] == spec.n_mu && (spec.data_parallel || spec.partition) {
+                    stage_ops.push(Op::ReduceGrad { layer: l });
+                }
+            }
+        };
+
+        // Megatron-LM warmup depth: enough in-flight micro-batches to keep
+        // every virtual stage fed.
+        let warmup = ((n_l - 1 - stage) * 2 + (v - 1) * n_l).min(total);
+        let mut ef = 0usize;
+        let mut eb = 0usize;
+        for _ in 0..warmup {
+            let (c, mb) = fwd_of(ef);
+            emit_fwd(stage_ops, c, mb);
+            ef += 1;
+        }
+        // Steady 1F1B over virtual iterations, then cooldown backwards.
+        while eb < total {
+            if ef < total {
+                let (c, mb) = fwd_of(ef);
+                emit_fwd(stage_ops, c, mb);
+                ef += 1;
+            }
+            let (c, mb) = bwd_of(eb);
+            emit_bwd(stage_ops, c, mb);
+            eb += 1;
+        }
+        for c in 0..v {
+            for l in chunk_base(c)..chunk_base(c) + block {
+                stage_ops.push(Op::OptimStep { layer: l });
+            }
+        }
+    }
+    Schedule {
+        name: "interleaved-1f1b".into(),
+        n_stages: n_l,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment,
+        ops,
+        partitioned: spec.partition,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,5 +540,43 @@ mod tests {
     fn starved_pipeline_rejected() {
         let sp = spec(8, 4, 2, false);
         modular_pipeline(&sp);
+    }
+
+    #[test]
+    fn interleaved_emits_every_compute_op_exactly_once() {
+        let sp = spec(16, 4, 8, false);
+        let s = interleaved_1f1b(&sp, 2);
+        assert_eq!(count_fwd(&s), 16 * 8);
+        assert_eq!(s.count(|o| matches!(o, Op::Bwd { .. })), 16 * 8);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 16);
+        assert_eq!(s.count(|o| matches!(o, Op::OptimStep { .. })), 16);
+        // Every boundary crossing sends: with blocks of 2 layers, every
+        // second layer boundary is a stage boundary... here ALL chunk
+        // boundaries cross stages (round-robin blocks), so sends =
+        // (d_l/block - 1) boundaries x block-edge = 7 x 8 micro-batches.
+        assert_eq!(s.count(|o| matches!(o, Op::SendAct { .. })), 7 * 8);
+    }
+
+    #[test]
+    fn interleaved_bwd_follows_fwd_within_each_stage() {
+        let sp = spec(8, 4, 8, false);
+        let s = interleaved_1f1b(&sp, 2);
+        for (stage, ops) in s.ops.iter().enumerate() {
+            for mb in 0..8 {
+                for &l in &s.assignment.layers_of(stage, 8, 4) {
+                    let f = ops.iter().position(|o| *o == Op::Fwd { layer: l, mb }).unwrap();
+                    let b = ops.iter().position(|o| *o == Op::Bwd { layer: l, mb }).unwrap();
+                    assert!(f < b, "stage {stage} layer {l} mb {mb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn interleaved_rejects_indivisible_microbatches() {
+        // n_mu = 6 not divisible by n_l = 4.
+        let sp = spec(16, 4, 6, false);
+        interleaved_1f1b(&sp, 2);
     }
 }

@@ -108,14 +108,28 @@ pub enum LayerAssignment {
     /// Modular (round-robin): stage s owns layers {l : l ≡ s (mod n_l)}
     /// (§4).
     Modular,
+    /// Interleaved (Megatron-LM virtual stages): the model splits into
+    /// n_l·chunks contiguous blocks assigned round-robin, so stage s owns
+    /// blocks {s, s + n_l, ...}. `chunks` is the number of blocks per
+    /// stage (v); requires d_l divisible by n_l·chunks. Modular is the
+    /// chunks = d_l/n_l extreme of this family.
+    Interleaved { chunks: usize },
 }
 
 impl LayerAssignment {
     /// The stage owning a given layer.
     pub fn stage_of(&self, layer: usize, d_l: usize, n_l: usize) -> usize {
-        match self {
+        match *self {
             LayerAssignment::Contiguous => layer * n_l / d_l,
             LayerAssignment::Modular => layer % n_l,
+            LayerAssignment::Interleaved { chunks } => {
+                // Generators assert n_l·chunks | d_l; clamp the block so a
+                // hand-built schedule with a malformed assignment yields
+                // validation errors (wrong-stage ops) instead of a
+                // divide-by-zero panic inside the validator.
+                let block = (d_l / (n_l * chunks)).max(1);
+                (layer / block) % n_l
+            }
         }
     }
 
@@ -189,8 +203,22 @@ mod tests {
     }
 
     #[test]
+    fn interleaved_assignment_round_robins_blocks() {
+        let a = LayerAssignment::Interleaved { chunks: 2 };
+        // 16 layers, 4 stages, 2 chunks: blocks of 2 layers, stage 0 owns
+        // blocks 0 and 4 = layers {0,1,8,9}.
+        assert_eq!(a.layers_of(0, 16, 4), vec![0, 1, 8, 9]);
+        assert_eq!(a.layers_of(3, 16, 4), vec![6, 7, 14, 15]);
+        assert_eq!(a.stage_of(10, 16, 4), 1);
+    }
+
+    #[test]
     fn every_layer_owned_exactly_once() {
-        for a in [LayerAssignment::Contiguous, LayerAssignment::Modular] {
+        for a in [
+            LayerAssignment::Contiguous,
+            LayerAssignment::Modular,
+            LayerAssignment::Interleaved { chunks: 2 },
+        ] {
             for (d_l, n_l) in [(8, 4), (16, 4), (160, 5), (12, 3)] {
                 let mut owned = vec![0usize; d_l];
                 for s in 0..n_l {

@@ -1,14 +1,32 @@
-//! Schedule IR, generators and validation.
+//! Schedule IR, generators, lowering and validation.
 //!
-//! The four scheduling policies of Figures 1–3 (standard/layered gradient
-//! accumulation × contiguous/modular pipeline split) plus 1F1B, expressed
-//! as per-stage ordered op lists that both the discrete-event simulator
-//! ([`crate::sim`]) and the real trainer ([`crate::trainer`]) execute.
+//! The scheduling subsystem is a small compiler pipeline:
+//!
+//! ```text
+//! generate  ──►  lower  ──►  validate | simulate | execute
+//! (policy)      (graph)      (one shared dependency graph)
+//! ```
+//!
+//! Generators ([`generators`]) express the paper's policies — standard /
+//! layered gradient accumulation × contiguous / modular pipeline split,
+//! plus the 1F1B and interleaved-1F1B Megatron-LM baselines — as
+//! per-stage ordered op lists ([`ir::Schedule`]). The lowering pass
+//! ([`program::lower`]) compiles a schedule once into a
+//! [`program::ScheduleProgram`]: a flat op arena with explicit dependency
+//! edges and per-stream run queues. The validator ([`validate`]), the
+//! discrete-event simulator ([`crate::sim`]) and the real PJRT trainer
+//! ([`crate::trainer`]) all consume that one program, so the simulated
+//! and executed semantics cannot drift apart.
 
 pub mod generators;
 pub mod ir;
+pub mod program;
 pub mod validate;
 
-pub use generators::{layered_ga, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+pub use generators::{
+    interleaved_1f1b, interleaved_applicable, layered_ga, modular_pipeline, one_f_one_b,
+    standard_ga, ScheduleSpec,
+};
 pub use ir::{LayerAssignment, Op, Schedule};
+pub use program::{lower, ProgOp, ScheduleProgram, Stream, N_STREAMS, STREAMS};
 pub use validate::{validate, ScheduleError};

@@ -1,0 +1,689 @@
+//! Lowering pass: compile a [`Schedule`] into a [`ScheduleProgram`].
+//!
+//! A `Schedule` is policy — per-stage ordered op lists. A
+//! `ScheduleProgram` is the same batch of work with every data dependency
+//! made explicit: a flat op arena, compressed-sparse pred/succ edge lists,
+//! and per-stage per-stream run queues. Lowering derives the paper's
+//! dependency rules exactly once:
+//!
+//! * **activation chains** — `Fwd(l, mb)` depends on the producer of
+//!   layer `l−1`'s activation on the same stage (a local `Fwd` or a
+//!   `RecvAct`); `Bwd(l, mb)` depends on its checkpoint (`Fwd(l, mb)`);
+//! * **gradient chains** — `Bwd(l, mb)` depends on the producer of layer
+//!   `l+1`'s input-gradient on the same stage (a local `Bwd` or a
+//!   `RecvGrad`); the last layer has no gradient dependency;
+//! * **send/recv pairing** — `SendX` depends on its local payload
+//!   producer; `RecvX` depends on the matching `SendX` on the producing
+//!   stage (wire time is charged on the sender);
+//! * **restore-before-use** — `Fwd`/`Bwd` of layer `l` depend on the
+//!   latest preceding `RestoreParams(l)` on their stage, when present;
+//! * **reduce-after-last-bwd** — `ReduceGrad(l)` depends on every local
+//!   `Bwd(l, ·)`;
+//! * **optim-after-reduce** — `OptimStep(l)` depends on the stage's
+//!   `ReduceGrad(l)` when present, else on every local `Bwd(l, ·)`;
+//!   `OffloadStore(l)` likewise waits for the reduction when present.
+//!
+//! Every consumer of scheduling semantics — the validator
+//! ([`super::validate`]), the discrete-event simulator
+//! ([`crate::sim::engine`]) and the real trainer
+//! ([`crate::trainer::worker`]) — works from this one graph, so they
+//! cannot disagree about legality. Lowering also runs a Kahn topological
+//! pass over the data edges *plus* the implicit same-stream FIFO edges;
+//! a cycle there is exactly a schedule that would deadlock an in-order
+//! executor.
+
+use std::collections::HashMap;
+
+use super::ir::{LayerAssignment, Op, Schedule};
+use super::validate::ScheduleError;
+
+/// Which per-device stream an op occupies. Compute ops serialise on the
+/// compute cores; transfers overlap with compute on the network/PCIe
+/// streams — the overlap (or lack of it) is what the schedules exploit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    /// The compute cores.
+    Compute,
+    /// Outbound inter-device traffic (pipeline sends, gradient reduction).
+    NetOut,
+    /// Inbound inter-device traffic (pipeline receives, parameter
+    /// restoration).
+    NetIn,
+    /// The CPU-GPU (PCIe) link used for offload traffic.
+    CpuLink,
+}
+
+pub const STREAMS: [Stream; 4] = [Stream::Compute, Stream::NetOut, Stream::NetIn, Stream::CpuLink];
+
+/// Number of per-device streams.
+pub const N_STREAMS: usize = 4;
+
+impl Stream {
+    /// The stream an op occupies.
+    pub fn of(op: &Op) -> Stream {
+        match op {
+            Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. } => Stream::Compute,
+            Op::SendAct { .. } | Op::SendGrad { .. } | Op::ReduceGrad { .. } => Stream::NetOut,
+            Op::RecvAct { .. } | Op::RecvGrad { .. } | Op::RestoreParams { .. } => Stream::NetIn,
+            // Serialised with compute (C.4.3).
+            Op::TensorAllReduce { .. } => Stream::Compute,
+            Op::OffloadStore { .. } => Stream::CpuLink,
+        }
+    }
+
+    /// Index into [`STREAMS`].
+    pub fn index(self) -> usize {
+        match self {
+            Stream::Compute => 0,
+            Stream::NetOut => 1,
+            Stream::NetIn => 2,
+            Stream::CpuLink => 3,
+        }
+    }
+}
+
+/// One op in the flat arena.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgOp {
+    /// Arena index (== position in [`ScheduleProgram::ops`]).
+    pub id: u32,
+    /// Pipeline stage the op runs on.
+    pub stage: u32,
+    /// Stream the op occupies on its stage.
+    pub stream: Stream,
+    pub op: Op,
+}
+
+/// A compiled schedule: flat op arena with precomputed dependency edges
+/// and per-stage/per-stream run queues. Produced by [`lower`]; immutable
+/// afterwards.
+#[derive(Debug, Clone)]
+pub struct ScheduleProgram {
+    /// Policy name inherited from the source [`Schedule`].
+    pub name: String,
+    pub n_stages: usize,
+    pub d_l: usize,
+    pub n_mu: usize,
+    pub assignment: LayerAssignment,
+    pub partitioned: bool,
+    /// Flat arena, stage-major, each stage's ops in source order.
+    pub ops: Vec<ProgOp>,
+    /// Run queues: `queues[stage][stream_index]` lists op ids in issue
+    /// order. Ops on one stream run FIFO; an op additionally waits for
+    /// its dependency edges.
+    pub queues: Vec<[Vec<u32>; N_STREAMS]>,
+    /// CSR predecessor lists: preds of op `i` are
+    /// `preds[pred_offsets[i]..pred_offsets[i+1]]`.
+    preds: Vec<u32>,
+    pred_offsets: Vec<u32>,
+    /// CSR successor lists (transpose of `preds`).
+    succs: Vec<u32>,
+    succ_offsets: Vec<u32>,
+    /// `stage_starts[s]..stage_starts[s+1]` is stage `s`'s arena slice.
+    stage_starts: Vec<usize>,
+}
+
+impl ScheduleProgram {
+    /// Total number of ops.
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Total number of dependency edges.
+    pub fn n_edges(&self) -> usize {
+        self.preds.len()
+    }
+
+    /// Dependency predecessors of an op (ids into the arena).
+    pub fn preds_of(&self, id: u32) -> &[u32] {
+        let (a, b) = (self.pred_offsets[id as usize], self.pred_offsets[id as usize + 1]);
+        &self.preds[a as usize..b as usize]
+    }
+
+    /// Dependency successors of an op (ids into the arena).
+    pub fn succs_of(&self, id: u32) -> &[u32] {
+        let (a, b) = (self.succ_offsets[id as usize], self.succ_offsets[id as usize + 1]);
+        &self.succs[a as usize..b as usize]
+    }
+
+    /// The arena slice of one stage, in source order.
+    pub fn stage_ops(&self, stage: usize) -> &[ProgOp] {
+        &self.ops[self.stage_starts[stage]..self.stage_starts[stage + 1]]
+    }
+
+    /// The stage owning a layer under the program's assignment.
+    pub fn stage_of(&self, layer: usize) -> usize {
+        self.assignment.stage_of(layer, self.d_l, self.n_stages)
+    }
+
+    /// Count ops matching a predicate.
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.ops.iter().filter(|n| pred(&n.op)).count()
+    }
+
+    /// Check that one *synchronous* in-order worker per stage — the real
+    /// trainer's execution model, where a blocking receive stalls every
+    /// later op of its stage regardless of stream — can execute the
+    /// program. Stricter than the per-stream model [`lower`] already
+    /// checked: here the FIFO edge runs between *consecutive stage ops*,
+    /// not consecutive same-stream ops, so e.g. a send list-ordered
+    /// after a blocking receive cannot be used to satisfy that receive.
+    pub fn check_inorder_executable(&self) -> Result<(), ScheduleError> {
+        let mut next: Vec<Option<u32>> = vec![None; self.len()];
+        for stage in 0..self.n_stages {
+            let (start, end) = (self.stage_starts[stage], self.stage_starts[stage + 1]);
+            for idx in start..end.saturating_sub(1).max(start) {
+                next[idx] = Some((idx + 1) as u32);
+            }
+        }
+        self.kahn_with_next(&next)
+    }
+
+    /// Kahn's algorithm over the dependency edges plus caller-supplied
+    /// implicit ordering edges: `next[i]` is the op the executor forces
+    /// to wait for op `i`. Shared by the lowering cycle check
+    /// (per-stream FIFO edges) and [`Self::check_inorder_executable`]
+    /// (per-stage total-order edges).
+    fn kahn_with_next(&self, next: &[Option<u32>]) -> Result<(), ScheduleError> {
+        let n = self.len();
+        let mut indeg: Vec<u32> =
+            (0..n).map(|id| self.preds_of(id as u32).len() as u32).collect();
+        for nx in next.iter().flatten() {
+            indeg[*nx as usize] += 1;
+        }
+        let mut work: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut processed = 0usize;
+        while let Some(id) = work.pop() {
+            processed += 1;
+            for &sc in self.succs_of(id) {
+                indeg[sc as usize] -= 1;
+                if indeg[sc as usize] == 0 {
+                    work.push(sc);
+                }
+            }
+            if let Some(nx) = next[id as usize] {
+                indeg[nx as usize] -= 1;
+                if indeg[nx as usize] == 0 {
+                    work.push(nx);
+                }
+            }
+        }
+        if processed < n {
+            let stuck: Vec<String> = self
+                .ops
+                .iter()
+                .filter(|o| indeg[o.id as usize] > 0)
+                .take(8)
+                .map(|o| format!("stage {} {}", o.stage, o.op))
+                .collect();
+            return Err(ScheduleError::Cycle { ops: stuck });
+        }
+        Ok(())
+    }
+
+    /// Find the id of the first op matching a predicate.
+    pub fn find(&self, pred: impl Fn(&Op) -> bool) -> Option<u32> {
+        self.ops.iter().find(|n| pred(&n.op)).map(|n| n.id)
+    }
+}
+
+/// Compile a schedule into a [`ScheduleProgram`], or report every
+/// structural error found along the way. A program that lowers cleanly is
+/// deadlock-free on any in-order-*per-stream* executor (the simulator's
+/// model) — the cycle check covers the implicit stream-FIFO edges. The
+/// synchronous trainer is stricter (one total order per stage); it
+/// additionally runs [`ScheduleProgram::check_inorder_executable`].
+pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
+    let mut errors: Vec<ScheduleError> = Vec::new();
+
+    // ---- arena ---------------------------------------------------------
+    let total: usize = s.ops.iter().map(Vec::len).sum();
+    let mut ops: Vec<ProgOp> = Vec::with_capacity(total);
+    let mut stage_starts: Vec<usize> = Vec::with_capacity(s.n_stages + 1);
+    let mut queues: Vec<[Vec<u32>; N_STREAMS]> = Vec::with_capacity(s.n_stages);
+    for (stage, stage_ops) in s.ops.iter().enumerate() {
+        stage_starts.push(ops.len());
+        let mut q: [Vec<u32>; N_STREAMS] = Default::default();
+        for op in stage_ops {
+            let id = ops.len() as u32;
+            let stream = Stream::of(op);
+            q[stream.index()].push(id);
+            ops.push(ProgOp { id, stage: stage as u32, stream, op: *op });
+        }
+        queues.push(q);
+    }
+    stage_starts.push(ops.len());
+
+    // ---- pass 1: producers, transfers, counts --------------------------
+    // Activation of `layer` for `mb` available on `stage` (local Fwd, or a
+    // RecvAct re-homing the upstream activation).
+    let mut act_producer: HashMap<(usize, usize, usize), u32> = HashMap::new();
+    // Input-gradient w.r.t. `layer`'s output available on `stage`.
+    let mut grad_producer: HashMap<(usize, usize, usize), u32> = HashMap::new();
+    // Wire producers, keyed by the payload identity: (producing layer, mb).
+    let mut send_act: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut send_grad: HashMap<(usize, usize), u32> = HashMap::new();
+    // Which wire payloads were consumed (for unmatched-send reporting).
+    let mut recv_act: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut recv_grad: HashMap<(usize, usize), u32> = HashMap::new();
+    // Local Bwd ops per (stage, layer), and the stage's ReduceGrad per
+    // (stage, layer).
+    let mut bwd_ids: HashMap<(usize, usize), Vec<u32>> = HashMap::new();
+    let mut reduce_id: HashMap<(usize, usize), u32> = HashMap::new();
+
+    let mut fwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
+    let mut bwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
+
+    for node in &ops {
+        let stage = node.stage as usize;
+        let id = node.id;
+        let layer = node.op.layer();
+        match node.op {
+            Op::Fwd { layer: l, mb } => {
+                if l >= s.d_l || mb >= s.n_mu {
+                    errors.push(ScheduleError::WrongStage { stage, op: node.op.to_string() });
+                    continue;
+                }
+                fwd_count[l][mb] += 1;
+                act_producer.entry((stage, l, mb)).or_insert(id);
+            }
+            Op::Bwd { layer: l, mb } => {
+                if l >= s.d_l || mb >= s.n_mu {
+                    errors.push(ScheduleError::WrongStage { stage, op: node.op.to_string() });
+                    continue;
+                }
+                bwd_count[l][mb] += 1;
+                grad_producer.entry((stage, l, mb)).or_insert(id);
+                bwd_ids.entry((stage, l)).or_default().push(id);
+            }
+            Op::SendAct { layer: l, mb } => {
+                send_act.entry((l, mb)).or_insert(id);
+            }
+            Op::RecvAct { layer: l, mb } => {
+                if l == 0 {
+                    errors.push(ScheduleError::UnmatchedTransfer {
+                        op: format!("{} (layer 0 has no upstream activation)", node.op),
+                    });
+                    continue;
+                }
+                recv_act.entry((l - 1, mb)).or_insert(id);
+                act_producer.entry((stage, l - 1, mb)).or_insert(id);
+            }
+            Op::SendGrad { layer: l, mb } => {
+                send_grad.entry((l, mb)).or_insert(id);
+            }
+            Op::RecvGrad { layer: l, mb } => {
+                recv_grad.entry((l + 1, mb)).or_insert(id);
+                grad_producer.entry((stage, l + 1, mb)).or_insert(id);
+            }
+            Op::ReduceGrad { layer: l } => {
+                reduce_id.entry((stage, l)).or_insert(id);
+            }
+            _ => {}
+        }
+        // Ownership: compute ops only on the owning stage.
+        if node.op.is_compute() && layer < s.d_l && s.stage_of(layer) != stage {
+            errors.push(ScheduleError::WrongStage { stage, op: node.op.to_string() });
+        }
+    }
+
+    for l in 0..s.d_l {
+        for mb in 0..s.n_mu {
+            if fwd_count[l][mb] != 1 || bwd_count[l][mb] != 1 {
+                errors.push(ScheduleError::BadComputeCount {
+                    layer: l,
+                    mb,
+                    fwd: fwd_count[l][mb],
+                    bwd: bwd_count[l][mb],
+                });
+            }
+        }
+    }
+
+    // Send/recv pairing, both directions.
+    for (key, &id) in &send_act {
+        if !recv_act.contains_key(key) {
+            errors.push(ScheduleError::UnmatchedTransfer {
+                op: format!("{} has no matching RecvAct", ops[id as usize].op),
+            });
+        }
+    }
+    for (key, &id) in &recv_act {
+        if !send_act.contains_key(key) {
+            errors.push(ScheduleError::UnmatchedTransfer {
+                op: format!("{} has no matching SendAct", ops[id as usize].op),
+            });
+        }
+    }
+    for (key, &id) in &send_grad {
+        if !recv_grad.contains_key(key) {
+            errors.push(ScheduleError::UnmatchedTransfer {
+                op: format!("{} has no matching RecvGrad", ops[id as usize].op),
+            });
+        }
+    }
+    for (key, &id) in &recv_grad {
+        if !send_grad.contains_key(key) {
+            errors.push(ScheduleError::UnmatchedTransfer {
+                op: format!("{} has no matching SendGrad", ops[id as usize].op),
+            });
+        }
+    }
+
+    // ---- pass 2: dependency edges --------------------------------------
+    // (pred, succ) pairs; duplicates are harmless (pred counts and succ
+    // lists stay consistent) but we avoid emitting them.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(total * 2);
+    for stage in 0..s.n_stages {
+        // Latest preceding RestoreParams per layer, positional.
+        let mut last_restore: HashMap<usize, u32> = HashMap::new();
+        for node in &ops[stage_starts[stage]..stage_starts[stage + 1]] {
+            let id = node.id;
+            let mut missing = |needs: String| {
+                errors.push(ScheduleError::MissingDependency {
+                    stage,
+                    op: node.op.to_string(),
+                    needs,
+                });
+            };
+            match node.op {
+                Op::RestoreParams { layer } => {
+                    last_restore.insert(layer, id);
+                }
+                Op::Fwd { layer, mb } => {
+                    if layer > 0 {
+                        match act_producer.get(&(stage, layer - 1, mb)) {
+                            Some(&p) => edges.push((p, id)),
+                            None => missing(format!("activation of layer {} mb {}", layer - 1, mb)),
+                        }
+                    }
+                    if let Some(&r) = last_restore.get(&layer) {
+                        edges.push((r, id));
+                    }
+                }
+                Op::Bwd { layer, mb } => {
+                    match act_producer.get(&(stage, layer, mb)) {
+                        Some(&p) => edges.push((p, id)),
+                        None => missing(format!("checkpoint of layer {layer} mb {mb}")),
+                    }
+                    if layer + 1 < s.d_l {
+                        match grad_producer.get(&(stage, layer + 1, mb)) {
+                            Some(&p) => edges.push((p, id)),
+                            None => missing(format!("gradient of layer {} mb {}", layer + 1, mb)),
+                        }
+                    }
+                    if let Some(&r) = last_restore.get(&layer) {
+                        edges.push((r, id));
+                    }
+                }
+                Op::SendAct { layer, mb } => match act_producer.get(&(stage, layer, mb)) {
+                    Some(&p) => edges.push((p, id)),
+                    None => missing(format!("activation of layer {layer} mb {mb}")),
+                },
+                Op::SendGrad { layer, mb } => match grad_producer.get(&(stage, layer, mb)) {
+                    Some(&p) => edges.push((p, id)),
+                    None => missing(format!("gradient of layer {layer} mb {mb}")),
+                },
+                Op::RecvAct { layer, mb } => {
+                    if layer > 0 {
+                        if let Some(&p) = send_act.get(&(layer - 1, mb)) {
+                            edges.push((p, id));
+                        }
+                        // Unmatched case already reported in pass 1.
+                    }
+                }
+                Op::RecvGrad { layer, mb } => {
+                    if let Some(&p) = send_grad.get(&(layer + 1, mb)) {
+                        edges.push((p, id));
+                    }
+                }
+                Op::ReduceGrad { layer } => match bwd_ids.get(&(stage, layer)) {
+                    Some(ids) => edges.extend(ids.iter().map(|&b| (b, id))),
+                    None => missing(format!("backward ops of layer {layer}")),
+                },
+                Op::OptimStep { layer } => {
+                    if let Some(&r) = reduce_id.get(&(stage, layer)) {
+                        edges.push((r, id));
+                    } else if let Some(ids) = bwd_ids.get(&(stage, layer)) {
+                        edges.extend(ids.iter().map(|&b| (b, id)));
+                    } else {
+                        missing(format!("reduction or backward ops of layer {layer}"));
+                    }
+                }
+                Op::OffloadStore { layer } => {
+                    if let Some(&r) = reduce_id.get(&(stage, layer)) {
+                        edges.push((r, id));
+                    }
+                }
+                Op::TensorAllReduce { .. } => {}
+            }
+        }
+    }
+
+    if !errors.is_empty() {
+        // The edge set is incomplete for a structurally broken schedule;
+        // a cycle report would be noise on top of the real errors.
+        return Err(errors);
+    }
+
+    // ---- CSR -----------------------------------------------------------
+    let n = ops.len();
+    let mut pred_offsets = vec![0u32; n + 1];
+    let mut succ_offsets = vec![0u32; n + 1];
+    for &(p, c) in &edges {
+        pred_offsets[c as usize + 1] += 1;
+        succ_offsets[p as usize + 1] += 1;
+    }
+    for i in 0..n {
+        pred_offsets[i + 1] += pred_offsets[i];
+        succ_offsets[i + 1] += succ_offsets[i];
+    }
+    let mut preds = vec![0u32; edges.len()];
+    let mut succs = vec![0u32; edges.len()];
+    let mut pred_fill = pred_offsets.clone();
+    let mut succ_fill = succ_offsets.clone();
+    for &(p, c) in &edges {
+        preds[pred_fill[c as usize] as usize] = p;
+        pred_fill[c as usize] += 1;
+        succs[succ_fill[p as usize] as usize] = c;
+        succ_fill[p as usize] += 1;
+    }
+
+    let program = ScheduleProgram {
+        name: s.name.clone(),
+        n_stages: s.n_stages,
+        d_l: s.d_l,
+        n_mu: s.n_mu,
+        assignment: s.assignment,
+        partitioned: s.partitioned,
+        ops,
+        queues,
+        preds,
+        pred_offsets,
+        succs,
+        succ_offsets,
+        stage_starts,
+    };
+
+    // ---- cycle check (data edges + stream-FIFO edges) ------------------
+    if let Err(e) = check_acyclic(&program) {
+        return Err(vec![e]);
+    }
+
+    Ok(program)
+}
+
+/// Cycle check for the per-stream executor model: the dependency edges
+/// plus the implicit FIFO edge between consecutive ops of each
+/// (stage, stream) queue. Exactly the deadlock condition of an
+/// in-order-per-stream executor (the simulator).
+fn check_acyclic(p: &ScheduleProgram) -> Result<(), ScheduleError> {
+    let mut next: Vec<Option<u32>> = vec![None; p.len()];
+    for q in p.queues.iter().flat_map(|stage_q| stage_q.iter()) {
+        for w in q.windows(2) {
+            next[w[0] as usize] = Some(w[1]);
+        }
+    }
+    p.kahn_with_next(&next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generators::{modular_pipeline, standard_ga, ScheduleSpec};
+    use super::super::ir::{LayerAssignment, Op, Schedule};
+    use super::*;
+
+    fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
+        ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true }
+    }
+
+    #[test]
+    fn lowering_preserves_every_op_in_stage_order() {
+        let s = modular_pipeline(&spec(8, 4, 8, true));
+        let p = lower(&s).expect("lowers");
+        assert_eq!(p.len(), s.len());
+        for stage in 0..s.n_stages {
+            let arena: Vec<Op> = p.stage_ops(stage).iter().map(|n| n.op).collect();
+            assert_eq!(arena, s.ops[stage], "stage {stage}");
+        }
+    }
+
+    #[test]
+    fn bwd_depends_on_its_checkpoint_and_upstream_gradient() {
+        let s = modular_pipeline(&spec(8, 4, 8, false));
+        let p = lower(&s).unwrap();
+        let fwd = p.find(|o| *o == Op::Fwd { layer: 2, mb: 3 }).unwrap();
+        let bwd = p.find(|o| *o == Op::Bwd { layer: 2, mb: 3 }).unwrap();
+        assert!(p.preds_of(bwd).contains(&fwd), "checkpoint edge");
+        // Layer 3 lives on another stage -> the gradient arrives via a
+        // RecvGrad, which itself depends on the remote SendGrad.
+        let recv = p.find(|o| *o == Op::RecvGrad { layer: 2, mb: 3 }).unwrap();
+        let send = p.find(|o| *o == Op::SendGrad { layer: 3, mb: 3 }).unwrap();
+        assert!(p.preds_of(bwd).contains(&recv));
+        assert!(p.preds_of(recv).contains(&send));
+    }
+
+    #[test]
+    fn reduce_waits_for_every_local_backward() {
+        let s = standard_ga(&spec(4, 1, 6, false));
+        let p = lower(&s).unwrap();
+        let reduce = p.find(|o| *o == Op::ReduceGrad { layer: 2 }).unwrap();
+        let preds = p.preds_of(reduce);
+        assert_eq!(preds.len(), 6);
+        for &b in preds {
+            assert!(matches!(p.ops[b as usize].op, Op::Bwd { layer: 2, .. }));
+        }
+        // And the optimizer step waits for the reduction.
+        let optim = p.find(|o| *o == Op::OptimStep { layer: 2 }).unwrap();
+        assert_eq!(p.preds_of(optim), &[reduce][..]);
+    }
+
+    #[test]
+    fn restore_before_use_tracks_the_latest_preceding_restore() {
+        let s = standard_ga(&spec(2, 1, 2, true));
+        let p = lower(&s).unwrap();
+        // Standard GA with partition restores per (layer, mb): each Fwd
+        // depends on exactly the restore issued just before it.
+        for node in p.ops.iter() {
+            if let Op::Fwd { layer, .. } = node.op {
+                let restores: Vec<u32> = p
+                    .preds_of(node.id)
+                    .iter()
+                    .copied()
+                    .filter(|&x| matches!(p.ops[x as usize].op, Op::RestoreParams { .. }))
+                    .collect();
+                assert_eq!(restores.len(), 1, "{}", node.op);
+                assert!(matches!(
+                    p.ops[restores[0] as usize].op,
+                    Op::RestoreParams { layer: l } if l == layer
+                ));
+            }
+        }
+    }
+
+    #[test]
+    fn edge_counts_are_symmetric() {
+        let s = modular_pipeline(&spec(16, 4, 8, true));
+        let p = lower(&s).unwrap();
+        let pred_total: usize = (0..p.len()).map(|i| p.preds_of(i as u32).len()).sum();
+        let succ_total: usize = (0..p.len()).map(|i| p.succs_of(i as u32).len()).sum();
+        assert_eq!(pred_total, succ_total);
+        assert_eq!(pred_total, p.n_edges());
+    }
+
+    #[test]
+    fn cycle_is_reported() {
+        // Bwd before its own Fwd on the single compute stream: the data
+        // edge (Fwd -> Bwd) and the FIFO edge (Bwd -> Fwd) form a cycle.
+        let s = Schedule {
+            name: "cyclic".into(),
+            n_stages: 1,
+            d_l: 1,
+            n_mu: 1,
+            assignment: LayerAssignment::Contiguous,
+            ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
+            partitioned: false,
+        };
+        let errs = lower(&s).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");
+    }
+
+    #[test]
+    fn per_stream_legal_but_inorder_deadlock_is_caught() {
+        // SendAct list-ordered after a blocking RecvGrad: legal for the
+        // simulator (different streams), but a synchronous worker blocks
+        // on the receive before ever sending, deadlocking the peer stage.
+        let s = Schedule {
+            name: "inorder-trap".into(),
+            n_stages: 2,
+            d_l: 2,
+            n_mu: 1,
+            assignment: LayerAssignment::Contiguous,
+            ops: vec![
+                vec![
+                    Op::Fwd { layer: 0, mb: 0 },
+                    Op::RecvGrad { layer: 0, mb: 0 },
+                    Op::SendAct { layer: 0, mb: 0 },
+                    Op::Bwd { layer: 0, mb: 0 },
+                ],
+                vec![
+                    Op::RecvAct { layer: 1, mb: 0 },
+                    Op::Fwd { layer: 1, mb: 0 },
+                    Op::Bwd { layer: 1, mb: 0 },
+                    Op::SendGrad { layer: 1, mb: 0 },
+                ],
+            ],
+            partitioned: false,
+        };
+        let p = lower(&s).expect("per-stream model accepts this schedule");
+        assert!(
+            matches!(p.check_inorder_executable(), Err(ScheduleError::Cycle { .. })),
+            "the synchronous-worker check must reject it"
+        );
+        // Every generated schedule passes the stricter check.
+        let sp = spec(8, 4, 8, true);
+        lower(&modular_pipeline(&sp)).unwrap().check_inorder_executable().unwrap();
+        lower(&standard_ga(&sp)).unwrap().check_inorder_executable().unwrap();
+    }
+
+    #[test]
+    fn queues_partition_the_arena() {
+        let s = modular_pipeline(&spec(8, 2, 4, true));
+        let p = lower(&s).unwrap();
+        let queued: usize =
+            p.queues.iter().map(|q| q.iter().map(Vec::len).sum::<usize>()).sum();
+        assert_eq!(queued, p.len());
+        for (stage, q) in p.queues.iter().enumerate() {
+            for (si, ids) in q.iter().enumerate() {
+                for &id in ids {
+                    assert_eq!(p.ops[id as usize].stage as usize, stage);
+                    assert_eq!(p.ops[id as usize].stream.index(), si);
+                }
+            }
+        }
+    }
+}

@@ -1,141 +1,50 @@
-//! Static schedule validation: data-dependency closure and send/recv
-//! matching. A schedule that passes these checks cannot deadlock in the
-//! simulator or the real trainer.
+//! Static schedule validation, as a thin wrapper over the lowering pass.
+//!
+//! Every structural invariant — compute-op ownership, exactly one
+//! Fwd/Bwd per (layer, micro-batch), send/recv pairing, producer
+//! availability and cycle-freedom over the dependency graph plus the
+//! per-stream FIFO order — is checked once, inside
+//! [`super::program::lower`]. A schedule that lowers cleanly cannot
+//! deadlock the simulator, which executes the very graph the checks ran
+//! on; the synchronous trainer is stricter (one total order per stage)
+//! and additionally runs
+//! [`super::program::ScheduleProgram::check_inorder_executable`] before
+//! spawning workers.
 
-use std::collections::HashSet;
+use super::ir::Schedule;
+use super::program::lower;
 
-use super::ir::{Op, Schedule};
-
-/// Errors found by [`validate`].
+/// Errors found while lowering a schedule (see [`super::program`]).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScheduleError {
-    /// A layer/micro-batch forward appears on a stage that does not own
-    /// the layer.
+    /// A compute op (Fwd/Bwd/OptimStep) appears on a stage that does not
+    /// own the layer, or names an out-of-range layer/micro-batch.
     WrongStage { stage: usize, op: String },
     /// Fwd/Bwd for a (layer, mb) pair is missing or duplicated.
     BadComputeCount { layer: usize, mb: usize, fwd: usize, bwd: usize },
-    /// A SendAct has no matching RecvAct on the consuming stage (or vice
+    /// A SendX has no matching RecvX on the consuming stage (or vice
     /// versa).
     UnmatchedTransfer { op: String },
-    /// Within a stage, an op consumes data produced later on the same
-    /// stage (guaranteed deadlock).
-    LocalOrderViolation { stage: usize, consumer: String, producer: String },
+    /// An op consumes data that no op on its stage produces (the schedule
+    /// would stall forever waiting for it).
+    MissingDependency { stage: usize, op: String, needs: String },
+    /// The dependency edges plus the per-stream FIFO order contain a
+    /// cycle — a guaranteed deadlock for any in-order executor. Lists up
+    /// to eight of the ops involved.
+    Cycle { ops: Vec<String> },
 }
 
-/// Validate a schedule's structural invariants.
+/// Validate a schedule's structural invariants by lowering it and
+/// discarding the program. Callers that also want to *execute* the
+/// schedule should call [`lower`] directly and keep the result.
 pub fn validate(s: &Schedule) -> Result<(), Vec<ScheduleError>> {
-    let mut errors = Vec::new();
-
-    // 1. Ownership: compute ops only on the owning stage.
-    for (stage, ops) in s.ops.iter().enumerate() {
-        for op in ops {
-            if op.is_compute() && s.stage_of(op.layer()) != stage {
-                errors.push(ScheduleError::WrongStage { stage, op: op.to_string() });
-            }
-        }
-    }
-
-    // 2. Exactly one Fwd and one Bwd per (layer, mb).
-    let mut fwd = vec![vec![0usize; s.n_mu]; s.d_l];
-    let mut bwd = vec![vec![0usize; s.n_mu]; s.d_l];
-    for op in s.ops.iter().flatten() {
-        match *op {
-            Op::Fwd { layer, mb } => fwd[layer][mb] += 1,
-            Op::Bwd { layer, mb } => bwd[layer][mb] += 1,
-            _ => {}
-        }
-    }
-    for l in 0..s.d_l {
-        for mb in 0..s.n_mu {
-            if fwd[l][mb] != 1 || bwd[l][mb] != 1 {
-                errors.push(ScheduleError::BadComputeCount {
-                    layer: l,
-                    mb,
-                    fwd: fwd[l][mb],
-                    bwd: bwd[l][mb],
-                });
-            }
-        }
-    }
-
-    // 3. Send/Recv matching across stage boundaries.
-    let mut sends: HashSet<(usize, usize, bool)> = HashSet::new(); // (layer, mb, grad?)
-    let mut recvs: HashSet<(usize, usize, bool)> = HashSet::new();
-    for op in s.ops.iter().flatten() {
-        match *op {
-            Op::SendAct { layer, mb } => {
-                sends.insert((layer, mb, false));
-            }
-            // RecvAct{layer} receives the *output of layer-1*.
-            Op::RecvAct { layer, mb } => {
-                recvs.insert((layer - 1, mb, false));
-            }
-            Op::SendGrad { layer, mb } => {
-                sends.insert((layer, mb, true));
-            }
-            // RecvGrad{layer} receives the gradient of layer+1's input.
-            Op::RecvGrad { layer, mb } => {
-                recvs.insert((layer + 1, mb, true));
-            }
-            _ => {}
-        }
-    }
-    for miss in sends.symmetric_difference(&recvs) {
-        errors.push(ScheduleError::UnmatchedTransfer {
-            op: format!(
-                "{}{} layer {} mb {}",
-                if miss.2 { "grad" } else { "act" },
-                if sends.contains(miss) { " send" } else { " recv" },
-                miss.0,
-                miss.1
-            ),
-        });
-    }
-
-    // 4. Same-stage ordering: Fwd(l, mb) before Fwd(l', mb) for owned
-    //    consecutive layers, Bwd(l, mb) after Fwd(l, mb), SendAct after
-    //    its Fwd, RecvAct before its Fwd.
-    for (stage, ops) in s.ops.iter().enumerate() {
-        let index_of = |pred: &dyn Fn(&Op) -> bool| ops.iter().position(|o| pred(o));
-        for (i, op) in ops.iter().enumerate() {
-            match *op {
-                Op::SendAct { layer, mb } => {
-                    if let Some(j) = index_of(&|o: &Op| *o == Op::Fwd { layer, mb }) {
-                        if j > i {
-                            errors.push(ScheduleError::LocalOrderViolation {
-                                stage,
-                                consumer: op.to_string(),
-                                producer: format!("F{layer}.{mb}"),
-                            });
-                        }
-                    }
-                }
-                Op::Bwd { layer, mb } => {
-                    if let Some(j) = index_of(&|o: &Op| *o == Op::Fwd { layer, mb }) {
-                        if j > i {
-                            errors.push(ScheduleError::LocalOrderViolation {
-                                stage,
-                                consumer: op.to_string(),
-                                producer: format!("F{layer}.{mb}"),
-                            });
-                        }
-                    }
-                }
-                _ => {}
-            }
-        }
-    }
-
-    if errors.is_empty() {
-        Ok(())
-    } else {
-        Err(errors)
-    }
+    lower(s).map(|_| ())
 }
 
 #[cfg(test)]
 mod tests {
     use super::super::generators::*;
+    use super::super::ir::{LayerAssignment, Op, Schedule};
     use super::*;
 
     #[test]
@@ -150,6 +59,18 @@ mod tests {
                     validate(&one_f_one_b(&sp)).expect("1f1b");
                 }
                 validate(&standard_ga(&sp)).expect("standard");
+            }
+        }
+    }
+
+    #[test]
+    fn interleaved_schedules_validate() {
+        for (d_l, n_l, n_mu, chunks) in [(8, 4, 8, 2), (16, 4, 8, 2), (16, 2, 4, 4), (8, 1, 2, 2)]
+        {
+            for partition in [false, true] {
+                let sp = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
+                validate(&interleaved_1f1b(&sp, chunks))
+                    .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
             }
         }
     }
@@ -182,5 +103,36 @@ mod tests {
         s.ops[0].push(Op::Fwd { layer: 1, mb: 0 }); // layer 1 belongs to stage 1
         let errs = validate(&s).unwrap_err();
         assert!(errs.iter().any(|e| matches!(e, ScheduleError::WrongStage { .. })));
+    }
+
+    #[test]
+    fn detects_deadlock_cycle() {
+        // A backward scheduled before its forward on the same compute
+        // stream: data edge Fwd->Bwd, FIFO edge Bwd->Fwd — a cycle the
+        // old closure-based validator could only approximate.
+        let s = Schedule {
+            name: "cyclic".into(),
+            n_stages: 1,
+            d_l: 1,
+            n_mu: 1,
+            assignment: LayerAssignment::Contiguous,
+            ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
+            partitioned: false,
+        };
+        let errs = validate(&s).unwrap_err();
+        assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");
+    }
+
+    #[test]
+    fn detects_missing_local_producer() {
+        // A SendGrad whose stage never runs the corresponding backward.
+        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let mut s = modular_pipeline(&sp);
+        s.ops[0].push(Op::SendGrad { layer: 0, mb: 5 }); // mb 5 never computed
+        let errs = validate(&s).unwrap_err();
+        assert!(
+            errs.iter().any(|e| matches!(e, ScheduleError::MissingDependency { .. })),
+            "{errs:?}"
+        );
     }
 }

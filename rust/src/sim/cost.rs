@@ -8,21 +8,10 @@ use crate::hardware::{ClusterSpec, LinkKind};
 use crate::model::TransformerShape;
 use crate::schedule::Op;
 
-/// Which per-device stream an op occupies.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum Stream {
-    /// The compute cores.
-    Compute,
-    /// Outbound inter-device traffic (pipeline sends, gradient reduction).
-    NetOut,
-    /// Inbound inter-device traffic (pipeline receives, parameter
-    /// restoration).
-    NetIn,
-    /// The CPU-GPU (PCIe) link used for offload traffic.
-    CpuLink,
-}
-
-pub const STREAMS: [Stream; 4] = [Stream::Compute, Stream::NetOut, Stream::NetIn, Stream::CpuLink];
+// Stream classification lives with the schedule program (the lowering
+// pass needs it to build run queues); re-exported here for callers that
+// reach it through the simulator.
+pub use crate::schedule::program::{Stream, STREAMS};
 
 /// Precomputed durations (seconds) for every op kind.
 #[derive(Debug, Clone)]
@@ -109,15 +98,9 @@ impl CostTable {
         }
     }
 
-    /// The stream an op occupies.
+    /// The stream an op occupies (delegates to [`Stream::of`]).
     pub fn stream(op: &Op) -> Stream {
-        match op {
-            Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. } => Stream::Compute,
-            Op::SendAct { .. } | Op::SendGrad { .. } | Op::ReduceGrad { .. } => Stream::NetOut,
-            Op::RecvAct { .. } | Op::RecvGrad { .. } | Op::RestoreParams { .. } => Stream::NetIn,
-            Op::TensorAllReduce { .. } => Stream::Compute, // serialized with compute (C.4.3)
-            Op::OffloadStore { .. } => Stream::CpuLink,
-        }
+        Stream::of(op)
     }
 
     /// Duration of an op, seconds.

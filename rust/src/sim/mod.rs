@@ -1,11 +1,17 @@
-//! Discrete-event simulator: executes schedules against the Appendix A
-//! hardware model, measuring the bubble, communication overlap and peak
-//! memory that the closed-form cost model predicts.
+//! Discrete-event simulator: executes compiled schedule programs against
+//! the Appendix A hardware model, measuring the bubble, communication
+//! overlap and peak memory that the closed-form cost model predicts.
+//!
+//! The simulator consumes [`crate::schedule::ScheduleProgram`] — the
+//! same dependency graph the validator checks and the trainer executes —
+//! so the two halves cannot disagree about a schedule's dependency
+//! semantics (the trainer's synchronous workers additionally verify the
+//! stricter in-order condition at launch).
 
 pub mod cost;
 pub mod engine;
 pub mod gantt;
 
 pub use cost::{CostTable, Stream};
-pub use engine::{simulate, SimResult, TimedOp};
+pub use engine::{simulate, simulate_program, SimResult, TimedOp};
 pub use gantt::render;

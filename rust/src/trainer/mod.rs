@@ -3,6 +3,11 @@
 //! artifacts, with pipeline rings and data-parallel collectives carrying
 //! real tensors. This is the executable half of the reproduction — the
 //! same scheduling policies the simulator measures, running real math.
+//!
+//! The schedule is lowered exactly once ([`crate::schedule::lower`]);
+//! the resulting [`crate::schedule::ScheduleProgram`] is shared by every
+//! worker, which dispatches its stage's run queue and checks the
+//! program's local dependency edges before each op.
 
 pub mod config;
 pub mod params;
@@ -10,6 +15,7 @@ pub mod worker;
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::channel;
+use std::sync::Arc;
 use std::thread;
 
 use anyhow::{Context, Result};
@@ -20,7 +26,7 @@ pub use worker::{run_worker, WorkerCtx, WorkerStats};
 
 use crate::collective::ring_group;
 use crate::runtime::Manifest;
-use crate::schedule::validate;
+use crate::schedule::lower;
 
 /// Result of one training run.
 #[derive(Debug, Clone)]
@@ -46,7 +52,16 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         cfg.n_l
     );
     let schedule = cfg.build_schedule(d_l);
-    validate(&schedule).map_err(|e| anyhow::anyhow!("invalid schedule: {e:?}"))?;
+    // Lowering validates every structural invariant (ownership, compute
+    // counts, send/recv pairing, cycle-freedom) and yields the dependency
+    // graph all workers execute. Workers are synchronous in-order
+    // executors with blocking receives — stricter than the per-stream
+    // model lowering checks — so verify that stronger condition too.
+    let program =
+        Arc::new(lower(&schedule).map_err(|e| anyhow::anyhow!("invalid schedule: {e:?}"))?);
+    program
+        .check_inorder_executable()
+        .map_err(|e| anyhow::anyhow!("schedule would deadlock in-order workers: {e:?}"))?;
 
     let t0 = std::time::Instant::now();
     let (loss_tx, loss_rx) = channel::<(usize, usize, f64)>();
@@ -100,7 +115,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             steps: cfg.steps,
             lr: cfg.lr,
             partition: cfg.partition,
-            schedule: schedule.clone(),
+            program: program.clone(),
             artifacts_root: cfg.artifacts_root.clone(),
             preset: cfg.preset.clone(),
             act_tx,
@@ -146,7 +161,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         collective_elems_sent: stats.collective_elems_sent,
         execute_secs: stats.execute_secs,
         execute_calls: stats.execute_calls,
-        schedule_name: schedule.name,
+        schedule_name: program.name.clone(),
     })
 }
 

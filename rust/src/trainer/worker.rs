@@ -1,9 +1,19 @@
-//! Stage worker: executes a schedule's op stream against the PJRT engine,
-//! the pipeline channels and the data-parallel collectives. One worker =
-//! one (dp_rank, stage) pair = one OS thread.
+//! Stage worker: executes its stage's slice of a compiled
+//! [`ScheduleProgram`] against the PJRT engine, the pipeline channels and
+//! the data-parallel collectives. One worker = one (dp_rank, stage) pair
+//! = one OS thread.
+//!
+//! The worker runs the program's per-stage op order and checks every
+//! local dependency edge before dispatching an op — the same edges the
+//! validator verified and the simulator timed. Cross-stage edges are
+//! enforced physically by the blocking pipeline channels; that the
+//! blocking order can complete at all is verified up front by
+//! [`ScheduleProgram::check_inorder_executable`] in
+//! [`super::train`].
 
 use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -12,7 +22,7 @@ use crate::data::Corpus;
 use crate::optim::{Adam, AdamConfig, LrSchedule};
 use crate::partition::ShardMap;
 use crate::runtime::{Engine, HostTensor};
-use crate::schedule::{Op, Schedule};
+use crate::schedule::{Op, ScheduleProgram};
 
 use super::params::{init_matrix, LayerLayout};
 
@@ -30,7 +40,9 @@ pub struct WorkerCtx {
     pub steps: usize,
     pub lr: LrSchedule,
     pub partition: bool,
-    pub schedule: Schedule,
+    /// The compiled schedule shared by every worker (and by the validator
+    /// and simulator that vetted it).
+    pub program: Arc<ScheduleProgram>,
     pub artifacts_root: std::path::PathBuf,
     pub preset: String,
     /// Forward-activation ring channels.
@@ -57,9 +69,10 @@ pub struct WorkerStats {
 /// Run the worker to completion (all steps). Returns its stats.
 pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let t0 = std::time::Instant::now();
-    let owns_first = ctx.schedule.stage_of(0) == ctx.stage;
-    let d_l = ctx.schedule.d_l;
-    let owns_last = ctx.schedule.stage_of(d_l - 1) == ctx.stage;
+    let prog = ctx.program.clone();
+    let owns_first = prog.stage_of(0) == ctx.stage;
+    let d_l = prog.d_l;
+    let owns_last = prog.stage_of(d_l - 1) == ctx.stage;
 
     let mut names: Vec<&str> = vec!["layer_fwd", "layer_bwd"];
     if owns_first {
@@ -76,7 +89,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
 
     // --- parameter state -------------------------------------------------
     let my_layers: Vec<usize> =
-        (0..d_l).filter(|&l| ctx.schedule.stage_of(l) == ctx.stage).collect();
+        (0..d_l).filter(|&l| prog.stage_of(l) == ctx.stage).collect();
     let mut params: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut grads: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut adam: HashMap<usize, Adam> = HashMap::new();
@@ -125,8 +138,15 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let act_shape = vec![batch, m.d_seq, m.d_model];
     let act_elems: usize = act_shape.iter().product();
 
+    // This stage's slice of the program arena, in dispatch order, plus a
+    // per-step completion bitmap for checking local dependency edges.
+    let stage_nodes: Vec<(u32, Op)> =
+        prog.stage_ops(ctx.stage).iter().map(|n| (n.id, n.op)).collect();
+    let mut op_done: Vec<bool> = vec![false; prog.len()];
+
     // --- step loop ---------------------------------------------------------
     for step in 0..ctx.steps {
+        op_done.fill(false);
         // Transient per-step state.
         let mut inbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // input of (layer, mb)
         let mut ckpt: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
@@ -145,8 +165,23 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             corpus.batch(ctx.seed, step as u64, ctx.dp_rank as u64, mb as u64, batch, m.d_seq)
         };
 
-        let ops: Vec<Op> = ctx.schedule.ops[ctx.stage].clone();
-        for op in ops {
+        for &(op_id, op) in &stage_nodes {
+            // An in-order dispatcher satisfies a local edge iff the
+            // producer already ran; a violation here means the program's
+            // stage order contradicts its own dependency graph (lowering
+            // rejects such schedules, so this guards engine bugs and
+            // hand-built programs).
+            for &pid in prog.preds_of(op_id) {
+                let pn = &prog.ops[pid as usize];
+                if pn.stage as usize == ctx.stage && !op_done[pid as usize] {
+                    bail!(
+                        "stage {} dispatched {} before its dependency {}",
+                        ctx.stage,
+                        op,
+                        pn.op
+                    );
+                }
+            }
             match op {
                 Op::RestoreParams { layer } => {
                     if ctx.partition {
@@ -183,7 +218,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     ckpt.insert((layer, mb), x);
                     if layer + 1 == d_l {
                         last_out.insert(mb, y);
-                    } else if ctx.schedule.stage_of(layer + 1) == ctx.stage {
+                    } else if prog.stage_of(layer + 1) == ctx.stage {
                         inbox.insert((layer + 1, mb), y);
                     } else {
                         outbox.insert((layer, mb), y);
@@ -256,7 +291,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         for (d, s) in d_pos.iter_mut().zip(outs[1].as_f32()?) {
                             *d += s;
                         }
-                    } else if ctx.schedule.stage_of(layer - 1) == ctx.stage {
+                    } else if prog.stage_of(layer - 1) == ctx.stage {
                         douts.insert((layer - 1, mb), dx);
                     } else {
                         goutbox.insert((layer, mb), dx);
@@ -305,6 +340,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
                 Op::OffloadStore { .. } | Op::TensorAllReduce { .. } => {}
             }
+            op_done[op_id as usize] = true;
         }
 
         // Step epilogue: embedding / head parameters (reduced over DP).

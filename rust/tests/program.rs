@@ -1,0 +1,193 @@
+//! Property-style tests for the schedule → program lowering layer:
+//! every generator × spec grid must compile to a cycle-free
+//! `ScheduleProgram` whose edges encode exactly one forward/backward
+//! chain per (layer, micro-batch), and the policies must keep their
+//! paper-level resource relationships after lowering.
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::schedule::{
+    interleaved_1f1b, interleaved_applicable, layered_ga, lower, modular_pipeline, one_f_one_b,
+    standard_ga, Op, Schedule, ScheduleProgram, ScheduleSpec,
+};
+use lga_mpp::sim::{simulate_program, CostTable};
+
+/// The spec grid: (d_l, n_l, n_mu) shapes exercising single-stage,
+/// divisible and ragged-micro-batch pipelines.
+fn grid() -> Vec<ScheduleSpec> {
+    let mut specs = Vec::new();
+    for (d_l, n_l, n_mu) in
+        [(8, 4, 8), (16, 4, 6), (16, 4, 8), (12, 3, 6), (8, 1, 4), (160, 5, 10), (16, 2, 5)]
+    {
+        for partition in [false, true] {
+            for data_parallel in [false, true] {
+                specs.push(ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel });
+            }
+        }
+    }
+    specs
+}
+
+/// Every generator applicable to a spec, with its schedule.
+fn generated(spec: &ScheduleSpec) -> Vec<Schedule> {
+    let mut out = vec![standard_ga(spec)];
+    if spec.n_l == 1 {
+        out.push(layered_ga(spec));
+    } else {
+        out.push(modular_pipeline(spec));
+        out.push(one_f_one_b(spec));
+    }
+    if interleaved_applicable(spec, 2) {
+        out.push(interleaved_1f1b(spec, 2));
+    }
+    out
+}
+
+fn find_op(p: &ScheduleProgram, op: Op) -> Option<u32> {
+    p.find(|o| *o == op)
+}
+
+#[test]
+fn every_generator_times_spec_lowers_cycle_free() {
+    for spec in grid() {
+        for s in generated(&spec) {
+            let p = lower(&s).unwrap_or_else(|e| panic!("{} {spec:?}: {e:?}", s.name));
+            // And every generated schedule survives the trainer's
+            // stricter synchronous in-order executability check.
+            p.check_inorder_executable()
+                .unwrap_or_else(|e| panic!("{} {spec:?} in-order: {e:?}", s.name));
+        }
+    }
+}
+
+#[test]
+fn exactly_one_fwd_bwd_edge_chain_per_layer_and_microbatch() {
+    for spec in grid() {
+        for s in generated(&spec) {
+            let p = lower(&s).unwrap();
+            let is_restore = |id: u32| matches!(p.ops[id as usize].op, Op::RestoreParams { .. });
+            for l in 0..spec.d_l {
+                for mb in 0..spec.n_mu {
+                    // Exactly one Fwd and one Bwd node per pair.
+                    assert_eq!(p.count(|o| *o == Op::Fwd { layer: l, mb }), 1, "{}", s.name);
+                    assert_eq!(p.count(|o| *o == Op::Bwd { layer: l, mb }), 1, "{}", s.name);
+                    let fwd = find_op(&p, Op::Fwd { layer: l, mb }).unwrap();
+                    let bwd = find_op(&p, Op::Bwd { layer: l, mb }).unwrap();
+
+                    // Forward chain: layer 0 has no data dependency; every
+                    // other layer depends on exactly one activation
+                    // producer (the previous layer's Fwd, or the RecvAct
+                    // re-homing it), plus possibly a parameter restore.
+                    let fwd_data: Vec<u32> = p
+                        .preds_of(fwd)
+                        .iter()
+                        .copied()
+                        .filter(|&x| !is_restore(x))
+                        .collect();
+                    if l == 0 {
+                        assert!(fwd_data.is_empty(), "{} F{l}.{mb}", s.name);
+                    } else {
+                        assert_eq!(fwd_data.len(), 1, "{} F{l}.{mb}", s.name);
+                        let producer = p.ops[fwd_data[0] as usize].op;
+                        assert!(
+                            producer == Op::Fwd { layer: l - 1, mb }
+                                || producer == Op::RecvAct { layer: l, mb },
+                            "{} F{l}.{mb} <- {producer}",
+                            s.name
+                        );
+                    }
+
+                    // Backward chain: always the checkpoint (its own Fwd),
+                    // plus — below the last layer — exactly one gradient
+                    // producer (the next layer's Bwd, or the RecvGrad).
+                    let bwd_data: Vec<u32> = p
+                        .preds_of(bwd)
+                        .iter()
+                        .copied()
+                        .filter(|&x| !is_restore(x))
+                        .collect();
+                    assert!(bwd_data.contains(&fwd), "{} B{l}.{mb} missing checkpoint", s.name);
+                    if l + 1 == spec.d_l {
+                        assert_eq!(bwd_data.len(), 1, "{} B{l}.{mb}", s.name);
+                    } else {
+                        assert_eq!(bwd_data.len(), 2, "{} B{l}.{mb}", s.name);
+                        let grad = bwd_data.iter().find(|&&x| x != fwd).unwrap();
+                        let producer = p.ops[*grad as usize].op;
+                        assert!(
+                            producer == Op::Bwd { layer: l + 1, mb }
+                                || producer == Op::RecvGrad { layer: l, mb },
+                            "{} B{l}.{mb} <- {producer}",
+                            s.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn modular_restores_strictly_fewer_than_standard_under_partition() {
+    for spec in grid() {
+        if !spec.partition || spec.n_l == 1 {
+            continue;
+        }
+        let modular = lower(&modular_pipeline(&spec)).unwrap();
+        let standard = lower(&standard_ga(&spec)).unwrap();
+        let restores = |p: &ScheduleProgram| p.count(|o| matches!(o, Op::RestoreParams { .. }));
+        assert!(
+            restores(&modular) < restores(&standard),
+            "{spec:?}: modular {} vs standard {}",
+            restores(&modular),
+            restores(&standard)
+        );
+        // The exact factor-n_mu economy of Figure 2.
+        assert_eq!(restores(&modular) * spec.n_mu, restores(&standard));
+    }
+}
+
+#[test]
+fn lowered_programs_simulate_without_deadlock() {
+    let cluster = ClusterSpec::reference();
+    for spec in grid() {
+        let cfg = TrainConfig {
+            strategy: if spec.partition { Strategy::Improved } else { Strategy::Baseline },
+            n_b: if spec.data_parallel { 4 } else { 1 },
+            n_l: spec.n_l,
+            n_a: 1,
+            n_mu: spec.n_mu,
+            b_mu: 1.0,
+            offload: false,
+            partition: spec.partition,
+        };
+        let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &cluster);
+        for s in generated(&spec) {
+            let p = lower(&s).unwrap();
+            let r = simulate_program(&p, &costs);
+            assert!(r.makespan.is_finite() && r.makespan > 0.0, "{} {spec:?}", s.name);
+            assert!(r.compute_efficiency() > 0.0 && r.compute_efficiency() <= 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn program_edges_are_within_arena_and_acyclicity_witness_exists() {
+    // Structural sanity on a large program: every edge endpoint is a
+    // valid arena id, and a topological order exists (spot-checked by
+    // following each pred's id being executable before its consumer in
+    // *some* order — lowering already ran Kahn; here we just re-verify
+    // the CSR symmetry).
+    let spec = ScheduleSpec { d_l: 160, n_l: 5, n_mu: 10, partition: true, data_parallel: true };
+    let p = lower(&modular_pipeline(&spec)).unwrap();
+    let n = p.len() as u32;
+    let mut pred_edge_count = 0usize;
+    for id in 0..n {
+        for &x in p.preds_of(id) {
+            assert!(x < n);
+            assert!(p.succs_of(x).contains(&id));
+            pred_edge_count += 1;
+        }
+    }
+    assert_eq!(pred_edge_count, p.n_edges());
+}
