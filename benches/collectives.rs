@@ -5,6 +5,7 @@ use std::thread;
 use std::time::Instant;
 
 use lga_mpp::collective::ring_group;
+use lga_mpp::report::BenchJson;
 
 fn bench_all_reduce(n: usize, len: usize, iters: usize) -> f64 {
     let comms = ring_group(n);
@@ -25,6 +26,7 @@ fn bench_all_reduce(n: usize, len: usize, iters: usize) -> f64 {
 }
 
 fn main() {
+    let mut json = BenchJson::new("collectives");
     println!("{:>6} {:>12} {:>12} {:>12}", "ranks", "elements", "ms/op", "GB/s eff");
     for n in [2usize, 4, 8] {
         for len in [1 << 14, 1 << 18, 1 << 22] {
@@ -40,6 +42,8 @@ fn main() {
                 secs * 1e3,
                 bytes / secs / 1e9
             );
+            json.push(&format!("gbps.ranks{n}.len{len}"), bytes / secs / 1e9);
         }
     }
+    json.finish();
 }

@@ -8,6 +8,7 @@ use std::time::Instant;
 use lga_mpp::costmodel::{Strategy, TrainConfig};
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
 use lga_mpp::schedule::{layered_ga, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
 use lga_mpp::sim::{simulate, CostTable};
 
@@ -26,6 +27,7 @@ fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
 }
 
 fn main() {
+    let mut json = BenchJson::new("fig1_schedules");
     // --- Figure 1: reduction overlap ------------------------------------
     let spec = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: false, data_parallel: true };
     let c = costs(8, 1, 8, false);
@@ -40,6 +42,8 @@ fn main() {
         rl.makespan * 1e3
     );
     assert!(rl.exposed_network_tail() < rs.exposed_network_tail() * 0.3);
+    json.push("fig1_standard_tail_secs", rs.exposed_network_tail());
+    json.push("fig1_layered_tail_secs", rl.exposed_network_tail());
 
     // --- Figure 2: partition traffic ------------------------------------
     let spec_p = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: true, data_parallel: true };
@@ -80,10 +84,11 @@ fn main() {
     let sched = modular_pipeline(&big);
     let n_ops = sched.len();
     let mut best = f64::MAX;
+    let mut big_makespan = 0.0f64;
     for _ in 0..5 {
         let t0 = Instant::now();
         let r = simulate(&sched, &cb);
-        std::hint::black_box(r.makespan);
+        big_makespan = std::hint::black_box(r.makespan);
         best = best.min(t0.elapsed().as_secs_f64());
     }
     println!(
@@ -91,4 +96,8 @@ fn main() {
         best * 1e3,
         n_ops as f64 / best / 1e6
     );
+    json.push("fig3_modular_bubble", rm.bubble_fraction());
+    json.push("sim_x160_mops_per_sec", n_ops as f64 / best / 1e6);
+    json.push("sim_x160_makespan_secs", big_makespan);
+    json.finish();
 }

@@ -6,18 +6,20 @@ use std::time::Instant;
 
 use lga_mpp::costmodel::Strategy;
 use lga_mpp::hardware::ClusterSpec;
-use lga_mpp::report::{ascii_plot, scaling_figure, Series};
+use lga_mpp::report::{ascii_plot, scaling_figure, BenchJson, Series};
 
 fn main() {
+    let mut json = BenchJson::new("fig45_scaling");
     let max_x = 320;
-    for (cluster, name) in [
-        (ClusterSpec::reference(), "Figure 4 (node <= 16, InfiniBand)"),
-        (ClusterSpec::unlimited_node(), "Figure 5 (no node-size limit)"),
-        (ClusterSpec::ethernet(), "Figure 8 (25 Gb/s Ethernet)"),
+    for (cluster, name, tag) in [
+        (ClusterSpec::reference(), "Figure 4 (node <= 16, InfiniBand)", "fig4"),
+        (ClusterSpec::unlimited_node(), "Figure 5 (no node-size limit)", "fig5"),
+        (ClusterSpec::ethernet(), "Figure 8 (25 Gb/s Ethernet)", "fig8"),
     ] {
         let t0 = Instant::now();
         let fig = scaling_figure(&cluster, name, max_x);
         let dt = t0.elapsed().as_secs_f64();
+        json.push(&format!("sweep_secs.{tag}"), dt);
         println!("== {name} ==  (sweep took {dt:.2}s)");
         let series: Vec<(&str, &Series)> =
             fig.time_days.iter().map(|(s, v)| (s.name(), v)).collect();
@@ -46,5 +48,7 @@ fn main() {
             t(Strategy::Improved),
             t(Strategy::Baseline)
         );
+        json.push(&format!("improved_days_at_max.{tag}"), t(Strategy::Improved));
     }
+    json.finish();
 }

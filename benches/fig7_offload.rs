@@ -4,13 +4,15 @@
 use std::time::Instant;
 
 use lga_mpp::hardware::{ClusterSpec, LinkKind};
-use lga_mpp::report::{ascii_plot, figure6, figure7, Series};
+use lga_mpp::report::{ascii_plot, figure6, figure7, BenchJson, Series};
 
 fn main() {
+    let mut json = BenchJson::new("fig7_offload");
     let cluster = ClusterSpec::reference();
 
     let t0 = Instant::now();
     let f6 = figure6(&cluster, 640);
+    json.push("figure6_sweep_secs", t0.elapsed().as_secs_f64());
     println!("== Figure 6: memory/compute ratio for one-month training ({:.2}s) ==", t0.elapsed().as_secs_f64());
     println!("{}", ascii_plot(&[("bytes per flop/s", &f6)], 72, 16, "memory/compute"));
     // No memory wall: the ratio falls with scale.
@@ -21,6 +23,7 @@ fn main() {
 
     let t0 = Instant::now();
     let pts = figure7(&cluster, 640);
+    json.push("figure7_sweep_secs", t0.elapsed().as_secs_f64());
     println!("\n== Figure 7: offload arithmetic intensity ({:.2}s) ==", t0.elapsed().as_secs_f64());
     let state: Series = pts.iter().map(|&(x, s, _)| (x, s)).collect();
     let ckpt: Series = pts.iter().map(|&(x, _, c)| (x, c)).collect();
@@ -42,4 +45,6 @@ fn main() {
     let hdd = LinkKind::DiskHdd.intensity_threshold(&gpu);
     let x160 = pts.iter().find(|&&(x, _, _)| x >= 160).unwrap();
     assert!(x160.1 > hdd);
+    json.push("x160_state_intensity_flops_per_byte", x160.1);
+    json.finish();
 }

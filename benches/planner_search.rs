@@ -1,0 +1,153 @@
+//! Perf bench for the pruned/parallel planner (and the simulator's
+//! allocation-free hot path).
+//!
+//! Headline: the Figure-4/5-scale sweep — `sweep_xs(160)` × 3 strategies
+//! on the reference cluster — run twice: once through the retained
+//! serial exhaustive reference (`search_fastest_exhaustive`, the
+//! pre-refactor cost), once through the pruned + parallel
+//! `search_fastest` fan-out. Target: ≥ 5× on a multi-core runner, with
+//! *identical plans* (checked here, not just in the tests).
+//!
+//! Second act: `simulate_program` with `record_timeline: false` and a
+//! reused `SimScratch` must allocate nothing after warmup — measured
+//! with a counting global allocator, asserted to be exactly zero bytes.
+//!
+//! Results land in `BENCH_planner_search.json` (serial vs parallel =
+//! the before/after entry). Run via `cargo bench --bench planner_search`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::{sweep_xs, XModel};
+use lga_mpp::planner::{par_map, planner_threads, search_fastest, search_fastest_exhaustive};
+use lga_mpp::report::{menu_for, BenchJson};
+use lga_mpp::schedule::{lower, modular_pipeline, ScheduleSpec};
+use lga_mpp::sim::{simulate_program_into, CostTable, SimOptions, SimScratch};
+
+/// Counts every allocation so the hot-path audit can assert zero.
+struct CountingAlloc;
+
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn main() {
+    let cluster = ClusterSpec::reference();
+    let xs = sweep_xs(160);
+    let mut json = BenchJson::new("planner_search");
+    json.push("threads", planner_threads() as f64);
+    json.push("sweep_points", (xs.len() * Strategy::ALL.len()) as f64);
+
+    // ---- planner sweep: serial exhaustive baseline ("before") ----------
+    let t0 = Instant::now();
+    let mut baseline = Vec::new();
+    for &s in &Strategy::ALL {
+        for &x in &xs {
+            baseline.push(search_fastest_exhaustive(&XModel::new(x), &cluster, s, menu_for(s)));
+        }
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    // ---- planner sweep: pruned + parallel ("after") ---------------------
+    let tasks: Vec<(Strategy, usize)> =
+        Strategy::ALL.iter().flat_map(|&s| xs.iter().map(move |&x| (s, x))).collect();
+    let t0 = Instant::now();
+    let fast = par_map(&tasks, |_, &(s, x)| search_fastest(&XModel::new(x), &cluster, s, menu_for(s)));
+    let parallel_secs = t0.elapsed().as_secs_f64();
+
+    // Parity at bench time: identical plans, point for point.
+    let mut mismatches = 0usize;
+    for (slow, quick) in baseline.iter().zip(&fast) {
+        match (slow, quick) {
+            (None, None) => {}
+            (Some(a), Some(b)) if a.cfg == b.cfg => {}
+            _ => mismatches += 1,
+        }
+    }
+    let speedup = serial_secs / parallel_secs;
+    println!("== planner sweep: sweep_xs(160) × 3 strategies, reference cluster ==");
+    println!(
+        "  serial exhaustive {serial_secs:.3} s | pruned+parallel {parallel_secs:.3} s | \
+         speedup {speedup:.1}x on {} threads (target >= 5x on a multi-core runner)",
+        planner_threads()
+    );
+    println!("  plan mismatches vs baseline: {mismatches} (must be 0)");
+    assert_eq!(mismatches, 0, "optimised search diverged from the exhaustive reference");
+    json.push("serial_exhaustive_secs", serial_secs);
+    json.push("pruned_parallel_secs", parallel_secs);
+    json.push("speedup", speedup);
+
+    // ---- simulator hot path: zero allocations after warmup --------------
+    let spec =
+        ScheduleSpec { d_l: 128, n_l: 32, n_mu: 128, partition: false, data_parallel: true };
+    let cfg = TrainConfig {
+        strategy: Strategy::Baseline,
+        n_b: 8,
+        n_l: 32,
+        n_a: 1,
+        n_mu: 128,
+        b_mu: 1.0,
+        offload: false,
+        partition: false,
+    };
+    let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
+    let program = lower(&modular_pipeline(&spec)).expect("lowers");
+    let opts = SimOptions { record_timeline: false };
+    let mut scratch = SimScratch::new();
+    for _ in 0..3 {
+        let r = simulate_program_into(&program, &costs, opts, &mut scratch);
+        scratch.recycle(r);
+    }
+    let bytes_before = ALLOC_BYTES.load(Ordering::Relaxed);
+    let calls_before = ALLOC_CALLS.load(Ordering::Relaxed);
+    let iters = 50u32;
+    let t0 = Instant::now();
+    let mut makespan = 0.0f64;
+    for _ in 0..iters {
+        let r = simulate_program_into(&program, &costs, opts, &mut scratch);
+        makespan = r.makespan;
+        scratch.recycle(r);
+    }
+    let sim_secs = t0.elapsed().as_secs_f64() / iters as f64;
+    let bytes = ALLOC_BYTES.load(Ordering::Relaxed) - bytes_before;
+    let calls = ALLOC_CALLS.load(Ordering::Relaxed) - calls_before;
+    let mops = program.len() as f64 / sim_secs / 1e6;
+    println!("\n== simulator hot path: planner config (128L/32S/128mb, timeline off) ==");
+    println!(
+        "  {} ops | {:.3} ms/run | {:.2} M ops/s | makespan {:.3} ms",
+        program.len(),
+        sim_secs * 1e3,
+        mops,
+        makespan * 1e3
+    );
+    println!("  heap after warmup: {bytes} bytes / {calls} allocations over {iters} runs (target 0)");
+    assert_eq!(bytes, 0, "simulator hot path allocated after warmup");
+    json.push("sim_ops", program.len() as f64);
+    json.push("sim_mops_per_sec", mops);
+    json.push("sim_makespan_secs", makespan);
+    json.push("sim_alloc_bytes_after_warmup", bytes as f64);
+    json.push("sim_allocs_after_warmup", calls as f64);
+
+    json.finish();
+}

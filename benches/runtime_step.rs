@@ -4,9 +4,11 @@
 //! Run via `cargo bench --bench runtime_step` (needs `make artifacts`).
 
 use lga_mpp::optim::LrSchedule;
+use lga_mpp::report::BenchJson;
 use lga_mpp::trainer::{train, Policy, TrainerConfig};
 
-fn run(policy: Policy, n_b: usize, n_l: usize, n_mu: usize, partition: bool) {
+/// Returns the measured ms/step (None when artifacts are missing).
+fn run(policy: Policy, n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> Option<f64> {
     let mut cfg = TrainerConfig::quick("tiny");
     cfg.steps = 10;
     cfg.n_b = n_b;
@@ -29,23 +31,38 @@ fn run(policy: Policy, n_b: usize, n_l: usize, n_mu: usize, partition: bool) {
                 r.execute_calls,
                 r.collective_elems_sent as f64 / 1e6,
             );
+            Some(step_ms)
         }
-        Err(e) => println!("skipped ({e:#})"),
+        Err(e) => {
+            println!("skipped ({e:#})");
+            None
+        }
     }
 }
 
 fn main() {
+    let mut json = BenchJson::new("runtime_step");
     if !TrainerConfig::quick("tiny").artifacts_root.join("tiny/manifest.json").exists() {
         println!("artifacts missing — run `make artifacts` first");
+        json.push("skipped_missing_artifacts", 1.0);
+        json.finish();
         return;
     }
     println!("== trainer step latency (tiny preset, 10-step runs) ==");
-    run(Policy::Improved, 1, 1, 2, false);
-    run(Policy::Baseline, 1, 1, 2, false);
-    run(Policy::Improved, 2, 1, 4, false);
-    run(Policy::Improved, 2, 1, 4, true);
-    run(Policy::Baseline, 2, 1, 4, true);
-    run(Policy::Improved, 2, 2, 4, true);
-    run(Policy::Baseline, 2, 2, 4, false);
-    run(Policy::OneFOneB, 2, 2, 4, false);
+    let cases: [(Policy, usize, usize, usize, bool); 8] = [
+        (Policy::Improved, 1, 1, 2, false),
+        (Policy::Baseline, 1, 1, 2, false),
+        (Policy::Improved, 2, 1, 4, false),
+        (Policy::Improved, 2, 1, 4, true),
+        (Policy::Baseline, 2, 1, 4, true),
+        (Policy::Improved, 2, 2, 4, true),
+        (Policy::Baseline, 2, 2, 4, false),
+        (Policy::OneFOneB, 2, 2, 4, false),
+    ];
+    for (policy, n_b, n_l, n_mu, partition) in cases {
+        let key = format!("step_ms.{}.dp{n_b}_pp{n_l}_mb{n_mu}_part{partition}", policy.name());
+        let step_ms = run(policy, n_b, n_l, n_mu, partition);
+        json.push(&key, step_ms.unwrap_or(f64::NAN));
+    }
+    json.finish();
 }

@@ -15,6 +15,7 @@ use std::time::Instant;
 use lga_mpp::costmodel::{Strategy, TrainConfig};
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
 use lga_mpp::schedule::{
     interleaved_1f1b, interleaved_applicable, lower, modular_pipeline, one_f_one_b, standard_ga,
     Schedule, ScheduleSpec,
@@ -52,6 +53,7 @@ fn bench_one(name: &str, sched: &Schedule, costs: &CostTable) -> f64 {
 }
 
 fn main() {
+    let mut json = BenchJson::new("schedule_program");
     let cluster = ClusterSpec::reference();
     let mk_costs = |n_l: usize, n_mu: usize, part: bool| {
         let cfg = TrainConfig {
@@ -98,4 +100,6 @@ fn main() {
     println!(
         "\nworst-case precompiled simulator throughput: {worst:.2} M ops/s (seed engine target: 1.0)"
     );
+    json.push("acceptance_worst_exec_mops_per_sec", worst);
+    json.finish();
 }

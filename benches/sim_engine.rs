@@ -15,6 +15,7 @@ use std::time::Instant;
 use lga_mpp::costmodel::{Strategy, TrainConfig};
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
 use lga_mpp::schedule::{lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
 use lga_mpp::sim::{simulate, simulate_program, CostTable};
 
@@ -29,6 +30,7 @@ fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
 }
 
 fn main() {
+    let mut json = BenchJson::new("sim_engine");
     let cluster = ClusterSpec::reference();
     let cases: Vec<(&str, usize, usize, usize, bool)> = vec![
         ("small  (16L/4S/8mb)", 16, 4, 8, false),
@@ -68,6 +70,7 @@ fn main() {
             let full_t = best_of(5, || simulate(&sched, &costs).makespan);
             let mops = n_ops as f64 / full_t / 1e6;
             worst = worst.min(mops);
+            json.push(&format!("mops.{policy}.{}L_{}S_{}mb", d_l, n_l, n_mu), mops);
             println!(
                 "{:<30} {:>8} {:>9.3} {:>9.3} {:>9.3} {:>10.2}  [{policy}]",
                 name,
@@ -80,4 +83,6 @@ fn main() {
         }
     }
     println!("\nworst-case throughput: {worst:.2} M ops/s (target >= 1.0)");
+    json.push("worst_mops_per_sec", worst);
+    json.finish();
 }

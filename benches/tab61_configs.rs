@@ -11,8 +11,9 @@ use std::time::Instant;
 use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
 use lga_mpp::report;
+use lga_mpp::report::BenchJson;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     let mut best = f64::MAX;
     for _ in 0..iters {
         let t0 = Instant::now();
@@ -20,9 +21,11 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
         best = best.min(t0.elapsed().as_secs_f64());
     }
     println!("[bench] {name}: best of {iters} = {:.3} ms", best * 1e3);
+    best
 }
 
 fn main() {
+    let mut json = BenchJson::new("tab61_configs");
     let model = XModel::x160();
     let cluster = ClusterSpec::reference();
 
@@ -44,11 +47,15 @@ fn main() {
     let speedup = days(base_3d) / days(improved_3d);
     println!("3d speedup improved vs baseline: {speedup:.2}x (paper: 13 d / 6.8 d = 1.9x)");
     assert!(speedup > 1.6);
+    json.push("improved_vs_baseline_3d_speedup", speedup);
 
-    bench("table 6.1 (9 closed-form plans)", 20, || {
+    let t61_secs = bench("table 6.1 (9 closed-form plans)", 20, || {
         std::hint::black_box(report::table61(&model, &cluster));
     });
-    bench("table 6.3 (7 constrained searches)", 3, || {
+    json.push("table61_best_secs", t61_secs);
+    let t63_secs = bench("table 6.3 (7 constrained searches)", 3, || {
         std::hint::black_box(report::table63(&model, &cluster));
     });
+    json.push("table63_best_secs", t63_secs);
+    json.finish();
 }

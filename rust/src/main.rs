@@ -109,7 +109,7 @@ usage:
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
               [--artifacts DIR]
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
-             [--budget-days D]
+             [--budget-days D] [--no-sim]
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -325,7 +325,29 @@ fn cmd_plan(args: &Args) -> Result<()> {
         return Ok(());
     }
     match search_fastest(&model, &cluster, strategy, menu) {
-        Some(p) => println!("{}", report::explain(&model, &cluster, &p.cfg)),
+        Some(p) => {
+            println!("{}", report::explain(&model, &cluster, &p.cfg));
+            if !args.has("no-sim") {
+                // Simulate-in-the-loop, on by default now that the planner
+                // is fast: re-rank the searched plan against the §5
+                // closed-form plan by actually executing their schedules
+                // on the discrete-event engine (lowering served from the
+                // global cache).
+                let mut cands = vec![p];
+                cands.extend(lga_mpp::planner::fastest_plan(&model, &cluster, strategy, menu));
+                if let Some(best) = lga_mpp::planner::rank_by_simulation(&model, &cluster, &cands)
+                {
+                    println!(
+                        "simulated winner: {:?}\n  makespan {:.3} ms per batch-instance | \
+                         sim efficiency {:.3} | {:.3e} s/sequence",
+                        best.plan.cfg,
+                        best.makespan * 1e3,
+                        best.sim_efficiency,
+                        best.secs_per_sequence,
+                    );
+                }
+            }
+        }
         None => println!("no feasible plan"),
     }
     Ok(())

@@ -1,0 +1,200 @@
+//! Schedule-lowering cache: snapped spec → `Arc<ScheduleProgram>`.
+//!
+//! `simloop::lower_plan` snaps a planner configuration to an executable
+//! schedule shape before lowering it, and *many* candidate configurations
+//! collapse to the same snapped shape (the snap quantises n_l to a
+//! divisor of d_l and n_μ to at least n_l, and the generator ignores n_a,
+//! n_b and b_μ entirely — those only price the cost table). Re-lowering
+//! the identical schedule for every candidate made `rank_by_simulation`
+//! O(candidates × lowering); this memo makes it O(distinct shapes ×
+//! lowering + candidates × simulation).
+//!
+//! The cache is keyed by ([`PolicyKind`], the [`ScheduleSpec`] fields) and
+//! hands out `Arc`s, so concurrent ranking threads share one immutable
+//! program. Misses lower outside the lock — racing builders are
+//! idempotent and the first insert wins.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::costmodel::Strategy;
+use crate::schedule::{
+    layered_ga, lower, modular_pipeline, standard_ga, Schedule, ScheduleProgram, ScheduleSpec,
+};
+
+/// Which generator a planner configuration executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PolicyKind {
+    /// Standard gradient accumulation / contiguous pipeline (baseline).
+    StandardGa,
+    /// Layered gradient accumulation, single stage.
+    LayeredGa,
+    /// Layered accumulation over the modular pipeline split.
+    ModularPipeline,
+}
+
+impl PolicyKind {
+    /// The generator a snapped planner config runs: baseline plans run
+    /// standard GA / the contiguous pipeline; improved and partitioned
+    /// plans run layered accumulation (modular pipeline when staged).
+    pub fn for_config(strategy: Strategy, n_l: usize) -> PolicyKind {
+        match (strategy, n_l) {
+            (Strategy::Baseline, _) => PolicyKind::StandardGa,
+            (_, 1) => PolicyKind::LayeredGa,
+            (_, _) => PolicyKind::ModularPipeline,
+        }
+    }
+
+    /// Generate the schedule this policy emits for a spec.
+    pub fn generate(self, spec: &ScheduleSpec) -> Schedule {
+        match self {
+            PolicyKind::StandardGa => standard_ga(spec),
+            PolicyKind::LayeredGa => layered_ga(spec),
+            PolicyKind::ModularPipeline => modular_pipeline(spec),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    kind: PolicyKind,
+    d_l: usize,
+    n_l: usize,
+    n_mu: usize,
+    partition: bool,
+    data_parallel: bool,
+}
+
+impl Key {
+    fn new(kind: PolicyKind, spec: &ScheduleSpec) -> Key {
+        Key {
+            kind,
+            d_l: spec.d_l,
+            n_l: spec.n_l,
+            n_mu: spec.n_mu,
+            partition: spec.partition,
+            data_parallel: spec.data_parallel,
+        }
+    }
+}
+
+/// Generational size cap: past this many distinct shapes the map is
+/// cleared wholesale (the planner's working set per sweep is far
+/// smaller; the cap only bounds pathological long-running processes).
+const MAX_ENTRIES: usize = 512;
+
+/// Memo of lowered schedule programs. Use [`LoweringCache::global`] for
+/// the process-wide instance the planner shares, or construct a local
+/// one for isolation (tests, one-shot tools).
+#[derive(Debug, Default)]
+pub struct LoweringCache {
+    map: Mutex<HashMap<Key, Arc<ScheduleProgram>>>,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl LoweringCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide cache.
+    pub fn global() -> &'static LoweringCache {
+        static GLOBAL: OnceLock<LoweringCache> = OnceLock::new();
+        GLOBAL.get_or_init(LoweringCache::new)
+    }
+
+    /// Generate + lower `spec` under `kind`, or return the memoised
+    /// program. Panics only if a generated schedule fails to lower —
+    /// generators produce lowerable schedules by construction.
+    pub fn lower(&self, kind: PolicyKind, spec: &ScheduleSpec) -> Arc<ScheduleProgram> {
+        let key = Key::new(kind, spec);
+        if let Some(hit) = self.map.lock().expect("lowering cache poisoned").get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(hit);
+        }
+        // Miss: generate + lower outside the lock (it can be many
+        // milliseconds for deep programs). Racing threads may build the
+        // same program; the first insert wins and the losers drop theirs.
+        let program = Arc::new(
+            lower(&kind.generate(spec)).expect("generated schedules always lower"),
+        );
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().expect("lowering cache poisoned");
+        if map.len() >= MAX_ENTRIES {
+            map.clear();
+        }
+        Arc::clone(map.entry(key).or_insert(program))
+    }
+
+    /// Cache hits so far (lifetime of this cache instance).
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses (= lowerings actually performed).
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Distinct programs currently held.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("lowering cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(n_l: usize, n_mu: usize) -> ScheduleSpec {
+        ScheduleSpec { d_l: 16, n_l, n_mu, partition: true, data_parallel: true }
+    }
+
+    #[test]
+    fn identical_specs_share_one_program() {
+        let cache = LoweringCache::new();
+        let a = cache.lower(PolicyKind::ModularPipeline, &spec(4, 8));
+        let b = cache.lower(PolicyKind::ModularPipeline, &spec(4, 8));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_policies_and_shapes_get_distinct_programs() {
+        let cache = LoweringCache::new();
+        let a = cache.lower(PolicyKind::ModularPipeline, &spec(4, 8));
+        let b = cache.lower(PolicyKind::StandardGa, &spec(4, 8));
+        let c = cache.lower(PolicyKind::ModularPipeline, &spec(4, 16));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.misses(), 3);
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn cached_program_matches_a_fresh_lowering() {
+        let cache = LoweringCache::new();
+        let cached = cache.lower(PolicyKind::LayeredGa, &spec(1, 8));
+        let fresh = lower(&layered_ga(&spec(1, 8))).unwrap();
+        assert_eq!(cached.len(), fresh.len());
+        assert_eq!(cached.n_edges(), fresh.n_edges());
+        assert_eq!(cached.name, fresh.name);
+    }
+
+    #[test]
+    fn policy_kind_follows_strategy_and_stage_count() {
+        assert_eq!(PolicyKind::for_config(Strategy::Baseline, 4), PolicyKind::StandardGa);
+        assert_eq!(PolicyKind::for_config(Strategy::Baseline, 1), PolicyKind::StandardGa);
+        assert_eq!(PolicyKind::for_config(Strategy::Improved, 1), PolicyKind::LayeredGa);
+        assert_eq!(PolicyKind::for_config(Strategy::Partitioned, 1), PolicyKind::LayeredGa);
+        assert_eq!(PolicyKind::for_config(Strategy::Improved, 4), PolicyKind::ModularPipeline);
+    }
+}

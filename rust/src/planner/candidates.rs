@@ -1,0 +1,394 @@
+//! Candidate enumeration for the planner's grid search.
+//!
+//! The pre-refactor `search_fastest` interleaved enumeration and
+//! evaluation in six nested loops. This module factors the enumeration
+//! out as a lazy iterator over the (n_a, n_l, n_μ, b_μ, offload,
+//! partition) grid that yields candidates in the *exact order* the old
+//! loops visited them (the parity tests rely on this), applying only the
+//! cheap structural filters on the way:
+//!
+//! * the §5 rule that the partitioned strategy forgoes pipelining (whole
+//!   n_l rows skipped without materialising their grid points);
+//! * the critical-batch budget — a data-parallel degree is derived from
+//!   b_c and candidates overshooting the budget are dropped;
+//! * `TrainConfig::validate` consistency.
+//!
+//! Everything expensive — the memory breakdown, the full cost-model
+//! estimate — happens downstream in `search.rs`, where it can be
+//! pre-filtered (memory lower bound), branch-and-bound pruned
+//! ([`optimistic_secs`]) and fanned out across threads.
+
+use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use crate::hardware::ClusterSpec;
+use crate::model::{XModel, TRAINING_STEPS};
+
+use super::rules::max_tensor_parallel;
+
+/// Candidate micro-batch sizes tried by the search.
+pub(crate) const B_MU_CANDIDATES: [f64; 7] = [1.0, 2.0, 4.0, 5.0, 8.0, 16.0, 32.0];
+
+/// Multipliers applied to max(n_l, 1) to get the micro-batch count.
+pub(crate) const N_MU_FACTORS: [f64; 8] = [1.0, 1.05, 1.1, 1.25, 1.5, 2.0, 4.0, 8.0];
+
+/// Lazy, ordered enumeration of the search grid for one
+/// (strategy, menu) pair on a cluster.
+pub struct Candidates {
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    /// Critical batch size b_c (the batch budget).
+    bc: f64,
+    n_a: Vec<usize>,
+    n_l: Vec<usize>,
+    /// (offload, partition) pairs in legacy order: offload outer,
+    /// strategy-dependent partition list inner.
+    variants: Vec<(bool, bool)>,
+    /// n_μ candidates for the current (n_l, factor) point.
+    extra: Vec<usize>,
+    // Odometer indices, outermost to innermost.
+    ia: usize,
+    il: usize,
+    ifac: usize,
+    iex: usize,
+    ibmu: usize,
+    ivar: usize,
+    done: bool,
+}
+
+impl Candidates {
+    pub fn new(
+        model: &XModel,
+        cluster: &ClusterSpec,
+        strategy: Strategy,
+        menu: ParallelismMenu,
+    ) -> Self {
+        let shape = model.shape();
+        let d_l = shape.d_l;
+        let bc = model.critical_batch_size();
+
+        let n_a_max = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+        let n_a = {
+            let mut v = vec![1usize, 2, 4, 8, 16, 32, 64, 128];
+            v.retain(|&a| a <= n_a_max);
+            if !v.contains(&n_a_max) {
+                v.push(n_a_max);
+            }
+            v
+        };
+
+        let n_l = if menu.pipeline {
+            let mut v: Vec<usize> = [
+                1usize, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 40, 48, 64, 80, 96, 128, 160,
+                192, 256,
+            ]
+            .iter()
+            .copied()
+            .filter(|&l| l <= d_l)
+            .collect();
+            if !v.contains(&d_l) {
+                v.push(d_l);
+            }
+            v
+        } else {
+            vec![1]
+        };
+
+        let partitions: &[bool] = match strategy {
+            Strategy::Baseline => &[false],
+            Strategy::Partitioned => &[true],
+            // §8.3: for small models the improved method may skip the
+            // partition for extra speed.
+            Strategy::Improved => &[true, false],
+        };
+        let variants: Vec<(bool, bool)> = [false, true]
+            .into_iter()
+            .flat_map(|o| partitions.iter().map(move |&p| (o, p)))
+            .collect();
+
+        let done = n_a.is_empty() || n_l.is_empty();
+        let extra = if done { Vec::new() } else { extra_n_mu(n_l[0], N_MU_FACTORS[0]) };
+        Candidates {
+            strategy,
+            menu,
+            bc,
+            n_a,
+            n_l,
+            variants,
+            extra,
+            ia: 0,
+            il: 0,
+            ifac: 0,
+            iex: 0,
+            ibmu: 0,
+            ivar: 0,
+            done,
+        }
+    }
+
+    /// Build the config at the current grid point, or `None` when the
+    /// structural filters reject it.
+    fn current(&self) -> Option<TrainConfig> {
+        let n_a = self.n_a[self.ia];
+        let n_l = self.n_l[self.il];
+        let n_mu = self.extra[self.iex];
+        let b_mu = B_MU_CANDIDATES[self.ibmu];
+        let (offload, partition) = self.variants[self.ivar];
+        // Derive the data-parallel degree from the critical-batch budget.
+        let n_b = if self.menu.data {
+            ((self.bc / (n_mu as f64 * b_mu)).floor() as usize).max(1)
+        } else {
+            1
+        };
+        if self.menu.data && (n_b as f64) * (n_mu as f64) * b_mu > self.bc * 1.001 {
+            return None; // overshoots the batch budget
+        }
+        let cfg =
+            TrainConfig { strategy: self.strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition };
+        cfg.validate().ok()?;
+        Some(cfg)
+    }
+
+    /// Advance the odometer one grid point (innermost index first).
+    fn advance(&mut self) {
+        self.ivar += 1;
+        if self.ivar < self.variants.len() {
+            return;
+        }
+        self.ivar = 0;
+        self.ibmu += 1;
+        if self.ibmu < B_MU_CANDIDATES.len() {
+            return;
+        }
+        self.ibmu = 0;
+        self.iex += 1;
+        if self.iex < self.extra.len() {
+            return;
+        }
+        self.iex = 0;
+        self.ifac += 1;
+        if self.ifac < N_MU_FACTORS.len() {
+            self.refresh_extra();
+            return;
+        }
+        self.ifac = 0;
+        self.bump_n_l();
+    }
+
+    /// Move to the next n_l row (resetting every inner index).
+    fn bump_n_l(&mut self) {
+        self.ivar = 0;
+        self.ibmu = 0;
+        self.iex = 0;
+        self.ifac = 0;
+        self.il += 1;
+        if self.il >= self.n_l.len() {
+            self.il = 0;
+            self.ia += 1;
+            if self.ia >= self.n_a.len() {
+                self.done = true;
+                return;
+            }
+        }
+        self.refresh_extra();
+    }
+
+    fn refresh_extra(&mut self) {
+        self.extra = extra_n_mu(self.n_l[self.il], N_MU_FACTORS[self.ifac]);
+    }
+}
+
+/// The n_μ candidates for one (n_l, factor) point: the factored count,
+/// plus large plain gradient-accumulation depths when there is no
+/// pipeline.
+fn extra_n_mu(n_l: usize, factor: f64) -> Vec<usize> {
+    let n_mu_base = ((n_l as f64 * factor).round() as usize).max(1);
+    if n_l == 1 {
+        vec![n_mu_base, 2, 8, 32, 128, 512]
+    } else {
+        vec![n_mu_base]
+    }
+}
+
+impl Iterator for Candidates {
+    type Item = TrainConfig;
+
+    fn next(&mut self) -> Option<TrainConfig> {
+        while !self.done {
+            // §5: the partitioned approach forgoes pipelining — skip the
+            // whole n_l row in one step.
+            if self.strategy == Strategy::Partitioned && self.n_l[self.il] > 1 {
+                self.bump_n_l();
+                continue;
+            }
+            let candidate = self.current();
+            self.advance();
+            if let Some(cfg) = candidate {
+                return Some(cfg);
+            }
+        }
+        None
+    }
+}
+
+/// Compute-only lower bound on a candidate's training time: the total
+/// training flops at perfect efficiency on the candidate's GPU count.
+/// `costmodel::estimate` divides the same flops by
+/// (n_gpu · peak · efficiency) with efficiency ≤ 1 (every overhead term
+/// is non-negative), so this bound can never exceed the real estimate —
+/// which is what makes the branch-and-bound cutoff in `search.rs` safe.
+pub(crate) fn optimistic_secs(model: &XModel, cfg: &TrainConfig, cluster: &ClusterSpec) -> f64 {
+    let b_eff = cfg.batch_size().max(model.critical_batch_size());
+    model.training_flops(b_eff, TRAINING_STEPS) / (cfg.n_gpu() as f64 * cluster.gpu.peak_flops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel::estimate;
+
+    /// Literal transcription of the pre-refactor nested loops, kept as a
+    /// fixture: the iterator must reproduce this sequence exactly.
+    fn legacy_order(
+        model: &XModel,
+        cluster: &ClusterSpec,
+        strategy: Strategy,
+        menu: ParallelismMenu,
+    ) -> Vec<TrainConfig> {
+        let shape = model.shape();
+        let d_l = shape.d_l;
+        let bc = model.critical_batch_size();
+        let n_a_max = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
+        let n_a_candidates: Vec<usize> = {
+            let mut v = vec![1usize, 2, 4, 8, 16, 32, 64, 128];
+            v.retain(|&a| a <= n_a_max);
+            if !v.contains(&n_a_max) {
+                v.push(n_a_max);
+            }
+            v
+        };
+        let n_l_candidates: Vec<usize> = if menu.pipeline {
+            let mut v: Vec<usize> = [
+                1usize, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 40, 48, 64, 80, 96, 128, 160,
+                192, 256,
+            ]
+            .iter()
+            .copied()
+            .filter(|&l| l <= d_l)
+            .collect();
+            if !v.contains(&d_l) {
+                v.push(d_l);
+            }
+            v
+        } else {
+            vec![1]
+        };
+        let mut out = Vec::new();
+        for &n_a in &n_a_candidates {
+            for &n_l in &n_l_candidates {
+                if strategy == Strategy::Partitioned && n_l > 1 {
+                    continue;
+                }
+                for &f in &N_MU_FACTORS {
+                    let n_mu_base = ((n_l as f64 * f).round() as usize).max(1);
+                    let extra: Vec<usize> = if n_l == 1 {
+                        vec![n_mu_base, 2, 8, 32, 128, 512]
+                    } else {
+                        vec![n_mu_base]
+                    };
+                    for n_mu in extra {
+                        for &b_mu in &B_MU_CANDIDATES {
+                            let n_b = if menu.data {
+                                ((bc / (n_mu as f64 * b_mu)).floor() as usize).max(1)
+                            } else {
+                                1
+                            };
+                            if (n_b as f64) * (n_mu as f64) * b_mu > bc * 1.001 && menu.data {
+                                continue;
+                            }
+                            let partitions: &[bool] = match strategy {
+                                Strategy::Baseline => &[false],
+                                Strategy::Partitioned => &[true],
+                                Strategy::Improved => &[true, false],
+                            };
+                            for (offload, &partition) in [false, true]
+                                .into_iter()
+                                .flat_map(|o| partitions.iter().map(move |p| (o, p)))
+                            {
+                                let cfg = TrainConfig {
+                                    strategy,
+                                    n_b,
+                                    n_l,
+                                    n_a,
+                                    n_mu,
+                                    b_mu,
+                                    offload,
+                                    partition,
+                                };
+                                if cfg.validate().is_err() {
+                                    continue;
+                                }
+                                out.push(cfg);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn iterator_reproduces_the_legacy_loop_order() {
+        let cluster = ClusterSpec::reference();
+        for model in [XModel::new(16), XModel::new(64)] {
+            for strategy in Strategy::ALL {
+                for menu in [
+                    ParallelismMenu::THREE_D,
+                    ParallelismMenu::DATA,
+                    ParallelismMenu::DATA_PIPE,
+                    ParallelismMenu::NONE,
+                ] {
+                    let lazy: Vec<TrainConfig> =
+                        Candidates::new(&model, &cluster, strategy, menu).collect();
+                    let legacy = legacy_order(&model, &cluster, strategy, menu);
+                    assert_eq!(
+                        lazy, legacy,
+                        "order diverged for {strategy:?}/{menu:?} at X_{}",
+                        model.x
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn every_candidate_is_valid_and_within_budget() {
+        let cluster = ClusterSpec::ethernet();
+        let model = XModel::new(32);
+        let bc = model.critical_batch_size();
+        let mut count = 0usize;
+        for cfg in Candidates::new(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D)
+        {
+            cfg.validate().unwrap();
+            assert!(cfg.batch_size() <= bc * 1.001, "{cfg:?} overshoots b_c");
+            count += 1;
+        }
+        assert!(count > 1000, "grid unexpectedly small: {count}");
+    }
+
+    #[test]
+    fn optimistic_bound_never_exceeds_the_estimate() {
+        let cluster = ClusterSpec::reference();
+        let model = XModel::new(64);
+        for cfg in
+            Candidates::new(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D)
+                .step_by(17)
+        {
+            let lower = optimistic_secs(&model, &cfg, &cluster);
+            let real = estimate(&model, &cfg, &cluster).training_secs;
+            assert!(
+                lower <= real * (1.0 + 1e-12),
+                "bound {lower} above estimate {real} for {cfg:?}"
+            );
+        }
+    }
+}

@@ -1,16 +1,58 @@
 //! Training-configuration planner (paper §5 "Optimal configuration").
 //!
-//! Implements the paper's selection rules for the fastest configuration of
-//! each (strategy × parallelism-menu) pair, a constrained planner for the
-//! time-budgeted Table 6.3, and a grid search used for the scaling
+//! Implements the paper's selection rules for the fastest configuration
+//! of each (strategy × parallelism-menu) pair, a constrained planner for
+//! the time-budgeted Table 6.3, and a grid search used for the scaling
 //! figures where the closed-form rules need to adapt (e.g. Ethernet).
+//!
+//! The grid search runs a four-stage pipeline, parallel and cached end
+//! to end:
+//!
+//! ```text
+//! enumerate ──► prune ──► evaluate ──► simulate
+//! (candidates)  (memory bound,        (full cost   (lowering cache +
+//!                branch-and-bound)     model)       event-loop engine)
+//! ```
+//!
+//! * **enumerate** ([`candidates`]): the (n_a, n_l, n_μ, b_μ, offload,
+//!   partition) grid as a lazy iterator in a fixed order, after the
+//!   cheap structural filters (§5 rules, critical-batch budget).
+//! * **prune** ([`search`]): a memory lower bound rejects unfittable
+//!   candidates before any speed estimate, and a branch-and-bound cutoff
+//!   drops candidates whose compute-only optimistic time already exceeds
+//!   the incumbent.
+//! * **evaluate** ([`search`]): the surviving candidates get the full
+//!   cost model, fanned out over [`par::planner_threads`] scoped worker
+//!   threads (self-scheduling work queue; set the `PLANNER_THREADS`
+//!   environment variable to override the `available_parallelism`
+//!   default — one thread per physical core is the sweet spot, and
+//!   nested fan-outs collapse to serial automatically). The selection
+//!   fold is order-identical to the retained serial reference,
+//!   [`search::search_fastest_exhaustive`], so the optimised search
+//!   provably returns the same plan (`tests/planner_parity.rs`).
+//! * **simulate** ([`simloop`]): candidate plans are re-ranked by real
+//!   simulated makespan. Lowerings are memoised in
+//!   [`cache::LoweringCache`] — the cache hits whenever two candidates
+//!   snap to the same executable spec (n_a/n_b/b_μ differences only
+//!   change the cost table, not the schedule), which in a typical sweep
+//!   is almost every candidate after the first few — and the simulator
+//!   runs timeline-off with per-worker scratch, so a simulation
+//!   allocates nothing after warmup.
 
+pub mod cache;
+pub mod candidates;
 pub mod constrained;
+pub mod par;
 pub mod rules;
 pub mod search;
 pub mod simloop;
 
+pub use cache::{LoweringCache, PolicyKind};
+pub use candidates::Candidates;
 pub use constrained::{min_gpu_plan, ConstrainedPlan};
+pub use par::{par_map, par_map_with, planner_threads};
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
-pub use search::search_fastest;
-pub use simloop::{lower_plan, rank_by_simulation, simulate_plan, SimulatedPlan};
+pub use search::{search_fastest, search_fastest_exhaustive};
+pub use simloop::{
+    lower_plan, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,
+};

@@ -1,0 +1,169 @@
+//! Std-only fork-join helpers for the planner's fan-outs.
+//!
+//! The planner parallelises at two grains: over sweep x-values (the
+//! figure/table generators) and over candidate configurations inside one
+//! [`super::search::search_fastest`] call. Both use scoped threads with a
+//! self-scheduling atomic work queue — the cheap, dependency-free cousin
+//! of work stealing: idle workers keep claiming the next unclaimed index,
+//! so an uneven item (a big model's search next to a tiny one's) never
+//! leaves the other cores parked.
+//!
+//! Nested fan-outs collapse to serial execution automatically (a worker
+//! thread marks itself with a thread-local flag), so a parallel sweep of
+//! parallel searches does not oversubscribe the machine: whichever level
+//! fans out first wins the threads.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+thread_local! {
+    static IN_FAN_OUT: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True on a worker thread spawned by [`par_map`] (or the search's
+/// candidate fan-out): nested parallel regions should run serial.
+pub fn in_parallel_region() -> bool {
+    IN_FAN_OUT.with(|c| c.get())
+}
+
+/// Mark the current thread as a fan-out worker. Crate-internal: the
+/// search and ranking loops spawn their own scoped workers and need the
+/// same nesting guard `par_map` applies.
+pub(crate) fn mark_worker() {
+    IN_FAN_OUT.with(|c| c.set(true));
+}
+
+/// Number of worker threads planner fan-outs use: the `PLANNER_THREADS`
+/// environment variable when set (and positive), else
+/// `std::thread::available_parallelism()`. Computed once per process.
+pub fn planner_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        std::env::var("PLANNER_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            })
+    })
+}
+
+/// Map `f` over `items` on up to [`planner_threads`] scoped threads,
+/// preserving order. Workers self-schedule one index at a time, so the
+/// call balances uneven per-item cost; it falls back to a plain serial
+/// map when only one thread is available, the input is tiny, or the
+/// caller is itself a fan-out worker.
+///
+/// `R: Sync` is required because results land in shared
+/// `OnceLock` slots that every worker holds a reference to.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Sync,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    par_map_with(items, || (), |_state, i, t| f(i, t))
+}
+
+/// [`par_map`] with per-worker mutable state: each worker (or the serial
+/// fallback) calls `init` once and threads the value through its items.
+/// The planner's simulate-in-the-loop ranking uses this to give every
+/// worker its own reusable `SimScratch`.
+pub fn par_map_with<T, S, R, I, F>(items: &[T], init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send + Sync,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = planner_threads().min(n);
+    if threads <= 1 || in_parallel_region() {
+        let mut state = init();
+        return items.iter().enumerate().map(|(i, t)| f(&mut state, i, t)).collect();
+    }
+    let slots: Vec<OnceLock<R>> = std::iter::repeat_with(OnceLock::new).take(n).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                mark_worker();
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let _ = slots[i].set(f(&mut state, i, &items[i]));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("every index was claimed by a worker"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_and_values() {
+        let items: Vec<usize> = (0..1000).collect();
+        let out = par_map(&items, |i, &x| {
+            assert_eq!(i, x);
+            x * x
+        });
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(par_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn nested_par_map_runs_serial_without_deadlock() {
+        let items: Vec<usize> = (0..16).collect();
+        let out = par_map(&items, |_, &x| {
+            let inner: Vec<usize> = (0..8).collect();
+            par_map(&inner, |_, &y| x * y).iter().sum::<usize>()
+        });
+        for (x, v) in out.iter().enumerate() {
+            assert_eq!(*v, x * 28);
+        }
+    }
+
+    #[test]
+    fn par_map_with_gives_each_worker_its_own_state() {
+        // Every worker counts the items it processed into its own state;
+        // the per-item results must still be position-correct.
+        let items: Vec<usize> = (0..200).collect();
+        let out = par_map_with(
+            &items,
+            || 0usize,
+            |seen, i, &x| {
+                *seen += 1;
+                (i, x, *seen)
+            },
+        );
+        for (i, &(oi, ox, seen)) in out.iter().enumerate() {
+            assert_eq!((oi, ox), (i, i));
+            assert!(seen >= 1 && seen <= items.len());
+        }
+    }
+
+    #[test]
+    fn planner_threads_is_positive() {
+        assert!(planner_threads() >= 1);
+    }
+}

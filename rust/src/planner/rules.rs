@@ -15,9 +15,7 @@
 //!   memory; micro-batch sizes are bumped until the CPU-GPU (and shared
 //!   PCIe) transfer is hidden.
 
-use crate::costmodel::{
-    estimate, MemoryBreakdown, ParallelismMenu, SpeedEstimate, Strategy, TrainConfig,
-};
+use crate::costmodel::{MemoryBreakdown, ParallelismMenu, SpeedEstimate, Strategy, TrainConfig};
 use crate::hardware::{ClusterSpec, InterNode, LinkKind};
 use crate::model::XModel;
 
@@ -39,11 +37,9 @@ pub struct Plan {
 
 impl Plan {
     fn build(model: &XModel, cfg: TrainConfig, cluster: &ClusterSpec) -> Self {
-        let memory = MemoryBreakdown::evaluate(&model.shape(), &cfg);
-        let speed = estimate(model, &cfg, cluster);
-        let cpu_memory_exceeded =
-            cfg.offload && memory.offloadable() > cluster.cpu_memory_per_gpu;
-        Plan { cfg, speed, memory, cpu_memory_exceeded }
+        // One constructor shared with the grid search (defined in
+        // `search.rs` next to its memory-prefiltered sibling).
+        Plan::build_pub(model, cfg, cluster)
     }
 
     /// Whether the GPU-resident footprint fits in device memory.

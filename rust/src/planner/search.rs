@@ -2,138 +2,275 @@
 //! (4, 5, 8) where the closed-form §5 rules need to adapt to the cluster
 //! (e.g. Ethernet forces different pipeline/micro-batch trade-offs).
 //!
-//! The search enumerates (n_l, n_μ, b_μ, n_a) structures, derives the
-//! data-parallel degree from the critical-batch budget, evaluates the full
-//! cost model for each candidate and keeps the fastest feasible plan.
+//! The search runs the planner's **enumerate → prune → evaluate**
+//! pipeline:
+//!
+//! 1. **enumerate** — [`super::candidates::Candidates`] yields the
+//!    (n_a, n_l, n_μ, b_μ, offload, partition) grid lazily, in a fixed
+//!    order, after the cheap structural filters (§5 rules, critical-batch
+//!    budget, config validity);
+//! 2. **prune** — each candidate first passes a memory lower bound (the
+//!    closed-form breakdown, no speed estimate) and a branch-and-bound
+//!    cutoff: a candidate whose compute-only optimistic time
+//!    ([`super::candidates::optimistic_secs`]) already exceeds the
+//!    incumbent's total can neither beat nor tie it, so the full cost
+//!    model is never evaluated;
+//! 3. **evaluate** — surviving candidates get the full cost-model
+//!    evaluation, fanned out over [`super::par::planner_threads`] scoped
+//!    worker threads that self-schedule chunks of the grid and share the
+//!    incumbent through an atomic.
+//!
+//! The selection fold runs serially over the results *in enumeration
+//! order*, using the same tie-break rule as the retained serial reference
+//! ([`search_fastest_exhaustive`]); a pruned candidate is lazily
+//! re-evaluated at fold time in the rare case the bound cannot rule it
+//! out against the fold's own best. That makes the parallel search
+//! *provably* pick the identical plan — `tests/planner_parity.rs` checks
+//! it across strategies and clusters.
 
-use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use crate::costmodel::{MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
 use crate::hardware::ClusterSpec;
 use crate::model::XModel;
 
-use super::rules::{max_tensor_parallel, Plan};
+use super::candidates::{optimistic_secs, Candidates};
+use super::par::{in_parallel_region, mark_worker, planner_threads};
+use super::rules::Plan;
 
-/// Candidate micro-batch sizes tried by the search.
-const B_MU_CANDIDATES: [f64; 7] = [1.0, 2.0, 4.0, 5.0, 8.0, 16.0, 32.0];
+/// A candidate must be this factor faster to displace the incumbent.
+const STRICT_IMPROVE: f64 = 0.9999;
+/// Relative band within which two plans count as tied (and the
+/// non-offloaded one is preferred).
+const TIE_BAND: f64 = 1e-4;
+/// Branch-and-bound margin: a candidate whose *optimistic* time exceeds
+/// `incumbent × PRUNE_MARGIN` has an actual time strictly outside the tie
+/// band of any plan at least as fast as the incumbent, so it can neither
+/// displace nor tie the eventual winner. (The fold re-checks the bound
+/// against its own best before trusting a prune — see `search_over`.)
+const PRUNE_MARGIN: f64 = 1.0 + 2.0 * TIE_BAND;
+/// Candidates per work-queue claim in the parallel fan-out.
+const CHUNK: usize = 64;
+/// Below this many candidates the fan-out is not worth the thread spawns.
+const PAR_THRESHOLD: usize = 4 * CHUNK;
 
-/// Exhaustive-ish search for the fastest feasible configuration of a
-/// strategy on a cluster. Slower than [`super::rules::fastest_plan`] but
-/// robust to unusual clusters; used by the figure sweeps.
+/// Exhaustive-grid search for the fastest feasible configuration of a
+/// strategy on a cluster, pruned and parallelised. Slower than
+/// [`super::rules::fastest_plan`] but robust to unusual clusters; used by
+/// the figure sweeps. Selects the identical plan as
+/// [`search_fastest_exhaustive`].
 pub fn search_fastest(
     model: &XModel,
     cluster: &ClusterSpec,
     strategy: Strategy,
     menu: ParallelismMenu,
 ) -> Option<Plan> {
-    let shape = model.shape();
-    let d_l = shape.d_l;
-    let bc = model.critical_batch_size();
+    let cands: Vec<TrainConfig> = Candidates::new(model, cluster, strategy, menu).collect();
+    search_over(model, cluster, &cands)
+}
 
-    let n_a_max = if menu.tensor { max_tensor_parallel(model, cluster) } else { 1 };
-    let n_a_candidates: Vec<usize> = {
-        let mut v = vec![1usize, 2, 4, 8, 16, 32, 64, 128];
-        v.retain(|&a| a <= n_a_max);
-        if !v.contains(&n_a_max) {
-            v.push(n_a_max);
-        }
-        v
-    };
-
-    let n_l_candidates: Vec<usize> = if menu.pipeline {
-        let mut v: Vec<usize> = [1usize, 2, 3, 4, 5, 6, 8, 10, 12, 16, 20, 24, 32, 40, 48, 64, 80, 96, 128, 160, 192, 256]
-            .iter()
-            .copied()
-            .filter(|&l| l <= d_l)
-            .collect();
-        if !v.contains(&d_l) {
-            v.push(d_l);
-        }
-        v
-    } else {
-        vec![1]
-    };
-
-    // Multipliers applied to max(n_l, 1) to get the micro-batch count.
-    let n_mu_factors: [f64; 8] = [1.0, 1.05, 1.1, 1.25, 1.5, 2.0, 4.0, 8.0];
-
+/// The retained serial reference: full cost-model evaluation of every
+/// enumerated candidate, no pruning, no threads. Kept so the parity
+/// tests can prove the optimised search changes nothing, and as the
+/// baseline in `benches/planner_search.rs`.
+pub fn search_fastest_exhaustive(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+) -> Option<Plan> {
     let mut best: Option<Plan> = None;
-    for &n_a in &n_a_candidates {
-        for &n_l in &n_l_candidates {
-            if strategy == Strategy::Partitioned && n_l > 1 {
-                continue; // §5: partitioned approach forgoes pipelining
+    for cfg in Candidates::new(model, cluster, strategy, menu) {
+        if let Some(plan) = evaluate_exhaustive(model, cluster, &cfg) {
+            consider(&mut best, plan);
+        }
+    }
+    best
+}
+
+/// The shared selection fold step. `plan` displaces `best` when it is
+/// strictly faster (beyond [`STRICT_IMPROVE`]) or ties within
+/// [`TIE_BAND`] while avoiding offload the incumbent pays for.
+fn consider(best: &mut Option<Plan>, plan: Plan) {
+    let better = match best {
+        None => true,
+        Some(b) => {
+            plan.speed.training_secs < b.speed.training_secs * STRICT_IMPROVE
+                || ((plan.speed.training_secs - b.speed.training_secs).abs()
+                    < b.speed.training_secs * TIE_BAND
+                    && !plan.cfg.offload
+                    && b.cfg.offload)
+        }
+    };
+    if better {
+        *best = Some(plan);
+    }
+}
+
+/// The §5 tie-break the pre-refactor code described but left as a no-op:
+/// an offloaded candidate whose offload traffic is fully overlapped
+/// (zero overhead) buys nothing over its non-offloaded twin — when the
+/// twin also fits the GPU, prefer the twin (which the enumeration always
+/// visits first) and drop the offloaded copy.
+///
+/// No twin evaluation is needed: `cfg.offload` enters the speed estimate
+/// only through the offload and PCIe-contention overhead terms (both
+/// ≥ 0 and both absent for the twin), so the twin is never slower; and
+/// `MemoryBreakdown::evaluate` never reads the flag, so the twin's
+/// un-offloaded footprint is exactly `plan.memory.total()`. The
+/// regression test below proves both claims against explicitly built
+/// twins.
+fn skip_pointless_offload(cluster: &ClusterSpec, plan: &Plan) -> bool {
+    plan.cfg.offload
+        && plan.speed.overheads.offload == 0.0
+        && plan.memory.total() <= cluster.gpu.memory_bytes
+}
+
+/// Full evaluation in the legacy cost order (memory and speed both
+/// computed before the fit check) — the serial reference's per-candidate
+/// work, and the "before" cost the planner bench measures.
+fn evaluate_exhaustive(model: &XModel, cluster: &ClusterSpec, cfg: &TrainConfig) -> Option<Plan> {
+    let plan = Plan::build_pub(model, *cfg, cluster);
+    if !plan.fits_gpu(cluster) {
+        return None;
+    }
+    if skip_pointless_offload(cluster, &plan) {
+        return None;
+    }
+    Some(plan)
+}
+
+/// Pre-filtered evaluation: the cheap memory lower bound runs first and
+/// rejects unfittable candidates before the speed estimate is ever
+/// computed. Accepts exactly the same candidates (with identical plan
+/// values) as [`evaluate_exhaustive`].
+fn evaluate_pruned(model: &XModel, cluster: &ClusterSpec, cfg: &TrainConfig) -> Option<Plan> {
+    let memory = MemoryBreakdown::evaluate(&model.shape(), cfg);
+    if memory.gpu_resident(cfg.offload) > cluster.gpu.memory_bytes {
+        return None;
+    }
+    let plan = Plan::build_with_memory(model, *cfg, cluster, memory);
+    if skip_pointless_offload(cluster, &plan) {
+        return None;
+    }
+    Some(plan)
+}
+
+/// One evaluated slot of the parallel fan-out.
+enum Slot {
+    Plan(Plan),
+    /// Evaluated and rejected (does not fit, or pointless offload).
+    Rejected,
+    /// Branch-and-bound skipped it; the fold re-checks the bound.
+    Pruned,
+}
+
+/// Lower monotonically: `incumbent = min(incumbent, t)` over f64 bits
+/// (all values are positive and finite, so bit-compare via `from_bits`
+/// is exact).
+fn relax_incumbent(incumbent: &AtomicU64, t: f64) {
+    let mut cur = incumbent.load(Ordering::Relaxed);
+    while t < f64::from_bits(cur) {
+        match incumbent.compare_exchange_weak(
+            cur,
+            t.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Prune + evaluate + fold an ordered candidate list.
+fn search_over(model: &XModel, cluster: &ClusterSpec, cands: &[TrainConfig]) -> Option<Plan> {
+    let n = cands.len();
+    let threads = if n < PAR_THRESHOLD || in_parallel_region() {
+        1
+    } else {
+        planner_threads().min(n.div_ceil(CHUNK))
+    };
+
+    if threads <= 1 {
+        // Serial path: branch-and-bound directly against the fold best.
+        // `PRUNE_MARGIN` > 1 + TIE_BAND, so a pruned candidate could
+        // neither displace nor tie it — exactness is immediate.
+        let mut best: Option<Plan> = None;
+        for cfg in cands {
+            if let Some(b) = &best {
+                if optimistic_secs(model, cfg, cluster)
+                    > b.speed.training_secs * PRUNE_MARGIN
+                {
+                    continue;
+                }
             }
-            for &f in &n_mu_factors {
-                let n_mu_base = ((n_l as f64 * f).round() as usize).max(1);
-                // Also explore large plain gradient accumulation when
-                // there is no pipeline.
-                let extra: Vec<usize> = if n_l == 1 {
-                    vec![n_mu_base, 2, 8, 32, 128, 512]
-                } else {
-                    vec![n_mu_base]
-                };
-                for n_mu in extra {
-                    for &b_mu in &B_MU_CANDIDATES {
-                        let n_b = if menu.data {
-                            ((bc / (n_mu as f64 * b_mu)).floor() as usize).max(1)
-                        } else {
-                            1
-                        };
-                        if menu.data && n_b == 0 {
-                            continue;
-                        }
-                        if (n_b as f64) * (n_mu as f64) * b_mu > bc * 1.001 && menu.data {
-                            continue;
-                        }
-                        let partitions: &[bool] = match strategy {
-                            Strategy::Baseline => &[false],
-                            Strategy::Partitioned => &[true],
-                            // §8.3: for small models the improved method
-                            // may skip the partition for extra speed.
-                            Strategy::Improved => &[true, false],
-                        };
-                        for (offload, &partition) in [false, true]
-                            .into_iter()
-                            .flat_map(|o| partitions.iter().map(move |p| (o, p)))
+            if let Some(plan) = evaluate_pruned(model, cluster, cfg) {
+                consider(&mut best, plan);
+            }
+        }
+        return best;
+    }
+
+    // Parallel phase: workers claim chunks in enumeration order and share
+    // the best time seen so far through `incumbent` (a heuristic — only
+    // used to skip work, never to decide the winner).
+    let slots: Vec<OnceLock<Slot>> = std::iter::repeat_with(OnceLock::new).take(n).collect();
+    let incumbent = AtomicU64::new(f64::INFINITY.to_bits());
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                mark_worker();
+                loop {
+                    let start = next.fetch_add(CHUNK, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    for i in start..(start + CHUNK).min(n) {
+                        let cfg = &cands[i];
+                        let inc = f64::from_bits(incumbent.load(Ordering::Relaxed));
+                        let slot = if optimistic_secs(model, cfg, cluster) > inc * PRUNE_MARGIN
                         {
-                            let cfg = TrainConfig {
-                                strategy,
-                                n_b,
-                                n_l,
-                                n_a,
-                                n_mu,
-                                b_mu,
-                                offload,
-                                partition,
-                            };
-                            if cfg.validate().is_err() {
-                                continue;
-                            }
-                            let plan = Plan::build_pub(model, cfg, cluster);
-                            if !plan.fits_gpu(cluster) {
-                                continue;
-                            }
-                            // Skip pointless offload (fits without it and
-                            // offload only adds overhead).
-                            if offload && plan.speed.overheads.offload == 0.0 {
-                                // keep — zero-cost offload may still be
-                                // wanted; prefer the non-offloaded twin
-                                // via the tie-break below.
-                            }
-                            let better = match &best {
-                                None => true,
-                                Some(b) => {
-                                    plan.speed.training_secs < b.speed.training_secs * 0.9999
-                                        || ((plan.speed.training_secs
-                                            - b.speed.training_secs)
-                                            .abs()
-                                            < b.speed.training_secs * 1e-4
-                                            && !plan.cfg.offload
-                                            && b.cfg.offload)
+                            Slot::Pruned
+                        } else {
+                            match evaluate_pruned(model, cluster, cfg) {
+                                Some(plan) => {
+                                    relax_incumbent(&incumbent, plan.speed.training_secs);
+                                    Slot::Plan(plan)
                                 }
-                            };
-                            if better {
-                                best = Some(plan);
+                                None => Slot::Rejected,
                             }
-                        }
+                        };
+                        let _ = slots[i].set(slot);
+                    }
+                }
+            });
+        }
+    });
+
+    // Ordered fold — byte-for-byte the serial reference's selection. A
+    // parallel-phase prune was taken against a racing incumbent; trust it
+    // only when the bound also rules the candidate out against the fold's
+    // own best (it cannot strictly beat nor tie inside TIE_BAND), else
+    // evaluate it here.
+    let mut best: Option<Plan> = None;
+    for (i, slot) in slots.into_iter().enumerate() {
+        match slot.into_inner().expect("worker filled every slot") {
+            Slot::Plan(plan) => consider(&mut best, plan),
+            Slot::Rejected => {}
+            Slot::Pruned => {
+                let needs_eval = match &best {
+                    None => true,
+                    Some(b) => {
+                        optimistic_secs(model, &cands[i], cluster)
+                            < b.speed.training_secs * (1.0 + TIE_BAND)
+                    }
+                };
+                if needs_eval {
+                    if let Some(plan) = evaluate_pruned(model, cluster, &cands[i]) {
+                        consider(&mut best, plan);
                     }
                 }
             }
@@ -146,8 +283,19 @@ impl Plan {
     /// Public constructor used by the search (same as the private
     /// `Plan::build`).
     pub fn build_pub(model: &XModel, cfg: TrainConfig, cluster: &ClusterSpec) -> Self {
-        use crate::costmodel::MemoryBreakdown;
         let memory = MemoryBreakdown::evaluate(&model.shape(), &cfg);
+        Self::build_with_memory(model, cfg, cluster, memory)
+    }
+
+    /// Constructor for callers that already evaluated the memory
+    /// breakdown (the search's pre-filter): only the speed estimate is
+    /// computed here.
+    pub(crate) fn build_with_memory(
+        model: &XModel,
+        cfg: TrainConfig,
+        cluster: &ClusterSpec,
+        memory: MemoryBreakdown,
+    ) -> Self {
         let speed = crate::costmodel::estimate(model, &cfg, cluster);
         let cpu_memory_exceeded =
             cfg.offload && memory.offloadable() > cluster.cpu_memory_per_gpu;
@@ -203,5 +351,101 @@ mod tests {
             "penalty should shrink with scale: X_32 {small:.3} vs X_160 {large:.3}"
         );
         assert!(large < 1.6, "X_160 Ethernet penalty too large: {large:.3}");
+    }
+
+    #[test]
+    fn pruned_parallel_search_matches_the_exhaustive_reference() {
+        // The full matrix lives in tests/planner_parity.rs; this is the
+        // in-crate smoke version.
+        let model = XModel::new(32);
+        let cluster = ClusterSpec::reference();
+        let fast =
+            search_fastest(&model, &cluster, Strategy::Improved, ParallelismMenu::THREE_D)
+                .expect("plan");
+        let slow = search_fastest_exhaustive(
+            &model,
+            &cluster,
+            Strategy::Improved,
+            ParallelismMenu::THREE_D,
+        )
+        .expect("plan");
+        assert_eq!(fast.cfg, slow.cfg);
+        assert!(
+            (fast.speed.training_secs - slow.speed.training_secs).abs()
+                <= 1e-9 * slow.speed.training_secs,
+            "{} vs {}",
+            fast.speed.training_secs,
+            slow.speed.training_secs
+        );
+    }
+
+    /// Regression for the once-empty offload tie-break branch: a
+    /// zero-overhead offloaded candidate whose twin fits must be dropped
+    /// in favour of the twin.
+    #[test]
+    fn pointless_offload_candidates_are_skipped() {
+        let cluster = ClusterSpec::reference();
+        let mut found = 0usize;
+        for x in [8usize, 32, 64] {
+            let model = XModel::new(x);
+            for strategy in Strategy::ALL {
+                for cfg in
+                    Candidates::new(&model, &cluster, strategy, ParallelismMenu::THREE_D)
+                {
+                    if !cfg.offload {
+                        continue;
+                    }
+                    let plan = Plan::build_pub(&model, cfg, &cluster);
+                    if !plan.fits_gpu(&cluster) {
+                        continue;
+                    }
+                    // The shortcut must agree with the explicitly built
+                    // twin in both directions — this is the proof of the
+                    // "no twin evaluation needed" claims in its docs.
+                    let twin = Plan::build_pub(
+                        &model,
+                        TrainConfig { offload: false, ..cfg },
+                        &cluster,
+                    );
+                    let twin_wins = plan.speed.overheads.offload == 0.0
+                        && twin.fits_gpu(&cluster)
+                        && twin.speed.training_secs <= plan.speed.training_secs;
+                    assert_eq!(
+                        skip_pointless_offload(&cluster, &plan),
+                        twin_wins,
+                        "shortcut disagrees with the built twin: {cfg:?}"
+                    );
+                    if twin_wins {
+                        found += 1;
+                        assert!(evaluate_pruned(&model, &cluster, &cfg).is_none());
+                        assert!(evaluate_exhaustive(&model, &cluster, &cfg).is_none());
+                    }
+                }
+            }
+        }
+        assert!(found > 0, "test never exercised the tie-break");
+    }
+
+    /// The search must never return a plan that pays for offload it does
+    /// not need (zero overhead and a feasible twin).
+    #[test]
+    fn search_result_never_carries_pointless_offload() {
+        for cluster in [ClusterSpec::reference(), ClusterSpec::ethernet()] {
+            for x in [16usize, 64] {
+                let model = XModel::new(x);
+                for strategy in Strategy::ALL {
+                    let Some(plan) =
+                        search_fastest(&model, &cluster, strategy, ParallelismMenu::THREE_D)
+                    else {
+                        continue;
+                    };
+                    assert!(
+                        !skip_pointless_offload(&cluster, &plan),
+                        "{strategy:?}/X_{x}: {:?}",
+                        plan.cfg
+                    );
+                }
+            }
+        }
     }
 }

@@ -3,21 +3,29 @@
 //! The closed-form planner (rules / grid search) ranks configurations by
 //! the cost model's efficiency estimate. This module re-ranks candidate
 //! plans by actually *executing* their schedules on the discrete-event
-//! simulator: each plan's schedule is lowered once to a
-//! [`ScheduleProgram`] and the O(V+E) engine measures the real makespan,
-//! including the overlap effects the closed forms approximate (exposed
-//! sends, optimizer serialisation, restore traffic). Cheap enough —
-//! thanks to the precompiled dependency graph — to run inside a planner
-//! search even at trillion-parameter layer counts.
+//! simulator: each plan's schedule is lowered to a [`ScheduleProgram`]
+//! and the O(V+E) engine measures the real makespan, including the
+//! overlap effects the closed forms approximate (exposed sends, optimizer
+//! serialisation, restore traffic).
+//!
+//! Cheap enough to run inside a planner search, for three reasons:
+//! lowering is memoised through [`super::cache::LoweringCache`] (many
+//! candidates snap to the same executable spec — n_a/n_b/b_μ only price
+//! the cost table, they don't change the schedule); candidates are
+//! simulated concurrently on scoped worker threads; and each worker
+//! reuses one [`SimScratch`] with the timeline off, so a simulation
+//! allocates nothing after warmup.
+
+use std::sync::Arc;
 
 use crate::costmodel::{Strategy, TrainConfig};
 use crate::hardware::ClusterSpec;
 use crate::model::XModel;
-use crate::schedule::{
-    layered_ga, lower, modular_pipeline, standard_ga, ScheduleProgram, ScheduleSpec,
-};
-use crate::sim::{simulate_program, CostTable, SimResult};
+use crate::schedule::{ScheduleProgram, ScheduleSpec};
+use crate::sim::{simulate_program_into, CostTable, SimOptions, SimScratch};
 
+use super::cache::{LoweringCache, PolicyKind};
+use super::par::par_map_with;
 use super::rules::Plan;
 
 /// A plan annotated with its simulated execution.
@@ -60,50 +68,72 @@ fn executable_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec)
 }
 
 /// Lower the schedule a plan implies, returning the snapped executable
-/// config alongside the program (the config prices the cost table the
-/// program is simulated against — computing it once keeps them from
-/// drifting apart). Baseline plans run standard GA / the contiguous
-/// pipeline; improved and partitioned plans run layered accumulation
-/// (modular pipeline when staged).
-pub fn lower_plan(model: &XModel, plan: &Plan) -> (TrainConfig, ScheduleProgram) {
+/// config alongside the (shared, memoised) program. The config prices
+/// the cost table the program is simulated against — computing it once
+/// keeps them from drifting apart. Baseline plans run standard GA / the
+/// contiguous pipeline; improved and partitioned plans run layered
+/// accumulation (modular pipeline when staged). Lowerings are served
+/// from [`LoweringCache::global`], so re-planning the same snapped spec
+/// costs one hash lookup.
+pub fn lower_plan(model: &XModel, plan: &Plan) -> (TrainConfig, Arc<ScheduleProgram>) {
     let d_l = model.shape().d_l;
     let (cfg, spec) = executable_spec(d_l, &plan.cfg);
-    let schedule = match (cfg.strategy, cfg.n_l) {
-        (Strategy::Baseline, _) => standard_ga(&spec),
-        (_, 1) => layered_ga(&spec),
-        (_, _) => modular_pipeline(&spec),
-    };
-    (cfg, lower(&schedule).expect("generated schedules always lower"))
+    let kind = PolicyKind::for_config(cfg.strategy, cfg.n_l);
+    (cfg, LoweringCache::global().lower(kind, &spec))
 }
 
 /// Simulate one plan end-to-end and annotate it with measured numbers.
 pub fn simulate_plan(model: &XModel, cluster: &ClusterSpec, plan: &Plan) -> SimulatedPlan {
+    simulate_plan_with(model, cluster, plan, &mut SimScratch::new())
+}
+
+/// Scratch-reusing variant of [`simulate_plan`]: planner loops hold one
+/// [`SimScratch`] per worker so back-to-back simulations allocate
+/// nothing. The timeline is not recorded — the ranking only needs
+/// makespan and busy time, which are bit-identical either way.
+pub fn simulate_plan_with(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    plan: &Plan,
+    scratch: &mut SimScratch,
+) -> SimulatedPlan {
     let (cfg, program) = lower_plan(model, plan);
     let costs = CostTable::new(&model.shape(), &cfg, cluster);
-    let r: SimResult = simulate_program(&program, &costs);
+    let r = simulate_program_into(
+        &program,
+        &costs,
+        SimOptions { record_timeline: false },
+        scratch,
+    );
+    let makespan = r.makespan;
+    let sim_efficiency = r.compute_efficiency();
+    scratch.recycle(r);
     // The makespan covers one data-parallel instance's n_mu·b_mu
     // sequences while n_b instances run concurrently: global
     // time-per-sequence divides by the full batch.
     let sequences = (cfg.n_b as f64 * cfg.n_mu as f64 * cfg.b_mu).max(1.0);
     SimulatedPlan {
         plan: plan.clone(),
-        makespan: r.makespan,
-        sim_efficiency: r.compute_efficiency(),
-        secs_per_sequence: r.makespan / sequences,
+        makespan,
+        sim_efficiency,
+        secs_per_sequence: makespan / sequences,
     }
 }
 
 /// Re-rank candidate plans by simulated seconds-per-sequence and return
-/// the winner. Returns `None` on an empty candidate set.
+/// the winner (first of equals, so the result is deterministic).
+/// Candidates simulate concurrently; returns `None` on an empty set.
 pub fn rank_by_simulation(
     model: &XModel,
     cluster: &ClusterSpec,
     candidates: &[Plan],
 ) -> Option<SimulatedPlan> {
-    candidates
-        .iter()
-        .map(|p| simulate_plan(model, cluster, p))
-        .min_by(|a, b| a.secs_per_sequence.partial_cmp(&b.secs_per_sequence).unwrap())
+    let sims = par_map_with(candidates, SimScratch::new, |scratch, _, plan| {
+        simulate_plan_with(model, cluster, plan, scratch)
+    });
+    // `total_cmp`: a NaN cost (degenerate schedule) sorts deterministically
+    // instead of panicking mid-sweep.
+    sims.into_iter().min_by(|a, b| a.secs_per_sequence.total_cmp(&b.secs_per_sequence))
 }
 
 #[cfg(test)]
@@ -140,5 +170,33 @@ mod tests {
             .expect("improved plan");
         let best = rank_by_simulation(&model, &cluster, &[base, impr]).unwrap();
         assert_eq!(best.plan.cfg.strategy, Strategy::Improved);
+    }
+
+    #[test]
+    fn lower_plan_serves_identical_programs_from_the_cache() {
+        let model = XModel::new(64);
+        let cluster = ClusterSpec::reference();
+        let plan = fastest_plan(&model, &cluster, Strategy::Improved, ParallelismMenu::DATA_PIPE)
+            .expect("plan");
+        let (cfg_a, prog_a) = lower_plan(&model, &plan);
+        let (cfg_b, prog_b) = lower_plan(&model, &plan);
+        assert_eq!(cfg_a, cfg_b);
+        // Same snapped spec → the global cache returns the same Arc.
+        assert!(Arc::ptr_eq(&prog_a, &prog_b));
+    }
+
+    #[test]
+    fn parallel_ranking_is_deterministic() {
+        let model = XModel::new(32);
+        let cluster = ClusterSpec::reference();
+        let plans: Vec<Plan> = Strategy::ALL
+            .iter()
+            .filter_map(|&s| fastest_plan(&model, &cluster, s, ParallelismMenu::THREE_D))
+            .collect();
+        assert!(plans.len() >= 2);
+        let a = rank_by_simulation(&model, &cluster, &plans).unwrap();
+        let b = rank_by_simulation(&model, &cluster, &plans).unwrap();
+        assert_eq!(a.plan.cfg, b.plan.cfg);
+        assert_eq!(a.secs_per_sequence.to_bits(), b.secs_per_sequence.to_bits());
     }
 }

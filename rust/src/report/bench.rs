@@ -1,0 +1,118 @@
+//! Machine-readable bench artifacts.
+//!
+//! Every root bench (`benches/*.rs`) prints a human-readable report *and*
+//! writes a `BENCH_<name>.json` next to it (working directory — the
+//! workspace root under `cargo bench` — or `BENCH_JSON_DIR` when set),
+//! so the perf trajectory can be tracked across PRs by diffing small
+//! JSON files instead of scraping stdout.
+//!
+//! The format is deliberately tiny — a flat string→number metric map —
+//! and the writer is dependency-free (no serde in this crate).
+//!
+//! The artifacts are *meant to be committed*: after a perf-relevant
+//! change, re-run the benches and include the refreshed `BENCH_*.json`
+//! files in the PR so the numbers diff alongside the code.
+
+use std::io;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// A flat metric report for one bench run. Construction starts a
+/// wall-clock; [`BenchJson::finish`] records it as `wall_secs`, so no
+/// bench can forget the one metric the cross-PR diffing relies on.
+#[derive(Debug, Clone)]
+pub struct BenchJson {
+    name: String,
+    started: Instant,
+    metrics: Vec<(String, f64)>,
+}
+
+impl BenchJson {
+    pub fn new(name: &str) -> Self {
+        BenchJson { name: name.to_string(), started: Instant::now(), metrics: Vec::new() }
+    }
+
+    /// Record one metric. Keys are free-form (dots conventionally
+    /// namespace repeated shapes, e.g. `"mops.modular_128L"`); insertion
+    /// order is preserved in the output.
+    pub fn push(&mut self, key: &str, value: f64) {
+        self.metrics.push((key.to_string(), value));
+    }
+
+    /// Serialise to JSON. Non-finite values (a failed or skipped
+    /// measurement) become `null`, keeping the document valid.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", escape(&self.name)));
+        out.push_str("  \"metrics\": {");
+        for (i, (key, value)) in self.metrics.iter().enumerate() {
+            out.push_str(if i == 0 { "\n" } else { ",\n" });
+            if value.is_finite() {
+                out.push_str(&format!("    \"{}\": {}", escape(key), value));
+            } else {
+                out.push_str(&format!("    \"{}\": null", escape(key)));
+            }
+        }
+        out.push_str("\n  }\n}\n");
+        out
+    }
+
+    /// Write `BENCH_<name>.json` and return its path.
+    pub fn write(&self) -> io::Result<PathBuf> {
+        let dir = std::env::var("BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+        let path = PathBuf::from(dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Append the run's wall-clock seconds, write, then report where (or
+    /// why not) on stdout — the uniform trailer every bench ends with.
+    pub fn finish(&mut self) {
+        self.push("wall_secs", self.started.elapsed().as_secs_f64());
+        match self.write() {
+            Ok(path) => println!("\n[bench-json] wrote {}", path.display()),
+            Err(e) => println!("\n[bench-json] could not write BENCH_{}.json: {e}", self.name),
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_well_formed() {
+        let mut j = BenchJson::new("demo");
+        j.push("ops_per_sec", 1.5e6);
+        j.push("makespan_secs", 0.25);
+        j.push("skipped", f64::NAN);
+        let s = j.to_json();
+        assert!(s.contains("\"bench\": \"demo\""));
+        assert!(s.contains("\"ops_per_sec\": 1500000"));
+        assert!(s.contains("\"skipped\": null"));
+        // Balanced braces, trailing newline, no trailing comma.
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert!(s.ends_with("}\n"));
+        assert!(!s.contains(",\n  }"));
+    }
+
+    #[test]
+    fn empty_metrics_render() {
+        let s = BenchJson::new("empty").to_json();
+        assert!(s.contains("\"metrics\": {"));
+        assert_eq!(s.matches('{').count(), 2);
+    }
+
+    #[test]
+    fn keys_are_escaped() {
+        let mut j = BenchJson::new("quo\"te");
+        j.push("a\"b", 1.0);
+        let s = j.to_json();
+        assert!(s.contains("quo\\\"te"));
+        assert!(s.contains("a\\\"b"));
+    }
+}

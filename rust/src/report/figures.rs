@@ -4,7 +4,7 @@ use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
 use crate::hardware::{ClusterSpec, GIB, SECS_PER_DAY};
 use crate::model::{sweep_xs, XModel, TRAINING_STEPS};
 use crate::offload::figure7_point;
-use crate::planner::search_fastest;
+use crate::planner::{par_map, search_fastest};
 
 /// One sweep series: (x, value) points.
 pub type Series = Vec<(usize, f64)>;
@@ -19,7 +19,9 @@ pub struct ScalingFigure {
 
 /// Menu used in the scaling figures: the fastest available for each
 /// strategy (3d for baseline/improved, data+tensor for partitioned).
-fn menu_for(strategy: Strategy) -> ParallelismMenu {
+/// Public so the planner parity tests and `benches/planner_search.rs`
+/// sweep exactly the configurations the figures run.
+pub fn menu_for(strategy: Strategy) -> ParallelismMenu {
     match strategy {
         Strategy::Partitioned => ParallelismMenu::DATA_TENSOR,
         _ => ParallelismMenu::THREE_D,
@@ -27,20 +29,28 @@ fn menu_for(strategy: Strategy) -> ParallelismMenu {
 }
 
 /// Build a scaling figure (Figure 4 with the reference cluster, Figure 5
-/// with `unlimited_node`, Figure 8 with `ethernet`).
+/// with `unlimited_node`, Figure 8 with `ethernet`). Every
+/// (strategy, x) search is independent, so the whole sweep fans out over
+/// the planner's worker threads; the output order is deterministic.
 pub fn scaling_figure(cluster: &ClusterSpec, name: &str, max_x: usize) -> ScalingFigure {
     let xs = sweep_xs(max_x);
+    let tasks: Vec<(Strategy, usize)> = Strategy::ALL
+        .iter()
+        .flat_map(|&s| xs.iter().map(move |&x| (s, x)))
+        .collect();
+    let plans = par_map(&tasks, |_, &(s, x)| {
+        search_fastest(&XModel::new(x), cluster, s, menu_for(s))
+    });
     let mut fig = ScalingFigure {
         cluster_name: name.to_string(),
         time_days: Vec::new(),
         memory_gib: Vec::new(),
     };
-    for s in Strategy::ALL {
+    for (si, &s) in Strategy::ALL.iter().enumerate() {
         let mut time = Vec::new();
         let mut mem = Vec::new();
-        for &x in &xs {
-            let m = XModel::new(x);
-            if let Some(p) = search_fastest(&m, cluster, s, menu_for(s)) {
+        for (xi, &x) in xs.iter().enumerate() {
+            if let Some(p) = &plans[si * xs.len() + xi] {
                 time.push((x, p.speed.training_secs / SECS_PER_DAY));
                 mem.push((x, p.memory.gpu_resident(p.cfg.offload) / GIB));
             }
@@ -56,37 +66,39 @@ pub fn scaling_figure(cluster: &ClusterSpec, name: &str, max_x: usize) -> Scalin
 /// ratio *decreases* with scale — there is no memory wall.
 pub fn figure6(cluster: &ClusterSpec, max_x: usize) -> Series {
     let month = 30.0 * SECS_PER_DAY;
-    sweep_xs(max_x)
-        .into_iter()
-        .filter_map(|x| {
-            let m = XModel::new(x);
-            let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
-            // Compute power needed to hit one month at this efficiency.
-            let flops = m.training_flops(m.critical_batch_size(), TRAINING_STEPS);
-            let needed_rate = flops / (month * p.speed.efficiency);
-            let n_gpu_needed = needed_rate / cluster.gpu.peak_flops;
-            // Memory per unit compute: per-GPU resident bytes over
-            // per-GPU flops (scaled to the hypothetical cluster).
-            let resident = p.memory.gpu_resident(p.cfg.offload) * p.cfg.n_gpu() as f64;
-            Some((x, resident / (n_gpu_needed * cluster.gpu.peak_flops)))
-        })
-        .collect()
+    let xs = sweep_xs(max_x);
+    par_map(&xs, |_, &x| {
+        let m = XModel::new(x);
+        let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
+        // Compute power needed to hit one month at this efficiency.
+        let flops = m.training_flops(m.critical_batch_size(), TRAINING_STEPS);
+        let needed_rate = flops / (month * p.speed.efficiency);
+        let n_gpu_needed = needed_rate / cluster.gpu.peak_flops;
+        // Memory per unit compute: per-GPU resident bytes over
+        // per-GPU flops (scaled to the hypothetical cluster).
+        let resident = p.memory.gpu_resident(p.cfg.offload) * p.cfg.n_gpu() as f64;
+        Some((x, resident / (n_gpu_needed * cluster.gpu.peak_flops)))
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// Figure 7: offload arithmetic intensity vs scale for the improved
 /// partitioned configuration; returns (x, state ν, checkpoint ν).
 pub fn figure7(cluster: &ClusterSpec, max_x: usize) -> Vec<(usize, f64, f64)> {
-    sweep_xs(max_x)
-        .into_iter()
-        .filter_map(|x| {
-            let m = XModel::new(x);
-            let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
-            let mut cfg: TrainConfig = p.cfg;
-            cfg.offload = true;
-            let (_, s, c) = figure7_point(x, &cfg);
-            Some((x, s, c))
-        })
-        .collect()
+    let xs = sweep_xs(max_x);
+    par_map(&xs, |_, &x| {
+        let m = XModel::new(x);
+        let p = search_fastest(&m, cluster, Strategy::Improved, ParallelismMenu::THREE_D)?;
+        let mut cfg: TrainConfig = p.cfg;
+        cfg.offload = true;
+        let (_, s, c) = figure7_point(x, &cfg);
+        Some((x, s, c))
+    })
+    .into_iter()
+    .flatten()
+    .collect()
 }
 
 /// ASCII log-log plot of several series.

@@ -1,10 +1,12 @@
 //! Report rendering: every table and figure of the paper, regenerated
 //! from the cost model, planner and offload analysis.
 
+pub mod bench;
 pub mod figures;
 pub mod tables;
 
-pub use figures::{ascii_plot, figure6, figure7, scaling_figure, ScalingFigure, Series};
+pub use bench::BenchJson;
+pub use figures::{ascii_plot, figure6, figure7, menu_for, scaling_figure, ScalingFigure, Series};
 pub use tables::{
     explain, schedule_comparison, sweep, table61, table61_rows, table62, table63, table_a1,
     table_b1,

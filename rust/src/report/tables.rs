@@ -269,19 +269,19 @@ pub fn explain(model: &XModel, cluster: &ClusterSpec, cfg: &TrainConfig) -> Stri
     )
 }
 
-/// All plans for the figure sweeps: (x, plan) per strategy.
+/// All plans for the figure sweeps: (x, plan) per strategy. The
+/// per-model searches are independent and fan out over the planner's
+/// worker threads; output order follows `xs`.
 pub fn sweep(
     cluster: &ClusterSpec,
     strategy: Strategy,
     menu: ParallelismMenu,
     xs: &[usize],
 ) -> Vec<(usize, Option<Plan>)> {
-    xs.iter()
-        .map(|&x| {
-            let m = XModel::new(x);
-            (x, crate::planner::search_fastest(&m, cluster, strategy, menu))
-        })
-        .collect()
+    let plans = crate::planner::par_map(xs, |_, &x| {
+        crate::planner::search_fastest(&XModel::new(x), cluster, strategy, menu)
+    });
+    xs.iter().copied().zip(plans).collect()
 }
 
 #[cfg(test)]

@@ -138,6 +138,15 @@ impl ScheduleProgram {
         self.preds.len()
     }
 
+    /// Append every op's predecessor-edge count to `out`, in arena order.
+    /// This is the simulator's initial pending-counter vector; a method
+    /// (rather than per-op `preds_of(i).len()` calls) so the engine can
+    /// fill a reusable buffer in one pass and stay allocation-free on its
+    /// hot path.
+    pub fn fill_pending(&self, out: &mut Vec<u32>) {
+        out.extend(self.pred_offsets.windows(2).map(|w| w[1] - w[0]));
+    }
+
     /// Dependency predecessors of an op (ids into the arena).
     pub fn preds_of(&self, id: u32) -> &[u32] {
         let (a, b) = (self.pred_offsets[id as usize], self.pred_offsets[id as usize + 1]);
@@ -613,6 +622,18 @@ mod tests {
         let succ_total: usize = (0..p.len()).map(|i| p.succs_of(i as u32).len()).sum();
         assert_eq!(pred_total, succ_total);
         assert_eq!(pred_total, p.n_edges());
+    }
+
+    #[test]
+    fn fill_pending_matches_preds_of() {
+        let s = modular_pipeline(&spec(16, 4, 8, true));
+        let p = lower(&s).unwrap();
+        let mut pending = Vec::new();
+        p.fill_pending(&mut pending);
+        assert_eq!(pending.len(), p.len());
+        for (i, &count) in pending.iter().enumerate() {
+            assert_eq!(count as usize, p.preds_of(i as u32).len(), "op {i}");
+        }
     }
 
     #[test]

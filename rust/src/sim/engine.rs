@@ -19,11 +19,29 @@
 //! what lets the planner simulate candidate configurations in the loop —
 //! see `benches/sim_engine.rs` for the measured throughput.
 //!
+//! Hot-path layout (the planner simulates thousands of programs per
+//! sweep, so the per-call constant matters):
+//!
+//! * busy accounting is a flat `Vec<f64>` indexed by
+//!   `stage * N_STREAMS + stream` — no hashing;
+//! * [`SimOptions::record_timeline`] turns off the per-op [`TimedOp`]
+//!   timeline; makespan, busy and peak memory are bit-identical either
+//!   way (the parity tests in `tests/planner_parity.rs` prove it), so
+//!   planner-loop callers skip the only O(V) allocation. Gantt/report
+//!   callers keep the default (recording);
+//! * [`SimScratch`] pools every working buffer (pending counters, stream
+//!   state, the event heap, and the result vectors via
+//!   [`SimScratch::recycle`]) so back-to-back [`simulate_program_into`]
+//!   calls allocate nothing after warmup — `benches/planner_search.rs`
+//!   asserts exactly zero bytes with a counting allocator.
+//!
 //! [`simulate`] is the convenience wrapper (lower + run); callers that
 //! simulate the same schedule repeatedly — the planner, the benches —
-//! should lower once and call [`simulate_program`] per cost table.
+//! should lower once and call [`simulate_program`] per cost table (or
+//! [`simulate_program_into`] with a scratch to also skip the setup
+//! allocations).
 
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 use crate::schedule::program::{ScheduleProgram, Stream, N_STREAMS, STREAMS};
 use crate::schedule::{lower, Op, Schedule};
@@ -40,21 +58,81 @@ pub struct TimedOp {
     pub end: f64,
 }
 
+/// Knobs for one simulation run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimOptions {
+    /// Record the full per-op [`TimedOp`] timeline. Required by the Gantt
+    /// renderer and the timeline-derived metrics
+    /// ([`SimResult::reduce_spread`], [`SimResult::exposed_network_tail`]);
+    /// planner loops turn it off — makespan, busy and peak memory are
+    /// unaffected — to keep the hot path allocation-free.
+    pub record_timeline: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { record_timeline: true }
+    }
+}
+
+/// Reusable working memory for [`simulate_program_into`]: pending
+/// counters, per-stream cursors, the event heap and (via
+/// [`SimScratch::recycle`]) the result vectors of a previous run. After
+/// the first call at a given program size, subsequent calls perform no
+/// heap allocation at all when the timeline is off.
+#[derive(Debug, Default)]
+pub struct SimScratch {
+    pending: Vec<u32>,
+    head: Vec<u32>,
+    running: Vec<bool>,
+    stream_free: Vec<f64>,
+    mem: Vec<f64>,
+    retry: Vec<u32>,
+    events: BinaryHeap<Event>,
+    batch: Vec<Event>,
+    busy_pool: Vec<f64>,
+    peak_pool: Vec<f64>,
+    timeline_pool: Vec<TimedOp>,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return a finished result's buffers to the pool so the next
+    /// [`simulate_program_into`] call reuses them instead of allocating.
+    /// Call this once the result's numbers have been read off.
+    pub fn recycle(&mut self, result: SimResult) {
+        self.busy_pool = result.busy;
+        self.peak_pool = result.peak_memory;
+        self.timeline_pool = result.timeline;
+    }
+}
+
 /// Result of simulating one schedule.
 #[derive(Debug, Clone)]
 pub struct SimResult {
     /// Total makespan, seconds.
     pub makespan: f64,
-    /// Busy time per (stage, stream).
-    pub busy: HashMap<(usize, Stream), f64>,
+    /// Busy time per (stage, stream), indexed `stage * N_STREAMS +
+    /// stream.index()` (see [`SimResult::stream_busy`]).
+    pub busy: Vec<f64>,
     /// Peak per-stage memory from checkpoints + live activations, bytes.
     pub peak_memory: Vec<f64>,
     /// Full timeline (for Gantt rendering and fine-grained metrics).
+    /// Empty when the run used `record_timeline: false`.
     pub timeline: Vec<TimedOp>,
     pub n_stages: usize,
 }
 
 impl SimResult {
+    /// Busy seconds of one (stage, stream) pair. Out-of-range lookups
+    /// (degenerate results) report 0.
+    pub fn stream_busy(&self, stage: usize, stream: Stream) -> f64 {
+        self.busy.get(stage * N_STREAMS + stream.index()).copied().unwrap_or(0.0)
+    }
+
     /// Fraction of the makespan each stage's compute stream is busy,
     /// averaged over stages: the simulator's measured efficiency.
     /// Degenerate inputs (zero makespan, no stages) report 0 rather than
@@ -63,9 +141,7 @@ impl SimResult {
         if self.n_stages == 0 || self.makespan <= 0.0 {
             return 0.0;
         }
-        let total: f64 = (0..self.n_stages)
-            .map(|s| self.busy.get(&(s, Stream::Compute)).copied().unwrap_or(0.0))
-            .sum();
+        let total: f64 = (0..self.n_stages).map(|s| self.stream_busy(s, Stream::Compute)).sum();
         total / (self.n_stages as f64 * self.makespan)
     }
 
@@ -88,13 +164,14 @@ impl SimResult {
             return 0.0;
         }
         (0..self.n_stages)
-            .map(|s| self.busy.get(&(s, Stream::NetOut)).copied().unwrap_or(0.0) / self.makespan)
+            .map(|s| self.stream_busy(s, Stream::NetOut) / self.makespan)
             .fold(0.0, f64::max)
     }
 
     /// Largest gap (seconds) between consecutive `ReduceGrad` completions
     /// — small for LGA (spread over the backward pass), large for
-    /// standard GA (bunched at the end).
+    /// standard GA (bunched at the end). Needs a recorded timeline
+    /// (`record_timeline: true`); reports 0 otherwise.
     pub fn reduce_spread(&self) -> f64 {
         let mut ends: Vec<f64> = self
             .timeline
@@ -105,14 +182,15 @@ impl SimResult {
         if ends.len() < 2 {
             return 0.0;
         }
-        ends.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ends.sort_by(f64::total_cmp);
         ends.windows(2).map(|w| w[1] - w[0]).fold(0.0, f64::max)
     }
 
     /// Exposed network tail: time between the last Fwd/Bwd compute
     /// finishing and the last network op finishing. Standard gradient
     /// accumulation serialises the whole gradient reduction here
-    /// (Figure 1 top); LGA hides it behind the backward pass.
+    /// (Figure 1 top); LGA hides it behind the backward pass. Needs a
+    /// recorded timeline (`record_timeline: true`).
     pub fn exposed_network_tail(&self) -> f64 {
         let last_compute = self
             .timeline
@@ -144,8 +222,9 @@ impl PartialOrd for Event {
 }
 impl Ord for Event {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        // Min-heap on time.
-        other.time.partial_cmp(&self.time).unwrap().then_with(|| other.id.cmp(&self.id))
+        // Min-heap on time. `total_cmp` so a NaN duration (a broken cost
+        // table) degrades to a deterministic order instead of a panic.
+        other.time.total_cmp(&self.time).then_with(|| other.id.cmp(&self.id))
     }
 }
 
@@ -158,52 +237,103 @@ pub fn simulate(s: &Schedule, costs: &CostTable) -> SimResult {
     simulate_program(&program, costs)
 }
 
-/// Run a compiled program against a cost table. This is the hot path of
-/// the planner's simulate-in-the-loop search: no per-event dependency
-/// scanning, just counter decrements along the precomputed edges.
+/// Run a compiled program against a cost table with default options
+/// (timeline recorded) and fresh scratch. This is the convenience entry
+/// point; the planner's simulate-in-the-loop search uses
+/// [`simulate_program_into`] to skip the timeline and reuse buffers.
 pub fn simulate_program(p: &ScheduleProgram, costs: &CostTable) -> SimResult {
+    simulate_program_into(p, costs, SimOptions::default(), &mut SimScratch::new())
+}
+
+/// Run a compiled program with explicit options and fresh scratch.
+pub fn simulate_program_opts(p: &ScheduleProgram, costs: &CostTable, opts: SimOptions) -> SimResult {
+    simulate_program_into(p, costs, opts, &mut SimScratch::new())
+}
+
+/// Run a compiled program against a cost table, reusing `scratch` across
+/// calls. This is the hot path of the planner's simulate-in-the-loop
+/// search: no per-event dependency scanning (just counter decrements
+/// along the precomputed edges) and, with `record_timeline: false` plus
+/// [`SimScratch::recycle`], no heap allocation after warmup.
+pub fn simulate_program_into(
+    p: &ScheduleProgram,
+    costs: &CostTable,
+    opts: SimOptions,
+    scratch: &mut SimScratch,
+) -> SimResult {
     let n = p.len();
+    let n_slots = p.n_stages * N_STREAMS;
+
+    let SimScratch {
+        pending,
+        head,
+        running,
+        stream_free,
+        mem,
+        retry,
+        events,
+        batch,
+        busy_pool,
+        peak_pool,
+        timeline_pool,
+    } = scratch;
 
     // Outstanding predecessor-edge counts per op.
-    let mut pending: Vec<u32> = (0..n).map(|i| p.preds_of(i as u32).len() as u32).collect();
-    // Per-(stage, stream) cursor into the program's run queues.
-    let mut head: Vec<[usize; N_STREAMS]> = vec![[0; N_STREAMS]; p.n_stages];
-    let mut running: Vec<[bool; N_STREAMS]> = vec![[false; N_STREAMS]; p.n_stages];
-    let mut stream_free: Vec<[f64; N_STREAMS]> = vec![[0.0; N_STREAMS]; p.n_stages];
-
-    let mut events: BinaryHeap<Event> = BinaryHeap::with_capacity(64);
-    let mut timeline: Vec<TimedOp> = Vec::with_capacity(n);
-    let mut busy: HashMap<(usize, Stream), f64> = HashMap::new();
-    let mut now = 0.0f64;
-
+    pending.clear();
+    p.fill_pending(pending);
+    // Per-(stage, stream) cursor / occupancy / free-time, flat-indexed
+    // `stage * N_STREAMS + stream`.
+    head.clear();
+    head.resize(n_slots, 0);
+    running.clear();
+    running.resize(n_slots, false);
+    stream_free.clear();
+    stream_free.resize(n_slots, 0.0);
     // Memory tracking: running checkpoint count per stage; peak.
-    let mut mem: Vec<f64> = vec![0.0; p.n_stages];
-    let mut peak: Vec<f64> = vec![0.0; p.n_stages];
+    mem.clear();
+    mem.resize(p.n_stages, 0.0);
+    events.clear();
+    batch.clear();
+    // Streams whose head op may have become startable.
+    retry.clear();
+    retry.extend(0..n_slots as u32);
 
+    let mut busy = std::mem::take(busy_pool);
+    busy.clear();
+    busy.resize(n_slots, 0.0);
+    let mut peak = std::mem::take(peak_pool);
+    peak.clear();
+    peak.resize(p.n_stages, 0.0);
+    let mut timeline = std::mem::take(timeline_pool);
+    timeline.clear();
+    if opts.record_timeline {
+        timeline.reserve(n);
+    }
+
+    let mut now = 0.0f64;
     let mut completed = 0usize;
 
-    // Streams whose head op may have become startable.
-    let mut retry: Vec<(usize, usize)> =
-        (0..p.n_stages).flat_map(|st| (0..N_STREAMS).map(move |si| (st, si))).collect();
-
     macro_rules! try_start {
-        ($stage:expr, $si:expr) => {{
-            let (stage, si) = ($stage, $si);
-            if !running[stage][si] {
+        ($slot:expr) => {{
+            let slot = $slot as usize;
+            if !running[slot] {
+                let (stage, si) = (slot / N_STREAMS, slot % N_STREAMS);
                 let q = &p.queues[stage][si];
-                let h = head[stage][si];
+                let h = head[slot] as usize;
                 if h < q.len() {
                     let id = q[h] as usize;
                     if pending[id] == 0 {
-                        head[stage][si] = h + 1;
+                        head[slot] = h as u32 + 1;
                         let op = p.ops[id].op;
-                        let start = now.max(stream_free[stage][si]);
+                        let start = now.max(stream_free[slot]);
                         let dur = costs.duration(&op);
                         let end = start + dur;
-                        running[stage][si] = true;
+                        running[slot] = true;
                         events.push(Event { time: end, id: id as u32 });
-                        timeline.push(TimedOp { stage, op, stream: STREAMS[si], start, end });
-                        *busy.entry((stage, STREAMS[si])).or_insert(0.0) += dur;
+                        busy[slot] += dur;
+                        if opts.record_timeline {
+                            timeline.push(TimedOp { stage, op, stream: STREAMS[si], start, end });
+                        }
                         // Memory: checkpoints accumulate at Fwd, free at Bwd.
                         if let Op::Fwd { .. } = op {
                             mem[stage] += costs.checkpoint_bytes;
@@ -221,8 +351,8 @@ pub fn simulate_program(p: &ScheduleProgram, costs: &CostTable) -> SimResult {
     }
 
     loop {
-        while let Some((stage, si)) = retry.pop() {
-            try_start!(stage, si);
+        while let Some(slot) = retry.pop() {
+            try_start!(slot);
         }
         if completed == n {
             break;
@@ -231,7 +361,7 @@ pub fn simulate_program(p: &ScheduleProgram, costs: &CostTable) -> SimResult {
             let mut stuck: Vec<String> = Vec::new();
             for st in 0..p.n_stages {
                 for si in 0..N_STREAMS {
-                    if let Some(&id) = p.queues[st][si].get(head[st][si]) {
+                    if let Some(&id) = p.queues[st][si].get(head[st * N_STREAMS + si] as usize) {
                         stuck.push(format!(
                             "stage {st} {} waiting on {} edges",
                             p.ops[id as usize].op,
@@ -247,7 +377,8 @@ pub fn simulate_program(p: &ScheduleProgram, costs: &CostTable) -> SimResult {
         };
         now = ev.time;
         // Complete every op finishing at this instant.
-        let mut batch = vec![ev];
+        batch.clear();
+        batch.push(ev);
         while let Some(next) = events.peek() {
             if next.time <= now {
                 batch.push(events.pop().unwrap());
@@ -255,25 +386,26 @@ pub fn simulate_program(p: &ScheduleProgram, costs: &CostTable) -> SimResult {
                 break;
             }
         }
-        for e in batch {
+        for &e in batch.iter() {
             let node = &p.ops[e.id as usize];
-            let (stage, si) = (node.stage as usize, node.stream.index());
-            running[stage][si] = false;
-            stream_free[stage][si] = e.time;
+            let slot = node.stage as usize * N_STREAMS + node.stream.index();
+            running[slot] = false;
+            stream_free[slot] = e.time;
             for &sc in p.succs_of(e.id) {
                 pending[sc as usize] -= 1;
                 if pending[sc as usize] == 0 {
                     let sn = &p.ops[sc as usize];
-                    retry.push((sn.stage as usize, sn.stream.index()));
+                    retry.push(sn.stage * N_STREAMS as u32 + sn.stream.index() as u32);
                 }
             }
-            retry.push((stage, si));
+            retry.push(slot as u32);
             completed += 1;
         }
     }
 
-    let makespan = timeline.iter().map(|t| t.end).fold(0.0, f64::max);
-    SimResult { makespan, busy, peak_memory: peak, timeline, n_stages: p.n_stages }
+    // Events complete in time order, so the clock's final value is the
+    // last op's end — identical to the max over a recorded timeline.
+    SimResult { makespan: now, busy, peak_memory: peak, timeline, n_stages: p.n_stages }
 }
 
 #[cfg(test)]
@@ -359,6 +491,41 @@ mod tests {
         // And the wrapper agrees with the explicit two-step path.
         let wrapped = simulate(&s, &costs(1, 4, 8, false));
         assert!((wrapped.makespan - full.makespan).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timeline_off_matches_recording_path_bit_for_bit() {
+        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: true, data_parallel: true };
+        let s = modular_pipeline(&sp);
+        let p = crate::schedule::lower(&s).unwrap();
+        let c = costs(8, 4, 8, true);
+        let on = simulate_program(&p, &c);
+        let off = simulate_program_opts(&p, &c, SimOptions { record_timeline: false });
+        assert_eq!(on.makespan.to_bits(), off.makespan.to_bits());
+        assert_eq!(on.busy.len(), off.busy.len());
+        for (a, b) in on.busy.iter().zip(&off.busy) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in on.peak_memory.iter().zip(&off.peak_memory) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(off.timeline.is_empty() && !on.timeline.is_empty());
+    }
+
+    #[test]
+    fn scratch_reuse_changes_nothing() {
+        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: true };
+        let s = standard_ga(&sp);
+        let p = crate::schedule::lower(&s).unwrap();
+        let c = costs(8, 4, 8, false);
+        let fresh = simulate_program(&p, &c);
+        let mut scratch = SimScratch::new();
+        for _ in 0..3 {
+            let r = simulate_program_into(&p, &c, SimOptions { record_timeline: false }, &mut scratch);
+            assert_eq!(r.makespan.to_bits(), fresh.makespan.to_bits());
+            assert_eq!(r.busy, fresh.busy);
+            scratch.recycle(r);
+        }
     }
 
     #[test]
@@ -451,7 +618,7 @@ mod tests {
         // metrics must stay comparable (no NaN poisoning planner sorts).
         let empty = SimResult {
             makespan: 0.0,
-            busy: HashMap::new(),
+            busy: Vec::new(),
             peak_memory: vec![],
             timeline: vec![],
             n_stages: 0,
@@ -461,7 +628,7 @@ mod tests {
         assert_eq!(empty.max_netout_utilisation(), 0.0);
         let idle = SimResult {
             makespan: 1.0,
-            busy: HashMap::new(),
+            busy: Vec::new(),
             peak_memory: vec![0.0],
             timeline: vec![],
             n_stages: 1,

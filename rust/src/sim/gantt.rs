@@ -33,6 +33,8 @@ fn glyph(op: &Op) -> char {
 }
 
 /// Render a simulated timeline as ASCII, `width` characters across.
+/// Needs a result produced with `record_timeline: true` (the default);
+/// a timeline-free planner-loop result renders as all-idle rows.
 pub fn render(result: &SimResult, width: usize) -> String {
     let span = result.makespan.max(1e-30);
     let scale = width as f64 / span;

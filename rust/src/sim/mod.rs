@@ -13,5 +13,8 @@ pub mod engine;
 pub mod gantt;
 
 pub use cost::{CostTable, Stream};
-pub use engine::{simulate, simulate_program, SimResult, TimedOp};
+pub use engine::{
+    simulate, simulate_program, simulate_program_into, simulate_program_opts, SimOptions,
+    SimResult, SimScratch, TimedOp,
+};
 pub use gantt::render;

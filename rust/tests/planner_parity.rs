@@ -1,0 +1,145 @@
+//! Parity proofs for the planner/simulator perf refactor: the pruned,
+//! parallel, cached fast paths must be *semantically identical* to the
+//! straightforward references they replaced.
+//!
+//! 1. `search_fastest` (memory pre-filter + branch-and-bound + thread
+//!    fan-out) selects the same plan as `search_fastest_exhaustive`
+//!    (serial, full evaluation of every candidate), across strategy ×
+//!    cluster.
+//! 2. `simulate_program` with `record_timeline: false` reports
+//!    bit-identical makespan / busy / peak memory to the recording path.
+//! 3. Reusing one `SimScratch` across programs changes nothing.
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::planner::{search_fastest, search_fastest_exhaustive};
+use lga_mpp::report::menu_for;
+use lga_mpp::schedule::{lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::sim::{
+    simulate_program, simulate_program_into, simulate_program_opts, CostTable, SimOptions,
+    SimScratch,
+};
+
+/// One search-parity comparison: pruned/parallel vs serial exhaustive.
+fn assert_search_parity(cluster: &ClusterSpec, cname: &str, strategy: Strategy, x: usize) {
+    let model = XModel::new(x);
+    let menu = menu_for(strategy);
+    let fast = search_fastest(&model, cluster, strategy, menu);
+    let slow = search_fastest_exhaustive(&model, cluster, strategy, menu);
+    let tag = format!("{cname}/{strategy:?}/X_{x}");
+    match (fast, slow) {
+        (None, None) => {}
+        (Some(a), Some(b)) => {
+            assert_eq!(a.cfg, b.cfg, "{tag}: different plan selected");
+            let (ta, tb) = (a.speed.training_secs, b.speed.training_secs);
+            assert!((ta - tb).abs() <= 1e-9 * tb.max(1.0), "{tag}: training_secs {ta} vs {tb}");
+            assert_eq!(
+                a.memory.total().to_bits(),
+                b.memory.total().to_bits(),
+                "{tag}: memory breakdown diverged"
+            );
+        }
+        (a, b) => panic!(
+            "{tag}: feasibility disagrees (fast {:?}, exhaustive {:?})",
+            a.map(|p| p.cfg),
+            b.map(|p| p.cfg)
+        ),
+    }
+}
+
+#[test]
+fn pruned_parallel_search_matches_serial_exhaustive_everywhere() {
+    // Full strategy matrix at X_32 (keeps the debug-mode `cargo test`
+    // run quick — the exhaustive reference is unpruned by design).
+    let clusters = [
+        (ClusterSpec::reference(), "reference"),
+        (ClusterSpec::ethernet(), "ethernet"),
+        (ClusterSpec::unlimited_node(), "unlimited_node"),
+    ];
+    for (cluster, cname) in &clusters {
+        for strategy in Strategy::ALL {
+            assert_search_parity(cluster, cname, strategy, 32);
+        }
+    }
+    // One deep-grid case (the figure sweeps' heaviest single search);
+    // CI re-runs this whole test in release mode as the smoke step.
+    assert_search_parity(&ClusterSpec::reference(), "reference", Strategy::Improved, 108);
+}
+
+fn cost_table(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
+    let cfg = TrainConfig {
+        strategy: if partition { Strategy::Improved } else { Strategy::Baseline },
+        n_b,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu: 1.0,
+        offload: false,
+        partition,
+    };
+    CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
+}
+
+#[test]
+fn timeline_off_reports_bit_identical_metrics() {
+    // Planner-relevant shapes, including the X_160 snap and a deep case.
+    let shapes: [(usize, usize, usize, bool); 4] =
+        [(16, 4, 8, false), (64, 8, 16, true), (160, 5, 32, true), (128, 32, 128, false)];
+    for (d_l, n_l, n_mu, partition) in shapes {
+        let spec = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
+        let costs = cost_table(8, n_l, n_mu, partition);
+        for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
+            let program = lower(&schedule).expect("generated schedules lower");
+            let on = simulate_program(&program, &costs);
+            let off =
+                simulate_program_opts(&program, &costs, SimOptions { record_timeline: false });
+            let tag = format!("{} {d_l}L/{n_l}S/{n_mu}mb", program.name);
+            assert_eq!(on.makespan.to_bits(), off.makespan.to_bits(), "{tag}: makespan");
+            assert_eq!(on.busy.len(), off.busy.len(), "{tag}: busy len");
+            for (i, (a, b)) in on.busy.iter().zip(&off.busy).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: busy[{i}]");
+            }
+            assert_eq!(on.peak_memory.len(), off.peak_memory.len(), "{tag}: peak len");
+            for (i, (a, b)) in on.peak_memory.iter().zip(&off.peak_memory).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: peak_memory[{i}]");
+            }
+            assert_eq!(
+                on.compute_efficiency().to_bits(),
+                off.compute_efficiency().to_bits(),
+                "{tag}: efficiency"
+            );
+            assert!(off.timeline.is_empty(), "{tag}: timeline should be skipped");
+            assert_eq!(on.timeline.len(), program.len(), "{tag}: full timeline expected");
+        }
+    }
+}
+
+#[test]
+fn scratch_reuse_across_programs_changes_nothing() {
+    let spec_a = ScheduleSpec { d_l: 64, n_l: 8, n_mu: 16, partition: true, data_parallel: true };
+    let spec_b = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: true };
+    let prog_a = lower(&modular_pipeline(&spec_a)).unwrap();
+    let prog_b = lower(&standard_ga(&spec_b)).unwrap();
+    let costs_a = cost_table(8, 8, 16, true);
+    let costs_b = cost_table(8, 4, 8, false);
+    let ref_a = simulate_program(&prog_a, &costs_a);
+    let ref_b = simulate_program(&prog_b, &costs_b);
+
+    let opts = SimOptions { record_timeline: false };
+    let mut scratch = SimScratch::new();
+    // Interleave programs of different sizes through one scratch: results
+    // must not depend on what ran before.
+    for _ in 0..3 {
+        let a = simulate_program_into(&prog_a, &costs_a, opts, &mut scratch);
+        assert_eq!(a.makespan.to_bits(), ref_a.makespan.to_bits());
+        assert_eq!(a.busy, ref_a.busy);
+        assert_eq!(a.peak_memory, ref_a.peak_memory);
+        scratch.recycle(a);
+        let b = simulate_program_into(&prog_b, &costs_b, opts, &mut scratch);
+        assert_eq!(b.makespan.to_bits(), ref_b.makespan.to_bits());
+        assert_eq!(b.busy, ref_b.busy);
+        assert_eq!(b.peak_memory, ref_b.peak_memory);
+        scratch.recycle(b);
+    }
+}
