@@ -29,7 +29,14 @@ fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
 fn main() {
     let mut json = BenchJson::new("fig1_schedules");
     // --- Figure 1: reduction overlap ------------------------------------
-    let spec = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: false, data_parallel: true };
+    let spec = ScheduleSpec {
+        d_l: 16,
+        n_l: 1,
+        n_mu: 8,
+        partition: false,
+        offload: false,
+        data_parallel: true,
+    };
     let c = costs(8, 1, 8, false);
     let rs = simulate(&standard_ga(&spec), &c);
     let rl = simulate(&layered_ga(&spec), &c);
@@ -46,7 +53,14 @@ fn main() {
     json.push("fig1_layered_tail_secs", rl.exposed_network_tail());
 
     // --- Figure 2: partition traffic ------------------------------------
-    let spec_p = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: true, data_parallel: true };
+    let spec_p = ScheduleSpec {
+        d_l: 16,
+        n_l: 1,
+        n_mu: 8,
+        partition: true,
+        offload: false,
+        data_parallel: true,
+    };
     let cp = costs(8, 1, 8, true);
     let s2 = standard_ga(&spec_p);
     let l2 = layered_ga(&spec_p);
@@ -64,7 +78,14 @@ fn main() {
     assert_eq!(restores(&s2), 8 * restores(&l2));
 
     // --- Figure 3: pipeline bubble --------------------------------------
-    let spec3 = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let spec3 = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 8,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
     let c3 = costs(1, 4, 8, false);
     let rn = simulate(&standard_ga(&spec3), &c3);
     let rm = simulate(&modular_pipeline(&spec3), &c3);
@@ -79,7 +100,14 @@ fn main() {
     assert!(rm.makespan < rn.makespan);
 
     // --- simulator timing ------------------------------------------------
-    let big = ScheduleSpec { d_l: 160, n_l: 5, n_mu: 32, partition: true, data_parallel: true };
+    let big = ScheduleSpec {
+        d_l: 160,
+        n_l: 5,
+        n_mu: 32,
+        partition: true,
+        offload: false,
+        data_parallel: true,
+    };
     let cb = costs(16, 5, 32, true);
     let sched = modular_pipeline(&big);
     let n_ops = sched.len();

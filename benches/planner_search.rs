@@ -100,7 +100,14 @@ fn main() {
 
     // ---- simulator hot path: zero allocations after warmup --------------
     let spec =
-        ScheduleSpec { d_l: 128, n_l: 32, n_mu: 128, partition: false, data_parallel: true };
+        ScheduleSpec {
+            d_l: 128,
+            n_l: 32,
+            n_mu: 128,
+            partition: false,
+            offload: false,
+            data_parallel: true,
+        };
     let cfg = TrainConfig {
         strategy: Strategy::Baseline,
         n_b: 8,

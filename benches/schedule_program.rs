@@ -73,7 +73,14 @@ fn main() {
     for (d_l, n_l, n_mu, part) in
         [(16usize, 4usize, 8usize, false), (64, 8, 16, true), (160, 5, 32, true)]
     {
-        let spec = ScheduleSpec { d_l, n_l, n_mu, partition: part, data_parallel: true };
+        let spec = ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            partition: part,
+            offload: false,
+            data_parallel: true,
+        };
         let costs = mk_costs(n_l, n_mu, part);
         bench_one(&format!("modular {d_l}L/{n_l}S/{n_mu}mb"), &modular_pipeline(&spec), &costs);
         bench_one(&format!("gpipe   {d_l}L/{n_l}S/{n_mu}mb"), &standard_ga(&spec), &costs);
@@ -90,7 +97,14 @@ fn main() {
     // Acceptance config: the planner's simulate-in-the-loop scale.
     println!("\n== acceptance: d_l=128, n_l=32, n_mu=128 ==\n");
     let spec =
-        ScheduleSpec { d_l: 128, n_l: 32, n_mu: 128, partition: false, data_parallel: true };
+        ScheduleSpec {
+            d_l: 128,
+            n_l: 32,
+            n_mu: 128,
+            partition: false,
+            offload: false,
+            data_parallel: true,
+        };
     let costs = mk_costs(32, 128, false);
     let mut worst = f64::MAX;
     worst = worst.min(bench_one("modular 128L/32S/128mb", &modular_pipeline(&spec), &costs));

@@ -46,7 +46,14 @@ fn main() {
     );
     let mut worst = f64::MAX;
     for (name, d_l, n_l, n_mu, part) in cases {
-        let spec = ScheduleSpec { d_l, n_l, n_mu, partition: part, data_parallel: true };
+        let spec = ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            partition: part,
+            offload: false,
+            data_parallel: true,
+        };
         let cfg = TrainConfig {
             strategy: if part { Strategy::Improved } else { Strategy::Baseline },
             n_b: 8,

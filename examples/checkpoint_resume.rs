@@ -1,0 +1,92 @@
+//! §8.2 end-to-end: real-time checkpoint streaming, a simulated crash,
+//! and elastic resume on a different cluster size.
+//!
+//! The run trains the `tiny` preset with `offload` on, so every
+//! optimizer step streams each layer's owned parameter shard + Adam
+//! moments to a durable `FileStore` — every batch is a restore point.
+//! After a "crash" (the process simply stops), training resumes from the
+//! streamed state on a *different* data-parallel degree: the stored
+//! shards are re-sliced through `ShardMap` on load, which is what makes
+//! cluster resizing a zero-downtime event (§8.1).
+//!
+//! Run with: `cargo run --release --example checkpoint_resume`
+//! Flags: --steps N (8)  --kill-at N (4)  --store DIR (temp dir)
+//!
+//! Needs the PJRT artifacts (`make artifacts`); prints a note and exits
+//! cleanly without them.
+
+use lga_mpp::offload::{FileStore, StateStore};
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::report;
+use lga_mpp::trainer::{train, Policy, TrainerConfig};
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter().position(|a| a == name).and_then(|i| args.get(i + 1).cloned())
+}
+
+fn config(n_b: usize, n_mu: usize, steps: usize, store: std::path::PathBuf) -> TrainerConfig {
+    let mut c = TrainerConfig::quick("tiny");
+    c.steps = steps;
+    c.n_b = n_b;
+    c.n_mu = n_mu;
+    c.policy = Policy::Improved;
+    c.partition = n_b > 1;
+    c.offload = true;
+    c.store_dir = Some(store);
+    c.lr = LrSchedule::constant(3e-3);
+    c
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = flag(&args, "--steps").map(|v| v.parse().unwrap()).unwrap_or(8);
+    let kill_at: usize = flag(&args, "--kill-at").map(|v| v.parse().unwrap()).unwrap_or(4);
+    anyhow::ensure!(kill_at < steps, "--kill-at must be below --steps");
+    let dir = flag(&args, "--store").map(std::path::PathBuf::from).unwrap_or_else(|| {
+        std::env::temp_dir().join(format!("lga_ckpt_example_{}", std::process::id()))
+    });
+
+    let probe = TrainerConfig::quick("tiny");
+    if !probe.artifacts_root.join("tiny/manifest.json").exists() {
+        println!("(skipping: run `make artifacts` first to build the tiny preset)");
+        return Ok(());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // --- phase 1: train with real-time checkpoints, then "crash" --------
+    println!("== phase 1: dp=2, partitioned, streaming to {dir:?} ==");
+    let r1 = train(&config(2, 2, kill_at, dir.clone()))?;
+    for (i, l) in r1.losses.iter().enumerate() {
+        println!("  step {i}  loss {l:.4}");
+    }
+    println!(
+        "crash after step {} — {} records / {:.2} MiB already durable",
+        kill_at - 1,
+        r1.checkpoint_records,
+        r1.checkpoint_bytes_written as f64 / (1u64 << 20) as f64
+    );
+    let store = FileStore::new(&dir)?;
+    println!("store holds steps {:?}", store.steps()?);
+
+    // --- phase 2: elastic resume on a smaller cluster -------------------
+    println!("\n== phase 2: resume at dp=1 (shards re-sliced on load) ==");
+    let mut cfg = config(1, 4, steps, dir.clone());
+    cfg.resume = true;
+    let r2 = train(&cfg)?;
+    println!("resumed at step {}", r2.start_step);
+    for (i, l) in r2.losses.iter().enumerate() {
+        println!("  step {}  loss {l:.4}", r2.start_step + i);
+    }
+
+    println!(
+        "\n{}",
+        report::checkpoint_summary(
+            r1.losses.len() + r2.losses.len(),
+            r1.checkpoint_records + r2.checkpoint_records,
+            r1.checkpoint_bytes_written + r2.checkpoint_bytes_written,
+            1000.0,
+        )
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

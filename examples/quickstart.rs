@@ -31,7 +31,14 @@ fn main() -> anyhow::Result<()> {
     }
 
     // --- 2. Simulate the schedules (Figure 3 in numbers) ----------------
-    let spec = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let spec = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 8,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
     let cfg = lga_mpp::costmodel::TrainConfig {
         strategy: Strategy::Baseline,
         n_b: 1,

@@ -42,7 +42,14 @@ fn main() {
     // Figure 1: standard vs layered gradient accumulation under data
     // parallelism (single stage, 4 micro-batches, 8-way DP reduction).
     println!("== Figure 1: gradient accumulation scheduling (data parallel) ==\n");
-    let spec = ScheduleSpec { d_l: 8, n_l: 1, n_mu: 4, partition: false, data_parallel: true };
+    let spec = ScheduleSpec {
+        d_l: 8,
+        n_l: 1,
+        n_mu: 4,
+        partition: false,
+        offload: false,
+        data_parallel: true,
+    };
     let c = costs(8, 1, 4, false);
     let std_s = standard_ga(&spec);
     let r = simulate(&std_s, &c);
@@ -59,7 +66,14 @@ fn main() {
     // Figure 2: the same with a partitioned training state — standard GA
     // restores parameters per micro-batch, LGA once per layer per pass.
     println!("== Figure 2: with training-state partition (ZeRO-3) ==\n");
-    let spec = ScheduleSpec { d_l: 8, n_l: 1, n_mu: 4, partition: true, data_parallel: true };
+    let spec = ScheduleSpec {
+        d_l: 8,
+        n_l: 1,
+        n_mu: 4,
+        partition: true,
+        offload: false,
+        data_parallel: true,
+    };
     let c = costs(8, 1, 4, true);
     let std_s = standard_ga(&spec);
     let lga_s = layered_ga(&spec);
@@ -77,7 +91,14 @@ fn main() {
 
     // Figure 3: contiguous vs modular pipeline.
     println!("== Figure 3: standard vs modular pipeline (16 layers / 4 stages) ==\n");
-    let spec = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 6, partition: false, data_parallel: false };
+    let spec = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 6,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
     let c = costs(1, 4, 6, false);
     let naive = standard_ga(&spec);
     let rn = simulate(&naive, &c);
@@ -96,7 +117,14 @@ fn main() {
     // by the chunk count v; the modular pipeline is the v = d_l/n_l limit
     // of the same idea, combined with layered accumulation.
     println!("\n== §4 baseline: interleaved 1F1B (Megatron-LM) ==\n");
-    let spec = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+    let spec = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 8,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
     let c = costs(1, 4, 8, false);
     let fb = one_f_one_b(&spec);
     let rf = simulate(&fb, &c);

@@ -95,14 +95,24 @@ pub fn resize_downtime_secs(state_bytes: f64, tier_bandwidth: f64, realtime: boo
     }
 }
 
+/// Smallest batch (sequences) worth scheduling a cluster for: below this
+/// the gradient noise floor, not the hardware, limits progress, so the
+/// elastic schedule never shrinks the batch past it.
+pub const MIN_BATCH_SEQS: f64 = 32.0;
+
 /// The §8.1 cluster-size schedule for a model: GPUs to use at progress f,
-/// given the fastest-plan cluster size at the late-training b_c.
+/// given the fastest-plan cluster size at the late-training b_c. The
+/// early-training floor is the caller's `f0` combined with a
+/// model-derived one: the batch never drops below [`MIN_BATCH_SEQS`]
+/// sequences, i.e. the cluster fraction never drops below
+/// `MIN_BATCH_SEQS / b_c(final)` — larger models, whose critical batch
+/// is bigger, can therefore shrink *further* early in training.
 pub fn cluster_schedule(model: &XModel, n_gpu_max: usize, steps: usize, f0: f64) -> Vec<(f64, usize)> {
-    let _ = model;
+    let f_floor = f0.max((MIN_BATCH_SEQS / model.critical_batch_size()).min(1.0));
     (0..steps)
         .map(|i| {
             let f = (i as f64 + 0.5) / steps as f64;
-            (f, ((n_gpu_max as f64) * bc_fraction(f, f0)).round().max(1.0) as usize)
+            (f, ((n_gpu_max as f64) * bc_fraction(f, f_floor)).round().max(1.0) as usize)
         })
         .collect()
 }
@@ -151,5 +161,24 @@ mod tests {
         let sched = cluster_schedule(&XModel::x160(), 38_640, 20, 0.05);
         assert!(sched.windows(2).all(|w| w[0].1 <= w[1].1));
         assert_eq!(sched.last().unwrap().1, 37_674); // ~n_max at the end
+    }
+
+    #[test]
+    fn cluster_schedule_floor_scales_with_the_model() {
+        // With f0 = 0 the model floor binds early on: the cluster still
+        // processes MIN_BATCH_SEQS sequences per step. (The argument used
+        // to be ignored entirely — `let _ = model;`.)
+        let big = XModel::x160();
+        let sched = cluster_schedule(&big, 38_640, 100, 0.0);
+        let want = (38_640.0 * (MIN_BATCH_SEQS / big.critical_batch_size())).round() as usize;
+        assert_eq!(sched[0].1, want);
+        assert!(want > 1, "floor must actually bind in this setup");
+        // A smaller model has a smaller critical batch, hence a *larger*
+        // relative floor — its cluster cannot shrink as far.
+        let small = XModel::new(32);
+        let s2 = cluster_schedule(&small, 38_640, 100, 0.0);
+        assert!(s2[0].1 > sched[0].1, "{} vs {}", s2[0].1, sched[0].1);
+        // Late-training sizes are unaffected by the floor.
+        assert_eq!(s2.last().unwrap().1, sched.last().unwrap().1);
     }
 }

@@ -103,11 +103,11 @@ usage:
   repro table sched                   [--x N] [--layers N] [--stages N] [--mb N]
   repro figure <4|5|6|7|8>            [--max-x N]
   repro schedule [--policy baseline|improved|1f1b|interleaved] [--layers N]
-                 [--stages N] [--mb N] [--chunks V] [--partition] [--x N]
-                 [--width N]
+                 [--stages N] [--mb N] [--chunks V] [--partition] [--offload]
+                 [--x N] [--width N]
   repro train [--preset tiny|e2e] [--dp N] [--pp N] [--mb N] [--steps N]
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
-              [--artifacts DIR]
+              [--offload] [--store DIR] [--resume] [--artifacts DIR]
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
              [--budget-days D] [--no-sim]
 ";
@@ -196,6 +196,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         n_l,
         n_mu,
         partition: args.has("partition"),
+        offload: args.has("offload"),
         data_parallel: true,
     };
     let s = match policy {
@@ -228,7 +229,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         n_a: 1,
         n_mu,
         b_mu: 1.0,
-        offload: false,
+        offload: args.has("offload"),
         partition: args.has("partition"),
     };
     let costs = CostTable::new(&XModel::new(x).shape(), &cfg, &ClusterSpec::reference());
@@ -261,6 +262,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.n_mu = args.get_usize("mb", 2)?;
     cfg.steps = args.get_usize("steps", 20)?;
     cfg.partition = args.has("partition");
+    cfg.offload = args.has("offload");
+    cfg.resume = args.has("resume");
+    if let Some(dir) = args.get("store") {
+        cfg.store_dir = Some(dir.into());
+    }
+    if cfg.resume && cfg.store_dir.is_none() {
+        bail!("--resume needs --store DIR (a durable checkpoint store to resume from)");
+    }
     cfg.policy = match args.get("policy").unwrap_or("improved") {
         "baseline" => Policy::Baseline,
         "improved" => Policy::Improved,
@@ -275,18 +284,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         min_ratio: 0.1,
     };
     println!(
-        "training preset={preset} dp={} pp={} mb={} policy={} partition={} steps={}",
+        "training preset={preset} dp={} pp={} mb={} policy={} partition={} offload={} steps={}",
         cfg.n_b,
         cfg.n_l,
         cfg.n_mu,
         cfg.policy.name(),
         cfg.partition,
+        cfg.offload,
         cfg.steps
     );
     let r = train(&cfg)?;
+    if r.start_step > 0 {
+        println!("resumed from real-time checkpoint: continuing at step {}", r.start_step);
+    }
     for (i, l) in r.losses.iter().enumerate() {
+        let step = r.start_step + i;
         if i % 10 == 0 || i + 1 == r.losses.len() {
-            println!("step {i:>5}  loss {l:.4}");
+            println!("step {step:>5}  loss {l:.4}");
         }
     }
     println!(
@@ -297,6 +311,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         100.0 * r.execute_secs / r.wall_secs.max(1e-9),
         r.collective_elems_sent as f64 / 1e6
     );
+    if cfg.offload {
+        println!(
+            "{}",
+            report::checkpoint_summary(
+                r.losses.len(),
+                r.checkpoint_records,
+                r.checkpoint_bytes_written,
+                1000.0,
+            )
+        );
+    }
     Ok(())
 }
 

@@ -5,6 +5,18 @@
 //! can stream not just to CPU memory but to SSDs, remote storage, or even
 //! hard drives, turning every batch into a durable checkpoint at
 //! negligible cost.
+//!
+//! This module holds both halves: the feasibility *analysis* (below) and
+//! the executable [`store`] the trainer streams to when a schedule is
+//! generated with `offload` — the real-time checkpoints that make crash
+//! recovery and elastic resume (§8.1/§8.2) one-batch events.
+
+pub mod store;
+
+pub use store::{
+    assemble, covers, latest_complete_step, slot_embed, slot_head, slot_pos, AssembledSlot,
+    FileStore, MemoryStore, StateRecord, StateStore,
+};
 
 use crate::costmodel::{state_offload_intensity, TrainConfig};
 use crate::hardware::{GpuSpec, LinkKind};

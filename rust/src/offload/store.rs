@@ -1,0 +1,668 @@
+//! State store: the executable half of §8.2's real-time checkpoints.
+//!
+//! The analysis in [`super`] shows that with layered gradient
+//! accumulation the state-offload stream is intense enough (ν = b·d_s)
+//! to hide behind compute even on slow tiers. This module is where those
+//! streams *land*: every `OffloadStore` op the trainer executes writes
+//! one [`StateRecord`] — a layer's owned parameter shard plus its Adam
+//! moments — so that after any step the store holds a durable, complete
+//! snapshot of the training state, one batch behind at worst.
+//!
+//! Records are sharded exactly like the ZeRO-style partition
+//! ([`crate::partition::ShardMap`]): with `n_b` ranks each layer is
+//! covered by `n_b` disjoint `[lo, hi)` records. Resume does not need
+//! the writer's `n_b` — [`assemble`] stitches any complete cover back
+//! into the full buffers, and the reader re-slices its own shard, which
+//! is what makes *elastic* resume (different cluster size) work.
+//!
+//! Two tiers are provided: [`MemoryStore`] (the CPU-memory tier — byte
+//! accounting and in-process resume, no durability) and [`FileStore`]
+//! (the durable tier: one file per record, written atomically via
+//! tmp-file + rename, so a crash mid-write never corrupts an earlier
+//! checkpoint). Crash consistency is read-side: a step only counts as a
+//! checkpoint once [`latest_complete_step`] can fully cover every slot.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+/// Header magic ("LGASTORE") of a serialised [`StateRecord`].
+pub const STORE_MAGIC: u64 = 0x4c47_4153_544f_5245;
+/// Serialisation format version.
+pub const STORE_VERSION: u64 = 1;
+/// Header length in bytes: 9 u64 fields.
+const HEADER_U64S: usize = 9;
+
+/// Slot id of the embedding table (the slots after the `d_l` layers hold
+/// the non-layer state: embedding, positional table, output head).
+pub fn slot_embed(d_l: usize) -> usize {
+    d_l
+}
+
+/// Slot id of the positional-embedding table.
+pub fn slot_pos(d_l: usize) -> usize {
+    d_l + 1
+}
+
+/// Slot id of the output head.
+pub fn slot_head(d_l: usize) -> usize {
+    d_l + 2
+}
+
+/// One streamed checkpoint record: a `[lo, hi)` shard of one slot's
+/// parameters and Adam moments, as written by one rank after one
+/// optimizer step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateRecord {
+    /// Training step the record belongs to (state *after* this step).
+    pub step: u64,
+    /// Slot: layer index, or one of the [`slot_embed`]-style specials.
+    pub slot: u64,
+    /// Shard start (elements into the slot's flat buffer).
+    pub lo: u64,
+    /// Shard end (exclusive).
+    pub hi: u64,
+    /// Full length of the slot's flat buffer (for cover checking).
+    pub total: u64,
+    /// Adam step counter at write time.
+    pub adam_t: u64,
+    /// The writer's global micro-batch count (n_b · n_μ). A resumed run
+    /// may re-shard (different n_b) but must keep this product — it is
+    /// what the split-invariant data keying and gradient scale hinge on
+    /// — so resume verifies it instead of silently diverging.
+    pub global_mbs: u64,
+    /// Parameter values over `[lo, hi)`.
+    pub params: Vec<f32>,
+    /// Adam first moment over `[lo, hi)`.
+    pub m: Vec<f32>,
+    /// Adam second moment over `[lo, hi)`.
+    pub v: Vec<f32>,
+}
+
+impl StateRecord {
+    /// Elements in the shard.
+    pub fn shard_len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+
+    /// Serialised size in bytes.
+    pub fn byte_len(&self) -> usize {
+        8 * HEADER_U64S + 12 * self.shard_len()
+    }
+
+    fn check(&self) -> Result<()> {
+        if self.lo > self.hi || self.hi > self.total {
+            bail!(
+                "record range [{}, {}) outside slot of {} elements",
+                self.lo,
+                self.hi,
+                self.total
+            );
+        }
+        let n = self.shard_len();
+        if self.params.len() != n || self.m.len() != n || self.v.len() != n {
+            bail!(
+                "record buffers ({}, {}, {}) do not match range [{}, {})",
+                self.params.len(),
+                self.m.len(),
+                self.v.len(),
+                self.lo,
+                self.hi
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialise: little-endian u64 header, then params/m/v as f32 LE.
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        self.check()?;
+        let mut out = Vec::with_capacity(self.byte_len());
+        for x in [
+            STORE_MAGIC,
+            STORE_VERSION,
+            self.step,
+            self.slot,
+            self.lo,
+            self.hi,
+            self.total,
+            self.adam_t,
+            self.global_mbs,
+        ] {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+        for arr in [&self.params, &self.m, &self.v] {
+            for f in arr.iter() {
+                out.extend_from_slice(&f.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Deserialise and validate a record.
+    pub fn from_bytes(b: &[u8]) -> Result<StateRecord> {
+        if b.len() < 8 * HEADER_U64S {
+            bail!("record truncated: {} bytes", b.len());
+        }
+        let u = |i: usize| u64::from_le_bytes(b[8 * i..8 * i + 8].try_into().unwrap());
+        if u(0) != STORE_MAGIC {
+            bail!("bad record magic {:#x}", u(0));
+        }
+        if u(1) != STORE_VERSION {
+            bail!("unsupported record version {}", u(1));
+        }
+        let (step, slot, lo, hi, total, adam_t) = (u(2), u(3), u(4), u(5), u(6), u(7));
+        let global_mbs = u(8);
+        if lo > hi || hi > total {
+            bail!("bad record range [{lo}, {hi}) of {total}");
+        }
+        let n = (hi - lo) as usize;
+        let body = &b[8 * HEADER_U64S..];
+        if body.len() != 12 * n {
+            bail!("record body {} bytes, want {}", body.len(), 12 * n);
+        }
+        let floats = |k: usize| -> Vec<f32> {
+            body[4 * k * n..4 * (k + 1) * n]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect()
+        };
+        Ok(StateRecord {
+            step,
+            slot,
+            lo,
+            hi,
+            total,
+            adam_t,
+            global_mbs,
+            params: floats(0),
+            m: floats(1),
+            v: floats(2),
+        })
+    }
+}
+
+/// Where `OffloadStore` ops land: a byte-accounted checkpoint store.
+/// Implementations are shared across worker threads (one `put` per
+/// executed `OffloadStore` op, concurrent across stages and ranks).
+pub trait StateStore: Send + Sync {
+    /// Persist one record, replacing any prior record with the same
+    /// (step, slot, lo, hi) key. Puts are O(record): a step is only ever
+    /// written under one sharding — re-executing a step after a crash
+    /// (possibly re-sharded) requires pruning it first, which the
+    /// trainer does at resume via [`StateStore::prune_steps_after`].
+    fn put(&self, rec: &StateRecord) -> Result<()>;
+
+    /// Every record of one (step, slot), in unspecified order.
+    fn read(&self, step: u64, slot: u64) -> Result<Vec<StateRecord>>;
+
+    /// Steps with at least one record, ascending.
+    fn steps(&self) -> Result<Vec<u64>>;
+
+    /// Drop every step strictly below `step` — the retention knob that
+    /// keeps a long real-time-checkpoint run from accumulating one full
+    /// state copy per batch. The trainer keeps the in-flight step and
+    /// the last complete one; everything older is dead weight.
+    fn prune_steps_before(&self, step: u64) -> Result<()>;
+
+    /// Drop every step strictly *above* `step` — how resume reclaims a
+    /// torn in-flight step before re-executing it: the re-write (possibly
+    /// under a different sharding) must start from an empty step, so
+    /// stale shards can never poison the new cover.
+    fn prune_steps_after(&self, step: u64) -> Result<()>;
+
+    /// Total payload bytes written (the ν-stream accounting of §8.2).
+    fn bytes_written(&self) -> u64;
+
+    /// Total payload bytes read back (resume traffic).
+    fn bytes_read(&self) -> u64;
+
+    /// Records written so far.
+    fn records_written(&self) -> u64;
+}
+
+/// A slot reassembled from a complete record cover.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AssembledSlot {
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub adam_t: u64,
+}
+
+/// Whether `records` form a gapless, non-overlapping cover of
+/// `[0, total)` with consistent metadata.
+pub fn covers(records: &[StateRecord], total: usize) -> bool {
+    let mut spans: Vec<(u64, u64)> = records
+        .iter()
+        .filter(|r| r.total as usize == total)
+        .map(|r| (r.lo, r.hi))
+        .collect();
+    spans.sort_unstable();
+    let mut at = 0u64;
+    for (lo, hi) in spans {
+        if lo != at {
+            return false;
+        }
+        at = hi;
+    }
+    at as usize == total
+}
+
+/// Stitch a complete record cover back into full parameter/moment
+/// buffers. Errors on gaps, overlaps, length mismatches or inconsistent
+/// Adam step counters — a torn checkpoint must fail loudly, not resume
+/// silently wrong.
+pub fn assemble(records: &[StateRecord], total: usize) -> Result<AssembledSlot> {
+    if records.is_empty() {
+        bail!("no records to assemble");
+    }
+    let mut recs: Vec<&StateRecord> = records.iter().collect();
+    recs.sort_unstable_by_key(|r| (r.lo, r.hi));
+    let adam_t = recs[0].adam_t;
+    let mut params = vec![0.0f32; total];
+    let mut m = vec![0.0f32; total];
+    let mut v = vec![0.0f32; total];
+    let mut at = 0usize;
+    for r in recs {
+        r.check()?;
+        if r.total as usize != total {
+            bail!("record covers a slot of {} elements, want {}", r.total, total);
+        }
+        if r.adam_t != adam_t {
+            bail!("inconsistent Adam step counters ({} vs {})", r.adam_t, adam_t);
+        }
+        let (lo, hi) = (r.lo as usize, r.hi as usize);
+        if lo != at {
+            bail!("cover gap/overlap at element {at} (next record starts at {lo})");
+        }
+        params[lo..hi].copy_from_slice(&r.params);
+        m[lo..hi].copy_from_slice(&r.m);
+        v[lo..hi].copy_from_slice(&r.v);
+        at = hi;
+    }
+    if at != total {
+        bail!("cover stops at element {at} of {total}");
+    }
+    Ok(AssembledSlot { params, m, v, adam_t })
+}
+
+/// The newest step whose records fully cover every `(slot, total)` pair —
+/// the crash-consistency rule: a step counts as checkpointed only once
+/// every slot can be reassembled. A step torn by a mid-batch crash is
+/// skipped and the previous complete one wins.
+///
+/// This reads full record bodies to check coverage; with retention
+/// pruning the scan is bounded to the last two steps (≤ two state
+/// copies), and it runs once per resume, so the simplicity is worth the
+/// extra cold-path I/O over a names-only scan.
+pub fn latest_complete_step(
+    store: &dyn StateStore,
+    slots: &[(usize, usize)],
+) -> Result<Option<u64>> {
+    for &step in store.steps()?.iter().rev() {
+        let mut complete = true;
+        for &(slot, total) in slots {
+            if !covers(&store.read(step, slot as u64)?, total) {
+                complete = false;
+                break;
+            }
+        }
+        if complete {
+            return Ok(Some(step));
+        }
+    }
+    Ok(None)
+}
+
+// ---------------------------------------------------------------------------
+// CPU-memory tier
+// ---------------------------------------------------------------------------
+
+/// In-memory store: the CPU-RAM tier of Figure 7. Survives nothing, but
+/// carries the same interface and byte accounting, so the trainer can
+/// exercise (and measure) the streaming path without touching disk.
+#[derive(Debug, Default)]
+pub struct MemoryStore {
+    map: Mutex<HashMap<(u64, u64), HashMap<(u64, u64), StateRecord>>>,
+    written: AtomicU64,
+    read_bytes: AtomicU64,
+    records: AtomicU64,
+}
+
+impl MemoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl StateStore for MemoryStore {
+    fn put(&self, rec: &StateRecord) -> Result<()> {
+        rec.check()?;
+        self.written.fetch_add(rec.byte_len() as u64, Ordering::Relaxed);
+        self.records.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().expect("memory store poisoned");
+        map.entry((rec.step, rec.slot)).or_default().insert((rec.lo, rec.hi), rec.clone());
+        Ok(())
+    }
+
+    fn read(&self, step: u64, slot: u64) -> Result<Vec<StateRecord>> {
+        let map = self.map.lock().expect("memory store poisoned");
+        let recs: Vec<StateRecord> =
+            map.get(&(step, slot)).map(|m| m.values().cloned().collect()).unwrap_or_default();
+        let bytes: usize = recs.iter().map(StateRecord::byte_len).sum();
+        self.read_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        Ok(recs)
+    }
+
+    fn steps(&self) -> Result<Vec<u64>> {
+        let map = self.map.lock().expect("memory store poisoned");
+        let mut steps: Vec<u64> = map.keys().map(|&(s, _)| s).collect();
+        steps.sort_unstable();
+        steps.dedup();
+        Ok(steps)
+    }
+
+    fn prune_steps_before(&self, step: u64) -> Result<()> {
+        let mut map = self.map.lock().expect("memory store poisoned");
+        map.retain(|&(s, _), _| s >= step);
+        Ok(())
+    }
+
+    fn prune_steps_after(&self, step: u64) -> Result<()> {
+        let mut map = self.map.lock().expect("memory store poisoned");
+        map.retain(|&(s, _), _| s <= step);
+        Ok(())
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.read_bytes.load(Ordering::Relaxed)
+    }
+
+    fn records_written(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Durable file tier
+// ---------------------------------------------------------------------------
+
+/// File-backed durable store: one file per record under
+/// `<root>/step_XXXXXXXX/`, written to a temp name and atomically
+/// renamed, so readers never observe a half-written record and a crash
+/// mid-step leaves every earlier checkpoint intact.
+#[derive(Debug)]
+pub struct FileStore {
+    root: PathBuf,
+    written: AtomicU64,
+    read_bytes: AtomicU64,
+    records: AtomicU64,
+}
+
+impl FileStore {
+    pub fn new(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating checkpoint store at {root:?}"))?;
+        Ok(FileStore {
+            root,
+            written: AtomicU64::new(0),
+            read_bytes: AtomicU64::new(0),
+            records: AtomicU64::new(0),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn step_dir(&self, step: u64) -> PathBuf {
+        self.root.join(format!("step_{step:08}"))
+    }
+
+    fn rec_name(slot: u64, lo: u64, hi: u64) -> String {
+        format!("slot_{slot:05}_{lo}_{hi}.ckpt")
+    }
+}
+
+impl StateStore for FileStore {
+    fn put(&self, rec: &StateRecord) -> Result<()> {
+        let bytes = rec.to_bytes()?;
+        let dir = self.step_dir(rec.step);
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
+        let final_path = dir.join(Self::rec_name(rec.slot, rec.lo, rec.hi));
+        // Atomic publish: write the whole record to a temp name in the
+        // same directory, then rename over the final name.
+        let tmp = dir.join(format!(".tmp_{}_{}_{}", rec.slot, rec.lo, rec.hi));
+        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, &final_path).with_context(|| format!("publishing {final_path:?}"))?;
+        self.written.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        self.records.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn read(&self, step: u64, slot: u64) -> Result<Vec<StateRecord>> {
+        let dir = self.step_dir(step);
+        let mut out = Vec::new();
+        let entries = match std::fs::read_dir(&dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(out), // no such step: empty, not an error
+        };
+        let prefix = format!("slot_{slot:05}_");
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if !name.starts_with(&prefix) || !name.ends_with(".ckpt") {
+                continue;
+            }
+            let bytes = std::fs::read(entry.path())
+                .with_context(|| format!("reading {:?}", entry.path()))?;
+            self.read_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+            let rec = StateRecord::from_bytes(&bytes)
+                .with_context(|| format!("parsing {:?}", entry.path()))?;
+            if rec.step != step || rec.slot != slot {
+                bail!("record at {:?} claims (step {}, slot {})", entry.path(), rec.step, rec.slot);
+            }
+            out.push(rec);
+        }
+        Ok(out)
+    }
+
+    fn steps(&self) -> Result<Vec<u64>> {
+        let mut steps = Vec::new();
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return Ok(steps),
+        };
+        for entry in entries {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(num) = name.strip_prefix("step_") {
+                if let Ok(s) = num.parse::<u64>() {
+                    steps.push(s);
+                }
+            }
+        }
+        steps.sort_unstable();
+        Ok(steps)
+    }
+
+    fn prune_steps_before(&self, step: u64) -> Result<()> {
+        for s in self.steps()? {
+            if s < step {
+                let dir = self.step_dir(s);
+                std::fs::remove_dir_all(&dir)
+                    .with_context(|| format!("pruning checkpoint {dir:?}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn prune_steps_after(&self, step: u64) -> Result<()> {
+        for s in self.steps()? {
+            if s > step {
+                let dir = self.step_dir(s);
+                std::fs::remove_dir_all(&dir)
+                    .with_context(|| format!("pruning torn checkpoint {dir:?}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    fn bytes_written(&self) -> u64 {
+        self.written.load(Ordering::Relaxed)
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.read_bytes.load(Ordering::Relaxed)
+    }
+
+    fn records_written(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn rec(step: u64, slot: u64, lo: u64, hi: u64, total: u64, fill: f32) -> StateRecord {
+        let n = (hi - lo) as usize;
+        StateRecord {
+            step,
+            slot,
+            lo,
+            hi,
+            total,
+            adam_t: step + 1,
+            global_mbs: 4,
+            params: vec![fill; n],
+            m: vec![fill * 0.5; n],
+            v: vec![fill * 0.25; n],
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static NEXT: AtomicUsize = AtomicUsize::new(0);
+        let id = NEXT.fetch_add(1, Ordering::Relaxed);
+        let d = std::env::temp_dir()
+            .join(format!("lga_store_test_{}_{}_{}", std::process::id(), tag, id));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn record_roundtrips_through_bytes() {
+        let r = rec(3, 1, 10, 25, 40, 1.5);
+        let b = r.to_bytes().unwrap();
+        assert_eq!(b.len(), r.byte_len());
+        assert_eq!(StateRecord::from_bytes(&b).unwrap(), r);
+        // Truncation and corruption are rejected.
+        assert!(StateRecord::from_bytes(&b[..b.len() - 1]).is_err());
+        let mut bad = b.clone();
+        bad[0] ^= 0xff;
+        assert!(StateRecord::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn assemble_stitches_shards_and_rejects_gaps() {
+        let total = 10usize;
+        let a = rec(0, 0, 0, 4, 10, 1.0);
+        let b = rec(0, 0, 4, 10, 10, 2.0);
+        let s = assemble(&[b.clone(), a.clone()], total).unwrap();
+        assert_eq!(&s.params[..4], &[1.0; 4]);
+        assert_eq!(&s.params[4..], &[2.0; 6]);
+        assert_eq!(s.adam_t, 1);
+        // A gap (missing middle shard) must fail.
+        let c = rec(0, 0, 6, 10, 10, 2.0);
+        assert!(assemble(&[a.clone(), c], total).is_err());
+        assert!(assemble(&[], total).is_err());
+        // Inconsistent Adam counters must fail.
+        let mut b2 = b;
+        b2.adam_t = 99;
+        assert!(assemble(&[a, b2], total).is_err());
+    }
+
+    fn exercise_store(store: &dyn StateStore) {
+        // Step 0: slot 0 in two shards + slot 1 whole.
+        store.put(&rec(0, 0, 0, 3, 6, 1.0)).unwrap();
+        store.put(&rec(0, 0, 3, 6, 6, 2.0)).unwrap();
+        store.put(&rec(0, 1, 0, 4, 4, 3.0)).unwrap();
+        // Step 1: torn — slot 0 only half covered.
+        store.put(&rec(1, 0, 0, 3, 6, 9.0)).unwrap();
+        store.put(&rec(1, 1, 0, 4, 4, 9.0)).unwrap();
+
+        assert_eq!(store.steps().unwrap(), vec![0, 1]);
+        let slots = [(0usize, 6usize), (1, 4)];
+        // The torn step 1 is skipped; step 0 is the newest complete one.
+        assert_eq!(latest_complete_step(store, &slots).unwrap(), Some(0));
+        let s0 = assemble(&store.read(0, 0).unwrap(), 6).unwrap();
+        assert_eq!(s0.params, vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+        assert!(store.bytes_written() > 0);
+        assert!(store.bytes_read() > 0);
+        assert_eq!(store.records_written(), 5);
+
+        // The resume flow for the torn step: reclaim everything past the
+        // last complete step, then re-execute it — possibly under a
+        // different sharding — into a now-empty step.
+        store.prune_steps_after(0).unwrap();
+        assert_eq!(store.steps().unwrap(), vec![0]);
+        store.put(&rec(1, 0, 0, 6, 6, 5.0)).unwrap();
+        store.put(&rec(1, 1, 0, 4, 4, 5.0)).unwrap();
+        let recs = store.read(1, 0).unwrap();
+        assert_eq!(recs.len(), 1, "the torn shards were reclaimed");
+        assert_eq!(latest_complete_step(store, &slots).unwrap(), Some(1));
+        assert_eq!(assemble(&recs, 6).unwrap().params, vec![5.0; 6]);
+
+        // Re-writing a shard replaces, not duplicates.
+        store.put(&rec(1, 0, 0, 6, 6, 7.0)).unwrap();
+        assert_eq!(store.read(1, 0).unwrap().len(), 1);
+
+        // Retention: pruning drops old steps wholesale.
+        store.prune_steps_before(1).unwrap();
+        assert_eq!(store.steps().unwrap(), vec![1]);
+        assert!(store.read(0, 0).unwrap().is_empty());
+        assert_eq!(latest_complete_step(store, &slots).unwrap(), Some(1));
+    }
+
+    #[test]
+    fn memory_store_covers_the_contract() {
+        exercise_store(&MemoryStore::new());
+    }
+
+    #[test]
+    fn file_store_covers_the_contract_and_persists() {
+        let dir = tmp_dir("contract");
+        {
+            let store = FileStore::new(&dir).unwrap();
+            exercise_store(&store);
+        }
+        // A fresh handle (the "resumed process") sees the same state:
+        // step 0 pruned, step 1 re-written as one full record per slot.
+        let store = FileStore::new(&dir).unwrap();
+        assert_eq!(store.steps().unwrap(), vec![1]);
+        let s = assemble(&store.read(1, 0).unwrap(), 6).unwrap();
+        assert_eq!(s.params, vec![7.0; 6]);
+        // Leftover tmp files (a crash mid-write) are ignored by readers.
+        std::fs::write(dir.join("step_00000001/.tmp_0_0_3"), b"garbage").unwrap();
+        assert_eq!(store.read(1, 0).unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn slot_ids_are_disjoint_from_layers() {
+        assert_eq!(slot_embed(8), 8);
+        assert_eq!(slot_pos(8), 9);
+        assert_eq!(slot_head(8), 10);
+    }
+}

@@ -63,6 +63,7 @@ struct Key {
     n_l: usize,
     n_mu: usize,
     partition: bool,
+    offload: bool,
     data_parallel: bool,
 }
 
@@ -74,6 +75,7 @@ impl Key {
             n_l: spec.n_l,
             n_mu: spec.n_mu,
             partition: spec.partition,
+            offload: spec.offload,
             data_parallel: spec.data_parallel,
         }
     }
@@ -153,7 +155,7 @@ mod tests {
     use super::*;
 
     fn spec(n_l: usize, n_mu: usize) -> ScheduleSpec {
-        ScheduleSpec { d_l: 16, n_l, n_mu, partition: true, data_parallel: true }
+        ScheduleSpec { d_l: 16, n_l, n_mu, partition: true, offload: false, data_parallel: true }
     }
 
     #[test]
@@ -173,10 +175,16 @@ mod tests {
         let a = cache.lower(PolicyKind::ModularPipeline, &spec(4, 8));
         let b = cache.lower(PolicyKind::StandardGa, &spec(4, 8));
         let c = cache.lower(PolicyKind::ModularPipeline, &spec(4, 16));
+        // Offload changes the emitted ops — it must key separately.
+        let mut off = spec(4, 8);
+        off.offload = true;
+        let d = cache.lower(PolicyKind::ModularPipeline, &off);
         assert!(!Arc::ptr_eq(&a, &b));
         assert!(!Arc::ptr_eq(&a, &c));
-        assert_eq!(cache.misses(), 3);
-        assert_eq!(cache.len(), 3);
+        assert!(!Arc::ptr_eq(&a, &d));
+        assert!(d.offloaded && !a.offloaded);
+        assert_eq!(cache.misses(), 4);
+        assert_eq!(cache.len(), 4);
     }
 
     #[test]

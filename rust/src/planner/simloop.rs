@@ -62,6 +62,10 @@ fn executable_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec)
         n_l: cfg.n_l,
         n_mu: cfg.n_mu,
         partition: cfg.partition,
+        // Offloaded plans now simulate the ops they imply (restores on
+        // the CPU link, post-step stores) instead of pricing offload in
+        // the cost table only — sim/cost parity with the generators.
+        offload: cfg.offload,
         data_parallel: cfg.n_b > 1,
     };
     (cfg, spec)

@@ -8,6 +8,6 @@ pub mod tables;
 pub use bench::BenchJson;
 pub use figures::{ascii_plot, figure6, figure7, menu_for, scaling_figure, ScalingFigure, Series};
 pub use tables::{
-    explain, schedule_comparison, sweep, table61, table61_rows, table62, table63, table_a1,
-    table_b1,
+    checkpoint_summary, explain, schedule_comparison, sweep, table61, table61_rows, table62,
+    table63, table_a1, table_b1,
 };

@@ -204,7 +204,8 @@ pub fn schedule_comparison(
     n_mu: usize,
     cluster: &ClusterSpec,
 ) -> String {
-    let spec = ScheduleSpec { d_l, n_l, n_mu, partition: false, data_parallel: true };
+    let spec =
+        ScheduleSpec { d_l, n_l, n_mu, partition: false, offload: false, data_parallel: true };
     let cfg = TrainConfig {
         strategy: Strategy::Baseline,
         n_b: 8,
@@ -241,6 +242,30 @@ pub fn schedule_comparison(
         ));
     }
     out
+}
+
+/// §8.2 real-time checkpoint report for a finished (or simulated)
+/// training run: what streamed to the store and what a crash costs,
+/// against classic interval checkpointing.
+pub fn checkpoint_summary(
+    steps: usize,
+    records: u64,
+    bytes: u64,
+    classic_interval: f64,
+) -> String {
+    let per_step = if steps > 0 { bytes as f64 / steps as f64 } else { 0.0 };
+    let realtime = crate::offload::expected_loss_batches(true, classic_interval);
+    let classic = crate::offload::expected_loss_batches(false, classic_interval);
+    format!(
+        "real-time checkpoints (§8.2)\n  \
+         {records} records / {:.2} MiB streamed over {steps} steps ({:.2} MiB per step)\n  \
+         crash loss window: {realtime:.0} batch (vs {classic:.0} expected at a classic \
+         every-{classic_interval:.0}-batch checkpoint)\n  \
+         every batch is a durable restore point: resume (even at a different n_b) \
+         re-slices the stored shards",
+        bytes as f64 / (1u64 << 20) as f64,
+        per_step / (1u64 << 20) as f64,
+    )
 }
 
 /// One fully-described row (used by `repro explain` and the benches).
@@ -308,6 +333,14 @@ mod tests {
                 "missing row {name} in:\n{t}"
             );
         }
+    }
+
+    #[test]
+    fn checkpoint_summary_reports_stream_and_loss_window() {
+        let t = checkpoint_summary(10, 50, 50 << 20, 1000.0);
+        assert!(t.contains("50 records"), "{t}");
+        assert!(t.contains("1 batch"), "{t}");
+        assert!(t.contains("500"), "{t}"); // classic interval/2 expectation
     }
 
     #[test]

@@ -56,8 +56,16 @@ impl Json {
         }
     }
 
+    /// Integer accessor: `None` for non-numbers, negative or fractional
+    /// values, and magnitudes beyond f64's exact-integer range (2^53).
+    /// The old `as usize` cast silently truncated `1.5` and saturated
+    /// `-1` — a corrupted manifest must be rejected, not reinterpreted.
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self.as_f64() {
+            Some(n) if (0.0..=MAX_EXACT).contains(&n) && n.fract() == 0.0 => Some(n as usize),
+            _ => None,
+        }
     }
 
     pub fn as_arr(&self) -> Option<&[Json]> {
@@ -306,6 +314,24 @@ mod tests {
         for bad in ["{", "[1,", "\"unterminated", "{\"a\" 1}", "12x", "[1 2]"] {
             assert!(Json::parse(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn as_usize_rejects_non_integral_and_negative_numbers() {
+        assert_eq!(Json::parse("3").unwrap().as_usize(), Some(3));
+        assert_eq!(Json::parse("3.0").unwrap().as_usize(), Some(3));
+        assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+        // Fractional values must not truncate.
+        assert_eq!(Json::parse("1.5").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("0.25").unwrap().as_usize(), None);
+        // Negative values must not wrap/saturate.
+        assert_eq!(Json::parse("-1").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("-3.5").unwrap().as_usize(), None);
+        // Beyond f64's exact-integer range the value is untrustworthy.
+        assert_eq!(Json::parse("1e300").unwrap().as_usize(), None);
+        // Non-numbers stay None.
+        assert_eq!(Json::parse("\"7\"").unwrap().as_usize(), None);
+        assert_eq!(Json::parse("true").unwrap().as_usize(), None);
     }
 
     #[test]

@@ -5,10 +5,15 @@
 //! All generators emit one batch worth of ops. Conventions:
 //! * `RecvAct`/`SendAct` appear only at stage boundaries (the producing
 //!   stage sends, the consuming stage receives);
-//! * with `partition` (or offload), `RestoreParams { layer }` precedes the
+//! * with `partition` or `offload`, `RestoreParams { layer }` precedes the
 //!   first use of a layer in each pass, and is re-issued *per micro-batch*
 //!   in the standard schedules (the redundancy Figure 2 shows LGA
 //!   eliminating);
+//! * with `offload`, `OffloadStore { layer }` follows the layer's
+//!   `OptimStep`: the post-step state streams back out once per layer per
+//!   batch (the §8.2 real-time checkpoint), in every policy — it is the
+//!   *restores* where standard accumulation pays the per-micro-batch
+//!   pathology;
 //! * `ReduceGrad { layer }` is issued as soon as the layer's gradient is
 //!   complete: after the last micro-batch of that layer's backward.
 
@@ -23,14 +28,25 @@ pub struct ScheduleSpec {
     pub n_l: usize,
     /// Micro-batches n_μ.
     pub n_mu: usize,
-    /// Whether the training state is partitioned / offloaded (emit
-    /// RestoreParams + per-layer reduce-scatter semantics).
+    /// Whether the training state is partitioned (emit RestoreParams +
+    /// per-layer reduce-scatter semantics).
     pub partition: bool,
+    /// Whether the training state is offloaded to an external tier (emit
+    /// RestoreParams before use and OffloadStore after each OptimStep —
+    /// the §8.2 real-time checkpoint path).
+    pub offload: bool,
     /// Whether to emit data-parallel ReduceGrad ops (n_b > 1).
     pub data_parallel: bool,
 }
 
 impl ScheduleSpec {
+    /// Whether `RestoreParams` ops are emitted: a partitioned state needs
+    /// an all-gather before use, an offloaded one a CPU-link fetch —
+    /// either way the parameters must be staged.
+    pub fn restores(&self) -> bool {
+        self.partition || self.offload
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.n_l == 0 || self.d_l == 0 || self.n_mu == 0 {
             return Err("zero dimension".into());
@@ -60,7 +76,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         // Forward: every micro-batch through the whole local chunk.
         for mb in 0..spec.n_mu {
             for &l in &layers {
-                if spec.partition {
+                if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
@@ -75,7 +91,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         // Backward: micro-batches in order, layers reversed.
         for mb in 0..spec.n_mu {
             for &l in layers.iter().rev() {
-                if spec.partition {
+                if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
@@ -95,9 +111,14 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         // Optimizer steps go last: they depend on the reductions but must
         // not block the remaining backward computes (an in-order executor
         // would otherwise serialise the reductions into the compute
-        // stream).
+        // stream). With offload, each layer's post-step state streams out
+        // right after its update (once per layer — the store side has no
+        // per-micro-batch redundancy even here).
         for &l in &layers {
             stage_ops.push(Op::OptimStep { layer: l });
+            if spec.offload {
+                stage_ops.push(Op::OffloadStore { layer: l });
+            }
         }
     }
     Schedule {
@@ -108,6 +129,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         assignment,
         ops,
         partitioned: spec.partition,
+        offloaded: spec.offload,
     }
 }
 
@@ -121,7 +143,7 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
     let mut ops = vec![Vec::new()];
     let stage_ops = &mut ops[0];
     for l in 0..spec.d_l {
-        if spec.partition {
+        if spec.restores() {
             stage_ops.push(Op::RestoreParams { layer: l }); // once per layer!
         }
         for mb in 0..spec.n_mu {
@@ -129,7 +151,7 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         }
     }
     for l in (0..spec.d_l).rev() {
-        if spec.partition {
+        if spec.restores() {
             stage_ops.push(Op::RestoreParams { layer: l });
         }
         for mb in 0..spec.n_mu {
@@ -143,6 +165,9 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
     }
     for l in 0..spec.d_l {
         stage_ops.push(Op::OptimStep { layer: l });
+        if spec.offload {
+            stage_ops.push(Op::OffloadStore { layer: l });
+        }
     }
     Schedule {
         name: "layered-ga".into(),
@@ -152,6 +177,7 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         assignment: LayerAssignment::Contiguous,
         ops,
         partitioned: spec.partition,
+        offloaded: spec.offload,
     }
 }
 
@@ -167,7 +193,7 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
     for (stage, stage_ops) in ops.iter_mut().enumerate() {
         let layers = assignment.layers_of(stage, spec.d_l, spec.n_l);
         for &l in &layers {
-            if spec.partition {
+            if spec.restores() {
                 stage_ops.push(Op::RestoreParams { layer: l }); // once per layer
             }
             for mb in 0..spec.n_mu {
@@ -181,7 +207,7 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
             }
         }
         for &l in layers.iter().rev() {
-            if spec.partition {
+            if spec.restores() {
                 stage_ops.push(Op::RestoreParams { layer: l });
             }
             for mb in 0..spec.n_mu {
@@ -199,6 +225,9 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
         }
         for &l in &layers {
             stage_ops.push(Op::OptimStep { layer: l });
+            if spec.offload {
+                stage_ops.push(Op::OffloadStore { layer: l });
+            }
         }
     }
     Schedule {
@@ -209,6 +238,7 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
         assignment,
         ops,
         partitioned: spec.partition,
+        offloaded: spec.offload,
     }
 }
 
@@ -228,7 +258,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
         let mut emitted_b = 0usize;
         let fwd_chunk = |stage_ops: &mut Vec<Op>, mb: usize| {
             for &l in &layers {
-                if spec.partition {
+                if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
@@ -240,9 +270,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                 }
             }
         };
-        let bwd_chunk = |stage_ops: &mut Vec<Op>, mb: usize, last: bool, partition: bool, dp: bool| {
+        let bwd_chunk = |stage_ops: &mut Vec<Op>, mb: usize, last: bool, restore: bool, dp: bool| {
             for &l in layers.iter().rev() {
-                if partition {
+                if restore {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
@@ -252,7 +282,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
-                if last && (dp || partition) {
+                if last && (dp || spec.partition) {
                     stage_ops.push(Op::ReduceGrad { layer: l });
                 }
             }
@@ -269,11 +299,14 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                 emitted_f += 1;
             }
             let last = emitted_b + 1 == spec.n_mu;
-            bwd_chunk(stage_ops, emitted_b, last, spec.partition, spec.data_parallel);
+            bwd_chunk(stage_ops, emitted_b, last, spec.restores(), spec.data_parallel);
             emitted_b += 1;
         }
         for &l in &layers {
             stage_ops.push(Op::OptimStep { layer: l });
+            if spec.offload {
+                stage_ops.push(Op::OffloadStore { layer: l });
+            }
         }
     }
     Schedule {
@@ -284,6 +317,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
         assignment,
         ops,
         partitioned: spec.partition,
+        offloaded: spec.offload,
     }
 }
 
@@ -356,7 +390,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         let chunk_base = |c: usize| (c * n_l + stage) * block;
         let emit_fwd = |stage_ops: &mut Vec<Op>, c: usize, mb: usize| {
             for l in chunk_base(c)..chunk_base(c) + block {
-                if spec.partition {
+                if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
@@ -371,7 +405,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         let mut bwd_done = vec![0usize; spec.d_l];
         let mut emit_bwd = |stage_ops: &mut Vec<Op>, c: usize, mb: usize| {
             for l in (chunk_base(c)..chunk_base(c) + block).rev() {
-                if spec.partition {
+                if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
@@ -413,6 +447,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         for c in 0..v {
             for l in chunk_base(c)..chunk_base(c) + block {
                 stage_ops.push(Op::OptimStep { layer: l });
+                if spec.offload {
+                    stage_ops.push(Op::OffloadStore { layer: l });
+                }
             }
         }
     }
@@ -424,6 +461,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         assignment,
         ops,
         partitioned: spec.partition,
+        offloaded: spec.offload,
     }
 }
 
@@ -432,7 +470,7 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true }
+        ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true }
     }
 
     fn count_fwd(s: &Schedule) -> usize {
@@ -441,6 +479,10 @@ mod tests {
 
     fn count_restore(s: &Schedule) -> usize {
         s.count(|o| matches!(o, Op::RestoreParams { .. }))
+    }
+
+    fn count_store(s: &Schedule) -> usize {
+        s.count(|o| matches!(o, Op::OffloadStore { .. }))
     }
 
     #[test]
@@ -476,6 +518,64 @@ mod tests {
         let s = modular_pipeline(&sp);
         // Each of the 8 layers restored once per pass, twice total.
         assert_eq!(count_restore(&s), 2 * 8);
+    }
+
+    #[test]
+    fn offload_only_specs_emit_restores_and_stores() {
+        // §8.2: with `offload` (and no partition) the state still has to
+        // be staged before use and streamed back after the update — an
+        // offload-only spec must not degenerate to a no-op schedule.
+        let mut sp = spec(8, 4, 8, false);
+        sp.offload = true;
+        for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+            assert!(count_restore(&s) > 0, "{}", s.name);
+            // Exactly one post-step store per layer, every policy.
+            assert_eq!(count_store(&s), 8, "{}", s.name);
+            assert!(s.offloaded && !s.partitioned, "{}", s.name);
+        }
+        assert_eq!(count_store(&interleaved_1f1b(&sp, 2)), 8);
+        let mut single = spec(8, 1, 8, false);
+        single.offload = true;
+        for s in [standard_ga(&single), layered_ga(&single)] {
+            assert_eq!(count_store(&s), 8, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn offload_restores_keep_figure2_shape() {
+        // The restore side keeps Figure 2's asymmetry on the offload
+        // path: standard GA re-fetches per micro-batch (2·d_l·n_μ), LGA
+        // and the modular pipeline once per layer per pass (2·d_l).
+        let mut single = spec(6, 1, 10, false);
+        single.offload = true;
+        assert_eq!(count_restore(&standard_ga(&single)), 2 * 6 * 10);
+        assert_eq!(count_restore(&layered_ga(&single)), 2 * 6);
+        let mut piped = spec(8, 4, 8, false);
+        piped.offload = true;
+        assert_eq!(count_restore(&modular_pipeline(&piped)), 2 * 8);
+    }
+
+    #[test]
+    fn offload_stores_follow_their_optim_step() {
+        let mut sp = spec(8, 4, 8, true);
+        sp.offload = true;
+        let s = modular_pipeline(&sp);
+        for (stage, ops) in s.ops.iter().enumerate() {
+            for &l in &s.assignment.layers_of(stage, 8, 4) {
+                let u = ops.iter().position(|o| *o == Op::OptimStep { layer: l }).unwrap();
+                let o = ops.iter().position(|o| *o == Op::OffloadStore { layer: l }).unwrap();
+                assert!(u < o, "stage {stage} layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_offload_specs_emit_no_offload_ops() {
+        for sp in [spec(8, 4, 8, false), spec(8, 4, 8, true)] {
+            for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+                assert_eq!(count_store(&s), 0, "{}", s.name);
+            }
+        }
     }
 
     #[test]

@@ -157,6 +157,10 @@ pub struct Schedule {
     /// Whether the training state is partitioned (RestoreParams ops are
     /// all-gathers over the data-parallel group).
     pub partitioned: bool,
+    /// Whether the training state is offloaded (RestoreParams ops fetch
+    /// over the CPU link and OffloadStore ops stream the post-step state
+    /// back out — the §8.2 real-time checkpoint path).
+    pub offloaded: bool,
 }
 
 impl Schedule {

@@ -21,7 +21,10 @@
 //!   `Bwd(l, ·)`;
 //! * **optim-after-reduce** — `OptimStep(l)` depends on the stage's
 //!   `ReduceGrad(l)` when present, else on every local `Bwd(l, ·)`;
-//!   `OffloadStore(l)` likewise waits for the reduction when present.
+//! * **store-after-optim** — `OffloadStore(l)` depends on the stage's
+//!   `OptimStep(l)` (the streamed checkpoint must hold the *post-step*
+//!   state), falling back to the reduction / backward ops for hand-built
+//!   schedules without one.
 //!
 //! Every consumer of scheduling semantics — the validator
 //! ([`super::validate`]), the discrete-event simulator
@@ -106,6 +109,7 @@ pub struct ScheduleProgram {
     pub n_mu: usize,
     pub assignment: LayerAssignment,
     pub partitioned: bool,
+    pub offloaded: bool,
     /// Flat arena, stage-major, each stage's ops in source order.
     pub ops: Vec<ProgOp>,
     /// Run queues: `queues[stage][stream_index]` lists op ids in issue
@@ -283,6 +287,7 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
     // (stage, layer).
     let mut bwd_ids: HashMap<(usize, usize), Vec<u32>> = HashMap::new();
     let mut reduce_id: HashMap<(usize, usize), u32> = HashMap::new();
+    let mut optim_id: HashMap<(usize, usize), u32> = HashMap::new();
 
     let mut fwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
     let mut bwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
@@ -331,6 +336,9 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
             }
             Op::ReduceGrad { layer: l } => {
                 reduce_id.entry((stage, l)).or_insert(id);
+            }
+            Op::OptimStep { layer: l } => {
+                optim_id.entry((stage, l)).or_insert(id);
             }
             _ => {}
         }
@@ -464,8 +472,18 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                     }
                 }
                 Op::OffloadStore { layer } => {
-                    if let Some(&r) = reduce_id.get(&(stage, layer)) {
+                    // The streamed checkpoint must hold the post-step
+                    // state: wait for the optimizer update (generators
+                    // always emit one), else degrade to the reduction /
+                    // backward ops for hand-built schedules.
+                    if let Some(&u) = optim_id.get(&(stage, layer)) {
+                        edges.push((u, id));
+                    } else if let Some(&r) = reduce_id.get(&(stage, layer)) {
                         edges.push((r, id));
+                    } else if let Some(ids) = bwd_ids.get(&(stage, layer)) {
+                        edges.extend(ids.iter().map(|&b| (b, id)));
+                    } else {
+                        missing(format!("optimizer step of layer {layer}"));
                     }
                 }
                 Op::TensorAllReduce { .. } => {}
@@ -509,6 +527,7 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
         n_mu: s.n_mu,
         assignment: s.assignment,
         partitioned: s.partitioned,
+        offloaded: s.offloaded,
         ops,
         queues,
         preds,
@@ -547,7 +566,7 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true }
+        ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true }
     }
 
     #[test]
@@ -648,6 +667,7 @@ mod tests {
             assignment: LayerAssignment::Contiguous,
             ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
             partitioned: false,
+            offloaded: false,
         };
         let errs = lower(&s).unwrap_err();
         assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");
@@ -679,6 +699,7 @@ mod tests {
                 ],
             ],
             partitioned: false,
+            offloaded: false,
         };
         let p = lower(&s).expect("per-stream model accepts this schedule");
         assert!(
@@ -689,6 +710,22 @@ mod tests {
         let sp = spec(8, 4, 8, true);
         lower(&modular_pipeline(&sp)).unwrap().check_inorder_executable().unwrap();
         lower(&standard_ga(&sp)).unwrap().check_inorder_executable().unwrap();
+    }
+
+    #[test]
+    fn offload_store_waits_for_the_optimizer_step() {
+        let mut sp = spec(8, 4, 8, true);
+        sp.offload = true;
+        let p = lower(&modular_pipeline(&sp)).unwrap();
+        for l in 0..8 {
+            let store = p.find(|o| *o == Op::OffloadStore { layer: l }).unwrap();
+            let optim = p.find(|o| *o == Op::OptimStep { layer: l }).unwrap();
+            assert_eq!(p.preds_of(store), &[optim][..], "layer {l}");
+        }
+        // And the offload schedule still survives the synchronous-worker
+        // executability check.
+        p.check_inorder_executable().unwrap();
+        assert!(p.offloaded);
     }
 
     #[test]

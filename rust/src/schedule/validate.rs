@@ -47,18 +47,32 @@ mod tests {
     use super::super::ir::{LayerAssignment, Op, Schedule};
     use super::*;
 
+    fn small_spec() -> ScheduleSpec {
+        ScheduleSpec {
+            d_l: 4,
+            n_l: 2,
+            n_mu: 2,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        }
+    }
+
     #[test]
     fn all_generated_schedules_validate() {
         for (d_l, n_l, n_mu) in [(8, 4, 8), (16, 4, 6), (12, 3, 3), (8, 1, 4), (160, 5, 5)] {
             for partition in [false, true] {
-                let sp = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
-                if n_l == 1 {
-                    validate(&layered_ga(&sp)).expect("layered");
-                } else {
-                    validate(&modular_pipeline(&sp)).expect("modular");
-                    validate(&one_f_one_b(&sp)).expect("1f1b");
+                for offload in [false, true] {
+                    let sp =
+                        ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel: true };
+                    if n_l == 1 {
+                        validate(&layered_ga(&sp)).expect("layered");
+                    } else {
+                        validate(&modular_pipeline(&sp)).expect("modular");
+                        validate(&one_f_one_b(&sp)).expect("1f1b");
+                    }
+                    validate(&standard_ga(&sp)).expect("standard");
                 }
-                validate(&standard_ga(&sp)).expect("standard");
             }
         }
     }
@@ -68,16 +82,19 @@ mod tests {
         for (d_l, n_l, n_mu, chunks) in [(8, 4, 8, 2), (16, 4, 8, 2), (16, 2, 4, 4), (8, 1, 2, 2)]
         {
             for partition in [false, true] {
-                let sp = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
-                validate(&interleaved_1f1b(&sp, chunks))
-                    .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
+                for offload in [false, true] {
+                    let sp =
+                        ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel: true };
+                    validate(&interleaved_1f1b(&sp, chunks))
+                        .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
+                }
             }
         }
     }
 
     #[test]
     fn detects_missing_bwd() {
-        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let sp = small_spec();
         let mut s = modular_pipeline(&sp);
         // Drop one backward op.
         let pos = s.ops[0].iter().position(|o| matches!(o, Op::Bwd { .. })).unwrap();
@@ -88,7 +105,7 @@ mod tests {
 
     #[test]
     fn detects_unmatched_send() {
-        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let sp = small_spec();
         let mut s = modular_pipeline(&sp);
         let pos = s.ops[0].iter().position(|o| matches!(o, Op::SendAct { .. })).unwrap();
         s.ops[0].remove(pos);
@@ -98,7 +115,7 @@ mod tests {
 
     #[test]
     fn detects_wrong_stage() {
-        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let sp = small_spec();
         let mut s = modular_pipeline(&sp);
         s.ops[0].push(Op::Fwd { layer: 1, mb: 0 }); // layer 1 belongs to stage 1
         let errs = validate(&s).unwrap_err();
@@ -118,6 +135,7 @@ mod tests {
             assignment: LayerAssignment::Contiguous,
             ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
             partitioned: false,
+            offloaded: false,
         };
         let errs = validate(&s).unwrap_err();
         assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");
@@ -126,7 +144,7 @@ mod tests {
     #[test]
     fn detects_missing_local_producer() {
         // A SendGrad whose stage never runs the corresponding backward.
-        let sp = ScheduleSpec { d_l: 4, n_l: 2, n_mu: 2, partition: false, data_parallel: false };
+        let sp = small_spec();
         let mut s = modular_pipeline(&sp);
         s.ops[0].push(Op::SendGrad { layer: 0, mb: 5 }); // mb 5 never computed
         let errs = validate(&s).unwrap_err();

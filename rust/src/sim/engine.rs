@@ -436,7 +436,14 @@ mod tests {
 
     #[test]
     fn single_stage_standard_ga_has_full_efficiency() {
-        let sp = ScheduleSpec { d_l: 8, n_l: 1, n_mu: 4, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 8,
+            n_l: 1,
+            n_mu: 4,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let s = standard_ga(&sp);
         let r = simulate(&s, &costs(1, 1, 4, false));
         // No pipeline, no DP: compute runs back-to-back.
@@ -454,7 +461,14 @@ mod tests {
         // Contiguous pipeline, 4 stages, 8 micro-batches: closed-form
         // bubble (n_l−1)/n_μ = 3/8 (§2.4). Transfers/optimizer zeroed —
         // the closed form ignores them.
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let s = standard_ga(&sp);
         let r = simulate(&s, &compute_only(&costs(1, 4, 8, false)));
         let measured = r.bubble_fraction();
@@ -467,7 +481,14 @@ mod tests {
     #[test]
     fn modular_bubble_matches_closed_form_exactly() {
         // §4: modular bubble = n_l(n_l−1)/(n_μ·d_l) = 4·3/(8·16) = 3/32.
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let s = modular_pipeline(&sp);
         let r = simulate(&s, &compute_only(&costs(1, 4, 8, false)));
         let measured = r.bubble_fraction();
@@ -482,7 +503,14 @@ mod tests {
     fn simulate_program_reuses_one_lowering() {
         // Lower once, simulate twice with different cost tables — the
         // planner's simulate-in-the-loop pattern.
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let s = modular_pipeline(&sp);
         let p = crate::schedule::lower(&s).unwrap();
         let full = simulate_program(&p, &costs(1, 4, 8, false));
@@ -495,7 +523,14 @@ mod tests {
 
     #[test]
     fn timeline_off_matches_recording_path_bit_for_bit() {
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: true, data_parallel: true };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: true,
+            offload: false,
+            data_parallel: true,
+        };
         let s = modular_pipeline(&sp);
         let p = crate::schedule::lower(&s).unwrap();
         let c = costs(8, 4, 8, true);
@@ -514,7 +549,14 @@ mod tests {
 
     #[test]
     fn scratch_reuse_changes_nothing() {
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: true };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: true,
+        };
         let s = standard_ga(&sp);
         let p = crate::schedule::lower(&s).unwrap();
         let c = costs(8, 4, 8, false);
@@ -534,7 +576,14 @@ mod tests {
         let n_l = 4;
         let n_mu = 8;
         let c = costs(1, n_l, n_mu, false);
-        let sp = ScheduleSpec { d_l, n_l, n_mu, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let naive = simulate(&standard_ga(&sp), &c);
         let modular = simulate(&modular_pipeline(&sp), &c);
         let ratio = naive.bubble_fraction() / modular.bubble_fraction();
@@ -554,7 +603,14 @@ mod tests {
     fn interleaved_bubble_sits_between_one_f_one_b_and_modular() {
         // §4 / Megatron-LM: v chunks shrink the 1F1B bubble by v; modular
         // (v = d_l/n_l with layered accumulation) shrinks it further.
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let c = compute_only(&costs(1, 4, 8, false));
         let fb = simulate(&one_f_one_b(&sp), &c).bubble_fraction();
         let il = simulate(&interleaved_1f1b(&sp, 2), &c).bubble_fraction();
@@ -566,7 +622,14 @@ mod tests {
 
     #[test]
     fn one_f_one_b_uses_less_memory_than_gpipe() {
-        let sp = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 16, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 16,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let c = costs(1, 4, 16, false);
         let gpipe = simulate(&standard_ga(&sp), &c);
         let fb = simulate(&one_f_one_b(&sp), &c);
@@ -583,7 +646,14 @@ mod tests {
     #[test]
     fn lga_spreads_reductions_standard_bunches_them() {
         use crate::schedule::layered_ga;
-        let sp = ScheduleSpec { d_l: 16, n_l: 1, n_mu: 8, partition: false, data_parallel: true };
+        let sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 1,
+            n_mu: 8,
+            partition: false,
+            offload: false,
+            data_parallel: true,
+        };
         let c = costs(8, 1, 8, false);
         let std_r = simulate(&standard_ga(&sp), &c);
         let lga_r = simulate(&layered_ga(&sp), &c);
@@ -602,7 +672,14 @@ mod tests {
 
     #[test]
     fn makespan_at_least_critical_path() {
-        let sp = ScheduleSpec { d_l: 8, n_l: 4, n_mu: 4, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 8,
+            n_l: 4,
+            n_mu: 4,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let c = costs(1, 4, 4, false);
         let r = simulate(&modular_pipeline(&sp), &c);
         // Lower bound: per-stage compute (2 layers × 4 mb × (fwd+bwd)).

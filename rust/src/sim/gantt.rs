@@ -76,7 +76,14 @@ mod tests {
     use crate::sim::engine::simulate;
 
     fn render_policy(modular: bool) -> String {
-        let sp = ScheduleSpec { d_l: 8, n_l: 4, n_mu: 6, partition: false, data_parallel: false };
+        let sp = ScheduleSpec {
+            d_l: 8,
+            n_l: 4,
+            n_mu: 6,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
         let s = if modular { modular_pipeline(&sp) } else { standard_ga(&sp) };
         let cfg = TrainConfig {
             strategy: if modular { Strategy::Improved } else { Strategy::Baseline },

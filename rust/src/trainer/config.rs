@@ -42,6 +42,19 @@ pub struct TrainerConfig {
     pub policy: Policy,
     /// ZeRO-3-style state partition over the data-parallel group.
     pub partition: bool,
+    /// Stream the training state to a checkpoint store after every
+    /// optimizer step (§8.2 real-time checkpoints): the schedule gains
+    /// RestoreParams/OffloadStore ops and the workers execute them.
+    pub offload: bool,
+    /// Directory of the durable [`crate::offload::FileStore`]; `None`
+    /// keeps the stream in a process-local
+    /// [`crate::offload::MemoryStore`] (byte-accounted, not durable).
+    pub store_dir: Option<PathBuf>,
+    /// Resume from the latest *complete* checkpoint in the store instead
+    /// of initialising from the seed. The data-parallel degree may
+    /// differ from the writer's — shards are re-sliced on load (§8.1
+    /// elastic resume).
+    pub resume: bool,
     pub steps: usize,
     pub lr: LrSchedule,
     pub seed: u64,
@@ -57,6 +70,9 @@ impl TrainerConfig {
             n_mu: 1,
             policy: Policy::Improved,
             partition: false,
+            offload: false,
+            store_dir: None,
+            resume: false,
             steps: 10,
             lr: LrSchedule::constant(1e-3),
             seed: 0,
@@ -70,6 +86,7 @@ impl TrainerConfig {
             n_l: self.n_l,
             n_mu: self.n_mu,
             partition: self.partition,
+            offload: self.offload,
             data_parallel: self.n_b > 1,
         };
         match (self.policy, self.n_l) {
@@ -84,6 +101,21 @@ impl TrainerConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn offload_flag_reaches_the_schedule() {
+        let mut c = TrainerConfig::quick("tiny");
+        c.n_mu = 2;
+        assert!(!c.build_schedule(2).offloaded);
+        c.offload = true;
+        let s = c.build_schedule(2);
+        assert!(s.offloaded);
+        assert_eq!(
+            s.count(|o| matches!(o, crate::schedule::Op::OffloadStore { .. })),
+            2,
+            "one store per layer"
+        );
+    }
 
     #[test]
     fn policy_schedule_mapping() {

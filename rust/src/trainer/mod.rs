@@ -25,6 +25,9 @@ pub use params::LayerLayout;
 pub use worker::{run_worker, WorkerCtx, WorkerStats};
 
 use crate::collective::ring_group;
+use crate::offload::store::{
+    latest_complete_step, slot_embed, slot_head, slot_pos, FileStore, MemoryStore, StateStore,
+};
 use crate::runtime::Manifest;
 use crate::schedule::lower;
 
@@ -32,13 +35,19 @@ use crate::schedule::lower;
 #[derive(Debug, Clone)]
 pub struct TrainReport {
     /// Mean loss per step (averaged over data-parallel instances).
+    /// `losses[i]` is the loss of absolute step `start_step + i`.
     pub losses: Vec<f64>,
+    /// First step this run executed (non-zero after a resume).
+    pub start_step: usize,
     pub wall_secs: f64,
     /// Total elements moved through the DP collectives, all workers.
     pub collective_elems_sent: u64,
     /// Total PJRT execute time / calls, all workers.
     pub execute_secs: f64,
     pub execute_calls: u64,
+    /// Real-time checkpoint stream accounting (0 without `offload`).
+    pub checkpoint_bytes_written: u64,
+    pub checkpoint_records: u64,
     pub schedule_name: String,
 }
 
@@ -62,6 +71,85 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     program
         .check_inorder_executable()
         .map_err(|e| anyhow::anyhow!("schedule would deadlock in-order workers: {e:?}"))?;
+
+    // Checkpoint store: the durable file tier when a directory is given,
+    // else the in-process CPU-memory tier. Needed to execute OffloadStore
+    // ops (offload) and/or to load the latest state (resume).
+    anyhow::ensure!(
+        !cfg.resume || cfg.store_dir.is_some(),
+        "resume requires a durable store_dir — the in-memory tier dies with the process, \
+         so a fresh one can never hold a checkpoint to resume from"
+    );
+    let store: Option<Arc<dyn StateStore>> = if cfg.offload || cfg.resume {
+        Some(match &cfg.store_dir {
+            Some(dir) => Arc::new(FileStore::new(dir)?),
+            None => Arc::new(MemoryStore::new()),
+        })
+    } else {
+        None
+    };
+
+    // Resume point: the newest step whose records fully cover every slot
+    // (layers + embedding + positional + head) — a step torn by a crash
+    // is skipped. Training continues at the step after it.
+    let start_step = if cfg.resume {
+        let store = store.as_deref().expect("store exists when resuming");
+        let mi = manifest.model;
+        let mut slots: Vec<(usize, usize)> =
+            (0..d_l).map(|l| (l, manifest.layer_param_elements())).collect();
+        slots.push((slot_embed(d_l), mi.vocab * mi.d_model));
+        slots.push((slot_pos(d_l), mi.d_seq * mi.d_model));
+        slots.push((slot_head(d_l), mi.d_model * mi.vocab));
+        match latest_complete_step(store, &slots)? {
+            Some(s) => {
+                // The split-invariance contract covers re-*sharding*: a
+                // resumed run may change n_b, but n_b·n_μ (the global
+                // micro-batch count) must match the writer's — otherwise
+                // each step consumes different data at a different
+                // gradient scale and the trajectory silently diverges.
+                let g = cfg.n_b * cfg.n_mu;
+                if let Some(rec) = store.read(s, 0)?.first() {
+                    anyhow::ensure!(
+                        rec.global_mbs as usize == g,
+                        "checkpoint was written with a global batch of {} micro-batches; \
+                         resuming with n_b*n_mu = {g} would change the training trajectory \
+                         — pick n_b, n_mu with the same product",
+                        rec.global_mbs
+                    );
+                }
+                // Reclaim whatever the crashed run left past the resume
+                // point: the torn step will be re-executed (possibly
+                // under a different sharding) into an empty directory,
+                // so stale shards can never poison the new cover.
+                store.prune_steps_after(s as u64)?;
+                s as usize + 1
+            }
+            None => {
+                // No complete step: a cold start. Clear torn leftovers
+                // (e.g. a crash inside step 0) for the same reason.
+                store.prune_steps_before(u64::MAX)?;
+                0
+            }
+        }
+    } else {
+        0
+    };
+    if start_step >= cfg.steps {
+        // The checkpoint already covers everything requested (e.g. a
+        // supervisor restarting a finished run): report cleanly instead
+        // of erroring a completed job.
+        return Ok(TrainReport {
+            losses: Vec::new(),
+            start_step,
+            wall_secs: 0.0,
+            collective_elems_sent: 0,
+            execute_secs: 0.0,
+            execute_calls: 0,
+            checkpoint_bytes_written: store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
+            checkpoint_records: store.as_ref().map(|s| s.records_written()).unwrap_or(0),
+            schedule_name: program.name.clone(),
+        });
+    }
 
     let t0 = std::time::Instant::now();
     let (loss_tx, loss_rx) = channel::<(usize, usize, f64)>();
@@ -113,8 +201,11 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             n_mu: cfg.n_mu,
             seed: cfg.seed,
             steps: cfg.steps,
+            start_step,
             lr: cfg.lr,
             partition: cfg.partition,
+            offload: cfg.offload,
+            store: store.clone(),
             program: program.clone(),
             artifacts_root: cfg.artifacts_root.clone(),
             preset: cfg.preset.clone(),
@@ -142,25 +233,29 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         stats.collective_elems_sent += s.collective_elems_sent;
     }
 
-    // Aggregate losses: average over dp ranks per step.
+    // Aggregate losses: average over dp ranks per step (executed steps
+    // only — a resumed run reports from `start_step` on).
     let mut sums = vec![0.0f64; cfg.steps];
     let mut counts = vec![0usize; cfg.steps];
     while let Ok((step, _dp, loss)) = loss_rx.recv() {
         sums[step] += loss;
         counts[step] += 1;
     }
-    let losses: Vec<f64> = sums
+    let losses: Vec<f64> = sums[start_step..]
         .iter()
-        .zip(&counts)
+        .zip(&counts[start_step..])
         .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
         .collect();
 
     Ok(TrainReport {
         losses,
+        start_step,
         wall_secs: t0.elapsed().as_secs_f64(),
         collective_elems_sent: stats.collective_elems_sent,
         execute_secs: stats.execute_secs,
         execute_calls: stats.execute_calls,
+        checkpoint_bytes_written: store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
+        checkpoint_records: store.as_ref().map(|s| s.records_written()).unwrap_or(0),
         schedule_name: program.name.clone(),
     })
 }
@@ -294,6 +389,30 @@ mod tests {
         for (x, y) in rs.losses.iter().zip(&rl.losses) {
             assert!((x - y).abs() < 2e-3, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn offloaded_training_streams_checkpoints_without_changing_the_math() {
+        if !have_artifacts() {
+            return;
+        }
+        let mut a = TrainerConfig::quick("tiny");
+        a.steps = 4;
+        a.n_mu = 2;
+        a.lr = LrSchedule::constant(3e-3);
+        let mut b = a.clone();
+        b.offload = true; // in-process memory tier
+        let ra = train(&a).unwrap();
+        let rb = train(&b).unwrap();
+        // The store ops only *read* state: the training math is identical.
+        for (x, y) in ra.losses.iter().zip(&rb.losses) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+        assert_eq!(ra.checkpoint_records, 0);
+        // Every step streams each layer (tiny: 2) plus embedding,
+        // positional table and head — a complete cover per step.
+        assert_eq!(rb.checkpoint_records, 4 * (2 + 3));
+        assert!(rb.checkpoint_bytes_written > 0);
     }
 
     #[test]

@@ -19,6 +19,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::collective::Comm;
 use crate::data::Corpus;
+use crate::offload::store::{
+    assemble, slot_embed, slot_head, slot_pos, StateRecord, StateStore,
+};
 use crate::optim::{Adam, AdamConfig, LrSchedule};
 use crate::partition::ShardMap;
 use crate::runtime::{Engine, HostTensor};
@@ -38,8 +41,17 @@ pub struct WorkerCtx {
     pub n_mu: usize,
     pub seed: u64,
     pub steps: usize,
+    /// First step this run executes; steps `0..start_step` were already
+    /// trained by a previous (crashed or resized) run and are loaded from
+    /// the checkpoint store.
+    pub start_step: usize,
     pub lr: LrSchedule,
     pub partition: bool,
+    /// Whether the schedule streams real-time checkpoints
+    /// (`OffloadStore` ops write to `store`).
+    pub offload: bool,
+    /// Checkpoint store; present when offloading and/or resuming.
+    pub store: Option<Arc<dyn StateStore>>,
     /// The compiled schedule shared by every worker (and by the validator
     /// and simulator that vetted it).
     pub program: Arc<ScheduleProgram>,
@@ -64,6 +76,52 @@ pub struct WorkerStats {
     pub execute_calls: u64,
     pub collective_elems_sent: u64,
     pub wall_secs: f64,
+}
+
+/// Validate a pipeline payload against what the schedule expects. The
+/// rings deliver in program order, so an identity mismatch is a
+/// schedule/engine bug; a wrong element count would otherwise surface
+/// later as a shape error deep inside PJRT (or, for gradients, silently
+/// skew an accumulation). `got`/`want` are (layer, micro-batch, len).
+fn check_payload(
+    kind: &str,
+    got: (usize, usize, usize),
+    want: (usize, usize, usize),
+) -> Result<()> {
+    let ((l, mb, len), (wl, wmb, wlen)) = (got, want);
+    if l != wl || mb != wmb {
+        bail!("{kind} ring out of order: got ({l},{mb}), want ({wl},{wmb})");
+    }
+    if len != wlen {
+        bail!("bad {kind} payload for ({l},{mb}): {len} elements, want {wlen}");
+    }
+    Ok(())
+}
+
+/// Stream one whole (unsharded) slot — params + Adam state — to the
+/// checkpoint store. Used for the replicated tensors (embedding /
+/// positional / head, and full layers when the state is not partitioned).
+fn store_full_slot(
+    store: &dyn StateStore,
+    step: usize,
+    slot: usize,
+    global_mbs: u64,
+    params: &[f32],
+    adam: &Adam,
+) -> Result<()> {
+    let (m, v, t) = adam.state();
+    store.put(&StateRecord {
+        step: step as u64,
+        slot: slot as u64,
+        lo: 0,
+        hi: params.len() as u64,
+        total: params.len() as u64,
+        adam_t: t,
+        global_mbs,
+        params: params.to_vec(),
+        m: m.to_vec(),
+        v: v.to_vec(),
+    })
 }
 
 /// Run the worker to completion (all steps). Returns its stats.
@@ -135,6 +193,49 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         (vec![], vec![], None)
     };
 
+    // --- resume: overwrite the seed state from the checkpoint store ------
+    if ctx.start_step > 0 {
+        let store =
+            ctx.store.as_deref().context("resume requires a checkpoint store")?;
+        let ck = (ctx.start_step - 1) as u64;
+        for &l in &my_layers {
+            // Any complete shard cover reassembles, regardless of the
+            // writer's n_b; the Adam moments then re-slice to *this*
+            // run's owned range — the §8.1 elastic-resume re-shard.
+            let slot = assemble(&store.read(ck, l as u64)?, layout.total)
+                .with_context(|| format!("layer {l} checkpoint at step {ck}"))?;
+            params.insert(l, slot.params);
+            let a = if ctx.partition && ctx.n_b > 1 {
+                let (lo, hi) = shard.owned_range(ctx.dp_rank);
+                Adam::from_state(
+                    AdamConfig::default(),
+                    slot.m[lo..hi].to_vec(),
+                    slot.v[lo..hi].to_vec(),
+                    slot.adam_t,
+                )
+            } else {
+                Adam::from_state(AdamConfig::default(), slot.m, slot.v, slot.adam_t)
+            };
+            adam.insert(l, a);
+        }
+        if owns_first {
+            let e = assemble(&store.read(ck, slot_embed(d_l) as u64)?, m.vocab * m.d_model)
+                .context("embedding checkpoint")?;
+            table = e.params;
+            adam_table = Some(Adam::from_state(AdamConfig::default(), e.m, e.v, e.adam_t));
+            let p = assemble(&store.read(ck, slot_pos(d_l) as u64)?, m.d_seq * m.d_model)
+                .context("positional checkpoint")?;
+            pos = p.params;
+            adam_pos = Some(Adam::from_state(AdamConfig::default(), p.m, p.v, p.adam_t));
+        }
+        if owns_last {
+            let h = assemble(&store.read(ck, slot_head(d_l) as u64)?, m.d_model * m.vocab)
+                .context("head checkpoint")?;
+            head = h.params;
+            adam_head = Some(Adam::from_state(AdamConfig::default(), h.m, h.v, h.adam_t));
+        }
+    }
+
     let act_shape = vec![batch, m.d_seq, m.d_model];
     let act_elems: usize = act_shape.iter().product();
 
@@ -145,7 +246,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let mut op_done: Vec<bool> = vec![false; prog.len()];
 
     // --- step loop ---------------------------------------------------------
-    for step in 0..ctx.steps {
+    for step in ctx.start_step..ctx.steps {
         op_done.fill(false);
         // Transient per-step state.
         let mut inbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // input of (layer, mb)
@@ -162,7 +263,13 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         let mut param_cache: HashMap<usize, Vec<HostTensor>> = HashMap::new();
 
         let tokens_of = |mb: usize| {
-            corpus.batch(ctx.seed, step as u64, ctx.dp_rank as u64, mb as u64, batch, m.d_seq)
+            // Micro-batches are keyed by their *global* index, so the
+            // data a step consumes is invariant to how the batch splits
+            // across data-parallel instances — exactly what lets an
+            // elastic resume at a different n_b (same n_b·n_μ) continue
+            // the same training trajectory.
+            let global_mb = (ctx.dp_rank * ctx.n_mu + mb) as u64;
+            corpus.batch(ctx.seed, step as u64, 0, global_mb, batch, m.d_seq)
         };
 
         for &(op_id, op) in &stage_nodes {
@@ -232,12 +339,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
                 Op::RecvAct { layer, mb } => {
                     let (l, m_, y) = ctx.act_rx.recv().context("act ring closed")?;
-                    if l != layer || m_ != mb {
-                        bail!("act ring out of order: got ({l},{m_}), want ({layer},{mb})");
-                    }
-                    if y.len() != act_elems {
-                        bail!("bad act payload size");
-                    }
+                    check_payload("act", (l, m_, y.len()), (layer, mb, act_elems))?;
                     inbox.insert((layer, mb), y);
                 }
                 Op::Bwd { layer, mb } => {
@@ -305,9 +407,10 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
                 Op::RecvGrad { layer, mb } => {
                     let (l, m_, g) = ctx.grad_rx.recv().context("grad ring closed")?;
-                    if l != layer || m_ != mb {
-                        bail!("grad ring out of order: got ({l},{m_}), want ({layer},{mb})");
-                    }
+                    // The output-gradient has the activation's shape; an
+                    // unchecked length here skewed nothing visibly until
+                    // layer_bwd rejected the tensor much later.
+                    check_payload("grad", (l, m_, g.len()), (layer, mb, act_elems))?;
                     douts.insert((layer, mb), g);
                 }
                 Op::ReduceGrad { layer } => {
@@ -329,6 +432,19 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     let p = params.get_mut(&layer).unwrap();
                     let g = grads.get_mut(&layer).unwrap();
                     let a = adam.get_mut(&layer).unwrap();
+                    // Schedules emit ReduceGrad only when n_b > 1 or the
+                    // state is partitioned; without one, nothing has
+                    // normalized the micro-batch sum yet. Scale here so
+                    // Adam always consumes the batch *mean* — the same
+                    // gradient for every (n_b, n_mu) split of the batch,
+                    // which is what lets a checkpoint written at one
+                    // cluster size resume at another.
+                    if ctx.n_b == 1 && !ctx.partition {
+                        let scale = 1.0 / ctx.n_mu as f32;
+                        for v in g.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
                     if ctx.partition && ctx.n_b > 1 {
                         let (lo, hi) = shard.owned_range(ctx.dp_rank);
                         a.step(&mut p[lo..hi], &g[lo..hi], lr);
@@ -338,7 +454,47 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     g.fill(0.0);
                     param_cache.remove(&layer);
                 }
-                Op::OffloadStore { .. } | Op::TensorAllReduce { .. } => {}
+                Op::OffloadStore { layer } => {
+                    // Stream the post-step state (the store-after-optim
+                    // edge guarantees the buffers hold updated values).
+                    // With a partition every rank writes its owned shard
+                    // — together a complete cover; replicated state is
+                    // written once, by rank 0.
+                    let store = ctx
+                        .store
+                        .as_deref()
+                        .context("offload schedule without a checkpoint store")?;
+                    let global_mbs = (ctx.n_b * ctx.n_mu) as u64;
+                    if ctx.partition && ctx.n_b > 1 {
+                        let (lo, hi) = shard.owned_range(ctx.dp_rank);
+                        let (am, av, at) = adam.get(&layer).unwrap().state();
+                        store.put(&StateRecord {
+                            step: step as u64,
+                            slot: layer as u64,
+                            lo: lo as u64,
+                            hi: hi as u64,
+                            total: layout.total as u64,
+                            adam_t: at,
+                            global_mbs,
+                            params: params[&layer][lo..hi].to_vec(),
+                            m: am.to_vec(),
+                            v: av.to_vec(),
+                        })?;
+                    } else if ctx.dp_rank == 0 {
+                        let a = &adam[&layer];
+                        store_full_slot(store, step, layer, global_mbs, &params[&layer], a)?;
+                    }
+                }
+                Op::TensorAllReduce { .. } => {
+                    // Tensor parallelism exists only in the simulator's
+                    // cost model. Silently skipping an op the dependency
+                    // graph tracked is exactly how the OffloadStore gap
+                    // went unnoticed — fail loudly instead.
+                    bail!(
+                        "stage {} cannot execute {op}: tensor parallelism is simulator-only",
+                        ctx.stage
+                    );
+                }
             }
             op_done[op_id as usize] = true;
         }
@@ -372,6 +528,33 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             d_head.fill(0.0);
             let _ = ctx.loss_tx.send((step, ctx.dp_rank, loss_sum / ctx.n_mu as f64));
         }
+        // Real-time checkpoint epilogue: the replicated non-layer state
+        // (embedding / positional / head) streams out once per step from
+        // rank 0 of its owning stage, completing the step's record cover.
+        if ctx.offload && ctx.dp_rank == 0 {
+            if let Some(store) = ctx.store.as_deref() {
+                let g = (ctx.n_b * ctx.n_mu) as u64;
+                if owns_first {
+                    let a = adam_table.as_ref().unwrap();
+                    store_full_slot(store, step, slot_embed(d_l), g, &table, a)?;
+                    let a = adam_pos.as_ref().unwrap();
+                    store_full_slot(store, step, slot_pos(d_l), g, &pos, a)?;
+                    // Retention: keep the in-flight step and the last
+                    // complete one, drop everything older. Safe here:
+                    // stage 0 reaching step `s` implies every stage of
+                    // every rank has finished step `s-2` (the pipeline
+                    // and dp barriers bound the lag to one step), so no
+                    // one is still writing the steps being pruned.
+                    if step >= 2 {
+                        store.prune_steps_before((step - 1) as u64)?;
+                    }
+                }
+                if owns_last {
+                    let a = adam_head.as_ref().unwrap();
+                    store_full_slot(store, step, slot_head(d_l), g, &head, a)?;
+                }
+            }
+        }
         if let Some(c) = ctx.comm.as_mut() {
             c.barrier();
         }
@@ -383,4 +566,28 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         collective_elems_sent: ctx.comm.as_ref().map(|c| c.sent_elems).unwrap_or(0),
         wall_secs: t0.elapsed().as_secs_f64(),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::check_payload;
+
+    #[test]
+    fn payload_check_accepts_exact_match_only() {
+        assert!(check_payload("act", (3, 2, 64), (3, 2, 64)).is_ok());
+        // Identity mismatches.
+        assert!(check_payload("act", (4, 2, 64), (3, 2, 64)).is_err());
+        assert!(check_payload("act", (3, 1, 64), (3, 2, 64)).is_err());
+        // Size mismatches — both directions (a short *gradient* payload
+        // used to be accepted silently, unlike activations).
+        assert!(check_payload("grad", (3, 2, 63), (3, 2, 64)).is_err());
+        assert!(check_payload("grad", (3, 2, 65), (3, 2, 64)).is_err());
+    }
+
+    #[test]
+    fn payload_check_reports_what_and_where() {
+        let err = check_payload("grad", (1, 0, 10), (1, 0, 20)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("grad") && msg.contains("10") && msg.contains("20"), "{msg}");
+    }
 }

@@ -1,0 +1,166 @@
+//! §8.2 executable checkpoint path, end to end.
+//!
+//! Two halves:
+//! * schedule-level: the Figure-2 restore/store op accounting on the
+//!   offload path (runs everywhere, no artifacts needed);
+//! * runtime-level: the crash/resume scenario — train with `--offload`
+//!   streaming to a durable `FileStore`, stop ("crash"), then resume
+//!   from the streamed checkpoint on a *different* data-parallel degree
+//!   and land on the same loss trajectory as an uninterrupted run.
+//!   Needs the PJRT artifacts (`make artifacts`); skips gracefully
+//!   without them, and CI runs it in the release-mode parity step.
+
+use std::path::PathBuf;
+
+use lga_mpp::offload::{FileStore, StateStore};
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::schedule::{
+    layered_ga, lower, modular_pipeline, standard_ga, Op, ScheduleProgram, ScheduleSpec,
+};
+use lga_mpp::trainer::{train, Policy, TrainerConfig};
+
+fn restores(p: &ScheduleProgram) -> usize {
+    p.count(|o| matches!(o, Op::RestoreParams { .. }))
+}
+
+fn stores(p: &ScheduleProgram) -> usize {
+    p.count(|o| matches!(o, Op::OffloadStore { .. }))
+}
+
+#[test]
+fn figure2_restore_store_ratio_on_the_offload_path() {
+    // The ν accounting behind §8.2: per batch, standard gradient
+    // accumulation restores every layer once per micro-batch per pass
+    // (2·d_l·n_μ restores), while the modular pipeline / LGA restore once
+    // per layer per pass (2·d_l) — the factor-n_μ economy of Figure 2,
+    // now on the offload path. Stores are once per layer either way.
+    let (d_l, n_l, n_mu) = (16usize, 4usize, 8usize);
+    let spec = ScheduleSpec {
+        d_l,
+        n_l,
+        n_mu,
+        partition: false,
+        offload: true,
+        data_parallel: true,
+    };
+    let std_p = lower(&standard_ga(&spec)).expect("standard lowers");
+    let mod_p = lower(&modular_pipeline(&spec)).expect("modular lowers");
+    assert_eq!(restores(&std_p), 2 * d_l * n_mu);
+    assert_eq!(restores(&mod_p), 2 * d_l);
+    assert_eq!(restores(&std_p), n_mu * restores(&mod_p), "Figure 2 ratio");
+    assert_eq!(stores(&std_p), d_l);
+    assert_eq!(stores(&mod_p), d_l);
+
+    // Single-stage LGA keeps the same economy.
+    let single = ScheduleSpec { n_l: 1, ..spec };
+    let lga_p = lower(&layered_ga(&single)).expect("lga lowers");
+    assert_eq!(restores(&lga_p), 2 * d_l);
+    assert_eq!(stores(&lga_p), d_l);
+}
+
+// ---------------------------------------------------------------------------
+// crash / elastic-resume integration (needs PJRT artifacts)
+// ---------------------------------------------------------------------------
+
+fn have_artifacts() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny/manifest.json").exists()
+}
+
+fn temp_store(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("lga_resume_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn config(n_b: usize, n_mu: usize, steps: usize, store: PathBuf) -> TrainerConfig {
+    let mut c = TrainerConfig::quick("tiny");
+    c.steps = steps;
+    c.n_b = n_b;
+    c.n_mu = n_mu;
+    c.policy = Policy::Improved;
+    // Partition when data-parallel: the crashed run then writes *sharded*
+    // records, which the resumed run must re-slice.
+    c.partition = n_b > 1;
+    c.offload = true;
+    c.store_dir = Some(store);
+    c.lr = LrSchedule::constant(3e-3);
+    c
+}
+
+#[test]
+fn crash_and_elastic_resume_match_an_uninterrupted_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let steps = 8usize;
+    let kill_at = 4usize;
+
+    // Uninterrupted reference: 2-way data parallel, 2 micro-batches,
+    // partitioned state, streaming real-time checkpoints throughout.
+    let dir_ref = temp_store("reference");
+    let ra = train(&config(2, 2, steps, dir_ref.clone())).expect("reference run");
+    assert_eq!(ra.start_step, 0);
+    assert_eq!(ra.losses.len(), steps);
+
+    // The "crashed" run: identical config, killed after `kill_at` steps —
+    // nothing survives except what was already streamed per step.
+    let dir = temp_store("crashed");
+    let rb = train(&config(2, 2, kill_at, dir.clone())).expect("crashed run");
+    assert!(rb.checkpoint_records > 0 && rb.checkpoint_bytes_written > 0);
+    // The streamed state is byte-for-byte readable as a store; retention
+    // keeps the last two steps (in-flight + last complete), older ones
+    // are pruned as training advances.
+    let store = FileStore::new(&dir).expect("reopen store");
+    let retained = store.steps().expect("steps");
+    assert_eq!(retained, vec![kill_at as u64 - 2, kill_at as u64 - 1]);
+
+    // Resuming with a *different global batch* must be refused — it
+    // would silently change the trajectory the checkpoint promises.
+    let mut bad = config(1, 2, steps, dir.clone());
+    bad.resume = true;
+    let err = train(&bad).expect_err("global-batch mismatch must fail");
+    assert!(format!("{err:#}").contains("global batch"), "{err:#}");
+
+    // Elastic resume on a *different* cluster: 1-way data parallel with 4
+    // micro-batches (same global batch), so every sharded record has to
+    // be re-sliced through ShardMap on load.
+    let mut cfg = config(1, 4, steps, dir.clone());
+    cfg.resume = true;
+    let rc = train(&cfg).expect("resumed run");
+    assert_eq!(rc.start_step, kill_at, "resume picks up right after the last complete step");
+    assert_eq!(rc.losses.len(), steps - kill_at);
+
+    // Acceptance: the resumed trajectory matches the uninterrupted one to
+    // fp tolerance (micro-batches are keyed globally, so the global batch
+    // per step is identical; only fp reduction order differs).
+    for (i, (x, y)) in ra.losses[kill_at..].iter().zip(&rc.losses).enumerate() {
+        assert!(
+            (x - y).abs() < 3e-3,
+            "step {}: uninterrupted {x} vs resumed {y}",
+            kill_at + i
+        );
+    }
+
+    // A supervisor restarting the finished run exits cleanly with
+    // nothing left to train (not an error loop).
+    let done = train(&cfg).expect("already-complete resume");
+    assert_eq!(done.start_step, steps);
+    assert!(done.losses.is_empty());
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&dir_ref);
+}
+
+#[test]
+fn resume_with_empty_store_is_a_cold_start() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = temp_store("cold");
+    let mut cfg = config(1, 2, 2, dir.clone());
+    cfg.resume = true; // nothing to resume from yet
+    let r = train(&cfg).expect("cold start");
+    assert_eq!(r.start_step, 0);
+    assert_eq!(r.losses.len(), 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -33,6 +33,7 @@ fn simulator_validates_costmodel_bubble() {
                 n_l,
                 n_mu,
                 partition: false,
+                offload: false,
                 data_parallel: false,
             };
             let sched = if improved { modular_pipeline(&spec) } else { standard_ga(&spec) };
@@ -76,6 +77,7 @@ fn planned_improved_config_simulates_efficiently() {
         n_l: cfg.n_l,
         n_mu: cfg.n_mu,
         partition: cfg.partition,
+        offload: cfg.offload,
         data_parallel: cfg.n_b > 1,
     };
     let sched = modular_pipeline(&spec);
@@ -143,8 +145,14 @@ fn simulator_memory_matches_costmodel_checkpoints() {
         offload: false,
         partition: false,
     };
-    let spec =
-        ScheduleSpec { d_l: shape.d_l, n_l, n_mu, partition: false, data_parallel: false };
+    let spec = ScheduleSpec {
+        d_l: shape.d_l,
+        n_l,
+        n_mu,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
     let costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
     let r = simulate(&standard_ga(&spec), &costs);
     // GPipe: every stage holds all n_mu micro-batches' checkpoints for its
@@ -196,7 +204,8 @@ fn property_random_schedules_validate_and_simulate() {
         let n_l = [1usize, 2, 4, 8, 16][rng.below(5)];
         let n_mu = n_l + rng.below(12);
         let partition = rng.below(2) == 1;
-        let spec = ScheduleSpec { d_l: 16, n_l, n_mu, partition, data_parallel: true };
+        let spec =
+            ScheduleSpec { d_l: 16, n_l, n_mu, partition, offload: false, data_parallel: true };
         let cfg = TrainConfig {
             strategy: Strategy::Improved,
             n_b: 4,

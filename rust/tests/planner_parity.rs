@@ -15,10 +15,10 @@ use lga_mpp::hardware::ClusterSpec;
 use lga_mpp::model::XModel;
 use lga_mpp::planner::{search_fastest, search_fastest_exhaustive};
 use lga_mpp::report::menu_for;
-use lga_mpp::schedule::{lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec};
+use lga_mpp::schedule::{lower, modular_pipeline, one_f_one_b, standard_ga, Op, ScheduleSpec};
 use lga_mpp::sim::{
     simulate_program, simulate_program_into, simulate_program_opts, CostTable, SimOptions,
-    SimScratch,
+    SimScratch, Stream,
 };
 
 /// One search-parity comparison: pruned/parallel vs serial exhaustive.
@@ -87,7 +87,8 @@ fn timeline_off_reports_bit_identical_metrics() {
     let shapes: [(usize, usize, usize, bool); 4] =
         [(16, 4, 8, false), (64, 8, 16, true), (160, 5, 32, true), (128, 32, 128, false)];
     for (d_l, n_l, n_mu, partition) in shapes {
-        let spec = ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel: true };
+        let spec =
+            ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true };
         let costs = cost_table(8, n_l, n_mu, partition);
         for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
             let program = lower(&schedule).expect("generated schedules lower");
@@ -115,10 +116,107 @@ fn timeline_off_reports_bit_identical_metrics() {
     }
 }
 
+/// A cost table for an offload-only configuration (no partition): the
+/// branch of `CostTable::restore_params` that no generated schedule
+/// could previously reach.
+fn offload_cost_table(n_l: usize, n_mu: usize) -> CostTable {
+    let cfg = TrainConfig {
+        strategy: Strategy::Improved,
+        n_b: 1,
+        n_l,
+        n_a: 1,
+        n_mu,
+        b_mu: 1.0,
+        offload: true,
+        partition: false,
+    };
+    CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
+}
+
+#[test]
+fn offload_only_specs_emit_and_charge_restores_and_stores() {
+    // Schedule/sim parity for §8.2: an offload && !partition spec emits
+    // RestoreParams + OffloadStore, and the simulator charges both
+    // (restore_params on the inbound stream, offload_store on the CPU
+    // link) — none of which was reachable before the offload flag.
+    let spec = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 8,
+        partition: false,
+        offload: true,
+        data_parallel: false,
+    };
+    let costs = offload_cost_table(4, 8);
+    assert!(costs.restore_params > 0.0, "offload restores must not be free");
+    assert!(costs.offload_store > 0.0, "offload stores must not be free");
+    let mut base = spec;
+    base.offload = false;
+    for (with, without) in [
+        (modular_pipeline(&spec), modular_pipeline(&base)),
+        (standard_ga(&spec), standard_ga(&base)),
+        (one_f_one_b(&spec), one_f_one_b(&base)),
+    ] {
+        let program = lower(&with).expect("offload schedules lower");
+        assert!(program.count(|o| matches!(o, Op::RestoreParams { .. })) > 0, "{}", program.name);
+        assert_eq!(program.count(|o| matches!(o, Op::OffloadStore { .. })), 16, "{}", program.name);
+        let r = simulate_program(&program, &costs);
+        let netin: f64 = (0..4).map(|s| r.stream_busy(s, Stream::NetIn)).sum();
+        let cpu: f64 = (0..4).map(|s| r.stream_busy(s, Stream::CpuLink)).sum();
+        assert!(netin > 0.0, "{}: restores uncharged", program.name);
+        assert!(cpu > 0.0, "{}: stores uncharged", program.name);
+        // And the offload ops cost real time vs the same policy without.
+        let r0 = simulate_program(&lower(&without).unwrap(), &costs);
+        assert!(r.makespan >= r0.makespan, "{}", program.name);
+    }
+}
+
+#[test]
+fn non_offload_programs_are_unchanged() {
+    // The offload flag must be strictly additive: with it off, every
+    // policy lowers to the same op multiset as before the flag existed —
+    // no stores, and restores only under a partition.
+    for partition in [false, true] {
+        let spec = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            partition,
+            offload: false,
+            data_parallel: true,
+        };
+        for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
+            let p = lower(&schedule).expect("lowers");
+            assert_eq!(p.count(|o| matches!(o, Op::OffloadStore { .. })), 0, "{}", p.name);
+            let restores = p.count(|o| matches!(o, Op::RestoreParams { .. }));
+            if partition {
+                assert!(restores > 0, "{}", p.name);
+            } else {
+                assert_eq!(restores, 0, "{}", p.name);
+            }
+            assert!(!p.offloaded);
+        }
+    }
+}
+
 #[test]
 fn scratch_reuse_across_programs_changes_nothing() {
-    let spec_a = ScheduleSpec { d_l: 64, n_l: 8, n_mu: 16, partition: true, data_parallel: true };
-    let spec_b = ScheduleSpec { d_l: 16, n_l: 4, n_mu: 8, partition: false, data_parallel: true };
+    let spec_a = ScheduleSpec {
+        d_l: 64,
+        n_l: 8,
+        n_mu: 16,
+        partition: true,
+        offload: false,
+        data_parallel: true,
+    };
+    let spec_b = ScheduleSpec {
+        d_l: 16,
+        n_l: 4,
+        n_mu: 8,
+        partition: false,
+        offload: false,
+        data_parallel: true,
+    };
     let prog_a = lower(&modular_pipeline(&spec_a)).unwrap();
     let prog_b = lower(&standard_ga(&spec_b)).unwrap();
     let costs_a = cost_table(8, 8, 16, true);

@@ -14,15 +14,18 @@ use lga_mpp::schedule::{
 use lga_mpp::sim::{simulate_program, CostTable};
 
 /// The spec grid: (d_l, n_l, n_mu) shapes exercising single-stage,
-/// divisible and ragged-micro-batch pipelines.
+/// divisible and ragged-micro-batch pipelines, with every combination of
+/// partition / offload / data-parallel flags.
 fn grid() -> Vec<ScheduleSpec> {
     let mut specs = Vec::new();
     for (d_l, n_l, n_mu) in
         [(8, 4, 8), (16, 4, 6), (16, 4, 8), (12, 3, 6), (8, 1, 4), (160, 5, 10), (16, 2, 5)]
     {
         for partition in [false, true] {
-            for data_parallel in [false, true] {
-                specs.push(ScheduleSpec { d_l, n_l, n_mu, partition, data_parallel });
+            for offload in [false, true] {
+                for data_parallel in [false, true] {
+                    specs.push(ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel });
+                }
             }
         }
     }
@@ -130,7 +133,9 @@ fn exactly_one_fwd_bwd_edge_chain_per_layer_and_microbatch() {
 #[test]
 fn modular_restores_strictly_fewer_than_standard_under_partition() {
     for spec in grid() {
-        if !spec.partition || spec.n_l == 1 {
+        // The restore economy holds on the partition path and the offload
+        // path alike (Figure 2 / §8.2).
+        if !spec.restores() || spec.n_l == 1 {
             continue;
         }
         let modular = lower(&modular_pipeline(&spec)).unwrap();
@@ -158,7 +163,7 @@ fn lowered_programs_simulate_without_deadlock() {
             n_a: 1,
             n_mu: spec.n_mu,
             b_mu: 1.0,
-            offload: false,
+            offload: spec.offload,
             partition: spec.partition,
         };
         let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &cluster);
@@ -178,7 +183,14 @@ fn program_edges_are_within_arena_and_acyclicity_witness_exists() {
     // following each pred's id being executable before its consumer in
     // *some* order — lowering already ran Kahn; here we just re-verify
     // the CSR symmetry).
-    let spec = ScheduleSpec { d_l: 160, n_l: 5, n_mu: 10, partition: true, data_parallel: true };
+    let spec = ScheduleSpec {
+        d_l: 160,
+        n_l: 5,
+        n_mu: 10,
+        partition: true,
+        offload: true,
+        data_parallel: true,
+    };
     let p = lower(&modular_pipeline(&spec)).unwrap();
     let n = p.len() as u32;
     let mut pred_edge_count = 0usize;
