@@ -33,6 +33,7 @@ fn main() {
         d_l: 16,
         n_l: 1,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: true,
@@ -57,6 +58,7 @@ fn main() {
         d_l: 16,
         n_l: 1,
         n_mu: 8,
+        tp: 1,
         partition: true,
         offload: false,
         data_parallel: true,
@@ -82,6 +84,7 @@ fn main() {
         d_l: 16,
         n_l: 4,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: false,
@@ -104,6 +107,7 @@ fn main() {
         d_l: 160,
         n_l: 5,
         n_mu: 32,
+        tp: 1,
         partition: true,
         offload: false,
         data_parallel: true,

@@ -104,6 +104,7 @@ fn main() {
             d_l: 128,
             n_l: 32,
             n_mu: 128,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: true,

@@ -77,6 +77,7 @@ fn main() {
             d_l,
             n_l,
             n_mu,
+            tp: 1,
             partition: part,
             offload: false,
             data_parallel: true,
@@ -101,6 +102,7 @@ fn main() {
             d_l: 128,
             n_l: 32,
             n_mu: 128,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: true,

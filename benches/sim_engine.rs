@@ -50,6 +50,7 @@ fn main() {
             d_l,
             n_l,
             n_mu,
+            tp: 1,
             partition: part,
             offload: false,
             data_parallel: true,

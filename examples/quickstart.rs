@@ -35,6 +35,7 @@ fn main() -> anyhow::Result<()> {
         d_l: 16,
         n_l: 4,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: false,

@@ -46,6 +46,7 @@ fn main() {
         d_l: 8,
         n_l: 1,
         n_mu: 4,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: true,
@@ -70,6 +71,7 @@ fn main() {
         d_l: 8,
         n_l: 1,
         n_mu: 4,
+        tp: 1,
         partition: true,
         offload: false,
         data_parallel: true,
@@ -95,6 +97,7 @@ fn main() {
         d_l: 16,
         n_l: 4,
         n_mu: 6,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: false,
@@ -121,6 +124,7 @@ fn main() {
         d_l: 16,
         n_l: 4,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: false,

@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     cfg.steps = steps;
     cfg.n_b = flag(&args, "--dp").map(|v| v.parse().unwrap()).unwrap_or(2);
     cfg.n_l = flag(&args, "--pp").map(|v| v.parse().unwrap()).unwrap_or(2);
+    cfg.tp = flag(&args, "--tp").map(|v| v.parse().unwrap()).unwrap_or(1);
     cfg.n_mu = flag(&args, "--mb").map(|v| v.parse().unwrap()).unwrap_or(2);
     cfg.partition = !args.iter().any(|a| a == "--no-partition");
     cfg.policy = match flag(&args, "--policy").as_deref() {

@@ -1,9 +1,31 @@
-//! In-memory collectives for the real trainer: ring all-reduce,
-//! reduce-scatter and all-gather over std mpsc channels, one `Comm` per
-//! rank. The ring algorithm is the bandwidth-optimal one the paper's
-//! C.4.1 traffic accounting assumes (each rank sends/receives
-//! 2·(n−1)/n of the buffer for an all-reduce).
+//! Worker communication: process groups over pluggable transports.
+//!
+//! The crate's communication layer is organised in three levels:
+//!
+//! 1. [`transport`] — the byte-moving substrate. A [`Transport`] is one
+//!    directed duplex port between fixed peers; the in-process mpsc
+//!    implementation ([`transport::MpscPort`]) is the first backend, and
+//!    a socket/RDMA port can replace it without touching anything above.
+//! 2. [`ring`] — SPMD ring collectives ([`RingGroup`]): all-reduce,
+//!    reduce-scatter, all-gather, broadcast over any transport. Chunk
+//!    boundaries are deterministic, so results are bit-identical across
+//!    ranks and across runs; per-rank traffic matches the
+//!    bandwidth-optimal 2·(n−1)/n bound the paper's C.4.1 accounting
+//!    assumes.
+//! 3. [`world`] — the process-group API the trainer programs against:
+//!    one [`CommWorld`] per rank of a [`Topology`] `{stages, dp, tp}`,
+//!    exposing the pipeline p2p group, the data-parallel ring, the
+//!    tensor-parallel ring and the control plane, each with per-group
+//!    traffic accounting ([`world::Traffic`]).
+//!
+//! Built once in `trainer::train` and handed to each worker as the
+//! single communication handle in `WorkerCtx` — there are no raw
+//! channels in the trainer any more.
 
 pub mod ring;
+pub mod transport;
+pub mod world;
 
-pub use ring::{ring_group, Comm};
+pub use ring::{ring_group, RingGroup};
+pub use transport::{Disconnected, Transport};
+pub use world::{CommWorld, LossMsg, PipeMsg, Rank, Topology, Traffic};

@@ -1,52 +1,42 @@
-//! Ring collectives over mpsc channels.
+//! Ring collectives over an abstract [`Transport`].
 //!
-//! `ring_group(n)` builds the communicators; each participating thread
-//! then calls the same sequence of collective ops (SPMD style). Chunk
-//! boundaries are deterministic, so results are bit-identical across
-//! ranks and across runs.
+//! `ring_group(n)` builds `n` communicators over the in-process mpsc
+//! backend; each participating thread then calls the same sequence of
+//! collective ops (SPMD style). Chunk boundaries are deterministic, so
+//! results are bit-identical across ranks and across runs. The ring
+//! algorithm is the bandwidth-optimal one the paper's C.4.1 traffic
+//! accounting assumes (each rank sends/receives 2·(n−1)/n of the buffer
+//! for an all-reduce).
+//!
+//! A [`RingGroup`] no longer owns raw channels: it drives any
+//! [`Transport<Vec<f32>>`], so the same reduce-scatter / all-gather /
+//! broadcast code serves the data-parallel groups, the tensor-parallel
+//! groups and (with a future socket transport) multi-process rings.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 
-/// Per-rank communicator for a ring of `n` members.
-pub struct Comm {
+use super::transport::{mpsc_ring, Transport};
+
+/// Per-rank communicator for a ring of `n` members, generic over the
+/// transport that moves the chunks.
+pub struct RingGroup {
     pub rank: usize,
     pub n: usize,
-    tx_next: Sender<Vec<f32>>,
-    rx_prev: Receiver<Vec<f32>>,
+    port: Box<dyn Transport<Vec<f32>>>,
     barrier: Arc<Barrier>,
     /// Total payload elements sent by this rank (traffic accounting).
-    pub sent_elems: u64,
+    sent_elems: u64,
 }
 
-/// Build communicators for an `n`-rank ring. Index i talks to i+1 mod n.
-pub fn ring_group(n: usize) -> Vec<Comm> {
-    assert!(n >= 1);
-    let barrier = Arc::new(Barrier::new(n));
-    let mut txs: Vec<Option<Sender<Vec<f32>>>> = Vec::with_capacity(n);
-    let mut rxs: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n);
-    for _ in 0..n {
-        let (tx, rx) = channel();
-        txs.push(Some(tx));
-        rxs.push(Some(rx));
-    }
-    // rank r sends on channel r (to r+1), receives on channel (r-1+n)%n.
-    let mut comms = Vec::with_capacity(n);
-    let mut rx_rot: Vec<Option<Receiver<Vec<f32>>>> = Vec::with_capacity(n);
-    for r in 0..n {
-        rx_rot.push(rxs[(r + n - 1) % n].take());
-    }
-    for (r, rx) in rx_rot.into_iter().enumerate() {
-        comms.push(Comm {
-            rank: r,
-            n,
-            tx_next: txs[r].take().unwrap(),
-            rx_prev: rx.unwrap(),
-            barrier: barrier.clone(),
-            sent_elems: 0,
-        });
-    }
-    comms
+/// Build communicators for an `n`-rank ring over the in-process mpsc
+/// transport. Index i talks to i+1 mod n.
+pub fn ring_group(n: usize) -> Vec<RingGroup> {
+    let barrier = Arc::new(Barrier::new(n.max(1)));
+    mpsc_ring(n)
+        .into_iter()
+        .enumerate()
+        .map(|(rank, port)| RingGroup::new(rank, n, Box::new(port), barrier.clone()))
+        .collect()
 }
 
 /// Chunk boundaries: `n` nearly-equal chunks of a `len`-element buffer.
@@ -58,7 +48,23 @@ fn chunk_bounds(len: usize, n: usize, i: usize) -> (usize, usize) {
     (start, start + size)
 }
 
-impl Comm {
+impl RingGroup {
+    /// Wrap a wired transport port as rank `rank` of an `n`-ring. The
+    /// barrier must be shared by exactly the `n` members.
+    pub fn new(
+        rank: usize,
+        n: usize,
+        port: Box<dyn Transport<Vec<f32>>>,
+        barrier: Arc<Barrier>,
+    ) -> Self {
+        RingGroup { rank, n, port, barrier, sent_elems: 0 }
+    }
+
+    /// Payload elements this rank has pushed onto the wire so far.
+    pub fn sent_elems(&self) -> u64 {
+        self.sent_elems
+    }
+
     /// Synchronisation barrier across the group.
     pub fn barrier(&self) {
         self.barrier.wait();
@@ -68,11 +74,11 @@ impl Comm {
         self.sent_elems += data.len() as u64;
         // Receiver outliving sender is guaranteed by trainer shutdown
         // ordering; a send on a closed ring is a bug.
-        self.tx_next.send(data).expect("ring peer hung up");
+        self.port.send(data).expect("ring peer hung up");
     }
 
     fn recv(&mut self) -> Vec<f32> {
-        self.rx_prev.recv().expect("ring peer hung up")
+        self.port.recv().expect("ring peer hung up")
     }
 
     /// Ring all-reduce (sum): reduce-scatter then all-gather.
@@ -161,7 +167,7 @@ mod tests {
 
     fn run_group<F>(n: usize, f: F) -> Vec<Vec<f32>>
     where
-        F: Fn(&mut Comm, &mut Vec<f32>) + Send + Sync + Copy + 'static,
+        F: Fn(&mut RingGroup, &mut Vec<f32>) + Send + Sync + Copy + 'static,
     {
         let comms = ring_group(n);
         let handles: Vec<_> = comms
@@ -232,7 +238,7 @@ mod tests {
                 thread::spawn(move || {
                     let mut d = vec![1.0f32; 1000];
                     c.all_reduce(&mut d);
-                    c.sent_elems
+                    c.sent_elems()
                 })
             })
             .collect();
@@ -252,5 +258,19 @@ mod tests {
         for res in &results {
             assert_eq!(res, &want);
         }
+    }
+
+    #[test]
+    fn single_member_group_is_a_no_op_with_no_traffic() {
+        let mut comms = ring_group(1);
+        let c = &mut comms[0];
+        let mut d = vec![3.5f32; 9];
+        c.all_reduce(&mut d);
+        c.reduce_scatter(&mut d);
+        c.all_gather_owned(&mut d);
+        c.broadcast(&mut d, 0);
+        c.barrier();
+        assert!(d.iter().all(|&v| v == 3.5));
+        assert_eq!(c.sent_elems(), 0);
     }
 }

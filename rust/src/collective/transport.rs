@@ -1,0 +1,139 @@
+//! The byte-moving substrate of every [`crate::collective`] group.
+//!
+//! A [`Transport`] is one *directed duplex port*: `send` ships a message
+//! toward this rank's designated peer(s), `recv` blocks for the next
+//! inbound message. Which peer a port talks to is fixed at wiring time —
+//! a ring port talks to the next/previous rank, a pipeline port to the
+//! adjacent stage — so the collective algorithms above it stay
+//! backend-agnostic: the in-process mpsc backend here is the first
+//! implementation, and a socket/RDMA transport slots in per-port without
+//! touching the ring or pipeline code.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// A peer endpoint disappeared mid-operation. During orderly trainer
+/// shutdown receivers outlive senders, so seeing this means a peer
+/// worker died (panicked or bailed) — callers surface it, they don't
+/// retry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Disconnected;
+
+impl std::fmt::Display for Disconnected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("collective peer hung up")
+    }
+}
+
+impl std::error::Error for Disconnected {}
+
+/// One directed duplex port carrying `M`-typed messages between two
+/// fixed peers. `send` must not block indefinitely on a live peer
+/// (buffered delivery); `recv` blocks until a message or disconnect.
+pub trait Transport<M: Send>: Send {
+    fn send(&mut self, msg: M) -> Result<(), Disconnected>;
+    fn recv(&mut self) -> Result<M, Disconnected>;
+}
+
+/// In-process mpsc implementation: an unbounded sender toward the peer
+/// plus a receiver from (possibly a different) peer — exactly the shape
+/// ring and pipeline wiring need, where "who I send to" and "who I hear
+/// from" are distinct neighbours.
+pub struct MpscPort<M> {
+    tx: Sender<M>,
+    rx: Receiver<M>,
+}
+
+impl<M> MpscPort<M> {
+    pub fn new(tx: Sender<M>, rx: Receiver<M>) -> Self {
+        MpscPort { tx, rx }
+    }
+}
+
+impl<M: Send> Transport<M> for MpscPort<M> {
+    fn send(&mut self, msg: M) -> Result<(), Disconnected> {
+        self.tx.send(msg).map_err(|_| Disconnected)
+    }
+
+    fn recv(&mut self) -> Result<M, Disconnected> {
+        self.rx.recv().map_err(|_| Disconnected)
+    }
+}
+
+/// Shared ring-wiring core: rank `r` always sends on channel `r`; which
+/// channel it *reads* fixes the ring's direction.
+fn mpsc_ring_reading<M: Send>(n: usize, rx_of: impl Fn(usize) -> usize) -> Vec<MpscPort<M>> {
+    assert!(n >= 1);
+    let mut txs: Vec<Option<Sender<M>>> = Vec::with_capacity(n);
+    let mut rxs: Vec<Option<Receiver<M>>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = channel();
+        txs.push(Some(tx));
+        rxs.push(Some(rx));
+    }
+    let mut ports = Vec::with_capacity(n);
+    for r in 0..n {
+        let tx = txs[r].take().unwrap();
+        let rx = rxs[rx_of(r)].take().unwrap();
+        ports.push(MpscPort::new(tx, rx));
+    }
+    ports
+}
+
+/// Wire `n` mpsc ports into a ring: port `r` sends to rank `r + 1 mod n`
+/// and receives from rank `r − 1 mod n`. The wiring primitive behind
+/// [`super::ring_group`] and the forward (activation) pipeline rings.
+pub fn mpsc_ring<M: Send>(n: usize) -> Vec<MpscPort<M>> {
+    mpsc_ring_reading(n, |r| (r + n - 1) % n)
+}
+
+/// The reversed ring: port `r` sends to rank `r − 1 mod n` (its channel
+/// is read by `r − 1`) and receives from rank `r + 1 mod n` — the
+/// gradient direction of the pipeline.
+pub fn mpsc_ring_rev<M: Send>(n: usize) -> Vec<MpscPort<M>> {
+    mpsc_ring_reading(n, |r| (r + 1) % n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mpsc_ring_routes_to_the_next_rank() {
+        let mut ports = mpsc_ring::<usize>(3);
+        for (r, p) in ports.iter_mut().enumerate() {
+            p.send(r).unwrap();
+        }
+        for (r, p) in ports.iter_mut().enumerate() {
+            // Rank r hears from rank r−1.
+            assert_eq!(p.recv().unwrap(), (r + 3 - 1) % 3);
+        }
+    }
+
+    #[test]
+    fn mpsc_ring_rev_routes_to_the_previous_rank() {
+        let mut ports = mpsc_ring_rev::<usize>(3);
+        for (r, p) in ports.iter_mut().enumerate() {
+            p.send(r).unwrap();
+        }
+        for (r, p) in ports.iter_mut().enumerate() {
+            // Rank r hears from rank r+1.
+            assert_eq!(p.recv().unwrap(), (r + 1) % 3);
+        }
+    }
+
+    #[test]
+    fn disconnect_is_reported_not_panicked() {
+        let mut ports = mpsc_ring::<u8>(2);
+        ports.remove(1); // drop the peer
+        let p = &mut ports[0];
+        assert_eq!(p.send(1), Err(Disconnected));
+        assert_eq!(p.recv(), Err(Disconnected));
+    }
+
+    #[test]
+    fn single_rank_ring_talks_to_itself() {
+        let mut ports = mpsc_ring::<u8>(1);
+        ports[0].send(7).unwrap();
+        assert_eq!(ports[0].recv().unwrap(), 7);
+    }
+}

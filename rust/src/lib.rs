@@ -37,7 +37,13 @@
 //!   configurations in the loop ([`planner::simloop`]) at
 //!   trillion-parameter layer counts;
 //! * the **real trainer** ([`trainer`]) dispatches each stage's run
-//!   queue over PJRT, checking the same edges before every op.
+//!   queue over PJRT, checking the same edges before every op. Workers
+//!   communicate exclusively through a [`collective::CommWorld`]
+//!   process-group handle — pipeline p2p, data-parallel ring,
+//!   tensor-parallel ring and control plane over a pluggable
+//!   [`collective::Transport`] — so all three parallelism axes
+//!   (including the per-layer `TensorAllReduce` of C.4.3) run over one
+//!   uniform, traffic-accounted API.
 //!
 //! New policies (e.g. interleaved 1F1B) are generator-only changes — the
 //! graph semantics downstream are untouched.

@@ -100,12 +100,12 @@ const HELP: &str = "\
 repro — 'Layered gradient accumulation and modular pipeline parallelism'
 usage:
   repro table <6.1|6.2|6.3|a.1|b.1>   [--x N] [--ethernet|--unlimited-node]
-  repro table sched                   [--x N] [--layers N] [--stages N] [--mb N]
+  repro table sched                   [--x N] [--layers N] [--stages N] [--mb N] [--tp N]
   repro figure <4|5|6|7|8>            [--max-x N]
   repro schedule [--policy baseline|improved|1f1b|interleaved] [--layers N]
-                 [--stages N] [--mb N] [--chunks V] [--partition] [--offload]
-                 [--x N] [--width N]
-  repro train [--preset tiny|e2e] [--dp N] [--pp N] [--mb N] [--steps N]
+                 [--stages N] [--mb N] [--tp N] [--chunks V] [--partition]
+                 [--offload] [--x N] [--width N]
+  repro train [--preset tiny|e2e] [--dp N] [--pp N] [--tp N] [--mb N] [--steps N]
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
               [--offload] [--store DIR] [--resume] [--artifacts DIR]
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
@@ -132,6 +132,7 @@ fn cmd_table(args: &Args) -> Result<()> {
             args.get_usize("layers", 16)?,
             args.get_usize("stages", 4)?,
             args.get_usize("mb", 8)?,
+            args.get_usize("tp", 1)?,
             &cluster,
         ),
         other => bail!("unknown table {other}"),
@@ -191,10 +192,12 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let n_mu = args.get_usize("mb", 8)?;
     let x = args.get_usize("x", 32)?;
     let width = args.get_usize("width", 110)?;
+    let tp = args.get_usize("tp", 1)?;
     let spec = ScheduleSpec {
         d_l,
         n_l,
         n_mu,
+        tp,
         partition: args.has("partition"),
         offload: args.has("offload"),
         data_parallel: true,
@@ -226,7 +229,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         strategy: if policy == "improved" { Strategy::Improved } else { Strategy::Baseline },
         n_b: 8,
         n_l,
-        n_a: 1,
+        n_a: tp,
         n_mu,
         b_mu: 1.0,
         offload: args.has("offload"),
@@ -259,6 +262,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     cfg.n_b = args.get_usize("dp", 1)?;
     cfg.n_l = args.get_usize("pp", 1)?;
+    cfg.tp = args.get_usize("tp", 1)?;
     cfg.n_mu = args.get_usize("mb", 2)?;
     cfg.steps = args.get_usize("steps", 20)?;
     cfg.partition = args.has("partition");
@@ -284,9 +288,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         min_ratio: 0.1,
     };
     println!(
-        "training preset={preset} dp={} pp={} mb={} policy={} partition={} offload={} steps={}",
+        "training preset={preset} dp={} pp={} tp={} mb={} policy={} partition={} offload={} \
+         steps={}",
         cfg.n_b,
         cfg.n_l,
+        cfg.tp,
         cfg.n_mu,
         cfg.policy.name(),
         cfg.partition,
@@ -304,12 +310,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
     }
     println!(
-        "done: {:.1}s wall | {} PJRT calls ({:.1}s, {:.0}% of wall) | {:.1} M collective elems",
+        "done: {:.1}s wall | {} PJRT calls ({:.1}s, {:.0}% of wall) | wire elems: \
+         {:.1} M dp / {:.1} M pipe / {:.1} M tp",
         r.wall_secs,
         r.execute_calls,
         r.execute_secs,
         100.0 * r.execute_secs / r.wall_secs.max(1e-9),
-        r.collective_elems_sent as f64 / 1e6
+        r.collective_elems_sent as f64 / 1e6,
+        r.pipeline_elems_sent as f64 / 1e6,
+        r.tp_elems_sent as f64 / 1e6
     );
     if cfg.offload {
         println!(

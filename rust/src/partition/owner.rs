@@ -1,10 +1,10 @@
 //! Shard ownership: which data-parallel rank stores (and updates) which
 //! slice of each layer's flattened parameter vector.
 //!
-//! The split matches [`crate::collective::Comm`]'s ring chunking so that
-//! a reduce-scatter leaves exactly the owned slice fully reduced on its
-//! owner, and an all-gather restores the full vector — the partitioned
-//! data flow of Figure 2 (bottom).
+//! The split matches [`crate::collective::RingGroup`]'s ring chunking so
+//! that a reduce-scatter leaves exactly the owned slice fully reduced on
+//! its owner, and an all-gather restores the full vector — the
+//! partitioned data flow of Figure 2 (bottom).
 
 /// Shard map for one flattened buffer of `len` elements over `n` ranks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,7 +28,7 @@ impl ShardMap {
     }
 
     /// The chunk rank `r` owns after a ring reduce-scatter
-    /// (= `Comm::owned_chunk`).
+    /// (= `RingGroup::owned_chunk`).
     pub fn owned_chunk_of_rank(&self, rank: usize) -> usize {
         (rank + 1) % self.n
     }

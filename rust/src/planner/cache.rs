@@ -3,8 +3,10 @@
 //! `simloop::lower_plan` snaps a planner configuration to an executable
 //! schedule shape before lowering it, and *many* candidate configurations
 //! collapse to the same snapped shape (the snap quantises n_l to a
-//! divisor of d_l and n_μ to at least n_l, and the generator ignores n_a,
-//! n_b and b_μ entirely — those only price the cost table). Re-lowering
+//! divisor of d_l and n_μ to at least n_l, and the generator ignores
+//! n_b and b_μ entirely — those only price the cost table; the
+//! tensor-parallel degree changes the schedule, so it keys the cache).
+//! Re-lowering
 //! the identical schedule for every candidate made `rank_by_simulation`
 //! O(candidates × lowering); this memo makes it O(distinct shapes ×
 //! lowering + candidates × simulation).
@@ -62,6 +64,15 @@ struct Key {
     d_l: usize,
     n_l: usize,
     n_mu: usize,
+    /// Whether the schedule carries `TensorAllReduce` ops. Generators
+    /// branch only on `tp > 1` — every tp > 1 degree yields the same op
+    /// arena and edges, so keying on the exact value would re-lower an
+    /// identical program once per n_a candidate. The cached program's
+    /// `tp` metadata field may therefore record a different tp > 1
+    /// degree than the request; the planner only executes the ops and
+    /// prices them through its own `CostTable`, which carries the real
+    /// n_a.
+    tensor_parallel: bool,
     partition: bool,
     offload: bool,
     data_parallel: bool,
@@ -74,6 +85,7 @@ impl Key {
             d_l: spec.d_l,
             n_l: spec.n_l,
             n_mu: spec.n_mu,
+            tensor_parallel: spec.tp > 1,
             partition: spec.partition,
             offload: spec.offload,
             data_parallel: spec.data_parallel,
@@ -155,7 +167,15 @@ mod tests {
     use super::*;
 
     fn spec(n_l: usize, n_mu: usize) -> ScheduleSpec {
-        ScheduleSpec { d_l: 16, n_l, n_mu, partition: true, offload: false, data_parallel: true }
+        ScheduleSpec {
+            d_l: 16,
+            n_l,
+            n_mu,
+            tp: 1,
+            partition: true,
+            offload: false,
+            data_parallel: true,
+        }
     }
 
     #[test]
@@ -179,12 +199,26 @@ mod tests {
         let mut off = spec(4, 8);
         off.offload = true;
         let d = cache.lower(PolicyKind::ModularPipeline, &off);
+        // So does turning tensor parallelism on (TensorAllReduce ops).
+        let mut tp = spec(4, 8);
+        tp.tp = 2;
+        let e = cache.lower(PolicyKind::ModularPipeline, &tp);
         assert!(!Arc::ptr_eq(&a, &b));
         assert!(!Arc::ptr_eq(&a, &c));
         assert!(!Arc::ptr_eq(&a, &d));
+        assert!(!Arc::ptr_eq(&a, &e));
         assert!(d.offloaded && !a.offloaded);
-        assert_eq!(cache.misses(), 4);
-        assert_eq!(cache.len(), 4);
+        assert_eq!(e.tp, 2);
+        assert!(e.len() > a.len(), "tp program carries the TensorAllReduce ops");
+        assert_eq!(cache.misses(), 5);
+        assert_eq!(cache.len(), 5);
+        // The exact tp *degree* does not change the op shape — tp = 4
+        // must hit the tp = 2 entry instead of re-lowering (the planner
+        // prices n_a through its CostTable, not the program).
+        tp.tp = 4;
+        let f = cache.lower(PolicyKind::ModularPipeline, &tp);
+        assert!(Arc::ptr_eq(&e, &f));
+        assert_eq!(cache.misses(), 5);
     }
 
     #[test]

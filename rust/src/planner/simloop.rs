@@ -10,11 +10,12 @@
 //!
 //! Cheap enough to run inside a planner search, for three reasons:
 //! lowering is memoised through [`super::cache::LoweringCache`] (many
-//! candidates snap to the same executable spec — n_a/n_b/b_μ only price
-//! the cost table, they don't change the schedule); candidates are
-//! simulated concurrently on scoped worker threads; and each worker
-//! reuses one [`SimScratch`] with the timeline off, so a simulation
-//! allocates nothing after warmup.
+//! candidates snap to the same executable spec — n_b/b_μ only price
+//! the cost table, they don't change the schedule, and n_a only flips
+//! the tp > 1 op shape); candidates are simulated concurrently on
+//! scoped worker threads; and each worker reuses one [`SimScratch`]
+//! with the timeline off, so a simulation allocates nothing after
+//! warmup.
 
 use std::sync::Arc;
 
@@ -61,6 +62,10 @@ fn executable_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec)
         d_l,
         n_l: cfg.n_l,
         n_mu: cfg.n_mu,
+        // Tensor-parallel plans now change the *schedule*, not just the
+        // cost table: tp > 1 emits the per-layer TensorAllReduce ops the
+        // simulator charges the amortised C.4.3 wire time for.
+        tp: cfg.n_a,
         partition: cfg.partition,
         // Offloaded plans now simulate the ops they imply (restores on
         // the CPU link, post-step stores) instead of pricing offload in

@@ -196,21 +196,35 @@ pub fn table_b1() -> String {
 /// each schedule is lowered to its dependency graph once and executed by
 /// the discrete-event simulator. Covers the paper's modular pipeline,
 /// the GPipe-style contiguous baseline, 1F1B and Megatron-LM's
-/// interleaved 1F1B (the §4 comparison).
+/// interleaved 1F1B (the §4 comparison). With `tp > 1` every schedule
+/// carries the per-layer `TensorAllReduce` ops, so the table shows the
+/// tp trade-off the paper's C.4.3 amortisation argument is about.
+///
+/// The `comm` column is the per-stage-batch wire volume (all transfer
+/// ops priced by the cost model's byte accounting), so tp vs non-tp
+/// runs are comparable at a glance.
 pub fn schedule_comparison(
     x: usize,
     d_l: usize,
     n_l: usize,
     n_mu: usize,
+    tp: usize,
     cluster: &ClusterSpec,
 ) -> String {
-    let spec =
-        ScheduleSpec { d_l, n_l, n_mu, partition: false, offload: false, data_parallel: true };
+    let spec = ScheduleSpec {
+        d_l,
+        n_l,
+        n_mu,
+        tp,
+        partition: false,
+        offload: false,
+        data_parallel: true,
+    };
     let cfg = TrainConfig {
         strategy: Strategy::Baseline,
         n_b: 8,
         n_l,
-        n_a: 1,
+        n_a: tp,
         n_mu,
         b_mu: 1.0,
         offload: false,
@@ -224,21 +238,26 @@ pub fn schedule_comparison(
         schedules.insert(2, interleaved_1f1b(&spec, 2));
     }
     let mut out = format!(
-        "Schedule comparison (d_l={d_l}, n_l={n_l}, n_mu={n_mu}, X_{x} layers)\n\
-         {:<20} {:>7} {:>8} {:>10} {:>8} {:>10}\n",
-        "policy", "ops", "edges", "makespan", "bubble", "net tail"
+        "Schedule comparison (d_l={d_l}, n_l={n_l}, n_mu={n_mu}, tp={tp}, X_{x} layers)\n\
+         {:<20} {:>7} {:>8} {:>10} {:>8} {:>10} {:>10}\n",
+        "policy", "ops", "edges", "makespan", "bubble", "net tail", "comm"
     );
     for s in &schedules {
         let p = lower(s).expect("generated schedules lower");
         let r = simulate_program(&p, &costs);
+        // Total wire bytes the program moves (per data-parallel
+        // instance per batch), from the op counts × the cost model's
+        // per-op payloads — cheap, no simulation needed.
+        let comm_bytes: f64 = p.ops.iter().map(|n| costs.wire_bytes(&n.op)).sum();
         out.push_str(&format!(
-            "{:<20} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms\n",
+            "{:<20} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms {:>7.2}MiB\n",
             p.name,
             p.len(),
             p.n_edges(),
             r.makespan * 1e3,
             r.bubble_fraction(),
             r.exposed_network_tail() * 1e3,
+            comm_bytes / (1u64 << 20) as f64,
         ));
     }
     out
@@ -324,13 +343,33 @@ mod tests {
 
     #[test]
     fn schedule_comparison_covers_all_policies() {
-        let t = schedule_comparison(32, 16, 4, 8, &ClusterSpec::reference());
+        let t = schedule_comparison(32, 16, 4, 8, 1, &ClusterSpec::reference());
         // Match row starts, not substrings — "1f1b" must be its own row,
         // not a hit inside "interleaved-1f1b".
         for name in ["standard-pipeline", "1f1b", "interleaved-1f1b", "modular-pipeline"] {
             assert!(
                 t.lines().any(|l| l.starts_with(name)),
                 "missing row {name} in:\n{t}"
+            );
+        }
+        assert!(t.contains("comm"), "comm-volume column missing:\n{t}");
+    }
+
+    #[test]
+    fn schedule_comparison_tp_runs_move_more_wire_volume() {
+        // The tp table is the C.4.3 trade-off made visible: same
+        // policies, strictly more communication per batch.
+        let c = ClusterSpec::reference();
+        let grab = |t: &str, name: &str| -> f64 {
+            let row = t.lines().find(|l| l.starts_with(name)).unwrap().to_string();
+            row.split_whitespace().last().unwrap().trim_end_matches("MiB").parse().unwrap()
+        };
+        let t1 = schedule_comparison(32, 16, 4, 8, 1, &c);
+        let t2 = schedule_comparison(32, 16, 4, 8, 2, &c);
+        for name in ["standard-pipeline", "modular-pipeline"] {
+            assert!(
+                grab(&t2, name) > grab(&t1, name),
+                "{name}: tp=2 volume not above tp=1\n{t1}\n{t2}"
             );
         }
     }

@@ -15,7 +15,12 @@
 //!   *restores* where standard accumulation pays the per-micro-batch
 //!   pathology;
 //! * `ReduceGrad { layer }` is issued as soon as the layer's gradient is
-//!   complete: after the last micro-batch of that layer's backward.
+//!   complete: after the last micro-batch of that layer's backward;
+//! * with `tp > 1`, `TensorAllReduce { layer, mb, bwd }` follows every
+//!   `Fwd`/`Bwd` (before the corresponding send): the six per-layer
+//!   tensor-parallel all-reduces of C.4.3, amortised into one op per
+//!   phase, in every policy — the modular pipeline's claim is that these
+//!   amortise over the per-layer transfers it already makes.
 
 use super::ir::{LayerAssignment, Op, Schedule};
 
@@ -28,6 +33,12 @@ pub struct ScheduleSpec {
     pub n_l: usize,
     /// Micro-batches n_μ.
     pub n_mu: usize,
+    /// Tensor-parallel degree n_a (1 = off). When `tp > 1` every layer
+    /// pass carries an amortised `TensorAllReduce` op — the six
+    /// Megatron-style all-reduces of C.4.3 bunched into one op per
+    /// (layer, micro-batch) phase: 2 forward, 4 backward (recompute
+    /// included).
+    pub tp: usize,
     /// Whether the training state is partitioned (emit RestoreParams +
     /// per-layer reduce-scatter semantics).
     pub partition: bool,
@@ -48,7 +59,7 @@ impl ScheduleSpec {
     }
 
     pub fn validate(&self) -> Result<(), String> {
-        if self.n_l == 0 || self.d_l == 0 || self.n_mu == 0 {
+        if self.n_l == 0 || self.d_l == 0 || self.n_mu == 0 || self.tp == 0 {
             return Err("zero dimension".into());
         }
         if self.d_l % self.n_l != 0 {
@@ -83,6 +94,9 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
                 stage_ops.push(Op::Fwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
                     stage_ops.push(Op::SendAct { layer: l, mb });
                 }
@@ -98,6 +112,9 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
                 stage_ops.push(Op::Bwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: true });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
@@ -128,6 +145,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         n_mu: spec.n_mu,
         assignment,
         ops,
+        tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
     }
@@ -148,6 +166,9 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         }
         for mb in 0..spec.n_mu {
             stage_ops.push(Op::Fwd { layer: l, mb });
+            if spec.tp > 1 {
+                stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+            }
         }
     }
     for l in (0..spec.d_l).rev() {
@@ -156,6 +177,9 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         }
         for mb in 0..spec.n_mu {
             stage_ops.push(Op::Bwd { layer: l, mb });
+            if spec.tp > 1 {
+                stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: true });
+            }
         }
         // Gradient for layer l is complete here — the reduction spreads
         // over the whole backward pass (Figure 1 bottom).
@@ -176,6 +200,7 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         n_mu: spec.n_mu,
         assignment: LayerAssignment::Contiguous,
         ops,
+        tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
     }
@@ -201,6 +226,12 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
                 stage_ops.push(Op::Fwd { layer: l, mb });
+                if spec.tp > 1 {
+                    // The C.4.3 amortisation claim in op form: the tp
+                    // all-reduce rides the same per-layer cadence as the
+                    // modular pipeline's boundary transfer.
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+                }
                 if l + 1 < spec.d_l {
                     stage_ops.push(Op::SendAct { layer: l, mb });
                 }
@@ -215,6 +246,9 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
                 stage_ops.push(Op::Bwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: true });
+                }
                 if l > 0 {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
@@ -237,6 +271,7 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
         n_mu: spec.n_mu,
         assignment,
         ops,
+        tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
     }
@@ -265,6 +300,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
                 stage_ops.push(Op::Fwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::SendAct { layer: l, mb });
                 }
@@ -279,6 +317,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
                 stage_ops.push(Op::Bwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: true });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
@@ -316,6 +357,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
         n_mu: spec.n_mu,
         assignment,
         ops,
+        tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
     }
@@ -397,6 +439,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
                 stage_ops.push(Op::Fwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::SendAct { layer: l, mb });
                 }
@@ -412,6 +457,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
                 stage_ops.push(Op::Bwd { layer: l, mb });
+                if spec.tp > 1 {
+                    stage_ops.push(Op::TensorAllReduce { layer: l, mb, bwd: true });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
@@ -460,6 +508,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         n_mu: spec.n_mu,
         assignment,
         ops,
+        tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
     }
@@ -470,7 +519,7 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true }
+        ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true }
     }
 
     fn count_fwd(s: &Schedule) -> usize {
@@ -640,6 +689,69 @@ mod tests {
     fn starved_pipeline_rejected() {
         let sp = spec(8, 4, 2, false);
         modular_pipeline(&sp);
+    }
+
+    fn count_tar(s: &Schedule, want_bwd: bool) -> usize {
+        s.count(|o| matches!(o, Op::TensorAllReduce { bwd, .. } if *bwd == want_bwd))
+    }
+
+    #[test]
+    fn tp_specs_emit_one_tensor_all_reduce_per_layer_pass() {
+        // C.4.3: one amortised op per (layer, micro-batch) phase — in
+        // every policy.
+        let mut sp = spec(8, 4, 8, false);
+        sp.tp = 2;
+        for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+            assert_eq!(count_tar(&s, false), 8 * 8, "{} fwd", s.name);
+            assert_eq!(count_tar(&s, true), 8 * 8, "{} bwd", s.name);
+            assert_eq!(s.tp, 2, "{}", s.name);
+        }
+        assert_eq!(count_tar(&interleaved_1f1b(&sp, 2), false), 8 * 8);
+        let mut single = spec(8, 1, 8, false);
+        single.tp = 4;
+        for s in [standard_ga(&single), layered_ga(&single)] {
+            assert_eq!(count_tar(&s, false) + count_tar(&s, true), 2 * 8 * 8, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn non_tp_specs_emit_no_tensor_all_reduce() {
+        let sp = spec(8, 4, 8, true);
+        for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+            assert_eq!(count_tar(&s, false) + count_tar(&s, true), 0, "{}", s.name);
+            assert_eq!(s.tp, 1, "{}", s.name);
+        }
+    }
+
+    #[test]
+    fn tensor_all_reduce_sits_between_compute_and_send() {
+        // The reduced tensor is what goes on the wire: within a stage's
+        // list, tf(l, mb) follows F(l, mb) and precedes sa(l, mb); the
+        // backward op likewise precedes sg(l, mb).
+        let mut sp = spec(8, 4, 8, false);
+        sp.tp = 2;
+        let s = modular_pipeline(&sp);
+        for (stage, ops) in s.ops.iter().enumerate() {
+            for &l in &s.assignment.layers_of(stage, 8, 4) {
+                for mb in 0..8 {
+                    let pos = |op: Op| ops.iter().position(|o| *o == op);
+                    let f = pos(Op::Fwd { layer: l, mb }).unwrap();
+                    let tf = pos(Op::TensorAllReduce { layer: l, mb, bwd: false }).unwrap();
+                    assert!(f < tf, "stage {stage} F{l}.{mb}");
+                    if l + 1 < 8 {
+                        let sa = pos(Op::SendAct { layer: l, mb }).unwrap();
+                        assert!(tf < sa, "stage {stage} sa{l}.{mb}");
+                    }
+                    let b = pos(Op::Bwd { layer: l, mb }).unwrap();
+                    let tb = pos(Op::TensorAllReduce { layer: l, mb, bwd: true }).unwrap();
+                    assert!(b < tb, "stage {stage} B{l}.{mb}");
+                    if l > 0 {
+                        let sg = pos(Op::SendGrad { layer: l, mb }).unwrap();
+                        assert!(tb < sg, "stage {stage} sg{l}.{mb}");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

@@ -52,9 +52,15 @@ pub enum Op {
 }
 
 impl Op {
-    /// True for ops that occupy the compute stream.
+    /// True for ops that occupy the compute stream. `TensorAllReduce` is
+    /// compute-side: the Megatron-style all-reduce serialises with the
+    /// layer math (C.4.3, "never overlapped"), and it must run on the
+    /// stage owning the layer.
     pub fn is_compute(&self) -> bool {
-        matches!(self, Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. })
+        matches!(
+            self,
+            Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. } | Op::TensorAllReduce { .. }
+        )
     }
 
     /// True for ops that occupy a network/transfer stream.
@@ -154,6 +160,10 @@ pub struct Schedule {
     pub assignment: LayerAssignment,
     /// Ordered op list per stage.
     pub ops: Vec<Vec<Op>>,
+    /// Tensor-parallel degree the schedule was generated for: every
+    /// compute stage is replicated over `tp` ranks, and `tp > 1`
+    /// schedules carry the per-layer `TensorAllReduce` ops (C.4.3).
+    pub tp: usize,
     /// Whether the training state is partitioned (RestoreParams ops are
     /// all-gathers over the data-parallel group).
     pub partitioned: bool,
@@ -242,6 +252,8 @@ mod tests {
         assert!(Op::SendAct { layer: 0, mb: 0 }.is_transfer());
         assert!(Op::ReduceGrad { layer: 0 }.is_transfer());
         assert!(Op::RestoreParams { layer: 0 }.is_transfer());
+        // Serialised with the layer math (C.4.3) — compute-side.
+        assert!(Op::TensorAllReduce { layer: 0, mb: 0, bwd: true }.is_compute());
     }
 
     #[test]

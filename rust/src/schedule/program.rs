@@ -21,6 +21,11 @@
 //!   `Bwd(l, ·)`;
 //! * **optim-after-reduce** — `OptimStep(l)` depends on the stage's
 //!   `ReduceGrad(l)` when present, else on every local `Bwd(l, ·)`;
+//! * **reduce-before-send** — a `TensorAllReduce(l, mb)` depends on the
+//!   compute op of its phase (`Fwd`/`Bwd`), and *replaces* that op as
+//!   the producer of the phase's tensor: the matching `SendAct`/
+//!   `SendGrad` and the next local compute consume the reduced tensor,
+//!   so they wait for the all-reduce, not just the raw compute;
 //! * **store-after-optim** — `OffloadStore(l)` depends on the stage's
 //!   `OptimStep(l)` (the streamed checkpoint must hold the *post-step*
 //!   state), falling back to the reduction / backward ops for hand-built
@@ -108,6 +113,9 @@ pub struct ScheduleProgram {
     pub d_l: usize,
     pub n_mu: usize,
     pub assignment: LayerAssignment,
+    /// Tensor-parallel degree the source schedule was generated for
+    /// (1 = no tensor parallelism; > 1 implies `TensorAllReduce` ops).
+    pub tp: usize,
     pub partitioned: bool,
     pub offloaded: bool,
     /// Flat arena, stage-major, each stage's ops in source order.
@@ -288,6 +296,11 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
     let mut bwd_ids: HashMap<(usize, usize), Vec<u32>> = HashMap::new();
     let mut reduce_id: HashMap<(usize, usize), u32> = HashMap::new();
     let mut optim_id: HashMap<(usize, usize), u32> = HashMap::new();
+    // Tensor-parallel all-reduces per (stage, layer, mb): the fwd one
+    // supersedes the Fwd as the activation producer, the bwd one the Bwd
+    // as the input-gradient producer (reduce-before-send).
+    let mut tar_fwd: HashMap<(usize, usize, usize), u32> = HashMap::new();
+    let mut tar_bwd: HashMap<(usize, usize, usize), u32> = HashMap::new();
 
     let mut fwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
     let mut bwd_count = vec![vec![0usize; s.n_mu]; s.d_l];
@@ -339,6 +352,14 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
             }
             Op::OptimStep { layer: l } => {
                 optim_id.entry((stage, l)).or_insert(id);
+            }
+            Op::TensorAllReduce { layer: l, mb, bwd } => {
+                if l >= s.d_l || mb >= s.n_mu {
+                    errors.push(ScheduleError::WrongStage { stage, op: node.op.to_string() });
+                    continue;
+                }
+                let slot = if bwd { &mut tar_bwd } else { &mut tar_fwd };
+                slot.entry((stage, l, mb)).or_insert(id);
             }
             _ => {}
         }
@@ -394,6 +415,17 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
     // ---- pass 2: dependency edges --------------------------------------
     // (pred, succ) pairs; duplicates are harmless (pred counts and succ
     // lists stay consistent) but we avoid emitting them.
+    //
+    // Effective producers: when a tensor-parallel all-reduce follows the
+    // compute op of a phase, *it* is what makes the tensor usable —
+    // consumers (sends, the next local compute) wait for the reduced
+    // tensor, not the raw partial one.
+    let eff_act = |stage: usize, l: usize, mb: usize| -> Option<u32> {
+        tar_fwd.get(&(stage, l, mb)).or_else(|| act_producer.get(&(stage, l, mb))).copied()
+    };
+    let eff_grad = |stage: usize, l: usize, mb: usize| -> Option<u32> {
+        tar_bwd.get(&(stage, l, mb)).or_else(|| grad_producer.get(&(stage, l, mb))).copied()
+    };
     let mut edges: Vec<(u32, u32)> = Vec::with_capacity(total * 2);
     for stage in 0..s.n_stages {
         // Latest preceding RestoreParams per layer, positional.
@@ -413,8 +445,8 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                 }
                 Op::Fwd { layer, mb } => {
                     if layer > 0 {
-                        match act_producer.get(&(stage, layer - 1, mb)) {
-                            Some(&p) => edges.push((p, id)),
+                        match eff_act(stage, layer - 1, mb) {
+                            Some(p) => edges.push((p, id)),
                             None => missing(format!("activation of layer {} mb {}", layer - 1, mb)),
                         }
                     }
@@ -423,13 +455,16 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                     }
                 }
                 Op::Bwd { layer, mb } => {
+                    // The checkpoint is the *input* the local Fwd stored —
+                    // available at the Fwd itself, untouched by the fwd
+                    // all-reduce (which concerns the layer's output).
                     match act_producer.get(&(stage, layer, mb)) {
                         Some(&p) => edges.push((p, id)),
                         None => missing(format!("checkpoint of layer {layer} mb {mb}")),
                     }
                     if layer + 1 < s.d_l {
-                        match grad_producer.get(&(stage, layer + 1, mb)) {
-                            Some(&p) => edges.push((p, id)),
+                        match eff_grad(stage, layer + 1, mb) {
+                            Some(p) => edges.push((p, id)),
                             None => missing(format!("gradient of layer {} mb {}", layer + 1, mb)),
                         }
                     }
@@ -437,12 +472,12 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                         edges.push((r, id));
                     }
                 }
-                Op::SendAct { layer, mb } => match act_producer.get(&(stage, layer, mb)) {
-                    Some(&p) => edges.push((p, id)),
+                Op::SendAct { layer, mb } => match eff_act(stage, layer, mb) {
+                    Some(p) => edges.push((p, id)),
                     None => missing(format!("activation of layer {layer} mb {mb}")),
                 },
-                Op::SendGrad { layer, mb } => match grad_producer.get(&(stage, layer, mb)) {
-                    Some(&p) => edges.push((p, id)),
+                Op::SendGrad { layer, mb } => match eff_grad(stage, layer, mb) {
+                    Some(p) => edges.push((p, id)),
                     None => missing(format!("gradient of layer {layer} mb {mb}")),
                 },
                 Op::RecvAct { layer, mb } => {
@@ -486,7 +521,24 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                         missing(format!("optimizer step of layer {layer}"));
                     }
                 }
-                Op::TensorAllReduce { .. } => {}
+                Op::TensorAllReduce { layer, mb, bwd } => {
+                    // The all-reduce consumes the tensor its phase just
+                    // produced: the layer's output activation (fwd) or
+                    // input-gradient (bwd). Consumers were rewired onto
+                    // this op through eff_act/eff_grad above.
+                    let src = if bwd {
+                        grad_producer.get(&(stage, layer, mb))
+                    } else {
+                        act_producer.get(&(stage, layer, mb))
+                    };
+                    match src {
+                        Some(&p) => edges.push((p, id)),
+                        None => missing(format!(
+                            "{} of layer {layer} mb {mb}",
+                            if bwd { "gradient" } else { "activation" }
+                        )),
+                    }
+                }
             }
         }
     }
@@ -526,6 +578,7 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
         d_l: s.d_l,
         n_mu: s.n_mu,
         assignment: s.assignment,
+        tp: s.tp,
         partitioned: s.partitioned,
         offloaded: s.offloaded,
         ops,
@@ -566,7 +619,7 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true }
+        ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true }
     }
 
     #[test]
@@ -666,6 +719,7 @@ mod tests {
             n_mu: 1,
             assignment: LayerAssignment::Contiguous,
             ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
+            tp: 1,
             partitioned: false,
             offloaded: false,
         };
@@ -698,6 +752,7 @@ mod tests {
                     Op::SendGrad { layer: 1, mb: 0 },
                 ],
             ],
+            tp: 1,
             partitioned: false,
             offloaded: false,
         };
@@ -726,6 +781,47 @@ mod tests {
         // executability check.
         p.check_inorder_executable().unwrap();
         assert!(p.offloaded);
+    }
+
+    #[test]
+    fn tensor_all_reduce_is_wired_reduce_before_send() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.tp = 2;
+        let p = lower(&modular_pipeline(&sp)).expect("tp schedules lower");
+        assert_eq!(p.tp, 2);
+        // tf(2, 3): after F2.3, before sa2.3 — and the downstream stage's
+        // recv chain is unchanged.
+        let fwd = p.find(|o| *o == Op::Fwd { layer: 2, mb: 3 }).unwrap();
+        let tar = p.find(|o| *o == Op::TensorAllReduce { layer: 2, mb: 3, bwd: false }).unwrap();
+        let send = p.find(|o| *o == Op::SendAct { layer: 2, mb: 3 }).unwrap();
+        assert!(p.preds_of(tar).contains(&fwd), "tar depends on its Fwd");
+        assert!(p.preds_of(send).contains(&tar), "send waits for the reduced tensor");
+        assert!(!p.preds_of(send).contains(&fwd), "send is rewired off the raw Fwd");
+        // Backward: tb(2, 3) between B2.3 and sg2.3.
+        let bwd = p.find(|o| *o == Op::Bwd { layer: 2, mb: 3 }).unwrap();
+        let tarb = p.find(|o| *o == Op::TensorAllReduce { layer: 2, mb: 3, bwd: true }).unwrap();
+        let sendg = p.find(|o| *o == Op::SendGrad { layer: 2, mb: 3 }).unwrap();
+        assert!(p.preds_of(tarb).contains(&bwd));
+        assert!(p.preds_of(sendg).contains(&tarb));
+        // The whole program still executes on synchronous workers.
+        p.check_inorder_executable().unwrap();
+    }
+
+    #[test]
+    fn local_consumers_wait_for_the_fwd_all_reduce() {
+        // Single stage: layer 1's Fwd consumes layer 0's *reduced*
+        // output, and the bwd chain consumes layer 1's reduced input-
+        // gradient.
+        let mut sp = spec(2, 1, 2, false);
+        sp.tp = 2;
+        let p = lower(&standard_ga(&sp)).unwrap();
+        let tar0 = p.find(|o| *o == Op::TensorAllReduce { layer: 0, mb: 0, bwd: false }).unwrap();
+        let fwd1 = p.find(|o| *o == Op::Fwd { layer: 1, mb: 0 }).unwrap();
+        assert!(p.preds_of(fwd1).contains(&tar0));
+        let tarb1 = p.find(|o| *o == Op::TensorAllReduce { layer: 1, mb: 0, bwd: true }).unwrap();
+        let bwd0 = p.find(|o| *o == Op::Bwd { layer: 0, mb: 0 }).unwrap();
+        assert!(p.preds_of(bwd0).contains(&tarb1));
+        p.check_inorder_executable().unwrap();
     }
 
     #[test]

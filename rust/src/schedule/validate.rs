@@ -52,6 +52,7 @@ mod tests {
             d_l: 4,
             n_l: 2,
             n_mu: 2,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -63,15 +64,24 @@ mod tests {
         for (d_l, n_l, n_mu) in [(8, 4, 8), (16, 4, 6), (12, 3, 3), (8, 1, 4), (160, 5, 5)] {
             for partition in [false, true] {
                 for offload in [false, true] {
-                    let sp =
-                        ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel: true };
-                    if n_l == 1 {
-                        validate(&layered_ga(&sp)).expect("layered");
-                    } else {
-                        validate(&modular_pipeline(&sp)).expect("modular");
-                        validate(&one_f_one_b(&sp)).expect("1f1b");
+                    for tp in [1, 2] {
+                        let sp = ScheduleSpec {
+                            d_l,
+                            n_l,
+                            n_mu,
+                            tp,
+                            partition,
+                            offload,
+                            data_parallel: true,
+                        };
+                        if n_l == 1 {
+                            validate(&layered_ga(&sp)).expect("layered");
+                        } else {
+                            validate(&modular_pipeline(&sp)).expect("modular");
+                            validate(&one_f_one_b(&sp)).expect("1f1b");
+                        }
+                        validate(&standard_ga(&sp)).expect("standard");
                     }
-                    validate(&standard_ga(&sp)).expect("standard");
                 }
             }
         }
@@ -83,10 +93,19 @@ mod tests {
         {
             for partition in [false, true] {
                 for offload in [false, true] {
-                    let sp =
-                        ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel: true };
-                    validate(&interleaved_1f1b(&sp, chunks))
-                        .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
+                    for tp in [1, 2] {
+                        let sp = ScheduleSpec {
+                            d_l,
+                            n_l,
+                            n_mu,
+                            tp,
+                            partition,
+                            offload,
+                            data_parallel: true,
+                        };
+                        validate(&interleaved_1f1b(&sp, chunks))
+                            .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
+                    }
                 }
             }
         }
@@ -134,6 +153,7 @@ mod tests {
             n_mu: 1,
             assignment: LayerAssignment::Contiguous,
             ops: vec![vec![Op::Bwd { layer: 0, mb: 0 }, Op::Fwd { layer: 0, mb: 0 }]],
+            tp: 1,
             partitioned: false,
             offloaded: false,
         };

@@ -24,10 +24,58 @@ pub struct CostTable {
     pub restore_params: f64,
     pub offload_store: f64,
     pub optim_step: f64,
+    /// One forward-phase `TensorAllReduce`: the 2 amortised C.4.3
+    /// all-reduces of a layer's forward pass for one micro-batch.
+    pub tp_all_reduce_fwd: f64,
+    /// One backward-phase `TensorAllReduce`: the 4 amortised all-reduces
+    /// (backward + recompute) of a layer for one micro-batch.
+    pub tp_all_reduce_bwd: f64,
     /// Checkpoint bytes stored by one Fwd (freed by the matching Bwd).
     pub checkpoint_bytes: f64,
     /// Live working-set bytes while a compute op runs.
     pub live_activation_bytes: f64,
+    /// Per-op wire payloads (bytes per rank) — the volume side of the
+    /// durations above, for traffic accounting and the comparison
+    /// tables.
+    pub wire: WireBytes,
+}
+
+/// Wire bytes each transfer-like op puts on its link, per rank. Receives
+/// are completion points (the sender is charged), so they report 0.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WireBytes {
+    pub send_act: f64,
+    pub send_grad: f64,
+    pub reduce_grad: f64,
+    pub restore_params: f64,
+    pub offload_store: f64,
+    pub tp_all_reduce_fwd: f64,
+    pub tp_all_reduce_bwd: f64,
+}
+
+impl WireBytes {
+    /// Wire bytes moved by one op.
+    pub fn of(&self, op: &Op) -> f64 {
+        match op {
+            Op::SendAct { .. } => self.send_act,
+            Op::SendGrad { .. } => self.send_grad,
+            Op::ReduceGrad { .. } => self.reduce_grad,
+            Op::RestoreParams { .. } => self.restore_params,
+            Op::OffloadStore { .. } => self.offload_store,
+            Op::TensorAllReduce { bwd, .. } => {
+                if *bwd {
+                    self.tp_all_reduce_bwd
+                } else {
+                    self.tp_all_reduce_fwd
+                }
+            }
+            Op::Fwd { .. }
+            | Op::Bwd { .. }
+            | Op::OptimStep { .. }
+            | Op::RecvAct { .. }
+            | Op::RecvGrad { .. } => 0.0,
+        }
+    }
 }
 
 impl CostTable {
@@ -71,11 +119,24 @@ impl CostTable {
         // group (partition), or a CPU->GPU fetch (offload), or both —
         // the slower path dominates when both apply.
         let restore_bytes = 2.0 * p_l / n_a;
-        let restore_part = if cfg.partition { restore_bytes * ring / inter_bw } else { 0.0 };
-        let restore_off = if cfg.offload { restore_bytes / cpu_bw } else { 0.0 };
-        let restore_params = restore_part.max(restore_off);
+        let restore_part_bytes = if cfg.partition { restore_bytes * ring } else { 0.0 };
+        let restore_off_bytes = if cfg.offload { restore_bytes } else { 0.0 };
+        let restore_params = (restore_part_bytes / inter_bw).max(restore_off_bytes / cpu_bw);
 
-        let offload_store = if cfg.offload { restore_bytes / cpu_bw } else { 0.0 };
+        let store_bytes = if cfg.offload { restore_bytes } else { 0.0 };
+        let offload_store = store_bytes / cpu_bw;
+
+        // Tensor-parallel all-reduces (C.4.3): six per layer per
+        // micro-batch — 2 forward, 4 backward (recompute included) —
+        // amortised into one op per phase. The reduced tensor is the
+        // full fp16 activation (b_μ · d_s · d_m); each ring all-reduce
+        // moves 2·(n_a−1)/n_a of it per rank, over the tensor-parallel
+        // link (NVLink while the group fits in a node).
+        let tp_ring = (n_a - 1.0).max(0.0) / n_a.max(1.0);
+        let tp_bw = cluster.tensor_parallel_link(cfg.n_a).bandwidth();
+        let tp_ar_bytes = 2.0 * b_mu * d_s * d_m * 2.0 * tp_ring;
+        let tp_all_reduce_fwd = 2.0 * tp_ar_bytes / tp_bw;
+        let tp_all_reduce_bwd = 4.0 * tp_ar_bytes / tp_bw;
 
         // Optimizer step: fp32 state read-modify-write at HBM bandwidth,
         // negligible next to the layer compute but not zero.
@@ -83,6 +144,19 @@ impl CostTable {
 
         let checkpoint_bytes = 2.0 * b_mu * d_s * d_m / n_a;
         let live_activation_bytes = b_mu * d_s * shape.m0_bytes_per_token() / n_a;
+
+        let wire = WireBytes {
+            send_act: act_bytes,
+            send_grad: act_bytes,
+            reduce_grad: if n_b > 1.0 || cfg.partition { reduce_bytes } else { 0.0 },
+            // Both restore paths move bytes when both apply (the duration
+            // takes the max because the links run in parallel; the volume
+            // is the sum).
+            restore_params: restore_part_bytes + restore_off_bytes,
+            offload_store: store_bytes,
+            tp_all_reduce_fwd: 2.0 * tp_ar_bytes,
+            tp_all_reduce_bwd: 4.0 * tp_ar_bytes,
+        };
 
         CostTable {
             fwd,
@@ -93,8 +167,11 @@ impl CostTable {
             restore_params,
             offload_store,
             optim_step,
+            tp_all_reduce_fwd,
+            tp_all_reduce_bwd,
             checkpoint_bytes,
             live_activation_bytes,
+            wire,
         }
     }
 
@@ -117,8 +194,21 @@ impl CostTable {
             Op::RestoreParams { .. } => self.restore_params,
             Op::OffloadStore { .. } => self.offload_store,
             Op::OptimStep { .. } => self.optim_step,
-            Op::TensorAllReduce { .. } => 0.0,
+            // The amortised per-layer tp wire time (C.4.3) — 0 only when
+            // the config has no tensor parallelism (n_a = 1).
+            Op::TensorAllReduce { bwd, .. } => {
+                if *bwd {
+                    self.tp_all_reduce_bwd
+                } else {
+                    self.tp_all_reduce_fwd
+                }
+            }
         }
+    }
+
+    /// Wire bytes an op moves (per rank) — see [`WireBytes`].
+    pub fn wire_bytes(&self, op: &Op) -> f64 {
+        self.wire.of(op)
     }
 }
 
@@ -168,6 +258,41 @@ mod tests {
         let t4 = CostTable::new(&shape, &cfg, &cluster);
         assert!((t1.fwd / t4.fwd - 4.0).abs() < 1e-9);
         assert!((t1.send_act / t4.send_act - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tensor_all_reduce_charges_the_amortised_c43_time() {
+        let (shape, mut cfg, cluster) = setup();
+        let t1 = CostTable::new(&shape, &cfg, &cluster);
+        // No tensor parallelism: the op is free and moves no bytes.
+        assert_eq!(t1.tp_all_reduce_fwd, 0.0);
+        assert_eq!(t1.tp_all_reduce_bwd, 0.0);
+        assert_eq!(t1.wire.tp_all_reduce_fwd, 0.0);
+
+        cfg.n_a = 4;
+        let t4 = CostTable::new(&shape, &cfg, &cluster);
+        assert!(t4.tp_all_reduce_fwd > 0.0);
+        // 4 backward all-reduces (bwd + recompute) vs 2 forward ones.
+        assert!((t4.tp_all_reduce_bwd / t4.tp_all_reduce_fwd - 2.0).abs() < 1e-12);
+        let fwd_op = Op::TensorAllReduce { layer: 0, mb: 0, bwd: false };
+        let bwd_op = Op::TensorAllReduce { layer: 0, mb: 0, bwd: true };
+        assert_eq!(t4.duration(&fwd_op), t4.tp_all_reduce_fwd);
+        assert_eq!(t4.duration(&bwd_op), t4.tp_all_reduce_bwd);
+        assert!(t4.wire_bytes(&bwd_op) > t4.wire_bytes(&fwd_op));
+
+        // Consistency with the closed form (eq. 12): the six all-reduces
+        // of one layer pass cost ν_net/ν_a of the layer's fwd+bwd
+        // compute, up to the linear (bias/layernorm) parameter terms the
+        // intensity formula drops.
+        use crate::costmodel::tensor_parallel_intensity;
+        let s = tensor_parallel_intensity(&shape, &cfg);
+        let nu_net = cluster.tensor_parallel_link(cfg.n_a).intensity_threshold(&cluster.gpu);
+        let measured = (t4.tp_all_reduce_fwd + t4.tp_all_reduce_bwd) / (t4.fwd + t4.bwd);
+        let closed = s.overhead(nu_net);
+        assert!(
+            (measured / closed - 1.0).abs() < 0.01,
+            "tp overhead {measured:.5} vs closed form {closed:.5}"
+        );
     }
 
     #[test]

@@ -440,6 +440,7 @@ mod tests {
             d_l: 8,
             n_l: 1,
             n_mu: 4,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -465,6 +466,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -485,6 +487,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -507,6 +510,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -527,6 +531,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: true,
             offload: false,
             data_parallel: true,
@@ -553,6 +558,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: true,
@@ -580,6 +586,7 @@ mod tests {
             d_l,
             n_l,
             n_mu,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -607,6 +614,7 @@ mod tests {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -621,11 +629,57 @@ mod tests {
     }
 
     #[test]
+    fn tp_programs_charge_the_amortised_all_reduce_time() {
+        // Acceptance bar for the C.4.3 gap: a tp > 1 plan's
+        // TensorAllReduce ops must cost real simulated time, and exactly
+        // the cost model's amortised per-layer wire time — the compute
+        // stream of each stage grows by (TAR ops per stage) × duration.
+        let shape = XModel::new(32).shape();
+        let cfg = TrainConfig {
+            strategy: Strategy::Baseline,
+            n_b: 1,
+            n_l: 4,
+            n_a: 2,
+            n_mu: 8,
+            b_mu: 1.0,
+            offload: false,
+            partition: false,
+        };
+        let c2 = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
+        assert!(c2.tp_all_reduce_fwd > 0.0 && c2.tp_all_reduce_bwd > 0.0);
+        let mut sp = ScheduleSpec {
+            d_l: 16,
+            n_l: 4,
+            n_mu: 8,
+            tp: 2,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
+        let tp_run = simulate(&modular_pipeline(&sp), &c2);
+        sp.tp = 1;
+        let base = simulate(&modular_pipeline(&sp), &c2);
+        assert!(tp_run.makespan > base.makespan, "tp must not simulate for free");
+        // Modular, 16 layers over 4 stages, 8 micro-batches: 4·8 TAR ops
+        // per phase per stage, serialised on the compute stream.
+        let per_stage = 4.0 * 8.0 * (c2.tp_all_reduce_fwd + c2.tp_all_reduce_bwd);
+        for s in 0..4 {
+            let grew = tp_run.stream_busy(s, Stream::Compute)
+                - base.stream_busy(s, Stream::Compute);
+            assert!(
+                (grew - per_stage).abs() < 1e-9 * per_stage,
+                "stage {s}: compute busy grew {grew:.3e}, want {per_stage:.3e}"
+            );
+        }
+    }
+
+    #[test]
     fn one_f_one_b_uses_less_memory_than_gpipe() {
         let sp = ScheduleSpec {
             d_l: 16,
             n_l: 4,
             n_mu: 16,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,
@@ -650,6 +704,7 @@ mod tests {
             d_l: 16,
             n_l: 1,
             n_mu: 8,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: true,
@@ -676,6 +731,7 @@ mod tests {
             d_l: 8,
             n_l: 4,
             n_mu: 4,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,

@@ -80,6 +80,7 @@ mod tests {
             d_l: 8,
             n_l: 4,
             n_mu: 6,
+            tp: 1,
             partition: false,
             offload: false,
             data_parallel: false,

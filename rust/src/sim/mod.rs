@@ -12,7 +12,7 @@ pub mod cost;
 pub mod engine;
 pub mod gantt;
 
-pub use cost::{CostTable, Stream};
+pub use cost::{CostTable, Stream, WireBytes};
 pub use engine::{
     simulate, simulate_program, simulate_program_into, simulate_program_opts, SimOptions,
     SimResult, SimScratch, TimedOp,

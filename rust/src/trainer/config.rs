@@ -39,6 +39,11 @@ pub struct TrainerConfig {
     pub n_l: usize,
     /// Micro-batches per step per data-parallel instance.
     pub n_mu: usize,
+    /// Tensor-parallel degree (n_a). Each pipeline stage is replicated
+    /// over `tp` ranks executing the per-layer `TensorAllReduce`
+    /// collectives of C.4.3 over the [`crate::collective::CommWorld`]
+    /// tp group; 1 disables tensor parallelism.
+    pub tp: usize,
     pub policy: Policy,
     /// ZeRO-3-style state partition over the data-parallel group.
     pub partition: bool,
@@ -68,6 +73,7 @@ impl TrainerConfig {
             n_b: 1,
             n_l: 1,
             n_mu: 1,
+            tp: 1,
             policy: Policy::Improved,
             partition: false,
             offload: false,
@@ -85,6 +91,7 @@ impl TrainerConfig {
             d_l,
             n_l: self.n_l,
             n_mu: self.n_mu,
+            tp: self.tp,
             partition: self.partition,
             offload: self.offload,
             data_parallel: self.n_b > 1,
@@ -114,6 +121,26 @@ mod tests {
             s.count(|o| matches!(o, crate::schedule::Op::OffloadStore { .. })),
             2,
             "one store per layer"
+        );
+    }
+
+    #[test]
+    fn tp_flag_reaches_the_schedule() {
+        let mut c = TrainerConfig::quick("tiny");
+        c.n_mu = 2;
+        assert_eq!(c.build_schedule(2).tp, 1);
+        assert_eq!(
+            c.build_schedule(2)
+                .count(|o| matches!(o, crate::schedule::Op::TensorAllReduce { .. })),
+            0
+        );
+        c.tp = 2;
+        let s = c.build_schedule(2);
+        assert_eq!(s.tp, 2);
+        // One amortised all-reduce per (layer, micro-batch) phase.
+        assert_eq!(
+            s.count(|o| matches!(o, crate::schedule::Op::TensorAllReduce { .. })),
+            2 * 2 * 2,
         );
     }
 

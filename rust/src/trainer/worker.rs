@@ -1,23 +1,32 @@
-//! Stage worker: executes its stage's slice of a compiled
-//! [`ScheduleProgram`] against the PJRT engine, the pipeline channels and
-//! the data-parallel collectives. One worker = one (dp_rank, stage) pair
+//! Stage worker: executes its rank's slice of a compiled
+//! [`ScheduleProgram`] against the PJRT engine and its
+//! [`CommWorld`] process groups. One worker = one (dp, stage, tp) rank
 //! = one OS thread.
 //!
 //! The worker runs the program's per-stage op order and checks every
 //! local dependency edge before dispatching an op — the same edges the
 //! validator verified and the simulator timed. Cross-stage edges are
-//! enforced physically by the blocking pipeline channels; that the
+//! enforced physically by the blocking pipeline group; that the
 //! blocking order can complete at all is verified up front by
 //! [`ScheduleProgram::check_inorder_executable`] in
 //! [`super::train`].
+//!
+//! Tensor parallelism executes as *replicated-compute emulation*: every
+//! tp rank runs the full layer math from the same seed, and each
+//! `TensorAllReduce` ring-sums its tensor over the tp group and
+//! post-scales by 1/tp — an exact identity on the replicated values
+//! (bit-exact for tp = 2 on every finite value, subnormals included)
+//! that moves the real 2·(tp−1)/tp per-rank wire traffic the cost model
+//! prices. The collective itself is the deterministic ring, so all tp
+//! ranks stay bit-identical, which is what keeps a tp = 2 run's loss
+//! trajectory equal to the tp = 1 run's.
 
 use std::collections::HashMap;
-use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collective::Comm;
+use crate::collective::{CommWorld, RingGroup};
 use crate::data::Corpus;
 use crate::offload::store::{
     assemble, slot_embed, slot_head, slot_pos, StateRecord, StateStore,
@@ -29,15 +38,14 @@ use crate::schedule::{Op, ScheduleProgram};
 
 use super::params::{init_matrix, LayerLayout};
 
-/// A pipeline message: (consumer layer, micro-batch, payload).
-pub type PipeMsg = (usize, usize, Vec<f32>);
-
 /// Everything a worker thread needs (all Send; the PJRT engine is
 /// created inside the thread).
 pub struct WorkerCtx {
-    pub dp_rank: usize,
-    pub stage: usize,
-    pub n_b: usize,
+    /// This rank's process groups — the only communication handle a
+    /// worker holds: pipeline p2p, dp ring, tp ring and the control
+    /// plane all hang off it.
+    pub world: CommWorld,
+    /// Micro-batches per step per data-parallel instance.
     pub n_mu: usize,
     pub seed: u64,
     pub steps: usize,
@@ -57,16 +65,6 @@ pub struct WorkerCtx {
     pub program: Arc<ScheduleProgram>,
     pub artifacts_root: std::path::PathBuf,
     pub preset: String,
-    /// Forward-activation ring channels.
-    pub act_tx: Sender<PipeMsg>,
-    pub act_rx: Receiver<PipeMsg>,
-    /// Backward-gradient ring channels.
-    pub grad_tx: Sender<PipeMsg>,
-    pub grad_rx: Receiver<PipeMsg>,
-    /// Data-parallel communicator for this stage group (None if n_b = 1).
-    pub comm: Option<Comm>,
-    /// Where the last stage of each dp rank reports (step, loss).
-    pub loss_tx: Sender<(usize, usize, f64)>,
 }
 
 /// Post-run statistics from one worker.
@@ -74,7 +72,15 @@ pub struct WorkerCtx {
 pub struct WorkerStats {
     pub execute_secs: f64,
     pub execute_calls: u64,
+    /// Payload elements sent on the data-parallel ring (gradient
+    /// reductions, parameter all-gathers, epilogue reduces).
     pub collective_elems_sent: u64,
+    /// Payload elements sent on the pipeline rings (activations +
+    /// gradients).
+    pub pipeline_elems_sent: u64,
+    /// Payload elements sent on the tensor-parallel ring
+    /// (`TensorAllReduce` ops).
+    pub tp_elems_sent: u64,
     pub wall_secs: f64,
 }
 
@@ -94,6 +100,57 @@ fn check_payload(
     }
     if len != wlen {
         bail!("bad {kind} payload for ({l},{mb}): {len} elements, want {wlen}");
+    }
+    Ok(())
+}
+
+/// The executable `TensorAllReduce`: the deterministic ring sum, then a
+/// 1/n post-scale. On replicated inputs the roundtrip is the identity —
+/// for n = 2 exactly, on every finite value including subnormals
+/// (x + x = 2x is exact, and halving 2x is an exact power-of-two
+/// downscale back to x; the only exception is overflow at |x| >
+/// f32::MAX/2, far beyond any activation) — while each rank moves the
+/// real 2·(n−1)/n ring traffic. Prescaling instead would round
+/// subnormal inputs and break the tp=2 bit-match. A size-1 group is a
+/// no-op.
+fn tp_all_reduce(group: &mut RingGroup, data: &mut [f32]) {
+    let n = group.n;
+    if n <= 1 {
+        return;
+    }
+    group.all_reduce(data);
+    let inv = 1.0 / n as f32;
+    for v in data.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Run the embedding backward for one micro-batch's (reduced) input
+/// gradient, accumulating into the embedding-table and positional
+/// gradients.
+#[allow(clippy::too_many_arguments)]
+fn embed_backward(
+    engine: &mut Engine,
+    act_shape: &[usize],
+    batch: usize,
+    d_seq: usize,
+    tokens: Vec<i32>,
+    dx: Vec<f32>,
+    d_table: &mut [f32],
+    d_pos: &mut [f32],
+) -> Result<()> {
+    let outs = engine.execute(
+        "embed_bwd",
+        &[
+            HostTensor::f32(act_shape.to_vec(), dx),
+            HostTensor::i32(vec![batch, d_seq], tokens),
+        ],
+    )?;
+    for (d, s) in d_table.iter_mut().zip(outs[0].as_f32()?) {
+        *d += s;
+    }
+    for (d, s) in d_pos.iter_mut().zip(outs[1].as_f32()?) {
+        *d += s;
     }
     Ok(())
 }
@@ -128,9 +185,23 @@ fn store_full_slot(
 pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let t0 = std::time::Instant::now();
     let prog = ctx.program.clone();
-    let owns_first = prog.stage_of(0) == ctx.stage;
+    let rank = ctx.world.rank();
+    let topo = ctx.world.topology();
+    anyhow::ensure!(
+        topo.tp == prog.tp,
+        "topology tp = {} but the schedule was generated for tp = {}",
+        topo.tp,
+        prog.tp
+    );
+    let (dp_rank, stage) = (rank.dp, rank.stage);
+    let n_b = topo.dp;
+    let has_tp = topo.tp > 1;
+    // Replicated state (checkpoints, loss) is written by tp rank 0 only.
+    let tp_writer = rank.tp == 0;
+
+    let owns_first = prog.stage_of(0) == stage;
     let d_l = prog.d_l;
-    let owns_last = prog.stage_of(d_l - 1) == ctx.stage;
+    let owns_last = prog.stage_of(d_l - 1) == stage;
 
     let mut names: Vec<&str> = vec!["layer_fwd", "layer_bwd"];
     if owns_first {
@@ -147,18 +218,18 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
 
     // --- parameter state -------------------------------------------------
     let my_layers: Vec<usize> =
-        (0..d_l).filter(|&l| prog.stage_of(l) == ctx.stage).collect();
+        (0..d_l).filter(|&l| prog.stage_of(l) == stage).collect();
     let mut params: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut grads: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut adam: HashMap<usize, Adam> = HashMap::new();
-    let shard = ShardMap::new(layout.total, ctx.n_b);
+    let shard = ShardMap::new(layout.total, n_b);
     for &l in &my_layers {
-        // Same seed across dp ranks -> replicated initial params.
+        // Same seed across dp and tp ranks -> replicated initial params.
         let mut rng = crate::data::Rng::new(ctx.seed ^ (0x517c_c1b7_2722_0a95 + l as u64));
         params.insert(l, layout.init(&mut rng));
         grads.insert(l, vec![0.0; layout.total]);
-        let n = if ctx.partition && ctx.n_b > 1 {
-            let (a, b) = shard.owned_range(ctx.dp_rank);
+        let n = if ctx.partition && n_b > 1 {
+            let (a, b) = shard.owned_range(dp_rank);
             b - a
         } else {
             layout.total
@@ -205,8 +276,8 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             let slot = assemble(&store.read(ck, l as u64)?, layout.total)
                 .with_context(|| format!("layer {l} checkpoint at step {ck}"))?;
             params.insert(l, slot.params);
-            let a = if ctx.partition && ctx.n_b > 1 {
-                let (lo, hi) = shard.owned_range(ctx.dp_rank);
+            let a = if ctx.partition && n_b > 1 {
+                let (lo, hi) = shard.owned_range(dp_rank);
                 Adam::from_state(
                     AdamConfig::default(),
                     slot.m[lo..hi].to_vec(),
@@ -242,8 +313,20 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     // This stage's slice of the program arena, in dispatch order, plus a
     // per-step completion bitmap for checking local dependency edges.
     let stage_nodes: Vec<(u32, Op)> =
-        prog.stage_ops(ctx.stage).iter().map(|n| (n.id, n.op)).collect();
+        prog.stage_ops(stage).iter().map(|n| (n.id, n.op)).collect();
     let mut op_done: Vec<bool> = vec![false; prog.len()];
+
+    let (seed, n_mu) = (ctx.seed, ctx.n_mu);
+    let tokens_of = move |step: usize, mb: usize| {
+        // Micro-batches are keyed by their *global* index, so the
+        // data a step consumes is invariant to how the batch splits
+        // across data-parallel instances — exactly what lets an
+        // elastic resume at a different n_b (same n_b·n_μ) continue
+        // the same training trajectory. Tensor-parallel ranks replicate
+        // their dp instance's data (tp shards compute, not the batch).
+        let global_mb = (dp_rank * n_mu + mb) as u64;
+        corpus.batch(seed, step as u64, 0, global_mb, batch, m.d_seq)
+    };
 
     // --- step loop ---------------------------------------------------------
     for step in ctx.start_step..ctx.steps {
@@ -255,22 +338,17 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         let mut douts: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // dL/d out(layer, mb)
         let mut goutbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // dL/d in(layer, mb)
         let mut last_out: HashMap<usize, Vec<f32>> = HashMap::new();
+        // Layer 0's input-gradients awaiting their backward
+        // TensorAllReduce (tp > 1 only): the embedding must consume the
+        // *reduced* gradient, so the embed backward runs inside the tb0
+        // op instead of B0.
+        let mut embed_dx: HashMap<usize, Vec<f32>> = HashMap::new();
         let mut loss_sum = 0.0f64;
         // Per-layer HostTensor views of the parameters, reused across
         // micro-batches (§Perf L3: converting 12 tensors per PJRT call
         // dominated tiny-model steps). Invalidated when the parameters
         // change (OptimStep) or are re-gathered (RestoreParams).
         let mut param_cache: HashMap<usize, Vec<HostTensor>> = HashMap::new();
-
-        let tokens_of = |mb: usize| {
-            // Micro-batches are keyed by their *global* index, so the
-            // data a step consumes is invariant to how the batch splits
-            // across data-parallel instances — exactly what lets an
-            // elastic resume at a different n_b (same n_b·n_μ) continue
-            // the same training trajectory.
-            let global_mb = (ctx.dp_rank * ctx.n_mu + mb) as u64;
-            corpus.batch(ctx.seed, step as u64, 0, global_mb, batch, m.d_seq)
-        };
 
         for &(op_id, op) in &stage_nodes {
             // An in-order dispatcher satisfies a local edge iff the
@@ -280,10 +358,10 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             // hand-built programs).
             for &pid in prog.preds_of(op_id) {
                 let pn = &prog.ops[pid as usize];
-                if pn.stage as usize == ctx.stage && !op_done[pid as usize] {
+                if pn.stage as usize == stage && !op_done[pid as usize] {
                     bail!(
                         "stage {} dispatched {} before its dependency {}",
-                        ctx.stage,
+                        stage,
                         op,
                         pn.op
                     );
@@ -291,16 +369,14 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             }
             match op {
                 Op::RestoreParams { layer } => {
-                    if ctx.partition {
-                        if let Some(c) = ctx.comm.as_mut() {
-                            c.all_gather_owned(params.get_mut(&layer).unwrap());
-                            param_cache.remove(&layer);
-                        }
+                    if ctx.partition && n_b > 1 {
+                        ctx.world.dp_group().all_gather_owned(params.get_mut(&layer).unwrap());
+                        param_cache.remove(&layer);
                     }
                 }
                 Op::Fwd { layer, mb } => {
                     let x = if layer == 0 {
-                        let b = tokens_of(mb);
+                        let b = tokens_of(step, mb);
                         let out = engine.execute(
                             "embed_fwd",
                             &[
@@ -325,7 +401,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     ckpt.insert((layer, mb), x);
                     if layer + 1 == d_l {
                         last_out.insert(mb, y);
-                    } else if prog.stage_of(layer + 1) == ctx.stage {
+                    } else if prog.stage_of(layer + 1) == stage {
                         inbox.insert((layer + 1, mb), y);
                     } else {
                         outbox.insert((layer, mb), y);
@@ -335,16 +411,17 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     let y = outbox
                         .remove(&(layer, mb))
                         .with_context(|| format!("missing payload for sa{layer}.{mb}"))?;
-                    ctx.act_tx.send((layer + 1, mb, y)).ok().context("act ring closed")?;
+                    ctx.world.pipeline().send_act(layer + 1, mb, y).context("act ring closed")?;
                 }
                 Op::RecvAct { layer, mb } => {
-                    let (l, m_, y) = ctx.act_rx.recv().context("act ring closed")?;
+                    let (l, m_, y) =
+                        ctx.world.pipeline().recv_act().context("act ring closed")?;
                     check_payload("act", (l, m_, y.len()), (layer, mb, act_elems))?;
                     inbox.insert((layer, mb), y);
                 }
                 Op::Bwd { layer, mb } => {
                     let dy = if layer + 1 == d_l {
-                        let b = tokens_of(mb);
+                        let b = tokens_of(step, mb);
                         let x_out = last_out
                             .remove(&mb)
                             .with_context(|| format!("missing head input for B{layer}.{mb}"))?;
@@ -379,21 +456,24 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     layout.accumulate(grads.get_mut(&layer).unwrap(), &outs[..12]);
                     let dx = outs[12].as_f32()?.to_vec();
                     if layer == 0 {
-                        let b = tokens_of(mb);
-                        let outs = engine.execute(
-                            "embed_bwd",
-                            &[
-                                HostTensor::f32(act_shape.clone(), dx),
-                                HostTensor::i32(vec![batch, m.d_seq], b.tokens),
-                            ],
-                        )?;
-                        for (d, s) in d_table.iter_mut().zip(outs[0].as_f32()?) {
-                            *d += s;
+                        if has_tp {
+                            // Defer: the embedding consumes the *reduced*
+                            // gradient inside the tb0 op.
+                            embed_dx.insert(mb, dx);
+                        } else {
+                            let b = tokens_of(step, mb);
+                            embed_backward(
+                                &mut engine,
+                                &act_shape,
+                                batch,
+                                m.d_seq,
+                                b.tokens,
+                                dx,
+                                &mut d_table,
+                                &mut d_pos,
+                            )?;
                         }
-                        for (d, s) in d_pos.iter_mut().zip(outs[1].as_f32()?) {
-                            *d += s;
-                        }
-                    } else if prog.stage_of(layer - 1) == ctx.stage {
+                    } else if prog.stage_of(layer - 1) == stage {
                         douts.insert((layer - 1, mb), dx);
                     } else {
                         goutbox.insert((layer, mb), dx);
@@ -403,27 +483,76 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     let g = goutbox
                         .remove(&(layer, mb))
                         .with_context(|| format!("missing payload for sg{layer}.{mb}"))?;
-                    ctx.grad_tx.send((layer - 1, mb, g)).ok().context("grad ring closed")?;
+                    ctx.world
+                        .pipeline()
+                        .send_grad(layer - 1, mb, g)
+                        .context("grad ring closed")?;
                 }
                 Op::RecvGrad { layer, mb } => {
-                    let (l, m_, g) = ctx.grad_rx.recv().context("grad ring closed")?;
+                    let (l, m_, g) =
+                        ctx.world.pipeline().recv_grad().context("grad ring closed")?;
                     // The output-gradient has the activation's shape; an
                     // unchecked length here skewed nothing visibly until
                     // layer_bwd rejected the tensor much later.
                     check_payload("grad", (l, m_, g.len()), (layer, mb, act_elems))?;
                     douts.insert((layer, mb), g);
                 }
+                Op::TensorAllReduce { layer, mb, bwd } => {
+                    // Replicated-compute emulation of the sharded layer:
+                    // the phase's tensor — the layer's output activation
+                    // (fwd) or input-gradient (bwd) — is ring-summed
+                    // over the tp group and post-scaled by 1/tp, an
+                    // exact identity on the replicated values that moves
+                    // the real per-rank wire traffic (see module docs).
+                    if !bwd {
+                        let buf = if layer + 1 == d_l {
+                            last_out.get_mut(&mb)
+                        } else if prog.stage_of(layer + 1) == stage {
+                            inbox.get_mut(&(layer + 1, mb))
+                        } else {
+                            outbox.get_mut(&(layer, mb))
+                        };
+                        let buf = buf
+                            .with_context(|| format!("missing activation for tf{layer}.{mb}"))?;
+                        tp_all_reduce(ctx.world.tp_group(), buf);
+                    } else if layer == 0 {
+                        let mut dx = embed_dx
+                            .remove(&mb)
+                            .with_context(|| format!("missing gradient for tb0.{mb}"))?;
+                        tp_all_reduce(ctx.world.tp_group(), &mut dx);
+                        let b = tokens_of(step, mb);
+                        embed_backward(
+                            &mut engine,
+                            &act_shape,
+                            batch,
+                            m.d_seq,
+                            b.tokens,
+                            dx,
+                            &mut d_table,
+                            &mut d_pos,
+                        )?;
+                    } else {
+                        let buf = if prog.stage_of(layer - 1) == stage {
+                            douts.get_mut(&(layer - 1, mb))
+                        } else {
+                            goutbox.get_mut(&(layer, mb))
+                        };
+                        let buf = buf
+                            .with_context(|| format!("missing gradient for tb{layer}.{mb}"))?;
+                        tp_all_reduce(ctx.world.tp_group(), buf);
+                    }
+                }
                 Op::ReduceGrad { layer } => {
                     let g = grads.get_mut(&layer).unwrap();
-                    let scale = 1.0 / (ctx.n_b as f32 * ctx.n_mu as f32);
+                    let scale = 1.0 / (n_b as f32 * n_mu as f32);
                     for v in g.iter_mut() {
                         *v *= scale;
                     }
-                    if let Some(c) = ctx.comm.as_mut() {
+                    if n_b > 1 {
                         if ctx.partition {
-                            c.reduce_scatter(g);
+                            ctx.world.dp_group().reduce_scatter(g);
                         } else {
-                            c.all_reduce(g);
+                            ctx.world.dp_group().all_reduce(g);
                         }
                     }
                 }
@@ -439,14 +568,14 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     // gradient for every (n_b, n_mu) split of the batch,
                     // which is what lets a checkpoint written at one
                     // cluster size resume at another.
-                    if ctx.n_b == 1 && !ctx.partition {
-                        let scale = 1.0 / ctx.n_mu as f32;
+                    if n_b == 1 && !ctx.partition {
+                        let scale = 1.0 / n_mu as f32;
                         for v in g.iter_mut() {
                             *v *= scale;
                         }
                     }
-                    if ctx.partition && ctx.n_b > 1 {
-                        let (lo, hi) = shard.owned_range(ctx.dp_rank);
+                    if ctx.partition && n_b > 1 {
+                        let (lo, hi) = shard.owned_range(dp_rank);
                         a.step(&mut p[lo..hi], &g[lo..hi], lr);
                     } else {
                         a.step(p, g, lr);
@@ -457,16 +586,21 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 Op::OffloadStore { layer } => {
                     // Stream the post-step state (the store-after-optim
                     // edge guarantees the buffers hold updated values).
-                    // With a partition every rank writes its owned shard
-                    // — together a complete cover; replicated state is
-                    // written once, by rank 0.
+                    // With a partition every dp rank writes its owned
+                    // shard — together a complete cover; replicated state
+                    // is written once, by dp rank 0. Tensor-parallel
+                    // replicas hold identical state: tp rank 0 writes.
+                    if !tp_writer {
+                        op_done[op_id as usize] = true;
+                        continue;
+                    }
                     let store = ctx
                         .store
                         .as_deref()
                         .context("offload schedule without a checkpoint store")?;
-                    let global_mbs = (ctx.n_b * ctx.n_mu) as u64;
-                    if ctx.partition && ctx.n_b > 1 {
-                        let (lo, hi) = shard.owned_range(ctx.dp_rank);
+                    let global_mbs = (n_b * n_mu) as u64;
+                    if ctx.partition && n_b > 1 {
+                        let (lo, hi) = shard.owned_range(dp_rank);
                         let (am, av, at) = adam.get(&layer).unwrap().state();
                         store.put(&StateRecord {
                             step: step as u64,
@@ -480,20 +614,10 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                             m: am.to_vec(),
                             v: av.to_vec(),
                         })?;
-                    } else if ctx.dp_rank == 0 {
+                    } else if dp_rank == 0 {
                         let a = &adam[&layer];
                         store_full_slot(store, step, layer, global_mbs, &params[&layer], a)?;
                     }
-                }
-                Op::TensorAllReduce { .. } => {
-                    // Tensor parallelism exists only in the simulator's
-                    // cost model. Silently skipping an op the dependency
-                    // graph tracked is exactly how the OffloadStore gap
-                    // went unnoticed — fail loudly instead.
-                    bail!(
-                        "stage {} cannot execute {op}: tensor parallelism is simulator-only",
-                        ctx.stage
-                    );
                 }
             }
             op_done[op_id as usize] = true;
@@ -501,17 +625,15 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
 
         // Step epilogue: embedding / head parameters (reduced over DP).
         let lr = ctx.lr.lr(step as u64);
-        let scale = 1.0 / (ctx.n_b as f32 * ctx.n_mu as f32);
+        let scale = 1.0 / (n_b as f32 * n_mu as f32);
         if owns_first {
             for g in [&mut d_table, &mut d_pos] {
                 for v in g.iter_mut() {
                     *v *= scale;
                 }
             }
-            if let Some(c) = ctx.comm.as_mut() {
-                c.all_reduce(&mut d_table);
-                c.all_reduce(&mut d_pos);
-            }
+            ctx.world.dp_group().all_reduce(&mut d_table);
+            ctx.world.dp_group().all_reduce(&mut d_pos);
             adam_table.as_mut().unwrap().step(&mut table, &d_table, lr);
             adam_pos.as_mut().unwrap().step(&mut pos, &d_pos, lr);
             d_table.fill(0.0);
@@ -521,19 +643,20 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             for v in d_head.iter_mut() {
                 *v *= scale;
             }
-            if let Some(c) = ctx.comm.as_mut() {
-                c.all_reduce(&mut d_head);
-            }
+            ctx.world.dp_group().all_reduce(&mut d_head);
             adam_head.as_mut().unwrap().step(&mut head, &d_head, lr);
             d_head.fill(0.0);
-            let _ = ctx.loss_tx.send((step, ctx.dp_rank, loss_sum / ctx.n_mu as f64));
+            if tp_writer {
+                ctx.world.control().report_loss(step, dp_rank, loss_sum / n_mu as f64);
+            }
         }
         // Real-time checkpoint epilogue: the replicated non-layer state
         // (embedding / positional / head) streams out once per step from
-        // rank 0 of its owning stage, completing the step's record cover.
-        if ctx.offload && ctx.dp_rank == 0 {
+        // (dp 0, tp 0) of its owning stage, completing the step's record
+        // cover.
+        if ctx.offload && dp_rank == 0 && tp_writer {
             if let Some(store) = ctx.store.as_deref() {
-                let g = (ctx.n_b * ctx.n_mu) as u64;
+                let g = (n_b * n_mu) as u64;
                 if owns_first {
                     let a = adam_table.as_ref().unwrap();
                     store_full_slot(store, step, slot_embed(d_l), g, &table, a)?;
@@ -543,7 +666,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     // complete one, drop everything older. Safe here:
                     // stage 0 reaching step `s` implies every stage of
                     // every rank has finished step `s-2` (the pipeline
-                    // and dp barriers bound the lag to one step), so no
+                    // and step barriers bound the lag to one step), so no
                     // one is still writing the steps being pruned.
                     if step >= 2 {
                         store.prune_steps_before((step - 1) as u64)?;
@@ -555,22 +678,24 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
             }
         }
-        if let Some(c) = ctx.comm.as_mut() {
-            c.barrier();
-        }
+        ctx.world.step_barrier();
     }
 
+    let traffic = ctx.world.traffic();
     Ok(WorkerStats {
         execute_secs: engine.execute_secs,
         execute_calls: engine.execute_calls,
-        collective_elems_sent: ctx.comm.as_ref().map(|c| c.sent_elems).unwrap_or(0),
+        collective_elems_sent: traffic.dp,
+        pipeline_elems_sent: traffic.pipeline,
+        tp_elems_sent: traffic.tp,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
 }
 
 #[cfg(test)]
 mod tests {
-    use super::check_payload;
+    use super::{check_payload, tp_all_reduce};
+    use crate::collective::ring_group;
 
     #[test]
     fn payload_check_accepts_exact_match_only() {
@@ -589,5 +714,41 @@ mod tests {
         let err = check_payload("grad", (1, 0, 10), (1, 0, 20)).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("grad") && msg.contains("10") && msg.contains("20"), "{msg}");
+    }
+
+    #[test]
+    fn tp_all_reduce_is_bitwise_identity_on_replicated_tp2_buffers() {
+        // The loss-match guarantee in miniature: two ranks holding the
+        // same buffer run the sum-and-postscale roundtrip and end
+        // exactly where they started ((x + x) / 2 = x in IEEE 754 for
+        // every finite x — including the subnormals a prescale would
+        // round away).
+        let mut data: Vec<f32> = (0..257).map(|i| (i as f32 - 77.5) * 1.618e-3).collect();
+        data.extend([1e-45f32, -3.0e-39, f32::MIN_POSITIVE, 0.0, -0.0]);
+        let handles: Vec<_> = ring_group(2)
+            .into_iter()
+            .map(|mut g| {
+                let mut d = data.clone();
+                std::thread::spawn(move || {
+                    tp_all_reduce(&mut g, &mut d);
+                    d
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            for (a, b) in out.iter().zip(&data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tp_all_reduce_on_a_single_rank_is_untouched() {
+        let mut g = ring_group(1).remove(0);
+        let mut d = vec![1.25f32, -3.5];
+        tp_all_reduce(&mut g, &mut d);
+        assert_eq!(d, vec![1.25, -3.5]);
+        assert_eq!(g.sent_elems(), 0);
     }
 }

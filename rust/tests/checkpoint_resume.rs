@@ -39,6 +39,7 @@ fn figure2_restore_store_ratio_on_the_offload_path() {
         d_l,
         n_l,
         n_mu,
+        tp: 1,
         partition: false,
         offload: true,
         data_parallel: true,

@@ -1,0 +1,160 @@
+//! Property tests for the generalized collective layer: ring collectives
+//! over the `Transport` trait and the `CommWorld` process-group wiring.
+//!
+//! The properties the trainer's correctness rests on:
+//! * ring all-reduce / all-gather results are **bit-identical across
+//!   ranks** (deterministic chunking) for every group size and for
+//!   uneven chunk splits;
+//! * sums are exact against a serial reference on integer-valued data;
+//! * per-rank traffic matches the 2·(n−1)/n bandwidth-optimal bound the
+//!   paper's C.4.1 accounting assumes (for divisible lengths);
+//! * a `CommWorld` routes each group along exactly one topology axis.
+
+use std::thread;
+
+use lga_mpp::collective::{ring_group, CommWorld, RingGroup, Topology};
+
+/// Deterministic per-rank integer-valued test data: exact under f32
+/// summation for the sizes used here, so cross-rank equality can be
+/// asserted bitwise against a serial reference.
+fn rank_data(rank: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| ((rank * 31 + i * 7) % 113) as f32 - 17.0).collect()
+}
+
+fn run_ring<F>(n: usize, len: usize, f: F) -> Vec<(Vec<f32>, u64)>
+where
+    F: Fn(&mut RingGroup, &mut Vec<f32>) + Send + Sync + Copy + 'static,
+{
+    let handles: Vec<_> = ring_group(n)
+        .into_iter()
+        .map(|mut g| {
+            thread::spawn(move || {
+                let mut d = rank_data(g.rank, len);
+                f(&mut g, &mut d);
+                (d, g.sent_elems())
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn all_reduce_is_bit_identical_across_ranks_for_n_1_through_8() {
+    for n in 1..=8usize {
+        // Lengths exercising even splits, uneven splits and len < n.
+        for len in [1usize, 3, 16, 97, 256] {
+            let results = run_ring(n, len, |g, d| g.all_reduce(d));
+            let want: Vec<f32> = (0..len)
+                .map(|i| (0..n).map(|r| rank_data(r, len)[i]).sum())
+                .collect();
+            for (rank, (res, _)) in results.iter().enumerate() {
+                assert_eq!(res.len(), len);
+                for (a, b) in res.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} len={len} rank={rank}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn all_gather_reconstructs_identically_from_owned_chunks() {
+    for n in 1..=8usize {
+        for len in [1usize, 7, 64, 101] {
+            let results = run_ring(n, len, |g, d| {
+                // Start from a rank-coloured buffer, zero everything but
+                // the owned chunk, then all-gather: every rank must end
+                // with the identical assembly of the owned chunks.
+                let (a, b) = g.owned_range(d.len());
+                let own: Vec<f32> = d[a..b].to_vec();
+                d.fill(0.0);
+                d[a..b].copy_from_slice(&own);
+                g.all_gather_owned(d);
+            });
+            // Reference: rank r's owned chunk of its own colour.
+            let mut want = vec![0.0f32; len];
+            {
+                let groups = ring_group(n);
+                for g in &groups {
+                    let (a, b) = g.owned_range(len);
+                    want[a..b].copy_from_slice(&rank_data(g.rank, len)[a..b]);
+                }
+            }
+            for (rank, (res, _)) in results.iter().enumerate() {
+                for (a, b) in res.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} len={len} rank={rank}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn traffic_matches_the_ring_bound_for_divisible_lengths() {
+    for n in 2..=8usize {
+        let len = n * 40;
+        for (_, sent) in run_ring(n, len, |g, d| g.all_reduce(d)) {
+            // 2·(n−1)/n·len elements per rank.
+            assert_eq!(sent, (2 * (n - 1) * (len / n)) as u64, "n={n}");
+        }
+    }
+}
+
+#[test]
+fn uneven_chunks_cover_every_element_exactly_once() {
+    // reduce-scatter ownership over an uneven split: the owned ranges
+    // partition the buffer, so the scattered chunks reassemble exactly.
+    for n in [3usize, 5, 7] {
+        let len = 2 * n + 3; // never divisible by n
+        let results = run_ring(n, len, |g, d| {
+            g.reduce_scatter(d);
+            let (a, b) = g.owned_range(d.len());
+            let own: Vec<f32> = d[a..b].to_vec();
+            d.fill(0.0);
+            d[a..b].copy_from_slice(&own);
+            g.all_gather_owned(d);
+        });
+        let want: Vec<f32> =
+            (0..len).map(|i| (0..n).map(|r| rank_data(r, len)[i]).sum()).collect();
+        for (res, _) in &results {
+            for (a, b) in res.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "n={n}");
+            }
+        }
+    }
+}
+
+#[test]
+fn comm_world_groups_are_axis_disjoint() {
+    // A 2×2×2 world: each rank all-reduces a marker over its dp group,
+    // then over its tp group. The sums must mix exactly the intended
+    // axis — any cross-talk between the 12 rings would break the value.
+    let topo = Topology::new(2, 2, 2);
+    let (worlds, _loss_rx) = CommWorld::build(topo);
+    let handles: Vec<_> = worlds
+        .into_iter()
+        .map(|mut w| {
+            thread::spawn(move || {
+                let r = w.rank();
+                let marker = (100 * r.stage + 10 * r.dp + r.tp) as f32;
+                let mut dp_buf = vec![marker, 1.0];
+                w.dp_group().all_reduce(&mut dp_buf);
+                let mut tp_buf = vec![marker, 1.0];
+                w.tp_group().all_reduce(&mut tp_buf);
+                w.step_barrier();
+                (r, dp_buf[0], tp_buf[0], w.traffic())
+            })
+        })
+        .collect();
+    for h in handles {
+        let (r, dp_sum, tp_sum, traffic) = h.join().unwrap();
+        // dp axis: sum over dp ∈ {0,1} at fixed (stage, tp).
+        assert_eq!(dp_sum, (2 * (100 * r.stage) + 10 + 2 * r.tp) as f32, "{r:?}");
+        // tp axis: sum over tp ∈ {0,1} at fixed (stage, dp).
+        assert_eq!(tp_sum, (2 * (100 * r.stage + 10 * r.dp)) as f32 + 1.0, "{r:?}");
+        // 2-elem all-reduce over a 2-ring: 2 elements per rank per group.
+        assert_eq!(traffic.dp, 2);
+        assert_eq!(traffic.tp, 2);
+        assert_eq!(traffic.pipeline, 0);
+    }
+}

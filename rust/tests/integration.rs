@@ -32,6 +32,7 @@ fn simulator_validates_costmodel_bubble() {
                 d_l: shape.d_l,
                 n_l,
                 n_mu,
+                tp: 1,
                 partition: false,
                 offload: false,
                 data_parallel: false,
@@ -76,6 +77,7 @@ fn planned_improved_config_simulates_efficiently() {
         d_l,
         n_l: cfg.n_l,
         n_mu: cfg.n_mu,
+        tp: 1,
         partition: cfg.partition,
         offload: cfg.offload,
         data_parallel: cfg.n_b > 1,
@@ -149,6 +151,7 @@ fn simulator_memory_matches_costmodel_checkpoints() {
         d_l: shape.d_l,
         n_l,
         n_mu,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: false,
@@ -205,7 +208,7 @@ fn property_random_schedules_validate_and_simulate() {
         let n_mu = n_l + rng.below(12);
         let partition = rng.below(2) == 1;
         let spec =
-            ScheduleSpec { d_l: 16, n_l, n_mu, partition, offload: false, data_parallel: true };
+            ScheduleSpec { d_l: 16, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true };
         let cfg = TrainConfig {
             strategy: Strategy::Improved,
             n_b: 4,

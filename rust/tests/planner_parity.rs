@@ -88,7 +88,7 @@ fn timeline_off_reports_bit_identical_metrics() {
         [(16, 4, 8, false), (64, 8, 16, true), (160, 5, 32, true), (128, 32, 128, false)];
     for (d_l, n_l, n_mu, partition) in shapes {
         let spec =
-            ScheduleSpec { d_l, n_l, n_mu, partition, offload: false, data_parallel: true };
+            ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true };
         let costs = cost_table(8, n_l, n_mu, partition);
         for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
             let program = lower(&schedule).expect("generated schedules lower");
@@ -143,6 +143,7 @@ fn offload_only_specs_emit_and_charge_restores_and_stores() {
         d_l: 16,
         n_l: 4,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: true,
         data_parallel: false,
@@ -181,6 +182,7 @@ fn non_offload_programs_are_unchanged() {
             d_l: 16,
             n_l: 4,
             n_mu: 8,
+            tp: 1,
             partition,
             offload: false,
             data_parallel: true,
@@ -205,6 +207,7 @@ fn scratch_reuse_across_programs_changes_nothing() {
         d_l: 64,
         n_l: 8,
         n_mu: 16,
+        tp: 1,
         partition: true,
         offload: false,
         data_parallel: true,
@@ -213,6 +216,7 @@ fn scratch_reuse_across_programs_changes_nothing() {
         d_l: 16,
         n_l: 4,
         n_mu: 8,
+        tp: 1,
         partition: false,
         offload: false,
         data_parallel: true,

@@ -15,7 +15,8 @@ use lga_mpp::sim::{simulate_program, CostTable};
 
 /// The spec grid: (d_l, n_l, n_mu) shapes exercising single-stage,
 /// divisible and ragged-micro-batch pipelines, with every combination of
-/// partition / offload / data-parallel flags.
+/// partition / offload / data-parallel flags and tensor parallelism on
+/// or off.
 fn grid() -> Vec<ScheduleSpec> {
     let mut specs = Vec::new();
     for (d_l, n_l, n_mu) in
@@ -24,7 +25,17 @@ fn grid() -> Vec<ScheduleSpec> {
         for partition in [false, true] {
             for offload in [false, true] {
                 for data_parallel in [false, true] {
-                    specs.push(ScheduleSpec { d_l, n_l, n_mu, partition, offload, data_parallel });
+                    for tp in [1, 2] {
+                        specs.push(ScheduleSpec {
+                            d_l,
+                            n_l,
+                            n_mu,
+                            tp,
+                            partition,
+                            offload,
+                            data_parallel,
+                        });
+                    }
                 }
             }
         }
@@ -80,8 +91,10 @@ fn exactly_one_fwd_bwd_edge_chain_per_layer_and_microbatch() {
 
                     // Forward chain: layer 0 has no data dependency; every
                     // other layer depends on exactly one activation
-                    // producer (the previous layer's Fwd, or the RecvAct
-                    // re-homing it), plus possibly a parameter restore.
+                    // producer (the previous layer's Fwd — or its tp
+                    // all-reduce, which supersedes it as producer of the
+                    // reduced tensor — or the RecvAct re-homing it), plus
+                    // possibly a parameter restore.
                     let fwd_data: Vec<u32> = p
                         .preds_of(fwd)
                         .iter()
@@ -93,9 +106,13 @@ fn exactly_one_fwd_bwd_edge_chain_per_layer_and_microbatch() {
                     } else {
                         assert_eq!(fwd_data.len(), 1, "{} F{l}.{mb}", s.name);
                         let producer = p.ops[fwd_data[0] as usize].op;
+                        let want_local = if spec.tp > 1 {
+                            Op::TensorAllReduce { layer: l - 1, mb, bwd: false }
+                        } else {
+                            Op::Fwd { layer: l - 1, mb }
+                        };
                         assert!(
-                            producer == Op::Fwd { layer: l - 1, mb }
-                                || producer == Op::RecvAct { layer: l, mb },
+                            producer == want_local || producer == Op::RecvAct { layer: l, mb },
                             "{} F{l}.{mb} <- {producer}",
                             s.name
                         );
@@ -117,9 +134,13 @@ fn exactly_one_fwd_bwd_edge_chain_per_layer_and_microbatch() {
                         assert_eq!(bwd_data.len(), 2, "{} B{l}.{mb}", s.name);
                         let grad = bwd_data.iter().find(|&&x| x != fwd).unwrap();
                         let producer = p.ops[*grad as usize].op;
+                        let want_local = if spec.tp > 1 {
+                            Op::TensorAllReduce { layer: l + 1, mb, bwd: true }
+                        } else {
+                            Op::Bwd { layer: l + 1, mb }
+                        };
                         assert!(
-                            producer == Op::Bwd { layer: l + 1, mb }
-                                || producer == Op::RecvGrad { layer: l, mb },
+                            producer == want_local || producer == Op::RecvGrad { layer: l, mb },
                             "{} B{l}.{mb} <- {producer}",
                             s.name
                         );
@@ -160,7 +181,7 @@ fn lowered_programs_simulate_without_deadlock() {
             strategy: if spec.partition { Strategy::Improved } else { Strategy::Baseline },
             n_b: if spec.data_parallel { 4 } else { 1 },
             n_l: spec.n_l,
-            n_a: 1,
+            n_a: spec.tp,
             n_mu: spec.n_mu,
             b_mu: 1.0,
             offload: spec.offload,
@@ -187,6 +208,7 @@ fn program_edges_are_within_arena_and_acyclicity_witness_exists() {
         d_l: 160,
         n_l: 5,
         n_mu: 10,
+        tp: 1,
         partition: true,
         offload: true,
         data_parallel: true,

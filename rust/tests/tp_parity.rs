@@ -1,0 +1,141 @@
+//! Tensor-parallel execution parity and traffic accounting, end to end
+//! on the real trainer (artifacts-gated; skipped when the PJRT
+//! artifacts are absent).
+//!
+//! 1. **Loss parity**: a tp = 2 run executes every `TensorAllReduce`
+//!    over the CommWorld tp ring as a sum-then-1/tp-postscale roundtrip
+//!    that is exact on the replicated values (prescaling instead would
+//!    round subnormals — see `trainer::worker::tp_all_reduce`), so its
+//!    loss trajectory must equal the tp = 1 run's **bit for bit** —
+//!    including combined with pipeline and data parallelism.
+//! 2. **Traffic accounting**: the per-group element counts the workers
+//!    report must equal the volume the *schedule* implies — pipeline
+//!    sends × activation size, tp all-reduces × ring traffic, dp
+//!    reduces × parameter size — closing the loop between the compiled
+//!    program and the wire.
+
+use std::path::PathBuf;
+
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::runtime::Manifest;
+use lga_mpp::schedule::{lower, Op};
+use lga_mpp::trainer::{train, Policy, TrainerConfig};
+
+fn have_artifacts() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny/manifest.json").exists()
+}
+
+fn base(steps: usize) -> TrainerConfig {
+    let mut c = TrainerConfig::quick("tiny");
+    c.steps = steps;
+    c.n_mu = 2;
+    c.lr = LrSchedule::constant(3e-3);
+    c
+}
+
+fn assert_bitwise_loss_match(a: &TrainerConfig, b: &TrainerConfig) {
+    let ra = train(a).unwrap();
+    let rb = train(b).unwrap();
+    assert_eq!(ra.losses.len(), rb.losses.len());
+    for (i, (x, y)) in ra.losses.iter().zip(&rb.losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "step {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn tp2_matches_tp1_bitwise_single_stage() {
+    if !have_artifacts() {
+        return;
+    }
+    let a = base(6);
+    let mut b = a.clone();
+    b.tp = 2;
+    assert_bitwise_loss_match(&a, &b);
+}
+
+#[test]
+fn tp2_matches_tp1_bitwise_with_pipeline_and_dp() {
+    if !have_artifacts() {
+        return;
+    }
+    // tiny has 2 layers: 2 stages (modular), 2 dp instances, tp 2 —
+    // 8 ranks exercising every group of the CommWorld at once.
+    let mut a = base(4);
+    a.n_l = 2;
+    a.n_b = 2;
+    let mut b = a.clone();
+    b.tp = 2;
+    assert_bitwise_loss_match(&a, &b);
+}
+
+#[test]
+fn tp2_matches_tp1_bitwise_with_partition() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut a = base(4);
+    a.n_b = 2;
+    a.partition = true;
+    let mut b = a.clone();
+    b.tp = 2;
+    assert_bitwise_loss_match(&a, &b);
+}
+
+#[test]
+fn per_group_traffic_matches_the_schedule_volume() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(3);
+    cfg.n_l = 2;
+    cfg.n_b = 2;
+    cfg.tp = 2;
+    cfg.policy = Policy::Improved;
+
+    let manifest =
+        Manifest::load(&cfg.artifacts_root, &cfg.preset).expect("tiny manifest loads");
+    let m = manifest.model;
+    let act_elems = (manifest.batch * m.d_seq * m.d_model) as u64;
+    let layer_elems = manifest.layer_param_elements() as u64;
+
+    let program = lower(&cfg.build_schedule(m.n_layers)).expect("schedule lowers");
+    let sends = program.count(|o| matches!(o, Op::SendAct { .. } | Op::SendGrad { .. })) as u64;
+    let tars = program.count(|o| matches!(o, Op::TensorAllReduce { .. })) as u64;
+    let reduces = program.count(|o| matches!(o, Op::ReduceGrad { .. })) as u64;
+
+    let steps = cfg.steps as u64;
+    let (dp, tp) = (cfg.n_b as u64, cfg.tp as u64);
+
+    let r = train(&cfg).unwrap();
+
+    // Pipeline: every send op moves one activation-sized payload, on
+    // every (dp, tp) replica of the pipeline, every step.
+    assert_eq!(r.pipeline_elems_sent, steps * dp * tp * sends * act_elems);
+
+    // Tensor-parallel: each TensorAllReduce ring-sums one activation
+    // over the 2-rank tp group — for n = 2 every rank sends exactly
+    // `len` elements (both chunks cross the wire once per phase).
+    assert_eq!(r.tp_elems_sent, steps * dp * tp * tars * act_elems);
+
+    // Data-parallel: each ReduceGrad all-reduces one layer's parameters
+    // over the 2-rank dp group (again `len` per rank for n = 2), plus
+    // the per-step epilogue reduces of the embedding / positional /
+    // head gradients on their owning stages.
+    let epilogue =
+        (m.vocab * m.d_model + m.d_seq * m.d_model + m.d_model * m.vocab) as u64;
+    assert_eq!(
+        r.collective_elems_sent,
+        steps * dp * tp * (reduces * layer_elems + epilogue)
+    );
+}
+
+#[test]
+fn tp1_moves_no_tp_traffic() {
+    if !have_artifacts() {
+        return;
+    }
+    let r = train(&base(2)).unwrap();
+    assert_eq!(r.tp_elems_sent, 0);
+    assert_eq!(r.pipeline_elems_sent, 0, "single stage: no pipeline traffic");
+    assert_eq!(r.collective_elems_sent, 0, "single instance: no dp traffic");
+}
