@@ -1,0 +1,88 @@
+//! Tensor-parallel scaling accounting: per-rank FLOPs, resident state
+//! bytes and tp wire bytes vs the shard degree, from the shared shape
+//! arithmetic (`TransformerShape::params_per_layer_shard` /
+//! `m0_bytes_per_token_shard`) and the simulator's cost table. Asserts
+//! the 1/tp slope sharded execution exists to buy: the per-rank matrix
+//! state divides by tp (up to the replicated layernorm sliver) while the
+//! all-reduce wire volume grows with the ring factor 2·(tp−1)/tp.
+//! Run via `cargo bench --bench tp_scaling`; writes BENCH_tp_scaling.json.
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
+use lga_mpp::sim::CostTable;
+
+fn main() {
+    let mut json = BenchJson::new("tp_scaling");
+    let cluster = ClusterSpec::reference();
+    let model = XModel::new(64);
+    let shape = model.shape();
+    let (b_mu, d_s) = (1.0f64, shape.d_s as f64);
+
+    println!("== tp scaling (X_64 layer, b_mu = 1) ==");
+    println!(
+        "{:>4} {:>16} {:>16} {:>16} {:>16}",
+        "tp", "flops/layer-pass", "state B/rank", "m0 B/token", "tp wire B/pass"
+    );
+
+    let mut prev_state = f64::INFINITY;
+    let mut baseline_state = 0.0f64;
+    for tp in [1usize, 2, 4] {
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 1,
+            n_l: 1,
+            n_a: tp,
+            n_mu: 4,
+            b_mu,
+            offload: false,
+            partition: false,
+        };
+        let costs = CostTable::new(&shape, &cfg, &cluster);
+
+        // Per-rank compute of one layer pass (fwd + bwd incl. recompute):
+        // 8 flops/token/param over the rank's 1/tp parameter shard.
+        let flops = 8.0 * b_mu * d_s * shape.params_per_layer() / tp as f64;
+        // Per-rank resident training state of one layer (fp32 params +
+        // Adam moments, 12 B/param) — exact shard arithmetic, counting
+        // the replicated layernorms/biases every rank keeps.
+        let state = 12.0 * shape.params_per_layer_shard(tp);
+        let m0 = shape.m0_bytes_per_token_shard(tp);
+        // tp wire bytes of one layer pass, from the cost model's C.4.3
+        // amortisation (0 at tp = 1).
+        let wire = costs.wire.tp_all_reduce_fwd + costs.wire.tp_all_reduce_bwd;
+
+        println!("{tp:>4} {flops:>16.3e} {state:>16.3e} {m0:>16.3e} {wire:>16.3e}");
+        json.push(&format!("tp{tp}.flops_per_layer_pass"), flops);
+        json.push(&format!("tp{tp}.state_bytes_per_rank"), state);
+        json.push(&format!("tp{tp}.m0_bytes_per_token"), m0);
+        json.push(&format!("tp{tp}.tp_wire_bytes_per_pass"), wire);
+
+        if tp == 1 {
+            baseline_state = state;
+            assert_eq!(wire, 0.0, "tp = 1 moves no tensor-parallel bytes");
+        } else {
+            // The 1/tp memory slope: per-rank state is the full state
+            // divided by tp, within the (tiny, matrix-dominated) sliver
+            // of replicated layernorm parameters.
+            let ratio = state * tp as f64 / baseline_state;
+            assert!(
+                (1.0..1.01).contains(&ratio),
+                "tp={tp}: state slope off 1/tp (ratio {ratio:.5})"
+            );
+            assert!(wire > 0.0);
+        }
+        assert!(state < prev_state, "state must fall monotonically with tp");
+        prev_state = state;
+    }
+
+    // The live-activation shard keeps the layer boundaries whole: the
+    // m0 slope is strictly between 1 (no sharding) and 1/tp.
+    let m0_1 = shape.m0_bytes_per_token_shard(1);
+    let m0_4 = shape.m0_bytes_per_token_shard(4);
+    assert!(m0_4 < m0_1 && m0_4 > m0_1 / 4.0);
+    json.push("m0_shard_ratio_tp4", m0_4 / m0_1);
+
+    json.finish();
+}

@@ -28,12 +28,23 @@ from .model import (
     LAYER_PARAM_NAMES,
     PRESETS,
     ModelConfig,
+    attn_bwd_part,
+    attn_fwd_part,
     embed_bwd,
     embed_fwd,
+    ffn_bwd_part,
+    ffn_fwd_part,
     head_loss_grad,
     layer_bwd,
     layer_fwd,
+    sharded_param_shapes,
+    valid_tp_degrees,
 )
+
+# The four artifacts of one tensor-parallel shard degree (suffixed
+# `_tp<d>`): the attention/FFN halves of the layer, forward and backward,
+# with partial-sum outputs (see model.py's sharded-layer commentary).
+TP_ARTIFACT_STEMS = ("attn_fwd", "ffn_fwd", "attn_bwd", "ffn_bwd")
 
 
 def to_hlo_text(lowered) -> str:
@@ -80,6 +91,30 @@ def build_artifacts(cfg: ModelConfig, batch: int):
     return arts
 
 
+def build_tp_artifacts(cfg: ModelConfig, batch: int, tp: int):
+    """Return {name: (callable, example_args)} for one shard degree."""
+    shapes = sharded_param_shapes(cfg, tp)
+    attn = [_spec(shapes[n]) for n in LAYER_PARAM_NAMES[:6]]
+    ffn = [_spec(shapes[n]) for n in LAYER_PARAM_NAMES[6:]]
+    act = _spec((batch, cfg.d_seq, cfg.d_model))
+    stems = {
+        "attn_fwd": (lambda *a, cfg, tp: attn_fwd_part(a[:6], a[6], cfg, tp),
+                     (*attn, act)),
+        "ffn_fwd": (lambda *a, cfg, tp: ffn_fwd_part(a[:6], a[6], cfg, tp),
+                    (*ffn, act)),
+        "attn_bwd": (lambda *a, cfg, tp: attn_bwd_part(a[:6], a[6], a[7], cfg, tp),
+                     (*attn, act, act)),
+        "ffn_bwd": (lambda *a, cfg, tp: ffn_bwd_part(a[:6], a[6], a[7], cfg, tp),
+                    (*ffn, act, act)),
+    }
+    assert set(stems) == set(TP_ARTIFACT_STEMS)
+    return {
+        f"{stem}_tp{tp}": (functools.partial(stems[stem][0], cfg=cfg, tp=tp),
+                           stems[stem][1])
+        for stem in TP_ARTIFACT_STEMS
+    }
+
+
 def _manifest_io(args, fn):
     """Describe an artifact's inputs and outputs for the manifest."""
     out = jax.eval_shape(fn, *args)
@@ -90,10 +125,24 @@ def _manifest_io(args, fn):
     )
 
 
-def compile_preset(preset: str, out_dir: str, batch: int) -> dict:
+def compile_preset(preset: str, out_dir: str, batch: int, tp_degrees=None) -> dict:
+    """Compile one preset's artifacts. `tp_degrees` lists the tensor-
+    parallel shard variants to emit alongside the unsharded set (default:
+    [2] when the shape supports it); each degree adds the four `_tp<d>`
+    half-layer artifacts and a `tp_shards` manifest entry carrying the
+    per-rank parameter shapes (the Rust side never re-derives shapes)."""
     cfg = PRESETS[preset]
+    if tp_degrees is None:
+        tp_degrees = [t for t in valid_tp_degrees(cfg) if t == 2]
+    for t in tp_degrees:
+        assert t in valid_tp_degrees(cfg), f"{preset} does not support tp={t}"
     os.makedirs(os.path.join(out_dir, preset), exist_ok=True)
     arts = build_artifacts(cfg, batch)
+    tp_of = {}
+    for t in tp_degrees:
+        for name, art in build_tp_artifacts(cfg, batch, t).items():
+            arts[name] = art
+            tp_of[name] = t
     manifest = {
         "preset": preset,
         "batch": batch,
@@ -110,6 +159,15 @@ def compile_preset(preset: str, out_dir: str, batch: int) -> dict:
         "layer_param_shapes": {
             n: list(cfg.layer_param_shapes()[n]) for n in LAYER_PARAM_NAMES
         },
+        "tp_shards": {
+            str(t): {
+                "layer_param_shapes": {
+                    n: list(sharded_param_shapes(cfg, t)[n])
+                    for n in LAYER_PARAM_NAMES
+                }
+            }
+            for t in tp_degrees
+        },
         "artifacts": {},
     }
     for name, (fn, args) in arts.items():
@@ -124,6 +182,7 @@ def compile_preset(preset: str, out_dir: str, batch: int) -> dict:
         inputs, outputs = _manifest_io(args, fn)
         manifest["artifacts"][name] = {
             "file": rel,
+            "tp": tp_of.get(name, 1),
             "inputs": inputs,
             "outputs": outputs,
         }
@@ -141,12 +200,17 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="micro-batch size baked into the artifacts "
                          "(default: 2 for tiny, 1 for e2e)")
+    ap.add_argument("--tp", default="2",
+                    help="comma-separated tensor-parallel shard degrees to "
+                         "emit (e.g. '2,4'); '0' emits none")
     args = ap.parse_args()
     presets = list(PRESETS) if args.preset == "all" else [args.preset]
+    degrees = [int(t) for t in args.tp.split(",") if int(t) > 1]
     for p in presets:
         batch = args.batch or (2 if p == "tiny" else 1)
-        print(f"compiling preset {p} (micro-batch {batch})")
-        m = compile_preset(p, args.out, batch)
+        tp = [t for t in degrees if t in valid_tp_degrees(PRESETS[p])]
+        print(f"compiling preset {p} (micro-batch {batch}, tp variants {tp})")
+        m = compile_preset(p, args.out, batch, tp_degrees=tp)
         print(f"  model: {m['model']['total_params']:,} params")
 
 

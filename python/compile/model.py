@@ -173,6 +173,151 @@ def head_loss_grad(w_out, x, targets):
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel sharded layer (Megatron-style column/row-parallel cuts).
+#
+# The layer splits into two halves at the residual boundaries:
+#
+#   x2 = x  + sum_r attn_part_r(x)      (heads sharded d_a/tp; w_o row-
+#                                        parallel => partial-sum output)
+#   y  = x2 + sum_r ffn_part_r(x2)      (w1 column-parallel, w2 row-
+#                                        parallel => partial-sum output)
+#
+# Each rank computes a *partial* half-layer; the cross-rank sums are ring
+# all-reduces in the Rust runtime (the mid-layer one inside the Fwd/Bwd
+# op, the layer-boundary one being the scheduled ``TensorAllReduce``).
+# Head sharding and the column-parallel first GEMMs are bitwise-exact
+# under sharding (each output column sees the identical contraction);
+# only the row-parallel partial sums reassociate one reduction axis.
+#
+# Biases that are added *after* a partial sum (b_o, b2) must enter the
+# function exactly once: [`shard_layer_params`] zeroes them on every rank
+# but rank 0 (the stored parameter stays replicated — only the artifact
+# input is zeroed). Their gradients are nevertheless full and identical
+# on every rank (the bias is an additive constant of each rank's
+# partial), while the layernorm parameter gradients flow through the
+# sharded GEMMs and are *partial* per rank — the runtime tp-all-reduces
+# them at gradient-reduction time.
+# ---------------------------------------------------------------------------
+
+# The attention half owns the first six parameters, the FFN half the rest.
+ATTN_PARAM_NAMES = LAYER_PARAM_NAMES[:6]
+FFN_PARAM_NAMES = LAYER_PARAM_NAMES[6:]
+
+
+def valid_tp_degrees(cfg: ModelConfig):
+    """Shard counts the model shape supports: tp must divide the head
+    count (head sharding) and the FFN intermediate (column sharding)."""
+    return [
+        t
+        for t in (2, 4, 8, 16, 32)
+        if t <= cfg.n_heads and cfg.n_heads % t == 0 and cfg.d_ffn % t == 0
+    ]
+
+
+def sharded_param_shapes(cfg: ModelConfig, tp: int):
+    """Per-rank parameter shapes at shard degree `tp` (rank-independent).
+
+    Layernorm parameters and the post-reduce biases stay replicated;
+    w_qkv/b_qkv shard by heads (the same fraction of each of the fused
+    q|k|v column groups), w1/b1 column-parallel, w_o/w2 row-parallel.
+    """
+    d, di = cfg.d_model, cfg.d_ffn
+    assert cfg.n_heads % tp == 0 and di % tp == 0, (cfg, tp)
+    return {
+        "ln1_g": (d,), "ln1_b": (d,),
+        "w_qkv": (d, 3 * d // tp), "b_qkv": (3 * d // tp,),
+        "w_o": (d // tp, d), "b_o": (d,),
+        "ln2_g": (d,), "ln2_b": (d,),
+        "w1": (d, di // tp), "b1": (di // tp,),
+        "w2": (di // tp, d), "b2": (d,),
+    }
+
+
+def shard_layer_params(cfg: ModelConfig, params, tp: int, rank: int):
+    """Slice one rank's parameter shard out of the full 12-tuple.
+
+    Returns a tuple in LAYER_PARAM_NAMES order with the shapes of
+    [`sharded_param_shapes`]. b_o/b2 are zeroed for rank > 0 so the
+    summed partials apply each post-reduce bias exactly once.
+    """
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    d, di = cfg.d_model, cfg.d_ffn
+    lo, hi = rank * d // tp, (rank + 1) * d // tp
+    flo, fhi = rank * di // tp, (rank + 1) * di // tp
+    once = lambda t: t if rank == 0 else jnp.zeros_like(t)
+    out = {
+        "ln1_g": p["ln1_g"], "ln1_b": p["ln1_b"],
+        "w_qkv": jnp.concatenate(
+            [p["w_qkv"][:, g * d + lo : g * d + hi] for g in range(3)], axis=1
+        ),
+        "b_qkv": jnp.concatenate(
+            [p["b_qkv"][g * d + lo : g * d + hi] for g in range(3)]
+        ),
+        "w_o": p["w_o"][lo:hi, :],
+        "b_o": once(p["b_o"]),
+        "ln2_g": p["ln2_g"], "ln2_b": p["ln2_b"],
+        "w1": p["w1"][:, flo:fhi], "b1": p["b1"][flo:fhi],
+        "w2": p["w2"][flo:fhi, :],
+        "b2": once(p["b2"]),
+    }
+    return tuple(out[n] for n in LAYER_PARAM_NAMES)
+
+
+def attn_fwd_part(params6, x, cfg: ModelConfig, tp: int):
+    """One rank's partial attention-block contribution.
+
+    `params6`: (ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o) sharded per
+    [`sharded_param_shapes`]; x: the full [b, s, d] layer input. Returns
+    the [b, s, d] partial; x2 = x + sum over ranks of the partials.
+    """
+    ln1_g, ln1_b, w_qkv, b_qkv, w_o, b_o = params6
+    b, s, d = x.shape
+    h = ref.layernorm(x.reshape(b * s, d), ln1_g, ln1_b).reshape(b, s, d)
+    qkv = h @ w_qkv + b_qkv
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    h_loc = cfg.n_heads // tp
+    q, k, v = (_split_heads(t, h_loc) for t in (q, k, v))
+    ctx = _merge_heads(ref.attention(q, k, v), b)
+    return ctx @ w_o + b_o
+
+
+def ffn_fwd_part(params6, x2, cfg: ModelConfig, tp: int):
+    """One rank's partial FFN-block contribution (column-parallel w1,
+    row-parallel w2). y = x2 + sum over ranks of the partials."""
+    ln2_g, ln2_b, w1, b1, w2, b2 = params6
+    b, s, d = x2.shape
+    h2 = ref.layernorm(x2.reshape(b * s, d), ln2_g, ln2_b)
+    return ref.ffn(h2, w1, b1, w2, b2).reshape(b, s, d)
+
+
+def attn_bwd_part(params6, x, dy2, cfg: ModelConfig, tp: int):
+    """VJP of [`attn_fwd_part`] w.r.t. (shard params, x) for the full
+    upstream gradient dy2 = dL/dx2. Returns (*shard param grads,
+    dx_partial); the true dx = dy2 + sum over ranks of dx_partial."""
+    _, vjp = jax.vjp(lambda ps, xx: attn_fwd_part(ps, xx, cfg, tp), tuple(params6), x)
+    dps, dx = vjp(dy2)
+    return (*dps, dx)
+
+
+def ffn_bwd_part(params6, x2, dy, cfg: ModelConfig, tp: int):
+    """VJP of [`ffn_fwd_part`] w.r.t. (shard params, x2) for the full
+    upstream gradient dy. Returns (*shard param grads, dx2_partial); the
+    true dx2 = dy + sum over ranks of dx2_partial."""
+    _, vjp = jax.vjp(lambda ps, xx: ffn_fwd_part(ps, xx, cfg, tp), tuple(params6), x2)
+    dps, dx2 = vjp(dy)
+    return (*dps, dx2)
+
+
+def sharded_layer_fwd(params, x, cfg: ModelConfig, tp: int):
+    """Reference composition of the sharded pieces (host-side sums in
+    place of the runtime's ring all-reduces) — the oracle the property
+    tests compare against [`layer_fwd_ref`]."""
+    shards = [shard_layer_params(cfg, params, tp, r) for r in range(tp)]
+    x2 = x + sum(attn_fwd_part(s[:6], x, cfg, tp) for s in shards)
+    return x2 + sum(ffn_fwd_part(s[6:], x2, cfg, tp) for s in shards)
+
+
+# ---------------------------------------------------------------------------
 # Whole-model reference (used by tests and by aot.py's self-check, never
 # exported to Rust — the Rust coordinator composes the per-layer pieces).
 # ---------------------------------------------------------------------------

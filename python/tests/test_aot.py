@@ -16,7 +16,7 @@ import jax
 @pytest.fixture(scope="module")
 def tiny_manifest(tmp_path_factory):
     out = str(tmp_path_factory.mktemp("artifacts"))
-    m = compile_preset("tiny", out, batch=2)
+    m = compile_preset("tiny", out, batch=2, tp_degrees=[2])
     return m, out
 
 
@@ -24,6 +24,7 @@ def test_manifest_lists_all_artifacts(tiny_manifest):
     m, _ = tiny_manifest
     assert set(m["artifacts"]) == {
         "embed_fwd", "embed_bwd", "layer_fwd", "layer_bwd", "head_loss_grad",
+        "attn_fwd_tp2", "ffn_fwd_tp2", "attn_bwd_tp2", "ffn_bwd_tp2",
     }
 
 
@@ -77,6 +78,51 @@ def test_build_artifacts_shapes_scale_with_batch():
     a1 = arts1["layer_fwd"][1][12].shape
     a4 = arts4["layer_fwd"][1][12].shape
     assert a1[0] == 1 and a4[0] == 4
+
+
+def test_sharded_manifest_schema_roundtrips(tiny_manifest):
+    """The tp-shard schema the Rust manifest parser relies on survives a
+    JSON round-trip: shard factors on every artifact, per-degree sharded
+    parameter shapes, and shapes that are consistent with the artifact
+    argument specs."""
+    from compile.model import LAYER_PARAM_NAMES, PRESETS, sharded_param_shapes
+
+    m, _ = tiny_manifest
+    rt = json.loads(json.dumps(m))
+    assert rt == m
+
+    # Every artifact carries its shard factor; the base set is tp = 1.
+    for name, art in rt["artifacts"].items():
+        assert art["tp"] == (2 if name.endswith("_tp2") else 1), name
+
+    # tp_shards carries the per-rank shapes, matching the model formula.
+    shards = rt["tp_shards"]["2"]["layer_param_shapes"]
+    want = sharded_param_shapes(PRESETS["tiny"], 2)
+    assert shards == {n: list(want[n]) for n in LAYER_PARAM_NAMES}
+
+    # The half-layer artifacts consume exactly those shapes: attention the
+    # first six parameters, FFN the last six, then full activations.
+    attn_in = rt["artifacts"]["attn_fwd_tp2"]["inputs"]
+    ffn_in = rt["artifacts"]["ffn_fwd_tp2"]["inputs"]
+    assert [i["shape"] for i in attn_in[:6]] == [
+        shards[n] for n in LAYER_PARAM_NAMES[:6]
+    ]
+    assert [i["shape"] for i in ffn_in[:6]] == [
+        shards[n] for n in LAYER_PARAM_NAMES[6:]
+    ]
+    act = rt["artifacts"]["layer_fwd"]["inputs"][12]["shape"]
+    assert attn_in[6]["shape"] == act and ffn_in[6]["shape"] == act
+    # Backward halves: same params + two activations in, six shard
+    # gradients + one activation-shaped partial out.
+    for stem in ("attn", "ffn"):
+        bwd = rt["artifacts"][f"{stem}_bwd_tp2"]
+        fwd = rt["artifacts"][f"{stem}_fwd_tp2"]
+        assert bwd["inputs"][:7] == fwd["inputs"]
+        assert bwd["inputs"][7]["shape"] == act
+        assert [o["shape"] for o in bwd["outputs"][:6]] == [
+            i["shape"] for i in fwd["inputs"][:6]
+        ]
+        assert bwd["outputs"][6]["shape"] == act
 
 
 def test_to_hlo_text_roundtrip_smoke():

@@ -1,0 +1,198 @@
+"""Property tests for the tensor-parallel sharded layer math.
+
+The claims the Rust runtime relies on, proved at the jnp level:
+
+* head-sharded attention and the column-parallel first GEMMs are
+  **bitwise** equal to the unsharded reference (each output column sees
+  the identical contraction — sharding removes columns, it does not
+  reassociate them);
+* the row-parallel second GEMMs produce partial sums whose cross-rank
+  total matches the unsharded layer within a scaled-ulp tolerance (one
+  reduction axis is reassociated);
+* the sharded backward halves compose to the exact VJP of the layer
+  (gradients match jax.vjp of the unsharded reference within tolerance),
+  with the post-reduce bias gradients (b_o, b2) replicated full on every
+  rank and the layernorm gradients partial (summing to the truth).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    ATTN_PARAM_NAMES,
+    FFN_PARAM_NAMES,
+    LAYER_PARAM_NAMES,
+    PRESETS,
+    attn_bwd_part,
+    attn_fwd_part,
+    ffn_bwd_part,
+    ffn_fwd_part,
+    init_params,
+    layer_fwd_ref,
+    shard_layer_params,
+    sharded_layer_fwd,
+    sharded_param_shapes,
+    valid_tp_degrees,
+)
+from compile.kernels import ref
+
+CFG = PRESETS["tiny"]
+BATCH = 2
+
+
+@pytest.fixture(scope="module")
+def layer_and_input():
+    key = jax.random.PRNGKey(7)
+    _, _, layers, _ = init_params(CFG, key)
+    x = 0.5 * jax.random.normal(
+        jax.random.PRNGKey(8), (BATCH, CFG.d_seq, CFG.d_model), jnp.float32
+    )
+    return layers[0], x
+
+
+def test_valid_tp_degrees_divide_heads_and_ffn():
+    assert valid_tp_degrees(CFG) == [2, 4]
+    for t in valid_tp_degrees(CFG):
+        assert CFG.n_heads % t == 0 and CFG.d_ffn % t == 0
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_shard_shapes_match_sliced_params(layer_and_input, tp):
+    params, _ = layer_and_input
+    shapes = sharded_param_shapes(CFG, tp)
+    for r in range(tp):
+        shard = shard_layer_params(CFG, params, tp, r)
+        for name, t in zip(LAYER_PARAM_NAMES, shard):
+            assert t.shape == shapes[name], (name, r)
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_shards_partition_the_sharded_tensors(layer_and_input, tp):
+    """Concatenating every rank's shard reconstructs the full tensor
+    bitwise (cols for w_qkv/b_qkv/w1/b1, rows for w_o/w2)."""
+    params, _ = layer_and_input
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    shards = [
+        dict(zip(LAYER_PARAM_NAMES, shard_layer_params(CFG, params, tp, r)))
+        for r in range(tp)
+    ]
+    d = CFG.d_model
+    # w1/b1: plain column concat. w_o/w2: row concat.
+    for name, axis in [("w1", 1), ("b1", 0), ("w_o", 0), ("w2", 0)]:
+        full = jnp.concatenate([s[name] for s in shards], axis=axis)
+        assert (full == p[name]).all(), name
+    # w_qkv/b_qkv: concat within each of the q|k|v groups.
+    for g in range(3):
+        got = jnp.concatenate(
+            [s["w_qkv"][:, g * d // tp : (g + 1) * d // tp] for s in shards], axis=1
+        )
+        assert (got == p["w_qkv"][:, g * d : (g + 1) * d]).all()
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_head_sharded_context_is_bitwise_exact(layer_and_input, tp):
+    """Up to the row-parallel projection, the sharded attention is a
+    column selection of the unsharded one: qkv GEMM columns and per-head
+    context outputs match bitwise."""
+    params, x = layer_and_input
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    b, s, d = x.shape
+    h = ref.layernorm(x.reshape(b * s, d), p["ln1_g"], p["ln1_b"]).reshape(b, s, d)
+
+    def context(w_qkv, b_qkv, n_heads):
+        qkv = h @ w_qkv + b_qkv
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        from compile.model import _merge_heads, _split_heads
+
+        q, k, v = (_split_heads(t, n_heads) for t in (q, k, v))
+        return _merge_heads(ref.attention(q, k, v), b)
+
+    full_ctx = context(p["w_qkv"], p["b_qkv"], CFG.n_heads)
+    h_loc = CFG.n_heads // tp
+    for r in range(tp):
+        sp = dict(zip(LAYER_PARAM_NAMES, shard_layer_params(CFG, params, tp, r)))
+        ctx_r = context(sp["w_qkv"], sp["b_qkv"], h_loc)
+        lo = r * d // tp
+        assert (ctx_r == full_ctx[:, :, lo : lo + d // tp]).all(), f"rank {r}"
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_column_parallel_first_gemm_is_bitwise_exact(layer_and_input, tp):
+    """The FFN's column-parallel GEMM + GELU shard-concats bitwise."""
+    params, x = layer_and_input
+    p = dict(zip(LAYER_PARAM_NAMES, params))
+    b, s, d = x.shape
+    h2 = ref.layernorm(x.reshape(b * s, d), p["ln2_g"], p["ln2_b"])
+    full = ref.gelu(h2 @ p["w1"] + p["b1"])
+    di = CFG.d_ffn
+    for r in range(tp):
+        sp = dict(zip(LAYER_PARAM_NAMES, shard_layer_params(CFG, params, tp, r)))
+        got = ref.gelu(h2 @ sp["w1"] + sp["b1"])
+        assert (got == full[:, r * di // tp : (r + 1) * di // tp]).all(), f"rank {r}"
+
+
+@pytest.mark.parametrize("tp", [2, 4])
+def test_sharded_layer_matches_reference_within_tolerance(layer_and_input, tp):
+    """Row-parallel partial sums reassociate one reduction axis: the full
+    sharded layer matches the unsharded reference within a scaled-ulp
+    tolerance (not bitwise)."""
+    params, x = layer_and_input
+    want = layer_fwd_ref(params, x, CFG)
+    got = sharded_layer_fwd(params, x, CFG, tp)
+    scale = jnp.abs(want).max()
+    assert jnp.abs(got - want).max() <= 1e-5 * scale, (
+        jnp.abs(got - want).max(),
+        scale,
+    )
+
+
+@pytest.mark.parametrize("tp", [2])
+def test_sharded_backward_composes_to_the_reference_vjp(layer_and_input, tp):
+    """Run the runtime's backward orchestration at the jnp level and
+    compare every gradient to jax.vjp of the unsharded reference."""
+    params, x = layer_and_input
+    dy = 0.1 * jax.random.normal(jax.random.PRNGKey(9), x.shape, jnp.float32)
+
+    # Reference gradients.
+    _, vjp = jax.vjp(lambda ps, xx: layer_fwd_ref(ps, xx, CFG), params, x)
+    want_dparams, want_dx = vjp(dy)
+    want = dict(zip(LAYER_PARAM_NAMES, want_dparams))
+
+    shards = [shard_layer_params(CFG, params, tp, r) for r in range(tp)]
+    # Recompute x2 (one mid-layer all-reduce in the runtime).
+    x2 = x + sum(attn_fwd_part(s[:6], x, CFG, tp) for s in shards)
+    # FFN backward: dh partials all-reduce, dx2 = dy + sum.
+    ffn_grads = [ffn_bwd_part(s[6:], x2, dy, CFG, tp) for s in shards]
+    dx2 = dy + sum(g[6] for g in ffn_grads)
+    # Attention backward: dx partials all-reduce, dx = dx2 + sum.
+    attn_grads = [attn_bwd_part(s[:6], x, dx2, CFG, tp) for s in shards]
+    dx = dx2 + sum(g[6] for g in attn_grads)
+
+    tol = lambda w: 1e-5 * (jnp.abs(w).max() + 1e-3)
+    assert jnp.abs(dx - want_dx).max() <= tol(want_dx)
+
+    d, di = CFG.d_model, CFG.d_ffn
+    for r in range(tp):
+        ga = dict(zip(ATTN_PARAM_NAMES, attn_grads[r][:6]))
+        gf = dict(zip(FFN_PARAM_NAMES, ffn_grads[r][:6]))
+        lo, hi = r * d // tp, (r + 1) * d // tp
+        flo, fhi = r * di // tp, (r + 1) * di // tp
+        # Sharded weight gradients match the corresponding slice.
+        qkv_want = jnp.concatenate(
+            [want["w_qkv"][:, g * d + lo : g * d + hi] for g in range(3)], axis=1
+        )
+        assert jnp.abs(ga["w_qkv"] - qkv_want).max() <= tol(qkv_want), f"rank {r}"
+        assert jnp.abs(ga["w_o"] - want["w_o"][lo:hi, :]).max() <= tol(want["w_o"])
+        assert jnp.abs(gf["w1"] - want["w1"][:, flo:fhi]).max() <= tol(want["w1"])
+        assert jnp.abs(gf["w2"] - want["w2"][flo:fhi, :]).max() <= tol(want["w2"])
+        # Post-reduce biases: full, identical gradient on every rank.
+        assert jnp.abs(ga["b_o"] - want["b_o"]).max() <= tol(want["b_o"]), f"rank {r}"
+        assert jnp.abs(gf["b2"] - want["b2"]).max() <= tol(want["b2"]), f"rank {r}"
+    # Layernorm gradients are partial: they sum to the truth across ranks.
+    for i, name in [(0, "ln1_g"), (1, "ln1_b")]:
+        total = sum(g[i] for g in attn_grads)
+        assert jnp.abs(total - want[name]).max() <= tol(want[name]), name
+    for i, name in [(0, "ln2_g"), (1, "ln2_b")]:
+        total = sum(g[i] for g in ffn_grads)
+        assert jnp.abs(total - want[name]).max() <= tol(want[name]), name

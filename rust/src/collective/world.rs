@@ -12,7 +12,10 @@
 //! * [`CommWorld::dp_group`] — the ring spanning the data-parallel axis
 //!   (gradient all-reduce / reduce-scatter, parameter all-gather);
 //! * [`CommWorld::tp_group`] — the ring spanning the tensor-parallel
-//!   axis (the per-layer `TensorAllReduce` of C.4.3);
+//!   axis: the cut-point all-reduces of sharded column/row-parallel
+//!   execution (the scheduled per-layer `TensorAllReduce` plus the
+//!   mid-layer and layernorm-gradient reduces the worker issues
+//!   in-op), or the amortised C.4.3 reduce under replicated emulation;
 //! * [`CommWorld::control`] — loss reporting back to the coordinator.
 //!
 //! Degenerate axes stay uniform: a size-1 ring is a no-op group (its

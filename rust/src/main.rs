@@ -15,7 +15,6 @@ use lga_mpp::costmodel::{ParallelismMenu, Strategy, TrainConfig};
 use lga_mpp::hardware::{ClusterSpec, SECS_PER_DAY};
 use lga_mpp::model::XModel;
 use lga_mpp::optim::LrSchedule;
-use lga_mpp::planner::search_fastest;
 use lga_mpp::report;
 use lga_mpp::schedule::{
     interleaved_1f1b, lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec,
@@ -107,9 +106,9 @@ usage:
                  [--offload] [--x N] [--width N]
   repro train [--preset tiny|e2e] [--dp N] [--pp N] [--tp N] [--mb N] [--steps N]
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
-              [--offload] [--store DIR] [--resume] [--artifacts DIR]
+              [--tp-emulate] [--offload] [--store DIR] [--resume] [--artifacts DIR]
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
-             [--budget-days D] [--no-sim]
+             [--budget-days D] [--no-sim] [--tp N]
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -263,6 +262,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.n_b = args.get_usize("dp", 1)?;
     cfg.n_l = args.get_usize("pp", 1)?;
     cfg.tp = args.get_usize("tp", 1)?;
+    cfg.force_tp_emulation = args.has("tp-emulate");
     cfg.n_mu = args.get_usize("mb", 2)?;
     cfg.steps = args.get_usize("steps", 20)?;
     cfg.partition = args.has("partition");
@@ -300,6 +300,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.steps
     );
     let r = train(&cfg)?;
+    if cfg.tp > 1 {
+        println!(
+            "tensor parallelism: {} over {} ranks/stage",
+            if r.tp_sharded {
+                "sharded column/row-parallel compute"
+            } else {
+                "replicated-compute emulation"
+            },
+            cfg.tp
+        );
+    }
     if r.start_step > 0 {
         println!("resumed from real-time checkpoint: continuing at step {}", r.start_step);
     }
@@ -319,6 +330,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         r.collective_elems_sent as f64 / 1e6,
         r.pipeline_elems_sent as f64 / 1e6,
         r.tp_elems_sent as f64 / 1e6
+    );
+    println!(
+        "resident state per rank (measured): {:.2} MiB layer params+optimizer, \
+         {:.2} MiB total",
+        r.max_layer_state_bytes as f64 / (1u64 << 20) as f64,
+        r.max_state_bytes as f64 / (1u64 << 20) as f64,
     );
     if cfg.offload {
         println!(
@@ -358,7 +375,13 @@ fn cmd_plan(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
-    match search_fastest(&model, &cluster, strategy, menu) {
+    // --tp N pins the tensor-parallel degree (the new planner axis);
+    // without it the search ranks the whole n_a grid.
+    let tp = match args.get("tp") {
+        Some(v) => Some(v.parse::<usize>().with_context(|| format!("--tp {v}"))?),
+        None => None,
+    };
+    match lga_mpp::planner::search_fastest_tp(&model, &cluster, strategy, menu, tp) {
         Some(p) => {
             println!("{}", report::explain(&model, &cluster, &p.cfg));
             if !args.has("no-sim") {

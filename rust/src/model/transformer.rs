@@ -90,9 +90,47 @@ impl TransformerShape {
     }
 
     /// Bytes of one activation checkpoint for `b` sequences: the layer
-    /// output, 2 b d_s d_m (fp16).
+    /// output, 2 b d_s d_m (fp16). Per rank this is *independent of the
+    /// tensor-parallel degree* — every tp rank holds the checkpoint in
+    /// full (the boundary all-reduce completes it before it is stored);
+    /// tp shards the live intermediates instead
+    /// ([`Self::m0_bytes_per_token_shard`]).
     pub fn checkpoint_bytes(&self, b: f64) -> Bytes {
         2.0 * b * (self.d_s * self.d_m()) as f64
+    }
+
+    // --- tensor-parallel shard arithmetic -------------------------------
+    //
+    // With Megatron-style column/row-parallel execution a tp rank owns
+    // 1/tp of every weight matrix (heads for attention, the d_I axis for
+    // the FFN) while the layernorm parameters and post-reduce biases
+    // stay replicated. These closed forms are the planner/bench-side
+    // mirror of the runtime's `ShardedLayout` — exact for the 12-tensor
+    // layer layout, not leading-order approximations.
+
+    /// Per-rank parameters of one layer at shard degree `tp`: the
+    /// (4 + 2 n_I) d_m² matrix block and the sharded biases
+    /// ((n_I + 3) d_m: b_qkv + b1) divide by tp; the replicated
+    /// layernorms and post-reduce biases (6 d_m) do not.
+    pub fn params_per_layer_shard(&self, tp: usize) -> f64 {
+        let d_m = self.d_m() as f64;
+        let n_i = self.n_i as f64;
+        ((4.0 + 2.0 * n_i) * d_m * d_m + (n_i + 3.0) * d_m) / tp as f64 + 6.0 * d_m
+    }
+
+    /// Per-rank, per-token live activation bytes at shard degree `tp`
+    /// (the sharded m₀). The layer-boundary tensors a rank materialises
+    /// in full — the attention input, the two residual sums and the
+    /// reduced block outputs, ≈ 6 values — stay whole; the head-sharded
+    /// and column-parallel intermediates (QKV, scores/softmax, context,
+    /// the FFN intermediate pair) divide by tp. tp = 1 reduces to
+    /// [`Self::m0_bytes_per_token`] exactly.
+    pub fn m0_bytes_per_token_shard(&self, tp: usize) -> Bytes {
+        let d_m = self.d_m() as f64;
+        let score = 2.0 * (self.d_a * self.d_s) as f64 / d_m;
+        let full = 6.0;
+        let sharded = 4.0 + 2.0 * self.n_i as f64 + score;
+        1.5 * 2.0 * (full + sharded / tp as f64) * d_m
     }
 }
 
@@ -117,6 +155,39 @@ mod tests {
         let b = 32.0;
         let fwd = s.fwd_flops(b * s.d_s as f64);
         assert!((s.batch_flops(b) / fwd - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shard_arithmetic_recovers_the_full_layer_at_tp1() {
+        let s = bertish();
+        assert!((s.params_per_layer_shard(1) - s.params_per_layer()).abs() < 1e-6);
+        assert!((s.m0_bytes_per_token_shard(1) - s.m0_bytes_per_token()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shard_params_scale_inversely_with_tp_up_to_replication() {
+        let s = bertish();
+        let d_m = s.d_m() as f64;
+        for tp in [2usize, 4, 8] {
+            let shard = s.params_per_layer_shard(tp);
+            // Matrix-dominated: per-rank ≈ full/tp, exactly full/tp plus
+            // the replicated 6·d_m·(1 − 1/tp).
+            let want = s.params_per_layer() / tp as f64 + 6.0 * d_m * (1.0 - 1.0 / tp as f64);
+            assert!((shard - want).abs() < 1e-6, "tp={tp}: {shard} vs {want}");
+            // All ranks together hold slightly more than one copy.
+            let total = shard * tp as f64;
+            assert!(total > s.params_per_layer() && total < s.params_per_layer() * 1.001);
+        }
+    }
+
+    #[test]
+    fn shard_m0_keeps_boundary_tensors_full() {
+        let s = bertish();
+        let m2 = s.m0_bytes_per_token_shard(2);
+        let m1 = s.m0_bytes_per_token();
+        // Strictly less than full, strictly more than half (the layer
+        // boundaries stay whole).
+        assert!(m2 < m1 && m2 > m1 / 2.0, "{m2} vs {m1}");
     }
 
     #[test]

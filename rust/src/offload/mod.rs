@@ -14,8 +14,8 @@
 pub mod store;
 
 pub use store::{
-    assemble, covers, latest_complete_step, slot_embed, slot_head, slot_pos, AssembledSlot,
-    FileStore, MemoryStore, StateRecord, StateStore,
+    assemble, covers, latest_complete_step, slot_embed, slot_head, slot_layer, slot_pos,
+    AssembledSlot, FileStore, MemoryStore, StateRecord, StateStore,
 };
 
 use crate::costmodel::{state_offload_intensity, TrainConfig};

@@ -29,15 +29,31 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::DType;
+
 /// Header magic ("LGASTORE") of a serialised [`StateRecord`].
 pub const STORE_MAGIC: u64 = 0x4c47_4153_544f_5245;
-/// Serialisation format version.
-pub const STORE_VERSION: u64 = 1;
-/// Header length in bytes: 9 u64 fields.
-const HEADER_U64S: usize = 9;
+/// Serialisation format version. v2 added the tensor-parallel shard
+/// provenance (`tp`, `tp_rank`): with truly sharded layer compute every
+/// tp rank owns a *different* slice of the state, so records carry which
+/// shard layout they were written under and resume can re-shard across a
+/// tp change.
+pub const STORE_VERSION: u64 = 2;
+/// Header length in bytes: 11 u64 fields.
+const HEADER_U64S: usize = 11;
+
+/// Slot id of one layer's state written by one tensor-parallel rank:
+/// each tp rank owns a disjoint block of `d_l + 3` slot ids, so shard
+/// records of different ranks never collide. tp rank 0's block starts at
+/// 0 — identical to the pre-sharding slot space, so tp = 1 stores are
+/// unchanged on disk.
+pub fn slot_layer(d_l: usize, tp_rank: usize, layer: usize) -> usize {
+    tp_rank * (d_l + 3) + layer
+}
 
 /// Slot id of the embedding table (the slots after the `d_l` layers hold
-/// the non-layer state: embedding, positional table, output head).
+/// the non-layer state: embedding, positional table, output head — all
+/// replicated across tp, written by tp rank 0 into its block).
 pub fn slot_embed(d_l: usize) -> usize {
     d_l
 }
@@ -74,6 +90,11 @@ pub struct StateRecord {
     /// what the split-invariant data keying and gradient scale hinge on
     /// — so resume verifies it instead of silently diverging.
     pub global_mbs: u64,
+    /// Tensor-parallel shard layout the slot's state was written under
+    /// (1 = unsharded, including replicated-compute emulation).
+    pub tp: u64,
+    /// Which tp rank's shard this slot holds (0 when `tp` is 1).
+    pub tp_rank: u64,
     /// Parameter values over `[lo, hi)`.
     pub params: Vec<f32>,
     /// Adam first moment over `[lo, hi)`.
@@ -88,9 +109,10 @@ impl StateRecord {
         (self.hi - self.lo) as usize
     }
 
-    /// Serialised size in bytes.
+    /// Serialised size in bytes: the u64 header plus three fp32 arrays
+    /// (params, m, v) sized by the dtype's per-variant width.
     pub fn byte_len(&self) -> usize {
-        8 * HEADER_U64S + 12 * self.shard_len()
+        8 * HEADER_U64S + 3 * DType::F32.bytes() * self.shard_len()
     }
 
     fn check(&self) -> Result<()> {
@@ -113,6 +135,9 @@ impl StateRecord {
                 self.hi
             );
         }
+        if self.tp == 0 || self.tp_rank >= self.tp {
+            bail!("bad shard provenance: tp rank {} of {}", self.tp_rank, self.tp);
+        }
         Ok(())
     }
 
@@ -130,6 +155,8 @@ impl StateRecord {
             self.total,
             self.adam_t,
             self.global_mbs,
+            self.tp,
+            self.tp_rank,
         ] {
             out.extend_from_slice(&x.to_le_bytes());
         }
@@ -154,18 +181,22 @@ impl StateRecord {
             bail!("unsupported record version {}", u(1));
         }
         let (step, slot, lo, hi, total, adam_t) = (u(2), u(3), u(4), u(5), u(6), u(7));
-        let global_mbs = u(8);
+        let (global_mbs, tp, tp_rank) = (u(8), u(9), u(10));
         if lo > hi || hi > total {
             bail!("bad record range [{lo}, {hi}) of {total}");
         }
+        if tp == 0 || tp_rank >= tp {
+            bail!("bad shard provenance: tp rank {tp_rank} of {tp}");
+        }
         let n = (hi - lo) as usize;
+        let w = DType::F32.bytes();
         let body = &b[8 * HEADER_U64S..];
-        if body.len() != 12 * n {
-            bail!("record body {} bytes, want {}", body.len(), 12 * n);
+        if body.len() != 3 * w * n {
+            bail!("record body {} bytes, want {}", body.len(), 3 * w * n);
         }
         let floats = |k: usize| -> Vec<f32> {
-            body[4 * k * n..4 * (k + 1) * n]
-                .chunks_exact(4)
+            body[w * k * n..w * (k + 1) * n]
+                .chunks_exact(w)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect()
         };
@@ -177,6 +208,8 @@ impl StateRecord {
             total,
             adam_t,
             global_mbs,
+            tp,
+            tp_rank,
             params: floats(0),
             m: floats(1),
             v: floats(2),
@@ -546,6 +579,8 @@ mod tests {
             total,
             adam_t: step + 1,
             global_mbs: 4,
+            tp: 1,
+            tp_rank: 0,
             params: vec![fill; n],
             m: vec![fill * 0.5; n],
             v: vec![fill * 0.25; n],
@@ -664,5 +699,33 @@ mod tests {
         assert_eq!(slot_embed(8), 8);
         assert_eq!(slot_pos(8), 9);
         assert_eq!(slot_head(8), 10);
+        // tp rank blocks: rank 0's block is the legacy slot space; every
+        // (tp_rank, layer) pair maps to a unique id past it.
+        assert_eq!(slot_layer(8, 0, 3), 3);
+        assert_eq!(slot_layer(8, 1, 0), 11);
+        assert_eq!(slot_layer(8, 1, 7), 18);
+        let mut seen = std::collections::HashSet::new();
+        for tr in 0..4 {
+            for l in 0..8 {
+                assert!(seen.insert(slot_layer(8, tr, l)));
+            }
+        }
+    }
+
+    #[test]
+    fn shard_provenance_roundtrips_and_is_validated() {
+        let mut r = rec(2, 0, 0, 4, 8, 1.0);
+        r.tp = 2;
+        r.tp_rank = 1;
+        let b = r.to_bytes().unwrap();
+        let got = StateRecord::from_bytes(&b).unwrap();
+        assert_eq!(got, r);
+        assert_eq!((got.tp, got.tp_rank), (2, 1));
+        // A rank outside its degree is rejected on both paths.
+        r.tp_rank = 2;
+        assert!(r.to_bytes().is_err());
+        let mut bad = b.clone();
+        bad[8 * 10..8 * 11].copy_from_slice(&5u64.to_le_bytes());
+        assert!(StateRecord::from_bytes(&bad).is_err());
     }
 }

@@ -52,7 +52,7 @@ pub use candidates::Candidates;
 pub use constrained::{min_gpu_plan, ConstrainedPlan};
 pub use par::{par_map, par_map_with, planner_threads};
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
-pub use search::{search_fastest, search_fastest_exhaustive};
+pub use search::{search_fastest, search_fastest_exhaustive, search_fastest_tp};
 pub use simloop::{
     lower_plan, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,
 };

@@ -66,7 +66,25 @@ pub fn search_fastest(
     strategy: Strategy,
     menu: ParallelismMenu,
 ) -> Option<Plan> {
-    let cands: Vec<TrainConfig> = Candidates::new(model, cluster, strategy, menu).collect();
+    search_fastest_tp(model, cluster, strategy, menu, None)
+}
+
+/// [`search_fastest`] restricted to one tensor-parallel degree: the
+/// `repro plan --tp N` sweep axis. `None` searches the whole n_a grid
+/// (identical to `search_fastest` — the filter preserves enumeration
+/// order, so parity with the exhaustive reference is untouched).
+pub fn search_fastest_tp(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    tp: Option<usize>,
+) -> Option<Plan> {
+    let mut cands: Vec<TrainConfig> =
+        Candidates::new(model, cluster, strategy, menu).collect();
+    if let Some(tp) = tp {
+        cands.retain(|c| c.n_a == tp);
+    }
     search_over(model, cluster, &cands)
 }
 

@@ -239,8 +239,8 @@ pub fn schedule_comparison(
     }
     let mut out = format!(
         "Schedule comparison (d_l={d_l}, n_l={n_l}, n_mu={n_mu}, tp={tp}, X_{x} layers)\n\
-         {:<20} {:>7} {:>8} {:>10} {:>8} {:>10} {:>10}\n",
-        "policy", "ops", "edges", "makespan", "bubble", "net tail", "comm"
+         {:<20} {:>3} {:>7} {:>8} {:>10} {:>8} {:>10} {:>10}\n",
+        "policy", "tp", "ops", "edges", "makespan", "bubble", "net tail", "comm"
     );
     for s in &schedules {
         let p = lower(s).expect("generated schedules lower");
@@ -250,8 +250,9 @@ pub fn schedule_comparison(
         // per-op payloads — cheap, no simulation needed.
         let comm_bytes: f64 = p.ops.iter().map(|n| costs.wire_bytes(&n.op)).sum();
         out.push_str(&format!(
-            "{:<20} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms {:>7.2}MiB\n",
+            "{:<20} {:>3} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms {:>7.2}MiB\n",
             p.name,
+            p.tp,
             p.len(),
             p.n_edges(),
             r.makespan * 1e3,
@@ -353,6 +354,12 @@ mod tests {
             );
         }
         assert!(t.contains("comm"), "comm-volume column missing:\n{t}");
+        // The tensor-parallel axis is visible per row.
+        assert!(t.lines().nth(1).unwrap().contains(" tp "), "tp column missing:\n{t}");
+        for name in ["standard-pipeline", "modular-pipeline"] {
+            let row = t.lines().find(|l| l.starts_with(name)).unwrap();
+            assert_eq!(row.split_whitespace().nth(1), Some("1"), "{row}");
+        }
     }
 
     #[test]

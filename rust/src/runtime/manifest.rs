@@ -26,8 +26,15 @@ impl DType {
         }
     }
 
+    /// Bytes per element, per variant. Every byte-accounting path
+    /// (artifact sizes, checkpoint records, wire payloads) routes
+    /// through this, so adding a half-precision variant forces the
+    /// accounting to follow instead of silently mis-sizing buffers.
     pub fn bytes(self) -> usize {
-        4
+        match self {
+            DType::F32 => 4,
+            DType::I32 => 4,
+        }
     }
 }
 
@@ -41,6 +48,11 @@ pub struct TensorSpec {
 impl TensorSpec {
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
+    }
+
+    /// Buffer size in bytes (elements × per-variant dtype width).
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.bytes()
     }
 
     fn from_json(j: &Json) -> Result<Self> {
@@ -60,6 +72,10 @@ impl TensorSpec {
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub file: PathBuf,
+    /// Tensor-parallel shard degree the artifact was compiled for (1 =
+    /// the unsharded base set; t > 1 = one rank's half-layer variant
+    /// with per-shard parameter `TensorSpec`s).
+    pub tp: usize,
     pub inputs: Vec<TensorSpec>,
     pub outputs: Vec<TensorSpec>,
 }
@@ -76,6 +92,15 @@ pub struct ModelInfo {
     pub total_params: usize,
 }
 
+/// The four half-layer artifact stems a shard degree needs.
+pub const TP_ARTIFACT_STEMS: [&str; 4] = ["attn_fwd", "ffn_fwd", "attn_bwd", "ffn_bwd"];
+
+/// The half-layer artifact name for a stem + shard degree (e.g.
+/// `attn_fwd_tp2`).
+pub fn tp_artifact_name(stem: &str, tp: usize) -> String {
+    format!("{stem}_tp{tp}")
+}
+
 /// The parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
@@ -84,6 +109,11 @@ pub struct Manifest {
     pub model: ModelInfo,
     pub layer_param_names: Vec<String>,
     pub layer_param_shapes: Vec<Vec<usize>>,
+    /// Per-rank parameter shapes for each emitted tensor-parallel shard
+    /// degree (`tp_shards` in the JSON; ordered by `layer_param_names`).
+    /// The python side is the single source of shape truth — the Rust
+    /// runtime validates against these, never re-deriving them.
+    pub tp_shards: BTreeMap<usize, Vec<Vec<usize>>>,
     pub artifacts: BTreeMap<String, ArtifactSpec>,
     /// Directory the artifact files are relative to.
     pub root: PathBuf,
@@ -96,7 +126,12 @@ impl Manifest {
         let path = root.join(preset).join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
-        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        Self::parse(&text, root).map_err(|e| anyhow::anyhow!("{path:?}: {e:#}"))
+    }
+
+    /// Parse manifest JSON with artifact paths rooted at `root`.
+    pub fn parse(text: &str, root: PathBuf) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
 
         let m = j.req("model")?;
         let geti = |k: &str| -> Result<usize> {
@@ -120,22 +155,45 @@ impl Manifest {
             .map(|v| v.as_str().unwrap_or_default().to_string())
             .collect();
         let shapes_obj = j.req("layer_param_shapes")?;
-        let layer_param_shapes = layer_param_names
-            .iter()
-            .map(|n| -> Result<Vec<usize>> {
-                Ok(shapes_obj
-                    .req(n)?
-                    .as_arr()
-                    .context("shape")?
-                    .iter()
-                    .map(|v| v.as_usize().unwrap_or(0))
-                    .collect())
-            })
-            .collect::<Result<Vec<_>>>()?;
+        let shape_list = |obj: &Json, names: &[String]| -> Result<Vec<Vec<usize>>> {
+            names
+                .iter()
+                .map(|n| -> Result<Vec<usize>> {
+                    Ok(obj
+                        .req(n)?
+                        .as_arr()
+                        .context("shape")?
+                        .iter()
+                        .map(|v| v.as_usize().unwrap_or(0))
+                        .collect())
+                })
+                .collect()
+        };
+        let layer_param_shapes = shape_list(shapes_obj, &layer_param_names)?;
+
+        // tp_shards is optional: manifests compiled before the sharded
+        // variants existed simply support tp via replicated emulation.
+        let mut tp_shards = BTreeMap::new();
+        if let Some(shards) = j.get("tp_shards") {
+            for (key, entry) in shards.as_obj().context("tp_shards")? {
+                let tp: usize = key.parse().with_context(|| format!("tp_shards key {key}"))?;
+                if tp < 2 {
+                    bail!("tp_shards degree {tp} must be at least 2");
+                }
+                let shapes =
+                    shape_list(entry.req("layer_param_shapes")?, &layer_param_names)?;
+                tp_shards.insert(tp, shapes);
+            }
+        }
 
         let mut artifacts = BTreeMap::new();
         for (name, art) in j.req("artifacts")?.as_obj().context("artifacts")? {
             let file = root.join(art.req("file")?.as_str().context("file")?);
+            // Optional for manifests predating the sharded variants.
+            let tp = match art.get("tp") {
+                Some(v) => v.as_usize().context("artifact tp")?,
+                None => 1,
+            };
             let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
                 art.req(key)?
                     .as_arr()
@@ -146,7 +204,12 @@ impl Manifest {
             };
             artifacts.insert(
                 name.clone(),
-                ArtifactSpec { file, inputs: parse_list("inputs")?, outputs: parse_list("outputs")? },
+                ArtifactSpec {
+                    file,
+                    tp,
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
             );
         }
 
@@ -156,6 +219,7 @@ impl Manifest {
             model,
             layer_param_names,
             layer_param_shapes,
+            tp_shards,
             artifacts,
             root,
         })
@@ -168,6 +232,38 @@ impl Manifest {
     /// Parameter element-count of one transformer layer.
     pub fn layer_param_elements(&self) -> usize {
         self.layer_param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Per-rank parameter shapes at shard degree `tp` (from the
+    /// manifest's `tp_shards`); `None` when the degree was not emitted.
+    pub fn shard_param_shapes(&self, tp: usize) -> Option<&Vec<Vec<usize>>> {
+        self.tp_shards.get(&tp)
+    }
+
+    /// Per-rank parameter element-count of one layer at shard degree
+    /// `tp` (tp = 1 is the full layer).
+    pub fn layer_param_elements_tp(&self, tp: usize) -> Result<usize> {
+        if tp == 1 {
+            return Ok(self.layer_param_elements());
+        }
+        let shapes = self
+            .shard_param_shapes(tp)
+            .with_context(|| format!("manifest has no tp = {tp} shard shapes"))?;
+        Ok(shapes.iter().map(|s| s.iter().product::<usize>()).sum())
+    }
+
+    /// Whether the manifest carries everything truly-sharded execution
+    /// at degree `tp` needs: the per-rank shapes and all four half-layer
+    /// artifacts. Degree 1 is always supported (the unsharded base set).
+    pub fn supports_tp(&self, tp: usize) -> bool {
+        if tp == 1 {
+            return true;
+        }
+        self.tp_shards.contains_key(&tp)
+            && TP_ARTIFACT_STEMS
+                .iter()
+                .all(|stem| self.artifacts.contains_key(&tp_artifact_name(stem, tp)))
+            && self.model.n_heads % tp == 0
     }
 }
 
@@ -190,12 +286,113 @@ mod tests {
         assert_eq!(m.preset, "tiny");
         assert_eq!(m.model.d_model, 64);
         assert_eq!(m.layer_param_names.len(), 12);
-        assert_eq!(m.artifacts.len(), 5);
+        // 5 base artifacts, plus 4 half-layer variants per tp degree.
+        assert_eq!(m.artifacts.len(), 5 + 4 * m.tp_shards.len());
         let lf = m.artifact("layer_fwd").unwrap();
+        assert_eq!(lf.tp, 1);
         assert_eq!(lf.inputs.len(), 13);
         assert_eq!(lf.outputs.len(), 1);
         assert_eq!(lf.outputs[0].shape, vec![m.batch, m.model.d_seq, m.model.d_model]);
         assert!(lf.file.exists());
+    }
+
+    #[test]
+    fn sharded_variants_validate_per_shard_specs() {
+        let root = artifacts_root();
+        if !root.join("tiny/manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&root, "tiny").unwrap();
+        if !m.supports_tp(2) {
+            eprintln!("skipping: artifacts built without tp variants");
+            return;
+        }
+        let shapes = m.shard_param_shapes(2).unwrap();
+        // Sharded matrices carry 1/tp of the full elements; replicated
+        // vectors are unchanged — per-rank total strictly between.
+        let full = m.layer_param_elements();
+        let shard = m.layer_param_elements_tp(2).unwrap();
+        assert!(shard > full / 2 && shard < full, "{shard} vs {full}");
+        // The half-layer artifacts consume exactly the sharded specs,
+        // then full activations.
+        let attn = m.artifact(&tp_artifact_name("attn_fwd", 2)).unwrap();
+        assert_eq!(attn.tp, 2);
+        for (spec, shape) in attn.inputs.iter().zip(&shapes[..6]) {
+            assert_eq!(&spec.shape, shape);
+        }
+        let act = vec![m.batch, m.model.d_seq, m.model.d_model];
+        assert_eq!(attn.inputs[6].shape, act);
+        assert_eq!(attn.outputs[0].shape, act);
+        let ffn_bwd = m.artifact(&tp_artifact_name("ffn_bwd", 2)).unwrap();
+        assert_eq!(ffn_bwd.inputs.len(), 8);
+        assert_eq!(ffn_bwd.outputs.len(), 7);
+        for (spec, shape) in ffn_bwd.outputs.iter().zip(&shapes[6..12]) {
+            assert_eq!(&spec.shape, shape);
+        }
+        assert!(attn.file.exists() && ffn_bwd.file.exists());
+    }
+
+    /// Synthetic-JSON parsing tests (no artifacts needed): the tp-shard
+    /// schema round-trips and gates `supports_tp`.
+    fn synthetic(tp_shards: &str, extra_artifacts: &str) -> String {
+        format!(
+            r#"{{
+  "preset": "syn", "batch": 1,
+  "model": {{"vocab": 8, "d_model": 4, "n_heads": 2, "d_seq": 2,
+             "n_layers": 1, "d_ffn": 16, "total_params": 100}},
+  "layer_param_names": ["w_qkv", "w_o"],
+  "layer_param_shapes": {{"w_qkv": [4, 12], "w_o": [4, 4]}},
+  {tp_shards}
+  "artifacts": {{
+    "layer_fwd": {{"file": "syn/layer_fwd.hlo.txt",
+                   "inputs": [{{"shape": [4, 12], "dtype": "float32"}}],
+                   "outputs": [{{"shape": [1, 2, 4], "dtype": "float32"}}]}}
+    {extra_artifacts}
+  }}
+}}"#
+        )
+    }
+
+    #[test]
+    fn parses_tp_shard_schema() {
+        let tp = r#""tp_shards": {"2": {"layer_param_shapes":
+                      {"w_qkv": [4, 6], "w_o": [2, 4]}}},"#;
+        let mut arts = String::new();
+        for stem in TP_ARTIFACT_STEMS {
+            arts.push_str(&format!(
+                r#", "{}": {{"file": "syn/x.hlo.txt", "tp": 2,
+                     "inputs": [{{"shape": [4, 6], "dtype": "float32"}}],
+                     "outputs": [{{"shape": [1, 2, 4], "dtype": "float32"}}]}}"#,
+                tp_artifact_name(stem, 2)
+            ));
+        }
+        let m = Manifest::parse(&synthetic(tp, &arts), PathBuf::from("/tmp")).unwrap();
+        assert_eq!(m.tp_shards.len(), 1);
+        assert_eq!(m.shard_param_shapes(2).unwrap()[0], vec![4, 6]);
+        assert_eq!(m.layer_param_elements_tp(2).unwrap(), 24 + 8);
+        assert_eq!(m.layer_param_elements_tp(1).unwrap(), 48 + 16);
+        assert!(m.supports_tp(1) && m.supports_tp(2));
+        assert!(!m.supports_tp(4), "no tp=4 shapes/artifacts");
+        assert_eq!(m.artifact("attn_fwd_tp2").unwrap().tp, 2);
+    }
+
+    #[test]
+    fn manifests_without_tp_shards_fall_back_to_emulation() {
+        let m = Manifest::parse(&synthetic("", ""), PathBuf::from("/tmp")).unwrap();
+        assert!(m.tp_shards.is_empty());
+        assert!(m.supports_tp(1));
+        assert!(!m.supports_tp(2));
+        assert!(m.layer_param_elements_tp(2).is_err());
+        // Artifacts without a tp field default to the base set.
+        assert_eq!(m.artifact("layer_fwd").unwrap().tp, 1);
+    }
+
+    #[test]
+    fn dtype_bytes_are_per_variant_and_size_specs() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::I32.bytes(), 4);
+        let spec = TensorSpec { shape: vec![3, 5], dtype: DType::F32 };
+        assert_eq!(spec.byte_len(), 15 * DType::F32.bytes());
     }
 
     #[test]

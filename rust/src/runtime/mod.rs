@@ -8,4 +8,6 @@ pub mod manifest;
 
 pub use executor::{Engine, HostTensor};
 pub use json::{Json, JsonError};
-pub use manifest::{ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec};
+pub use manifest::{
+    tp_artifact_name, ArtifactSpec, DType, Manifest, ModelInfo, TensorSpec, TP_ARTIFACT_STEMS,
+};

@@ -39,11 +39,17 @@ pub struct TrainerConfig {
     pub n_l: usize,
     /// Micro-batches per step per data-parallel instance.
     pub n_mu: usize,
-    /// Tensor-parallel degree (n_a). Each pipeline stage is replicated
-    /// over `tp` ranks executing the per-layer `TensorAllReduce`
-    /// collectives of C.4.3 over the [`crate::collective::CommWorld`]
-    /// tp group; 1 disables tensor parallelism.
+    /// Tensor-parallel degree (n_a). Each pipeline stage spans `tp`
+    /// ranks executing the per-layer `TensorAllReduce` collectives of
+    /// C.4.3 over the [`crate::collective::CommWorld`] tp group — truly
+    /// sharded column/row-parallel compute when the manifest carries the
+    /// `_tp<d>` half-layer artifacts, replicated-compute emulation
+    /// otherwise; 1 disables tensor parallelism.
     pub tp: usize,
+    /// Force replicated-compute emulation even when sharded artifacts
+    /// are available — the mode whose tp = 2 loss trajectory bit-matches
+    /// tp = 1 (sharded execution matches within tolerance instead).
+    pub force_tp_emulation: bool,
     pub policy: Policy,
     /// ZeRO-3-style state partition over the data-parallel group.
     pub partition: bool,
@@ -74,6 +80,7 @@ impl TrainerConfig {
             n_l: 1,
             n_mu: 1,
             tp: 1,
+            force_tp_emulation: false,
             policy: Policy::Improved,
             partition: false,
             offload: false,

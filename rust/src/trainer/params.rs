@@ -78,6 +78,218 @@ pub fn init_matrix(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Vec<f
     (0..rows * cols).map(|_| scale * rng.normal() as f32).collect()
 }
 
+/// How one layer tensor shards across the tensor-parallel ring
+/// (Megatron-style column/row-parallel cut points, by parameter name).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardRule {
+    /// Replicated on every rank (layernorms and the post-reduce biases).
+    Full,
+    /// Row-sharded: rank r owns rows [r·R/tp, (r+1)·R/tp) — the
+    /// row-parallel w_o / w2 whose partial outputs feed an all-reduce.
+    Rows,
+    /// Column-sharded in `g` equal groups: rank r owns the same fraction
+    /// of every group (g = 3 for the fused q|k|v axis, 1 for w1/b1).
+    ColGroups(usize),
+}
+
+/// The cut point for each parameter of the shared 12-name layout.
+pub fn shard_rule(name: &str) -> ShardRule {
+    match name {
+        "w_qkv" | "b_qkv" => ShardRule::ColGroups(3),
+        "w1" | "b1" => ShardRule::ColGroups(1),
+        "w_o" | "w2" => ShardRule::Rows,
+        _ => ShardRule::Full,
+    }
+}
+
+/// Byte/element layout of one rank's *sharded* flat parameter buffer at
+/// tensor-parallel degree `tp`, plus the full↔shard index maps that
+/// power checkpoint re-sharding. Shapes are rank-independent (every
+/// rank's shard has the same shape; the *content* differs by rank).
+#[derive(Debug, Clone)]
+pub struct ShardedLayout {
+    pub tp: usize,
+    /// The unsharded layout (shapes shared with tp = 1 state).
+    pub full: LayerLayout,
+    /// Sharded per-tensor shapes, in layout order.
+    pub shapes: Vec<Vec<usize>>,
+    pub offsets: Vec<usize>,
+    pub total: usize,
+    rules: Vec<ShardRule>,
+    /// Indices of the post-reduce biases (b_o, b2): replicated
+    /// parameters that must enter the artifact exactly once, so their
+    /// input is zeroed on every rank but tp rank 0.
+    bias_after_reduce: Vec<usize>,
+    /// `(offset, len)` spans of the layernorm parameters within the
+    /// sharded flat buffer: their gradients flow through the sharded
+    /// GEMMs and are *partial* per rank — the worker tp-all-reduces
+    /// exactly these spans at gradient-reduction time.
+    grad_tp_spans: Vec<(usize, usize)>,
+}
+
+impl ShardedLayout {
+    /// Build from the manifest's `tp_shards` shapes (python is the shape
+    /// source of truth); cross-checks them against the rule arithmetic.
+    pub fn from_manifest(m: &Manifest, tp: usize) -> anyhow::Result<Self> {
+        use anyhow::{bail, Context};
+        let full = LayerLayout::from_manifest(m);
+        let shapes = m
+            .shard_param_shapes(tp)
+            .with_context(|| format!("manifest has no tp = {tp} shard shapes"))?
+            .clone();
+        if m.model.n_heads % tp != 0 {
+            bail!("tp = {tp} does not divide n_heads = {}", m.model.n_heads);
+        }
+        let mut rules = Vec::with_capacity(full.names.len());
+        let mut offsets = Vec::with_capacity(full.names.len());
+        let mut bias_after_reduce = Vec::new();
+        let mut grad_tp_spans = Vec::new();
+        let mut total = 0usize;
+        for (i, name) in full.names.iter().enumerate() {
+            let rule = shard_rule(name);
+            let fs = &full.shapes[i];
+            let want: Vec<usize> = match rule {
+                ShardRule::Full => fs.clone(),
+                ShardRule::Rows => {
+                    if fs[0] % tp != 0 {
+                        bail!("{name}: {} rows not divisible by tp = {tp}", fs[0]);
+                    }
+                    let mut s = fs.clone();
+                    s[0] /= tp;
+                    s
+                }
+                ShardRule::ColGroups(g) => {
+                    let cols = *fs.last().unwrap();
+                    if cols % (g * tp) != 0 {
+                        bail!("{name}: {cols} cols not divisible by {g}·tp");
+                    }
+                    let mut s = fs.clone();
+                    *s.last_mut().unwrap() = cols / tp;
+                    s
+                }
+            };
+            if want != shapes[i] {
+                bail!(
+                    "{name}: manifest shard shape {:?} does not match the \
+                     {rule:?} cut of {:?} at tp = {tp} (expected {want:?})",
+                    shapes[i],
+                    fs
+                );
+            }
+            let n: usize = want.iter().product();
+            if matches!(rule, ShardRule::Full) {
+                if name == "b_o" || name == "b2" {
+                    bias_after_reduce.push(i);
+                } else {
+                    grad_tp_spans.push((total, n));
+                }
+            }
+            rules.push(rule);
+            offsets.push(total);
+            total += n;
+        }
+        Ok(ShardedLayout {
+            tp,
+            full,
+            shapes,
+            offsets,
+            total,
+            rules,
+            bias_after_reduce,
+            grad_tp_spans,
+        })
+    }
+
+    /// Enumerate rank `rank`'s corresponding contiguous spans as
+    /// `(full_start, shard_start, len)` pairs — the one index map behind
+    /// gather, scatter and the re-shard path of an elastic resume.
+    fn for_spans(&self, rank: usize, mut f: impl FnMut(usize, usize, usize)) {
+        for i in 0..self.shapes.len() {
+            let fo = self.full.offsets[i];
+            let so = self.offsets[i];
+            let n_shard: usize = self.shapes[i].iter().product();
+            match self.rules[i] {
+                ShardRule::Full => f(fo, so, n_shard),
+                // Row blocks are contiguous in row-major flats.
+                ShardRule::Rows => f(fo + rank * n_shard, so, n_shard),
+                ShardRule::ColGroups(g) => {
+                    let fs = &self.full.shapes[i];
+                    let cols = *fs.last().unwrap();
+                    let rows = fs.iter().product::<usize>() / cols;
+                    let w = cols / g; // full group width
+                    let ws = w / self.tp; // shard width per group
+                    let cols_s = cols / self.tp;
+                    for r in 0..rows {
+                        for k in 0..g {
+                            f(fo + r * cols + k * w + rank * ws, so + r * cols_s + k * ws, ws);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slice rank `rank`'s shard out of a full flat buffer.
+    pub fn gather(&self, full: &[f32], rank: usize) -> Vec<f32> {
+        assert_eq!(full.len(), self.full.total);
+        let mut shard = vec![0.0f32; self.total];
+        self.for_spans(rank, |fa, sa, n| shard[sa..sa + n].copy_from_slice(&full[fa..fa + n]));
+        shard
+    }
+
+    /// Write rank `rank`'s shard back into a full flat buffer (the
+    /// re-shard path of an elastic resume: every writer rank scatters,
+    /// together reconstructing the full state).
+    pub fn scatter(&self, shard: &[f32], rank: usize, full: &mut [f32]) {
+        assert_eq!(shard.len(), self.total);
+        assert_eq!(full.len(), self.full.total);
+        self.for_spans(rank, |fa, sa, n| full[fa..fa + n].copy_from_slice(&shard[sa..sa + n]));
+    }
+
+    /// HostTensor views of one *half* of the sharded flat buffer in
+    /// artifact argument order: indices `[start, start + 6)` (attention
+    /// half starts at 0, FFN half at 6). Post-reduce biases are zeroed
+    /// for tp rank > 0 so the summed partials apply them exactly once —
+    /// the stored parameter stays replicated, only the artifact input is
+    /// masked.
+    pub fn half_tensors(&self, flat: &[f32], start: usize, tp_rank: usize) -> Vec<HostTensor> {
+        (start..start + 6)
+            .map(|i| {
+                let n: usize = self.shapes[i].iter().product();
+                let a = self.offsets[i];
+                let data = if tp_rank > 0 && self.bias_after_reduce.contains(&i) {
+                    vec![0.0; n]
+                } else {
+                    flat[a..a + n].to_vec()
+                };
+                HostTensor::f32(self.shapes[i].clone(), data)
+            })
+            .collect()
+    }
+
+    /// Scatter one half's per-tensor gradients (artifact outputs
+    /// `[..6]`) into the sharded flat accumulator starting at layout
+    /// index `start`.
+    pub fn accumulate_half(&self, acc: &mut [f32], grads: &[HostTensor], start: usize) {
+        assert!(grads.len() >= 6);
+        for (k, g) in grads.iter().take(6).enumerate() {
+            let i = start + k;
+            let data = g.as_f32().expect("grad dtype");
+            let a = self.offsets[i];
+            for (dst, src) in acc[a..a + data.len()].iter_mut().zip(data) {
+                *dst += src;
+            }
+        }
+    }
+
+    /// The flat spans whose gradients are partial per tp rank (the
+    /// layernorm parameters) — the worker all-reduces exactly these
+    /// over the tp ring before the optimizer consumes them.
+    pub fn grad_tp_spans(&self) -> &[(usize, usize)] {
+        &self.grad_tp_spans
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -109,6 +321,136 @@ mod tests {
         let mut acc = vec![0.0f32; l.total];
         l.accumulate(&mut acc, &tensors);
         assert_eq!(acc, flat);
+    }
+
+    /// A self-contained manifest (d_m = 4, 2 heads, d_I = 8) so the
+    /// shard arithmetic is testable without built artifacts.
+    fn synthetic_manifest(with_tp2: bool) -> Manifest {
+        let shapes = r#"{
+            "ln1_g": [4], "ln1_b": [4], "w_qkv": [4, 12], "b_qkv": [12],
+            "w_o": [4, 4], "b_o": [4], "ln2_g": [4], "ln2_b": [4],
+            "w1": [4, 8], "b1": [8], "w2": [8, 4], "b2": [4]}"#;
+        let tp = if with_tp2 {
+            r#""tp_shards": {"2": {"layer_param_shapes": {
+                "ln1_g": [4], "ln1_b": [4], "w_qkv": [4, 6], "b_qkv": [6],
+                "w_o": [2, 4], "b_o": [4], "ln2_g": [4], "ln2_b": [4],
+                "w1": [4, 4], "b1": [4], "w2": [4, 4], "b2": [4]}}},"#
+        } else {
+            ""
+        };
+        let names = r#"["ln1_g", "ln1_b", "w_qkv", "b_qkv", "w_o", "b_o",
+                        "ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]"#;
+        let text = format!(
+            r#"{{"preset": "syn", "batch": 1,
+                "model": {{"vocab": 8, "d_model": 4, "n_heads": 2, "d_seq": 2,
+                           "n_layers": 1, "d_ffn": 8, "total_params": 100}},
+                "layer_param_names": {names},
+                "layer_param_shapes": {shapes},
+                {tp}
+                "artifacts": {{}}}}"#
+        );
+        Manifest::parse(&text, std::path::PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn sharded_layout_shapes_and_offsets() {
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        assert_eq!(s.total, m.layer_param_elements_tp(2).unwrap());
+        for i in 1..s.offsets.len() {
+            let prev: usize = s.shapes[i - 1].iter().product();
+            assert_eq!(s.offsets[i], s.offsets[i - 1] + prev);
+        }
+        // Sharded matrices halve; replicated vectors do not: the
+        // per-rank total sits strictly between half and full.
+        assert!(s.total > s.full.total / 2 && s.total < s.full.total);
+        // Missing shard shapes must fail loudly.
+        assert!(ShardedLayout::from_manifest(&synthetic_manifest(false), 2).is_err());
+    }
+
+    #[test]
+    fn gather_scatter_roundtrips_every_rank() {
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        let full: Vec<f32> = (0..s.full.total).map(|i| i as f32).collect();
+        let shards: Vec<Vec<f32>> = (0..2).map(|r| s.gather(&full, r)).collect();
+        // Shards of sharded tensors are disjoint; scattering both back
+        // reconstructs the full buffer exactly.
+        let mut rebuilt = vec![-1.0f32; s.full.total];
+        for (r, shard) in shards.iter().enumerate() {
+            s.scatter(shard, r, &mut rebuilt);
+        }
+        assert_eq!(rebuilt, full);
+        // Rank shards differ (different columns/rows) but replicated
+        // tensors agree.
+        assert_ne!(shards[0], shards[1]);
+        let (a, n) = (s.offsets[0], 4usize); // ln1_g span
+        assert_eq!(&shards[0][a..a + n], &shards[1][a..a + n]);
+    }
+
+    #[test]
+    fn column_groups_map_matches_qkv_slicing() {
+        // w_qkv (4 rows × 12 cols, groups q|k|v of width 4): rank 1's
+        // shard must be columns {2,3, 6,7, 10,11} of every row.
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        let full: Vec<f32> = (0..s.full.total).map(|i| i as f32).collect();
+        let shard = s.gather(&full, 1);
+        let fo = s.full.offsets[2]; // w_qkv
+        let so = s.offsets[2];
+        for row in 0..4 {
+            for (j, col) in [2usize, 3, 6, 7, 10, 11].into_iter().enumerate() {
+                assert_eq!(shard[so + row * 6 + j], full[fo + row * 12 + col]);
+            }
+        }
+    }
+
+    #[test]
+    fn half_tensors_mask_post_reduce_biases_off_rank0() {
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        let flat: Vec<f32> = (0..s.total).map(|i| 1.0 + i as f32).collect();
+        let attn0 = s.half_tensors(&flat, 0, 0);
+        let attn1 = s.half_tensors(&flat, 0, 1);
+        assert_eq!(attn0.len(), 6);
+        // b_o is index 5 of the attention half: real on rank 0, zeroed
+        // on rank 1; everything else identical.
+        assert!(attn0[5].as_f32().unwrap().iter().all(|&v| v > 0.0));
+        assert!(attn1[5].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        for i in 0..5 {
+            assert_eq!(attn0[i], attn1[i]);
+        }
+        let ffn1 = s.half_tensors(&flat, 6, 1);
+        assert!(ffn1[5].as_f32().unwrap().iter().all(|&v| v == 0.0), "b2 masked");
+    }
+
+    #[test]
+    fn grad_tp_spans_cover_exactly_the_layernorm_params() {
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        let spans = s.grad_tp_spans();
+        // ln1_g, ln1_b, ln2_g, ln2_b — 4 spans of d_m = 4 elements.
+        assert_eq!(spans.len(), 4);
+        assert!(spans.iter().all(|&(_, n)| n == 4));
+        let expect: Vec<usize> = [0usize, 1, 6, 7].iter().map(|&i| s.offsets[i]).collect();
+        assert_eq!(spans.iter().map(|&(o, _)| o).collect::<Vec<_>>(), expect);
+    }
+
+    #[test]
+    fn accumulate_half_targets_the_right_tensors() {
+        let m = synthetic_manifest(true);
+        let s = ShardedLayout::from_manifest(&m, 2).unwrap();
+        let mut acc = vec![0.0f32; s.total];
+        let ones: Vec<HostTensor> = (6..12)
+            .map(|i| {
+                let n: usize = s.shapes[i].iter().product();
+                HostTensor::f32(s.shapes[i].clone(), vec![1.0; n])
+            })
+            .collect();
+        s.accumulate_half(&mut acc, &ones, 6);
+        let ffn_start = s.offsets[6];
+        assert!(acc[..ffn_start].iter().all(|&v| v == 0.0));
+        assert!(acc[ffn_start..].iter().all(|&v| v == 1.0));
     }
 
     #[test]

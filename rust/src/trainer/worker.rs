@@ -11,15 +11,33 @@
 //! [`ScheduleProgram::check_inorder_executable`] in
 //! [`super::train`].
 //!
-//! Tensor parallelism executes as *replicated-compute emulation*: every
-//! tp rank runs the full layer math from the same seed, and each
-//! `TensorAllReduce` ring-sums its tensor over the tp group and
-//! post-scales by 1/tp — an exact identity on the replicated values
-//! (bit-exact for tp = 2 on every finite value, subnormals included)
-//! that moves the real 2·(tp−1)/tp per-rank wire traffic the cost model
-//! prices. The collective itself is the deterministic ring, so all tp
-//! ranks stay bit-identical, which is what keeps a tp = 2 run's loss
-//! trajectory equal to the tp = 1 run's.
+//! Tensor parallelism executes in one of two modes:
+//!
+//! * **Sharded execution** (the default when the manifest carries the
+//!   tp shard variants): Megatron-style column/row-parallel compute.
+//!   Each tp rank owns 1/tp of every layer matrix (attention sharded by
+//!   heads, FFN column-parallel first GEMM / row-parallel second GEMM)
+//!   and runs the layer as two half-layer artifacts with *partial-sum*
+//!   outputs. Three ring all-reduces complete a backward pass (two
+//!   forward): the mid-layer attention reduce inside the Fwd/Bwd op, the
+//!   FFN input-gradient reduce inside Bwd, and the layer-boundary reduce
+//!   that is the scheduled `TensorAllReduce` op. Per-rank parameters,
+//!   gradients, Adam state and checkpoint records all shrink to the
+//!   owned shard ([`super::params::ShardedLayout`]); layernorm gradients
+//!   are partial per rank and are tp-all-reduced at gradient-reduction
+//!   time. tp = 2 matches tp = 1 within a tight tolerance (the
+//!   row-parallel partial sums reassociate one reduction axis); the
+//!   head-sharded and column-parallel intermediates are bitwise-exact
+//!   under sharding (proved in `python/tests/test_model_tp.py`).
+//!
+//! * **Replicated-compute emulation** (manifests without shard variants,
+//!   or `force_tp_emulation`): every tp rank runs the full layer math
+//!   from the same seed, and each `TensorAllReduce` ring-sums its tensor
+//!   over the tp group and post-scales by 1/tp — an exact identity on
+//!   the replicated values (bit-exact for tp = 2 on every finite value,
+//!   subnormals included) that moves the real 2·(tp−1)/tp per-rank wire
+//!   traffic the cost model prices, so a tp = 2 run's loss trajectory
+//!   equals the tp = 1 run's bit for bit.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -29,14 +47,14 @@ use anyhow::{bail, Context, Result};
 use crate::collective::{CommWorld, RingGroup};
 use crate::data::Corpus;
 use crate::offload::store::{
-    assemble, slot_embed, slot_head, slot_pos, StateRecord, StateStore,
+    assemble, slot_embed, slot_head, slot_layer, slot_pos, StateRecord, StateStore,
 };
 use crate::optim::{Adam, AdamConfig, LrSchedule};
 use crate::partition::ShardMap;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{tp_artifact_name, Engine, HostTensor};
 use crate::schedule::{Op, ScheduleProgram};
 
-use super::params::{init_matrix, LayerLayout};
+use super::params::{init_matrix, LayerLayout, ShardedLayout};
 
 /// Everything a worker thread needs (all Send; the PJRT engine is
 /// created inside the thread).
@@ -58,6 +76,14 @@ pub struct WorkerCtx {
     /// Whether the schedule streams real-time checkpoints
     /// (`OffloadStore` ops write to `store`).
     pub offload: bool,
+    /// Whether tp > 1 runs truly sharded layer compute (decided once by
+    /// the trainer from the manifest's shard support and the
+    /// `force_tp_emulation` config; every worker must agree).
+    pub tp_sharded: bool,
+    /// Shard degree of the checkpoint being resumed (1 = unsharded;
+    /// meaningful only when `start_step > 0`). May differ from the
+    /// current topology's tp — resume re-shards.
+    pub ckpt_tp: usize,
     /// Checkpoint store; present when offloading and/or resuming.
     pub store: Option<Arc<dyn StateStore>>,
     /// The compiled schedule shared by every worker (and by the validator
@@ -79,8 +105,16 @@ pub struct WorkerStats {
     /// gradients).
     pub pipeline_elems_sent: u64,
     /// Payload elements sent on the tensor-parallel ring
-    /// (`TensorAllReduce` ops).
+    /// (`TensorAllReduce` ops and, under sharded execution, the
+    /// mid-layer reduces and layernorm-gradient reduces).
     pub tp_elems_sent: u64,
+    /// Measured resident bytes of this rank's layer parameters + Adam
+    /// moments (the state tensor parallelism shards — ≈ 1/tp per rank
+    /// under sharded execution).
+    pub layer_state_bytes: u64,
+    /// Measured resident parameter + optimizer bytes including the
+    /// replicated embedding/positional/head state.
+    pub total_state_bytes: u64,
     pub wall_secs: f64,
 }
 
@@ -125,6 +159,78 @@ fn tp_all_reduce(group: &mut RingGroup, data: &mut [f32]) {
     }
 }
 
+/// `dst += src`, elementwise — the residual adds that complete a
+/// reduced partial sum (x2 = x + Σ attn_part, dx2 = dy + Σ dh_part, …).
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Tensor-parallel all-reduce of the layernorm-gradient spans of one
+/// layer's sharded flat gradient buffer: those gradients flow through
+/// the sharded GEMMs, so each rank holds a *partial* — the ring sum
+/// completes them (one bunched collective per layer per step).
+fn tp_reduce_spans(group: &mut RingGroup, g: &mut [f32], spans: &[(usize, usize)]) {
+    if group.n <= 1 || spans.is_empty() {
+        return;
+    }
+    let total: usize = spans.iter().map(|&(_, n)| n).sum();
+    let mut buf = Vec::with_capacity(total);
+    for &(o, n) in spans {
+        buf.extend_from_slice(&g[o..o + n]);
+    }
+    group.all_reduce(&mut buf);
+    let mut at = 0usize;
+    for &(o, n) in spans {
+        g[o..o + n].copy_from_slice(&buf[at..at + n]);
+        at += n;
+    }
+}
+
+/// Reassemble one layer's *full* (unsharded) state from a checkpoint
+/// written at shard degree `wtp`: each writer rank's slot is stitched
+/// from its dp cover, then scattered back through the writer's shard
+/// layout — the tp half of elastic resume. The caller re-slices the
+/// result to its own shard (or keeps it whole at tp = 1).
+fn assemble_layer_full(
+    store: &dyn StateStore,
+    step: u64,
+    d_l: usize,
+    layer: usize,
+    full_total: usize,
+    wlayout: Option<&ShardedLayout>,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, u64)> {
+    let Some(wl) = wlayout else {
+        let s = assemble(&store.read(step, slot_layer(d_l, 0, layer) as u64)?, full_total)
+            .with_context(|| format!("layer {layer} checkpoint at step {step}"))?;
+        return Ok((s.params, s.m, s.v, s.adam_t));
+    };
+    let wtp = wl.tp;
+    let mut params = vec![0.0f32; full_total];
+    let mut m = vec![0.0f32; full_total];
+    let mut v = vec![0.0f32; full_total];
+    let mut adam_t = 0u64;
+    for r in 0..wtp {
+        let slot = assemble(&store.read(step, slot_layer(d_l, r, layer) as u64)?, wl.total)
+            .with_context(|| {
+                format!("layer {layer} tp-shard {r}/{wtp} checkpoint at step {step}")
+            })?;
+        if r > 0 && slot.adam_t != adam_t {
+            bail!(
+                "layer {layer}: tp shards disagree on the Adam step ({} vs {adam_t})",
+                slot.adam_t
+            );
+        }
+        adam_t = slot.adam_t;
+        wl.scatter(&slot.params, r, &mut params);
+        wl.scatter(&slot.m, r, &mut m);
+        wl.scatter(&slot.v, r, &mut v);
+    }
+    Ok((params, m, v, adam_t))
+}
+
 /// Run the embedding backward for one micro-batch's (reduced) input
 /// gradient, accumulating into the embedding-table and positional
 /// gradients.
@@ -155,9 +261,12 @@ fn embed_backward(
     Ok(())
 }
 
-/// Stream one whole (unsharded) slot — params + Adam state — to the
-/// checkpoint store. Used for the replicated tensors (embedding /
-/// positional / head, and full layers when the state is not partitioned).
+/// Stream one whole (dp-unsharded) slot — params + Adam state — to the
+/// checkpoint store. `(tp, tp_rank)` records the slot's tensor-parallel
+/// provenance: (1, 0) for replicated tensors (embedding / positional /
+/// head, and full layers under emulation), the writer's shard
+/// coordinates for sharded layer slots.
+#[allow(clippy::too_many_arguments)]
 fn store_full_slot(
     store: &dyn StateStore,
     step: usize,
@@ -165,6 +274,8 @@ fn store_full_slot(
     global_mbs: u64,
     params: &[f32],
     adam: &Adam,
+    tp: usize,
+    tp_rank: usize,
 ) -> Result<()> {
     let (m, v, t) = adam.state();
     store.put(&StateRecord {
@@ -175,6 +286,8 @@ fn store_full_slot(
         total: params.len() as u64,
         adam_t: t,
         global_mbs,
+        tp: tp as u64,
+        tp_rank: tp_rank as u64,
         params: params.to_vec(),
         m: m.to_vec(),
         v: v.to_vec(),
@@ -196,14 +309,26 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let (dp_rank, stage) = (rank.dp, rank.stage);
     let n_b = topo.dp;
     let has_tp = topo.tp > 1;
-    // Replicated state (checkpoints, loss) is written by tp rank 0 only.
+    let tp_rank = rank.tp;
+    // Replicated state (specials, loss) is written by tp rank 0 only.
     let tp_writer = rank.tp == 0;
+    // Sharded layer compute (decided once by the trainer; see module
+    // docs). Under emulation every rank holds full replicated state.
+    let sharded = has_tp && ctx.tp_sharded;
 
     let owns_first = prog.stage_of(0) == stage;
     let d_l = prog.d_l;
     let owns_last = prog.stage_of(d_l - 1) == stage;
 
-    let mut names: Vec<&str> = vec!["layer_fwd", "layer_bwd"];
+    let art_attn_fwd = tp_artifact_name("attn_fwd", topo.tp);
+    let art_ffn_fwd = tp_artifact_name("ffn_fwd", topo.tp);
+    let art_attn_bwd = tp_artifact_name("attn_bwd", topo.tp);
+    let art_ffn_bwd = tp_artifact_name("ffn_bwd", topo.tp);
+    let mut names: Vec<&str> = if sharded {
+        vec![&art_attn_fwd, &art_ffn_fwd, &art_attn_bwd, &art_ffn_bwd]
+    } else {
+        vec!["layer_fwd", "layer_bwd"]
+    };
     if owns_first {
         names.extend(["embed_fwd", "embed_bwd"]);
     }
@@ -214,6 +339,15 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let m = engine.manifest().model;
     let batch = engine.manifest().batch;
     let layout = LayerLayout::from_manifest(engine.manifest());
+    // The sharded flat layout (and the full↔shard index map behind
+    // init/checkpoint re-sharding); validated against the manifest's
+    // per-shard TensorSpecs.
+    let slayout: Option<ShardedLayout> = if sharded {
+        Some(ShardedLayout::from_manifest(engine.manifest(), topo.tp)?)
+    } else {
+        None
+    };
+    let slot_total = slayout.as_ref().map_or(layout.total, |s| s.total);
     let corpus = Corpus::new(m.vocab);
 
     // --- parameter state -------------------------------------------------
@@ -222,17 +356,24 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     let mut params: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut grads: HashMap<usize, Vec<f32>> = HashMap::new();
     let mut adam: HashMap<usize, Adam> = HashMap::new();
-    let shard = ShardMap::new(layout.total, n_b);
+    let shard = ShardMap::new(slot_total, n_b);
     for &l in &my_layers {
-        // Same seed across dp and tp ranks -> replicated initial params.
+        // Same seed across dp and tp ranks: the full initialisation is
+        // replicated, and a sharded rank slices its shard out of it —
+        // so a tp run starts from exactly the tp = 1 network.
         let mut rng = crate::data::Rng::new(ctx.seed ^ (0x517c_c1b7_2722_0a95 + l as u64));
-        params.insert(l, layout.init(&mut rng));
-        grads.insert(l, vec![0.0; layout.total]);
+        let full = layout.init(&mut rng);
+        let mine = match &slayout {
+            Some(sl) => sl.gather(&full, tp_rank),
+            None => full,
+        };
+        params.insert(l, mine);
+        grads.insert(l, vec![0.0; slot_total]);
         let n = if ctx.partition && n_b > 1 {
             let (a, b) = shard.owned_range(dp_rank);
             b - a
         } else {
-            layout.total
+            slot_total
         };
         adam.insert(l, Adam::new(n, AdamConfig::default()));
     }
@@ -269,23 +410,55 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         let store =
             ctx.store.as_deref().context("resume requires a checkpoint store")?;
         let ck = (ctx.start_step - 1) as u64;
+        // This run's state sharding vs the writer's. Matching layouts
+        // read the rank's own slot directly (no full-state buffers —
+        // the common restart path must not cost tp× the redundant I/O
+        // or a full-model memory spike on ranks sized for 1/tp state);
+        // a tp *change* re-shards: scatter the writer's shards back to
+        // the full state, then gather this rank's own shard.
+        let state_tp = if sharded { topo.tp } else { 1 };
+        let state_rank = if sharded { tp_rank } else { 0 };
+        let wlayout: Option<ShardedLayout> = if ctx.ckpt_tp > 1 && ctx.ckpt_tp != state_tp {
+            Some(ShardedLayout::from_manifest(engine.manifest(), ctx.ckpt_tp)?)
+        } else {
+            None
+        };
         for &l in &my_layers {
-            // Any complete shard cover reassembles, regardless of the
-            // writer's n_b; the Adam moments then re-slice to *this*
-            // run's owned range — the §8.1 elastic-resume re-shard.
-            let slot = assemble(&store.read(ck, l as u64)?, layout.total)
+            // Any complete cover reassembles, regardless of the writer's
+            // n_b *or* tp; the Adam moments then re-slice to *this*
+            // run's owned range — the §8.1 elastic-resume re-shard,
+            // extended across the tensor-parallel axis.
+            let (p, sm, sv, adam_t) = if ctx.ckpt_tp == state_tp {
+                let slot = assemble(
+                    &store.read(ck, slot_layer(d_l, state_rank, l) as u64)?,
+                    slot_total,
+                )
                 .with_context(|| format!("layer {l} checkpoint at step {ck}"))?;
-            params.insert(l, slot.params);
+                (slot.params, slot.m, slot.v, slot.adam_t)
+            } else {
+                let (fp, fm, fv, adam_t) =
+                    assemble_layer_full(store, ck, d_l, l, layout.total, wlayout.as_ref())?;
+                match &slayout {
+                    Some(sl) => (
+                        sl.gather(&fp, tp_rank),
+                        sl.gather(&fm, tp_rank),
+                        sl.gather(&fv, tp_rank),
+                        adam_t,
+                    ),
+                    None => (fp, fm, fv, adam_t),
+                }
+            };
+            params.insert(l, p);
             let a = if ctx.partition && n_b > 1 {
                 let (lo, hi) = shard.owned_range(dp_rank);
                 Adam::from_state(
                     AdamConfig::default(),
-                    slot.m[lo..hi].to_vec(),
-                    slot.v[lo..hi].to_vec(),
-                    slot.adam_t,
+                    sm[lo..hi].to_vec(),
+                    sv[lo..hi].to_vec(),
+                    adam_t,
                 )
             } else {
-                Adam::from_state(AdamConfig::default(), slot.m, slot.v, slot.adam_t)
+                Adam::from_state(AdamConfig::default(), sm, sv, adam_t)
             };
             adam.insert(l, a);
         }
@@ -305,6 +478,21 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             head = h.params;
             adam_head = Some(Adam::from_state(AdamConfig::default(), h.m, h.v, h.adam_t));
         }
+    }
+
+    // Measured (not modeled) resident parameter + optimizer bytes — the
+    // acceptance number tensor parallelism is supposed to divide.
+    let f32b = crate::runtime::DType::F32.bytes() as u64;
+    let mut layer_state_bytes = 0u64;
+    for &l in &my_layers {
+        let (am, av, _) = adam[&l].state();
+        layer_state_bytes += (params[&l].len() + am.len() + av.len()) as u64 * f32b;
+    }
+    let mut total_state_bytes = layer_state_bytes
+        + (table.len() + pos.len() + head.len()) as u64 * f32b;
+    for a in [&adam_table, &adam_pos, &adam_head].into_iter().flatten() {
+        let (am, av, _) = a.state();
+        total_state_bytes += (am.len() + av.len()) as u64 * f32b;
     }
 
     let act_shape = vec![batch, m.d_seq, m.d_model];
@@ -339,16 +527,27 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         let mut goutbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new(); // dL/d in(layer, mb)
         let mut last_out: HashMap<usize, Vec<f32>> = HashMap::new();
         // Layer 0's input-gradients awaiting their backward
-        // TensorAllReduce (tp > 1 only): the embedding must consume the
-        // *reduced* gradient, so the embed backward runs inside the tb0
-        // op instead of B0.
+        // TensorAllReduce (emulation mode only): the embedding must
+        // consume the *reduced* gradient, so the embed backward runs
+        // inside the tb0 op instead of B0.
         let mut embed_dx: HashMap<usize, Vec<f32>> = HashMap::new();
+        // Sharded execution: the residual input x2 of (layer, mb),
+        // stashed by Fwd and added back once the scheduled forward
+        // TensorAllReduce has summed the FFN partials.
+        let mut residual: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+        // Sharded execution: (dx_partial, dx2) of (layer, mb), stashed
+        // by Bwd; the backward TensorAllReduce sums the partials and
+        // completes dx = dx2 + Σ dx_partial.
+        let mut pending_bwd: HashMap<(usize, usize), (Vec<f32>, Vec<f32>)> = HashMap::new();
         let mut loss_sum = 0.0f64;
-        // Per-layer HostTensor views of the parameters, reused across
-        // micro-batches (§Perf L3: converting 12 tensors per PJRT call
-        // dominated tiny-model steps). Invalidated when the parameters
-        // change (OptimStep) or are re-gathered (RestoreParams).
-        let mut param_cache: HashMap<usize, Vec<HostTensor>> = HashMap::new();
+        // Per-(layer, half) HostTensor views of the parameters, reused
+        // across micro-batches (§Perf L3: converting 12 tensors per PJRT
+        // call dominated tiny-model steps). Unsharded layers use half 0
+        // for the whole 12-tensor set; sharded layers cache the
+        // attention (0) and FFN (1) halves separately. Invalidated when
+        // the parameters change (OptimStep) or are re-gathered
+        // (RestoreParams).
+        let mut param_cache: HashMap<(usize, u8), Vec<HostTensor>> = HashMap::new();
 
         for &(op_id, op) in &stage_nodes {
             // An in-order dispatcher satisfies a local edge iff the
@@ -371,7 +570,8 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 Op::RestoreParams { layer } => {
                     if ctx.partition && n_b > 1 {
                         ctx.world.dp_group().all_gather_owned(params.get_mut(&layer).unwrap());
-                        param_cache.remove(&layer);
+                        param_cache.remove(&(layer, 0));
+                        param_cache.remove(&(layer, 1));
                     }
                 }
                 Op::Fwd { layer, mb } => {
@@ -391,13 +591,37 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                             .remove(&(layer, mb))
                             .with_context(|| format!("missing input for F{layer}.{mb}"))?
                     };
-                    let mut args = param_cache
-                        .entry(layer)
-                        .or_insert_with(|| layout.tensors(&params[&layer]))
-                        .clone();
-                    args.push(HostTensor::f32(act_shape.clone(), x.clone()));
-                    let y = engine.execute("layer_fwd", &args)?;
-                    let y = y[0].as_f32()?.to_vec();
+                    let y = if let Some(sl) = &slayout {
+                        // Sharded half-layer forward: partial attention
+                        // → mid-layer all-reduce → residual → partial
+                        // FFN. The scheduled TensorAllReduce later sums
+                        // the FFN partials and adds the stashed x2.
+                        let mut args = param_cache
+                            .entry((layer, 0))
+                            .or_insert_with(|| sl.half_tensors(&params[&layer], 0, tp_rank))
+                            .clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x.clone()));
+                        let a = engine.execute(&art_attn_fwd, &args)?;
+                        let mut x2 = a[0].as_f32()?.to_vec();
+                        ctx.world.tp_group().all_reduce(&mut x2);
+                        add_into(&mut x2, &x);
+                        let mut args = param_cache
+                            .entry((layer, 1))
+                            .or_insert_with(|| sl.half_tensors(&params[&layer], 6, tp_rank))
+                            .clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x2.clone()));
+                        let f = engine.execute(&art_ffn_fwd, &args)?;
+                        residual.insert((layer, mb), x2);
+                        f[0].as_f32()?.to_vec()
+                    } else {
+                        let mut args = param_cache
+                            .entry((layer, 0))
+                            .or_insert_with(|| layout.tensors(&params[&layer]))
+                            .clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x.clone()));
+                        let y = engine.execute("layer_fwd", &args)?;
+                        y[0].as_f32()?.to_vec()
+                    };
                     ckpt.insert((layer, mb), x);
                     if layer + 1 == d_l {
                         last_out.insert(mb, y);
@@ -446,37 +670,79 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     let x = ckpt
                         .remove(&(layer, mb))
                         .with_context(|| format!("missing checkpoint for B{layer}.{mb}"))?;
-                    let mut args = param_cache
-                        .entry(layer)
-                        .or_insert_with(|| layout.tensors(&params[&layer]))
-                        .clone();
-                    args.push(HostTensor::f32(act_shape.clone(), x));
-                    args.push(HostTensor::f32(act_shape.clone(), dy));
-                    let outs = engine.execute("layer_bwd", &args)?;
-                    layout.accumulate(grads.get_mut(&layer).unwrap(), &outs[..12]);
-                    let dx = outs[12].as_f32()?.to_vec();
-                    if layer == 0 {
-                        if has_tp {
-                            // Defer: the embedding consumes the *reduced*
-                            // gradient inside the tb0 op.
-                            embed_dx.insert(mb, dx);
-                        } else {
-                            let b = tokens_of(step, mb);
-                            embed_backward(
-                                &mut engine,
-                                &act_shape,
-                                batch,
-                                m.d_seq,
-                                b.tokens,
-                                dx,
-                                &mut d_table,
-                                &mut d_pos,
-                            )?;
-                        }
-                    } else if prog.stage_of(layer - 1) == stage {
-                        douts.insert((layer - 1, mb), dx);
+                    if let Some(sl) = &slayout {
+                        // Sharded backward, three phases from the
+                        // checkpoint input x and the full dy:
+                        //  1. recompute x2 = x + Σ attn_part(x) (one
+                        //     mid-layer all-reduce, same values as Fwd);
+                        //  2. FFN-half VJP → shard grads + dh partial;
+                        //     dx2 = dy + Σ dh (second all-reduce);
+                        //  3. attention-half VJP → shard grads + dx
+                        //     partial, left for the scheduled backward
+                        //     TensorAllReduce to complete.
+                        let attn_args = param_cache
+                            .entry((layer, 0))
+                            .or_insert_with(|| sl.half_tensors(&params[&layer], 0, tp_rank))
+                            .clone();
+                        let mut args = attn_args.clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x.clone()));
+                        let a = engine.execute(&art_attn_fwd, &args)?;
+                        let mut x2 = a[0].as_f32()?.to_vec();
+                        ctx.world.tp_group().all_reduce(&mut x2);
+                        add_into(&mut x2, &x);
+
+                        let mut args = param_cache
+                            .entry((layer, 1))
+                            .or_insert_with(|| sl.half_tensors(&params[&layer], 6, tp_rank))
+                            .clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x2));
+                        args.push(HostTensor::f32(act_shape.clone(), dy.clone()));
+                        let outs = engine.execute(&art_ffn_bwd, &args)?;
+                        sl.accumulate_half(grads.get_mut(&layer).unwrap(), &outs[..6], 6);
+                        let mut dx2 = outs[6].as_f32()?.to_vec();
+                        ctx.world.tp_group().all_reduce(&mut dx2);
+                        add_into(&mut dx2, &dy);
+
+                        let mut args = attn_args;
+                        args.push(HostTensor::f32(act_shape.clone(), x));
+                        args.push(HostTensor::f32(act_shape.clone(), dx2.clone()));
+                        let outs = engine.execute(&art_attn_bwd, &args)?;
+                        sl.accumulate_half(grads.get_mut(&layer).unwrap(), &outs[..6], 0);
+                        let dx_part = outs[6].as_f32()?.to_vec();
+                        pending_bwd.insert((layer, mb), (dx_part, dx2));
                     } else {
-                        goutbox.insert((layer, mb), dx);
+                        let mut args = param_cache
+                            .entry((layer, 0))
+                            .or_insert_with(|| layout.tensors(&params[&layer]))
+                            .clone();
+                        args.push(HostTensor::f32(act_shape.clone(), x));
+                        args.push(HostTensor::f32(act_shape.clone(), dy));
+                        let outs = engine.execute("layer_bwd", &args)?;
+                        layout.accumulate(grads.get_mut(&layer).unwrap(), &outs[..12]);
+                        let dx = outs[12].as_f32()?.to_vec();
+                        if layer == 0 {
+                            if has_tp {
+                                // Defer: the embedding consumes the
+                                // *reduced* gradient inside the tb0 op.
+                                embed_dx.insert(mb, dx);
+                            } else {
+                                let b = tokens_of(step, mb);
+                                embed_backward(
+                                    &mut engine,
+                                    &act_shape,
+                                    batch,
+                                    m.d_seq,
+                                    b.tokens,
+                                    dx,
+                                    &mut d_table,
+                                    &mut d_pos,
+                                )?;
+                            }
+                        } else if prog.stage_of(layer - 1) == stage {
+                            douts.insert((layer - 1, mb), dx);
+                        } else {
+                            goutbox.insert((layer, mb), dx);
+                        }
                     }
                 }
                 Op::SendGrad { layer, mb } => {
@@ -498,12 +764,12 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     douts.insert((layer, mb), g);
                 }
                 Op::TensorAllReduce { layer, mb, bwd } => {
-                    // Replicated-compute emulation of the sharded layer:
-                    // the phase's tensor — the layer's output activation
-                    // (fwd) or input-gradient (bwd) — is ring-summed
-                    // over the tp group and post-scaled by 1/tp, an
-                    // exact identity on the replicated values that moves
-                    // the real per-rank wire traffic (see module docs).
+                    // The layer-boundary reduce. Sharded execution: a
+                    // plain ring *sum* of genuine partials, completed
+                    // with the stashed residual (fwd: y = x2 + Σ ffn
+                    // partials; bwd: dx = dx2 + Σ dx partials).
+                    // Emulation: sum-then-1/tp-postscale, an exact
+                    // identity on the replicated values (module docs).
                     if !bwd {
                         let buf = if layer + 1 == d_l {
                             last_out.get_mut(&mb)
@@ -514,7 +780,38 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         };
                         let buf = buf
                             .with_context(|| format!("missing activation for tf{layer}.{mb}"))?;
-                        tp_all_reduce(ctx.world.tp_group(), buf);
+                        if slayout.is_some() {
+                            let x2 = residual
+                                .remove(&(layer, mb))
+                                .with_context(|| format!("missing residual for tf{layer}.{mb}"))?;
+                            ctx.world.tp_group().all_reduce(buf);
+                            add_into(buf, &x2);
+                        } else {
+                            tp_all_reduce(ctx.world.tp_group(), buf);
+                        }
+                    } else if slayout.is_some() {
+                        let (mut dx, dx2) = pending_bwd
+                            .remove(&(layer, mb))
+                            .with_context(|| format!("missing partials for tb{layer}.{mb}"))?;
+                        ctx.world.tp_group().all_reduce(&mut dx);
+                        add_into(&mut dx, &dx2);
+                        if layer == 0 {
+                            let b = tokens_of(step, mb);
+                            embed_backward(
+                                &mut engine,
+                                &act_shape,
+                                batch,
+                                m.d_seq,
+                                b.tokens,
+                                dx,
+                                &mut d_table,
+                                &mut d_pos,
+                            )?;
+                        } else if prog.stage_of(layer - 1) == stage {
+                            douts.insert((layer - 1, mb), dx);
+                        } else {
+                            goutbox.insert((layer, mb), dx);
+                        }
                     } else if layer == 0 {
                         let mut dx = embed_dx
                             .remove(&mb)
@@ -548,6 +845,13 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     for v in g.iter_mut() {
                         *v *= scale;
                     }
+                    // Sharded execution: complete the layernorm
+                    // gradients (partial per tp rank) before the dp
+                    // reduction consumes them. Sums commute, so the
+                    // order against the 1/batch scale is immaterial.
+                    if let Some(sl) = &slayout {
+                        tp_reduce_spans(ctx.world.tp_group(), g, sl.grad_tp_spans());
+                    }
                     if n_b > 1 {
                         if ctx.partition {
                             ctx.world.dp_group().reduce_scatter(g);
@@ -569,6 +873,12 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     // which is what lets a checkpoint written at one
                     // cluster size resume at another.
                     if n_b == 1 && !ctx.partition {
+                        // ... and, without a ReduceGrad, nothing has
+                        // completed the partial layernorm gradients of a
+                        // sharded layer either — do it here, once.
+                        if let Some(sl) = &slayout {
+                            tp_reduce_spans(ctx.world.tp_group(), g, sl.grad_tp_spans());
+                        }
                         let scale = 1.0 / n_mu as f32;
                         for v in g.iter_mut() {
                             *v *= scale;
@@ -581,16 +891,24 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         a.step(p, g, lr);
                     }
                     g.fill(0.0);
-                    param_cache.remove(&layer);
+                    param_cache.remove(&(layer, 0));
+                    param_cache.remove(&(layer, 1));
                 }
                 Op::OffloadStore { layer } => {
                     // Stream the post-step state (the store-after-optim
                     // edge guarantees the buffers hold updated values).
                     // With a partition every dp rank writes its owned
-                    // shard — together a complete cover; replicated state
-                    // is written once, by dp rank 0. Tensor-parallel
-                    // replicas hold identical state: tp rank 0 writes.
-                    if !tp_writer {
+                    // shard — together a complete cover; replicated
+                    // state is written once, by dp rank 0. Sharded
+                    // execution: every tp rank owns a *different* slice,
+                    // so each writes its own (layer, tp_rank) slot;
+                    // under emulation the replicas are identical and tp
+                    // rank 0 writes the one full copy.
+                    let (state_tp, state_tp_rank) = match &slayout {
+                        Some(_) => (topo.tp, tp_rank),
+                        None => (1, 0),
+                    };
+                    if state_tp == 1 && !tp_writer {
                         op_done[op_id as usize] = true;
                         continue;
                     }
@@ -599,24 +917,36 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         .as_deref()
                         .context("offload schedule without a checkpoint store")?;
                     let global_mbs = (n_b * n_mu) as u64;
+                    let slot = slot_layer(d_l, state_tp_rank, layer);
                     if ctx.partition && n_b > 1 {
                         let (lo, hi) = shard.owned_range(dp_rank);
                         let (am, av, at) = adam.get(&layer).unwrap().state();
                         store.put(&StateRecord {
                             step: step as u64,
-                            slot: layer as u64,
+                            slot: slot as u64,
                             lo: lo as u64,
                             hi: hi as u64,
-                            total: layout.total as u64,
+                            total: slot_total as u64,
                             adam_t: at,
                             global_mbs,
+                            tp: state_tp as u64,
+                            tp_rank: state_tp_rank as u64,
                             params: params[&layer][lo..hi].to_vec(),
                             m: am.to_vec(),
                             v: av.to_vec(),
                         })?;
                     } else if dp_rank == 0 {
                         let a = &adam[&layer];
-                        store_full_slot(store, step, layer, global_mbs, &params[&layer], a)?;
+                        store_full_slot(
+                            store,
+                            step,
+                            slot,
+                            global_mbs,
+                            &params[&layer],
+                            a,
+                            state_tp,
+                            state_tp_rank,
+                        )?;
                     }
                 }
             }
@@ -659,9 +989,9 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 let g = (n_b * n_mu) as u64;
                 if owns_first {
                     let a = adam_table.as_ref().unwrap();
-                    store_full_slot(store, step, slot_embed(d_l), g, &table, a)?;
+                    store_full_slot(store, step, slot_embed(d_l), g, &table, a, 1, 0)?;
                     let a = adam_pos.as_ref().unwrap();
-                    store_full_slot(store, step, slot_pos(d_l), g, &pos, a)?;
+                    store_full_slot(store, step, slot_pos(d_l), g, &pos, a, 1, 0)?;
                     // Retention: keep the in-flight step and the last
                     // complete one, drop everything older. Safe here:
                     // stage 0 reaching step `s` implies every stage of
@@ -674,7 +1004,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
                 if owns_last {
                     let a = adam_head.as_ref().unwrap();
-                    store_full_slot(store, step, slot_head(d_l), g, &head, a)?;
+                    store_full_slot(store, step, slot_head(d_l), g, &head, a, 1, 0)?;
                 }
             }
         }
@@ -688,13 +1018,15 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         collective_elems_sent: traffic.dp,
         pipeline_elems_sent: traffic.pipeline,
         tp_elems_sent: traffic.tp,
+        layer_state_bytes,
+        total_state_bytes,
         wall_secs: t0.elapsed().as_secs_f64(),
     })
 }
 
 #[cfg(test)]
 mod tests {
-    use super::{check_payload, tp_all_reduce};
+    use super::{add_into, check_payload, tp_all_reduce, tp_reduce_spans};
     use crate::collective::ring_group;
 
     #[test]
@@ -749,6 +1081,54 @@ mod tests {
         let mut d = vec![1.25f32, -3.5];
         tp_all_reduce(&mut g, &mut d);
         assert_eq!(d, vec![1.25, -3.5]);
+        assert_eq!(g.sent_elems(), 0);
+    }
+
+    #[test]
+    fn add_into_is_elementwise() {
+        let mut d = vec![1.0f32, 2.0, 3.0];
+        add_into(&mut d, &[0.5, -2.0, 1.0]);
+        assert_eq!(d, vec![1.5, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn tp_reduce_spans_sums_exactly_the_spans() {
+        // Two ranks hold different layernorm partials inside a larger
+        // gradient buffer; the span reduce must sum the spans across
+        // ranks and leave everything else untouched.
+        let spans = vec![(1usize, 2usize), (5, 1)];
+        let handles: Vec<_> = ring_group(2)
+            .into_iter()
+            .map(|mut g| {
+                let spans = spans.clone();
+                let r = g.rank as f32;
+                std::thread::spawn(move || {
+                    let mut d = vec![r; 7]; // rank 0: all 0s, rank 1: all 1s
+                    tp_reduce_spans(&mut g, &mut d, &spans);
+                    d
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            // Span positions hold 0 + 1 = 1 on both ranks; the rest keep
+            // their per-rank value (0 or 1 — untouched either way).
+            assert_eq!(out[1], 1.0);
+            assert_eq!(out[2], 1.0);
+            assert_eq!(out[5], 1.0);
+            assert!(out[0] == 0.0 || out[0] == 1.0);
+            assert_eq!(out[3], out[0]);
+            assert_eq!(out[4], out[0]);
+            assert_eq!(out[6], out[0]);
+        }
+    }
+
+    #[test]
+    fn tp_reduce_spans_is_a_no_op_for_single_rank_or_empty_spans() {
+        let mut g = ring_group(1).remove(0);
+        let mut d = vec![2.0f32; 4];
+        tp_reduce_spans(&mut g, &mut d, &[(0, 2)]);
+        assert_eq!(d, vec![2.0; 4]);
         assert_eq!(g.sent_elems(), 0);
     }
 }
