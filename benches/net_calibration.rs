@@ -1,0 +1,57 @@
+//! Perf bench: the socket transport's measured wire — round-trip
+//! latency, sustained framed bandwidth, and the 2-rank ring all-reduce
+//! rate — plus what those measurements do to the cost model's pricing.
+//! Run via `cargo bench --bench net_calibration`; writes
+//! `BENCH_net_calibration.json`, the same calibration document `repro
+//! netbench` produces (consumable anywhere via `--calibration FILE`).
+
+use lga_mpp::collective::netbench;
+use lga_mpp::hardware::{ClusterSpec, NetCalibration, GIB};
+use lga_mpp::report::BenchJson;
+
+fn main() {
+    let mut json = BenchJson::new("net_calibration");
+    let payload_elems = (4usize << 20) / 4; // 4 MiB frames
+    let probe = match netbench(payload_elems, 512, 64) {
+        Ok(p) => p,
+        Err(e) => {
+            println!("netbench failed (no loopback?): {e}");
+            json.finish();
+            return;
+        }
+    };
+    println!("loopback socket transport, 4 MiB frames:");
+    println!("{:>24} {:>12.1} us", "rtt (median)", probe.rtt_secs * 1e6);
+    println!(
+        "{:>24} {:>12.2} GiB/s",
+        "stream bandwidth",
+        probe.bandwidth_bytes_per_s / GIB
+    );
+    println!(
+        "{:>24} {:>12.2} GiB/s",
+        "ring all-reduce/rank",
+        probe.ring_allreduce_bytes_per_s / GIB
+    );
+
+    // What calibration does to the planner's arithmetic-intensity
+    // thresholds: quoted spec sheet vs the wire we just measured.
+    let quoted = ClusterSpec::reference();
+    let calibrated = quoted.with_calibration(NetCalibration {
+        bandwidth_bytes_per_s: probe.bandwidth_bytes_per_s,
+        rtt_secs: probe.rtt_secs,
+    });
+    println!(
+        "{:>24} {:>12.3e} flops/B quoted -> {:.3e} calibrated",
+        "inter-node threshold",
+        quoted.inter_node_threshold(),
+        calibrated.inter_node_threshold()
+    );
+
+    json.push("rtt_secs", probe.rtt_secs);
+    json.push("bandwidth_bytes_per_s", probe.bandwidth_bytes_per_s);
+    json.push("ring_allreduce_bytes_per_s", probe.ring_allreduce_bytes_per_s);
+    json.push("payload_bytes", probe.payload_bytes as f64);
+    json.push("threshold_quoted", quoted.inter_node_threshold());
+    json.push("threshold_calibrated", calibrated.inter_node_threshold());
+    json.finish();
+}

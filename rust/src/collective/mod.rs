@@ -3,29 +3,43 @@
 //! The crate's communication layer is organised in three levels:
 //!
 //! 1. [`transport`] — the byte-moving substrate. A [`Transport`] is one
-//!    directed duplex port between fixed peers; the in-process mpsc
-//!    implementation ([`transport::MpscPort`]) is the first backend, and
-//!    a socket/RDMA port can replace it without touching anything above.
+//!    directed duplex port between fixed peers, with two backends: the
+//!    in-process mpsc port ([`transport::MpscPort`]) for thread-backed
+//!    worlds, and the TCP socket port ([`socket::SocketPort`]) —
+//!    length-prefixed binary frames, buffered writer, dedicated reader
+//!    thread — for process-backed (and multi-host) worlds. Everything
+//!    above is backend-agnostic.
 //! 2. [`ring`] — SPMD ring collectives ([`RingGroup`]): all-reduce,
 //!    reduce-scatter, all-gather, broadcast over any transport. Chunk
 //!    boundaries are deterministic, so results are bit-identical across
-//!    ranks and across runs; per-rank traffic matches the
-//!    bandwidth-optimal 2·(n−1)/n bound the paper's C.4.1 accounting
-//!    assumes.
+//!    ranks, across runs, *and across backends*; per-rank traffic
+//!    matches the bandwidth-optimal 2·(n−1)/n bound the paper's C.4.1
+//!    accounting assumes.
 //! 3. [`world`] — the process-group API the trainer programs against:
 //!    one [`CommWorld`] per rank of a [`Topology`] `{stages, dp, tp}`,
 //!    exposing the pipeline p2p group, the data-parallel ring, the
 //!    tensor-parallel ring and the control plane, each with per-group
-//!    traffic accounting ([`world::Traffic`]).
+//!    traffic accounting ([`world::Traffic`]). [`CommWorld::build`]
+//!    wires all ranks over mpsc in one process;
+//!    [`socket::connect_world`] wires one rank per process over TCP
+//!    after a coordinator rendezvous ([`socket::Coordinator`]), with
+//!    losses and [`socket::RankStats`] streaming back over the control
+//!    connection.
 //!
-//! Built once in `trainer::train` and handed to each worker as the
-//! single communication handle in `WorkerCtx` — there are no raw
-//! channels in the trainer any more.
+//! Built once per rank (by `trainer::train` for threads, `repro
+//! worker` via `trainer::launch` for processes) and handed to each
+//! worker as the single communication handle in `WorkerCtx` — there
+//! are no raw channels in the trainer any more.
 
 pub mod ring;
+pub mod socket;
 pub mod transport;
 pub mod world;
 
 pub use ring::{ring_group, RingGroup};
+pub use socket::{
+    netbench, socket_pair, socket_ring, connect_world, Coordinator, CtrlMsg, NetProbe, RankStats,
+    SocketPort, Wire,
+};
 pub use transport::{Disconnected, Transport};
-pub use world::{CommWorld, LossMsg, PipeMsg, Rank, Topology, Traffic};
+pub use world::{CommWorld, ControlGroup, LossMsg, PipeMsg, PipelineGroup, Rank, Topology, Traffic};

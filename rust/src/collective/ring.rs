@@ -9,13 +9,22 @@
 //! for an all-reduce).
 //!
 //! A [`RingGroup`] no longer owns raw channels: it drives any
-//! [`Transport<Vec<f32>>`], so the same reduce-scatter / all-gather /
-//! broadcast code serves the data-parallel groups, the tensor-parallel
-//! groups and (with a future socket transport) multi-process rings.
+//! [`Transport<Vec<f32>>`] — the in-process mpsc backend or the TCP
+//! socket backend (`super::socket`) — so the same reduce-scatter /
+//! all-gather / broadcast code serves the data-parallel groups, the
+//! tensor-parallel groups, and multi-process rings over real wires.
 
 use std::sync::{Arc, Barrier};
 
 use super::transport::{mpsc_ring, Transport};
+
+/// How a ring synchronises: in-process groups share a [`Barrier`];
+/// wire-backed groups (one rank per process) pass empty token frames
+/// around the ring instead, since no shared memory exists.
+enum RingBarrier {
+    Local(Arc<Barrier>),
+    Wire,
+}
 
 /// Per-rank communicator for a ring of `n` members, generic over the
 /// transport that moves the chunks.
@@ -23,7 +32,7 @@ pub struct RingGroup {
     pub rank: usize,
     pub n: usize,
     port: Box<dyn Transport<Vec<f32>>>,
-    barrier: Arc<Barrier>,
+    barrier: RingBarrier,
     /// Total payload elements sent by this rank (traffic accounting).
     sent_elems: u64,
 }
@@ -57,7 +66,15 @@ impl RingGroup {
         port: Box<dyn Transport<Vec<f32>>>,
         barrier: Arc<Barrier>,
     ) -> Self {
-        RingGroup { rank, n, port, barrier, sent_elems: 0 }
+        RingGroup { rank, n, port, barrier: RingBarrier::Local(barrier), sent_elems: 0 }
+    }
+
+    /// Wrap a wire-backed (e.g. socket) transport port as rank `rank` of
+    /// an `n`-ring whose members live in different processes: barriers
+    /// run as token rounds over the port instead of a shared-memory
+    /// [`Barrier`].
+    pub fn new_wire(rank: usize, n: usize, port: Box<dyn Transport<Vec<f32>>>) -> Self {
+        RingGroup { rank, n, port, barrier: RingBarrier::Wire, sent_elems: 0 }
     }
 
     /// Payload elements this rank has pushed onto the wire so far.
@@ -66,8 +83,26 @@ impl RingGroup {
     }
 
     /// Synchronisation barrier across the group.
-    pub fn barrier(&self) {
-        self.barrier.wait();
+    ///
+    /// Wire mode runs n−1 rounds of empty token frames around the ring:
+    /// receiving round-k's token means the previous rank entered the
+    /// barrier and had itself received k−1 tokens, so after n−1 rounds
+    /// every member transitively has entered. Tokens carry no payload
+    /// and bypass `sent_elems`, keeping traffic totals bit-identical to
+    /// the shared-memory backend.
+    pub fn barrier(&mut self) {
+        match &self.barrier {
+            RingBarrier::Local(b) => {
+                b.wait();
+            }
+            RingBarrier::Wire => {
+                for _ in 0..self.n.saturating_sub(1) {
+                    self.port.send(Vec::new()).expect("ring peer hung up");
+                    let token = self.port.recv().expect("ring peer hung up");
+                    assert!(token.is_empty(), "data frame arrived during a barrier");
+                }
+            }
+        }
     }
 
     fn send(&mut self, data: Vec<f32>) {

@@ -1,0 +1,1121 @@
+//! TCP socket backend for the [`super::transport::Transport`] trait:
+//! multi-process (and multi-host) training over real wires.
+//!
+//! Three layers live here:
+//!
+//! 1. **Frame codec** — length-prefixed binary frames (`[u32 LE length]
+//!    [payload]`) with a [`Wire`] trait per message type. `Vec<f32>`
+//!    payloads encode zero-copy on little-endian targets (the buffer is
+//!    viewed as its wire bytes, no intermediate copy); decoding uses
+//!    `from_le_bytes`, so NaN and subnormal bit patterns round-trip
+//!    exactly — the bit-for-bit loss-parity gate depends on this.
+//! 2. **[`SocketPort`]** — one directed duplex [`Transport`] port over a
+//!    pair of TCP streams (one per direction): a buffered writer toward
+//!    the send-peer and a dedicated reader thread draining the
+//!    recv-peer into an unbounded channel, so `send` never blocks
+//!    indefinitely on a live peer (the trait contract the ring
+//!    collectives rely on).
+//! 3. **Rendezvous + wiring** — a rank-0-side [`Coordinator`] listener
+//!    collects every worker's `Hello{rank, addr}`, broadcasts the
+//!    `Peers` address table, and each rank then dials exactly the
+//!    pipeline/dp/tp ring edges [`CommWorld::build`] would wire over
+//!    mpsc ([`connect_world`]). Data connections self-identify with a
+//!    [`DataHello`] header frame; degenerate (size-1) axes stay on
+//!    in-process self-loops so their no-op/zero-traffic semantics are
+//!    identical to the mpsc backend. The same control connection then
+//!    carries per-step losses and end-of-run [`RankStats`] back to the
+//!    coordinator.
+//!
+//! Multi-host: set `REPRO_HOSTMAP=host0:port0,host1:port1,...` (one
+//! bindable data-listener address per rank, in [`Topology::index`]
+//! order) and start one `repro worker` per rank against a reachable
+//! coordinator; without it, workers bind loopback ephemeral ports and
+//! the address table is discovered through the rendezvous.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::ring::RingGroup;
+use super::transport::{mpsc_ring, mpsc_ring_rev, Disconnected, Transport};
+use super::world::{CommWorld, ControlGroup, PipeMsg, PipelineGroup, Rank, Topology};
+
+/// Hard cap on one frame's payload (guards against a corrupt or
+/// malicious length prefix allocating unbounded memory).
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+// ---------------------------------------------------------------------------
+// Frame codec.
+
+/// A malformed frame payload (the transport-level length prefix was
+/// fine, but the bytes don't decode as the expected message type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameError(pub &'static str);
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "malformed frame: {}", self.0)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A message type that can cross the wire inside one length-prefixed
+/// frame. `encode` must write exactly `encoded_len()` bytes; `decode`
+/// must consume the whole payload (trailing bytes are an error).
+pub trait Wire: Send + Sized + 'static {
+    fn encoded_len(&self) -> usize;
+    fn encode(&self, w: &mut impl Write) -> io::Result<()>;
+    fn decode(buf: &[u8]) -> Result<Self, FrameError>;
+}
+
+/// Write one framed message: `[u32 LE payload length][payload]`.
+pub fn write_frame<M: Wire>(w: &mut impl Write, msg: &M) -> io::Result<()> {
+    let len = u32::try_from(msg.encoded_len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME_BYTES)
+        .ok_or_else(|| invalid_data("frame payload exceeds the 1 GiB cap"))?;
+    w.write_all(&len.to_le_bytes())?;
+    msg.encode(w)
+}
+
+/// Read one frame's payload. Errors with `UnexpectedEof` on a cleanly
+/// closed stream and `InvalidData` on an oversized length prefix.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr);
+    if len > MAX_FRAME_BYTES {
+        return Err(invalid_data(format!("frame length {len} exceeds the 1 GiB cap")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+fn invalid_data(msg: impl std::fmt::Display) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+#[cfg(target_endian = "little")]
+fn write_f32s(w: &mut impl Write, v: &[f32]) -> io::Result<()> {
+    // Zero-copy fast path: an f32 buffer *is* its little-endian wire
+    // bytes on this target.
+    // SAFETY: every f32 bit pattern is a valid byte sequence, the view
+    // covers exactly the buffer's 4·len bytes, and u8 has no alignment
+    // requirement.
+    let bytes = unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), size_of_val(v)) };
+    w.write_all(bytes)
+}
+
+#[cfg(not(target_endian = "little"))]
+fn write_f32s(w: &mut impl Write, v: &[f32]) -> io::Result<()> {
+    for x in v {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(buf: &[u8]) -> Result<Vec<f32>, FrameError> {
+    if buf.len() % 4 != 0 {
+        return Err(FrameError("f32 payload length not a multiple of 4"));
+    }
+    // `from_le_bytes` is a bit-level reinterpretation: NaN payloads and
+    // subnormals survive the round-trip exactly.
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Bounds-checked little-endian cursor over a frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or(FrameError("frame truncated"))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn string(&mut self) -> Result<String, FrameError> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|_| FrameError("non-utf8 string"))
+    }
+
+    fn finish(&self) -> Result<(), FrameError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(FrameError("trailing bytes"))
+        }
+    }
+}
+
+fn put_u32(w: &mut impl Write, v: u32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn put_u64(w: &mut impl Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn put_f64(w: &mut impl Write, v: f64) -> io::Result<()> {
+    // Bit-exact: losses must aggregate to the same f64 the worker saw.
+    put_u64(w, v.to_bits())
+}
+
+fn put_str(w: &mut impl Write, s: &str) -> io::Result<()> {
+    let len = u32::try_from(s.len()).map_err(|_| invalid_data("string exceeds u32 length"))?;
+    put_u32(w, len)?;
+    w.write_all(s.as_bytes())
+}
+
+fn small_u32(v: usize, what: &'static str) -> io::Result<u32> {
+    u32::try_from(v).map_err(|_| invalid_data(format!("{what} exceeds u32")))
+}
+
+impl Wire for Vec<f32> {
+    fn encoded_len(&self) -> usize {
+        self.len() * 4
+    }
+
+    fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        write_f32s(w, self)
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, FrameError> {
+        read_f32s(buf)
+    }
+}
+
+impl Wire for PipeMsg {
+    fn encoded_len(&self) -> usize {
+        8 + self.2.len() * 4
+    }
+
+    fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        put_u32(w, small_u32(self.0, "pipe layer id")?)?;
+        put_u32(w, small_u32(self.1, "pipe micro-batch id")?)?;
+        write_f32s(w, &self.2)
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, FrameError> {
+        if buf.len() < 8 {
+            return Err(FrameError("pipe frame shorter than its header"));
+        }
+        let mut c = Cursor::new(&buf[..8]);
+        let layer = c.u32()? as usize;
+        let mb = c.u32()? as usize;
+        Ok((layer, mb, read_f32s(&buf[8..])?))
+    }
+}
+
+/// Per-rank end-of-run summary shipped over the control plane — the
+/// socket-transport analogue of the in-process `WorkerStats` join.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RankStats {
+    pub execute_secs: f64,
+    pub execute_calls: u64,
+    /// Payload elements sent on the data-parallel ring.
+    pub collective_elems_sent: u64,
+    /// Payload elements sent on the pipeline rings.
+    pub pipeline_elems_sent: u64,
+    /// Payload elements sent on the tensor-parallel ring.
+    pub tp_elems_sent: u64,
+    pub layer_state_bytes: u64,
+    pub total_state_bytes: u64,
+    pub wall_secs: f64,
+    /// Whether this rank ran truly sharded tensor-parallel compute.
+    pub tp_sharded: bool,
+    /// The lowered schedule's name (coordinator-side config-skew check).
+    pub schedule: String,
+}
+
+/// Control-plane messages between workers and the launch coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CtrlMsg {
+    /// Worker → coordinator, first frame on the control connection: my
+    /// rank index and the address my data listener accepts on.
+    Hello { rank: u32, addr: String },
+    /// Coordinator → worker: the rank → data-listener address table.
+    Peers { addrs: Vec<String> },
+    /// Worker → coordinator: one step's loss report.
+    Loss { step: u64, dp: u32, loss: f64 },
+    /// Worker → coordinator: end-of-run statistics.
+    Stats(RankStats),
+    /// Worker → coordinator: clean shutdown marker.
+    Done,
+}
+
+const TAG_HELLO: u8 = 0;
+const TAG_PEERS: u8 = 1;
+const TAG_LOSS: u8 = 2;
+const TAG_STATS: u8 = 3;
+const TAG_DONE: u8 = 4;
+
+impl Wire for CtrlMsg {
+    fn encoded_len(&self) -> usize {
+        1 + match self {
+            CtrlMsg::Hello { addr, .. } => 4 + 4 + addr.len(),
+            CtrlMsg::Peers { addrs } => 4 + addrs.iter().map(|a| 4 + a.len()).sum::<usize>(),
+            CtrlMsg::Loss { .. } => 8 + 4 + 8,
+            CtrlMsg::Stats(s) => 8 * 8 + 1 + 4 + s.schedule.len(),
+            CtrlMsg::Done => 0,
+        }
+    }
+
+    fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        match self {
+            CtrlMsg::Hello { rank, addr } => {
+                w.write_all(&[TAG_HELLO])?;
+                put_u32(w, *rank)?;
+                put_str(w, addr)
+            }
+            CtrlMsg::Peers { addrs } => {
+                w.write_all(&[TAG_PEERS])?;
+                put_u32(w, small_u32(addrs.len(), "peer count")?)?;
+                for a in addrs {
+                    put_str(w, a)?;
+                }
+                Ok(())
+            }
+            CtrlMsg::Loss { step, dp, loss } => {
+                w.write_all(&[TAG_LOSS])?;
+                put_u64(w, *step)?;
+                put_u32(w, *dp)?;
+                put_f64(w, *loss)
+            }
+            CtrlMsg::Stats(s) => {
+                w.write_all(&[TAG_STATS])?;
+                put_f64(w, s.execute_secs)?;
+                put_u64(w, s.execute_calls)?;
+                put_u64(w, s.collective_elems_sent)?;
+                put_u64(w, s.pipeline_elems_sent)?;
+                put_u64(w, s.tp_elems_sent)?;
+                put_u64(w, s.layer_state_bytes)?;
+                put_u64(w, s.total_state_bytes)?;
+                put_f64(w, s.wall_secs)?;
+                w.write_all(&[u8::from(s.tp_sharded)])?;
+                put_str(w, &s.schedule)
+            }
+            CtrlMsg::Done => w.write_all(&[TAG_DONE]),
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, FrameError> {
+        let mut c = Cursor::new(buf);
+        let msg = match c.u8()? {
+            TAG_HELLO => CtrlMsg::Hello { rank: c.u32()?, addr: c.string()? },
+            TAG_PEERS => {
+                let n = c.u32()? as usize;
+                let mut addrs = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    addrs.push(c.string()?);
+                }
+                CtrlMsg::Peers { addrs }
+            }
+            TAG_LOSS => CtrlMsg::Loss { step: c.u64()?, dp: c.u32()?, loss: c.f64()? },
+            TAG_STATS => CtrlMsg::Stats(RankStats {
+                execute_secs: c.f64()?,
+                execute_calls: c.u64()?,
+                collective_elems_sent: c.u64()?,
+                pipeline_elems_sent: c.u64()?,
+                tp_elems_sent: c.u64()?,
+                layer_state_bytes: c.u64()?,
+                total_state_bytes: c.u64()?,
+                wall_secs: c.f64()?,
+                tp_sharded: c.u8()? != 0,
+                schedule: c.string()?,
+            }),
+            TAG_DONE => CtrlMsg::Done,
+            _ => return Err(FrameError("unknown control tag")),
+        };
+        c.finish()?;
+        Ok(msg)
+    }
+}
+
+/// Which logical channel of the topology a data connection carries.
+/// Together with the receiver's own grid coordinates this pins the
+/// exact ring instance, so one kind byte per connection suffices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ChanKind {
+    PipeAct,
+    PipeGrad,
+    DpRing,
+    TpRing,
+}
+
+impl ChanKind {
+    fn tag(self) -> u8 {
+        match self {
+            ChanKind::PipeAct => 0,
+            ChanKind::PipeGrad => 1,
+            ChanKind::DpRing => 2,
+            ChanKind::TpRing => 3,
+        }
+    }
+
+    fn from_tag(t: u8) -> Result<Self, FrameError> {
+        Ok(match t {
+            0 => ChanKind::PipeAct,
+            1 => ChanKind::PipeGrad,
+            2 => ChanKind::DpRing,
+            3 => ChanKind::TpRing,
+            _ => return Err(FrameError("unknown channel kind")),
+        })
+    }
+}
+
+/// First frame on every data-plane connection: the dialing rank
+/// self-identifies so the receiver can demux its accepted streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DataHello {
+    pub chan: ChanKind,
+    pub from: u32,
+    pub to: u32,
+}
+
+impl Wire for DataHello {
+    fn encoded_len(&self) -> usize {
+        9
+    }
+
+    fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&[self.chan.tag()])?;
+        put_u32(w, self.from)?;
+        put_u32(w, self.to)
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, FrameError> {
+        let mut c = Cursor::new(buf);
+        let h = DataHello { chan: ChanKind::from_tag(c.u8()?)?, from: c.u32()?, to: c.u32()? };
+        c.finish()?;
+        Ok(h)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The socket transport port.
+
+/// One directed duplex [`Transport`] port over TCP: a buffered writer
+/// toward the send-peer and a dedicated reader thread draining the
+/// recv-peer's stream into an unbounded channel. The reader always
+/// draining keeps `send` from blocking indefinitely on a live peer;
+/// either side dying surfaces as [`Disconnected`], never a hang.
+pub struct SocketPort<M: Wire> {
+    tx: BufWriter<TcpStream>,
+    rx: Receiver<M>,
+}
+
+impl<M: Wire> SocketPort<M> {
+    /// Wrap an outgoing stream (toward the send-peer) and an incoming
+    /// stream (from the recv-peer) — two distinct connections, one per
+    /// direction, matching the ring wiring's asymmetric neighbours.
+    pub fn new(out: TcpStream, inc: TcpStream) -> Self {
+        let (tx, rx) = channel::<M>();
+        thread::Builder::new()
+            .name("socket-reader".into())
+            .spawn(move || {
+                let mut r = BufReader::new(inc);
+                loop {
+                    let Ok(buf) = read_frame(&mut r) else { return };
+                    let Ok(msg) = M::decode(&buf) else { return };
+                    if tx.send(msg).is_err() {
+                        return; // port dropped: stop draining
+                    }
+                }
+            })
+            .expect("spawn socket reader thread");
+        SocketPort { tx: BufWriter::new(out), rx }
+    }
+}
+
+impl<M: Wire> Transport<M> for SocketPort<M> {
+    fn send(&mut self, msg: M) -> Result<(), Disconnected> {
+        write_frame(&mut self.tx, &msg)
+            .and_then(|()| self.tx.flush())
+            .map_err(|_| Disconnected)
+    }
+
+    fn recv(&mut self) -> Result<M, Disconnected> {
+        // The reader thread drops its sender on EOF/error, which
+        // surfaces here as a clean disconnect.
+        self.rx.recv().map_err(|_| Disconnected)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback wiring helpers (tests, benches, netbench).
+
+fn configure(s: &TcpStream) -> io::Result<()> {
+    // Latency matters more than throughput aggregation for ring rounds
+    // and barrier tokens; frames are already batched application-side.
+    s.set_nodelay(true)
+}
+
+/// A connected duplex pair over loopback: `a.send → b.recv` and vice
+/// versa (the n = 2 ring, where next and previous neighbour coincide).
+pub fn socket_pair<M: Wire>() -> io::Result<(SocketPort<M>, SocketPort<M>)> {
+    let listener = TcpListener::bind(("127.0.0.1", 0))?;
+    let addr = listener.local_addr()?;
+    // `connect` returns only once the handshake completed, so accept
+    // order deterministically matches dial order.
+    let a_out = TcpStream::connect(addr)?;
+    let (b_in, _) = listener.accept()?;
+    let b_out = TcpStream::connect(addr)?;
+    let (a_in, _) = listener.accept()?;
+    for s in [&a_out, &b_in, &b_out, &a_in] {
+        configure(s)?;
+    }
+    Ok((SocketPort::new(a_out, a_in), SocketPort::new(b_out, b_in)))
+}
+
+/// Wire an `n`-member socket ring over loopback (rank i sends to
+/// i+1 mod n, hears from i−1 mod n) — the socket analogue of
+/// [`mpsc_ring`], for tests and the netbench probe.
+pub fn socket_ring(n: usize) -> io::Result<Vec<SocketPort<Vec<f32>>>> {
+    assert!(n >= 1);
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind(("127.0.0.1", 0))).collect::<io::Result<_>>()?;
+    let mut outs = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = TcpStream::connect(listeners[(i + 1) % n].local_addr()?)?;
+        configure(&s)?;
+        outs.push(s);
+    }
+    let mut ports = Vec::with_capacity(n);
+    for (l, out) in listeners.iter().zip(outs) {
+        // listener[j] hears exactly one dialer: rank j−1.
+        let (inc, _) = l.accept()?;
+        configure(&inc)?;
+        ports.push(SocketPort::new(out, inc));
+    }
+    Ok(ports)
+}
+
+// ---------------------------------------------------------------------------
+// Rendezvous and world wiring.
+
+fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let t0 = Instant::now();
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                configure(&s)?;
+                return Ok(s);
+            }
+            Err(e) => {
+                if t0.elapsed() > timeout {
+                    return Err(io::Error::new(e.kind(), format!("connecting to {addr}: {e}")));
+                }
+                thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+}
+
+/// The launch-side rendezvous listener: accepts one control connection
+/// per rank, collects their `Hello`s, broadcasts the `Peers` table.
+pub struct Coordinator {
+    listener: TcpListener,
+    n: usize,
+}
+
+impl Coordinator {
+    /// Bind on `addr` (`"127.0.0.1:0"` for a loopback launch; a
+    /// reachable interface + fixed port for multi-host) expecting `n`
+    /// workers.
+    pub fn bind(addr: &str, n: usize) -> io::Result<Self> {
+        assert!(n >= 1, "a world needs at least one rank");
+        Ok(Coordinator { listener: TcpListener::bind(addr)?, n })
+    }
+
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Run the rendezvous: accept all `n` workers within `deadline`
+    /// (erroring out instead of hanging if one never shows up), then
+    /// broadcast the address table. Returns the per-rank control
+    /// streams, index = rank, ready for loss/stats draining.
+    pub fn rendezvous(&self, deadline: Duration) -> io::Result<Vec<TcpStream>> {
+        self.listener.set_nonblocking(true)?;
+        let t0 = Instant::now();
+        let mut streams: Vec<Option<TcpStream>> = (0..self.n).map(|_| None).collect();
+        let mut addrs: Vec<Option<String>> = vec![None; self.n];
+        let mut got = 0usize;
+        while got < self.n {
+            match self.listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false)?;
+                    configure(&s)?;
+                    s.set_read_timeout(Some(deadline))?;
+                    let hello = CtrlMsg::decode(&read_frame(&mut s)?).map_err(invalid_data)?;
+                    let CtrlMsg::Hello { rank, addr } = hello else {
+                        return Err(invalid_data("expected Hello as the first control frame"));
+                    };
+                    let rank = rank as usize;
+                    if rank >= self.n {
+                        return Err(invalid_data(format!(
+                            "rank {rank} out of range for a {}-rank world",
+                            self.n
+                        )));
+                    }
+                    if streams[rank].is_some() {
+                        return Err(invalid_data(format!("rank {rank} connected twice")));
+                    }
+                    streams[rank] = Some(s);
+                    addrs[rank] = Some(addr);
+                    got += 1;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if t0.elapsed() > deadline {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            format!("rendezvous timed out: {got}/{} workers connected", self.n),
+                        ));
+                    }
+                    thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.listener.set_nonblocking(false)?;
+        let addrs: Vec<String> = addrs.into_iter().map(|a| a.expect("collected")).collect();
+        let mut out = Vec::with_capacity(self.n);
+        for s in streams {
+            let mut s = s.expect("collected");
+            write_frame(&mut s, &CtrlMsg::Peers { addrs: addrs.clone() })?;
+            s.set_read_timeout(None)?;
+            out.push(s);
+        }
+        Ok(out)
+    }
+}
+
+/// The ring edges a rank owns, as (kind, peer index) pairs: which
+/// channels it accepts (dialed by the previous neighbour on each axis)
+/// and which it dials (toward the next neighbour). Mirrors exactly the
+/// mpsc wiring of [`CommWorld::build`].
+fn ring_edges(topo: Topology, rank: Rank) -> (Vec<(ChanKind, usize)>, Vec<(ChanKind, usize)>) {
+    let (s, d, t) = (topo.stages, topo.dp, topo.tp);
+    let at = |r: Rank| topo.index(r);
+    let mut expect = Vec::new();
+    let mut dial = Vec::new();
+    if s > 1 {
+        // Activations flow forward (hear from stage−1, dial stage+1);
+        // gradients flow backward.
+        expect.push((ChanKind::PipeAct, at(Rank { stage: (rank.stage + s - 1) % s, ..rank })));
+        dial.push((ChanKind::PipeAct, at(Rank { stage: (rank.stage + 1) % s, ..rank })));
+        expect.push((ChanKind::PipeGrad, at(Rank { stage: (rank.stage + 1) % s, ..rank })));
+        dial.push((ChanKind::PipeGrad, at(Rank { stage: (rank.stage + s - 1) % s, ..rank })));
+    }
+    if d > 1 {
+        expect.push((ChanKind::DpRing, at(Rank { dp: (rank.dp + d - 1) % d, ..rank })));
+        dial.push((ChanKind::DpRing, at(Rank { dp: (rank.dp + 1) % d, ..rank })));
+    }
+    if t > 1 {
+        expect.push((ChanKind::TpRing, at(Rank { tp: (rank.tp + t - 1) % t, ..rank })));
+        dial.push((ChanKind::TpRing, at(Rank { tp: (rank.tp + 1) % t, ..rank })));
+    }
+    (expect, dial)
+}
+
+/// A size-1 in-process self-loop ring member (degenerate axis): same
+/// no-op collectives and zero traffic as the mpsc backend.
+fn self_ring() -> RingGroup {
+    super::ring::ring_group(1).pop().expect("ring_group(1) yields one member")
+}
+
+/// Join a socket-wired world as rank `index` of `topo`: bind this
+/// rank's data listener, rendezvous through the coordinator at
+/// `coord_addr`, dial/accept exactly the ring edges the mpsc builder
+/// would wire, and assemble the rank's [`CommWorld`].
+///
+/// `hostmap` (from `REPRO_HOSTMAP`) gives one bindable data-listener
+/// address per rank for multi-host runs; `None` binds loopback
+/// ephemeral ports discovered through the rendezvous.
+pub fn connect_world(
+    topo: Topology,
+    index: usize,
+    coord_addr: &str,
+    hostmap: Option<&[String]>,
+    timeout: Duration,
+) -> io::Result<CommWorld> {
+    let n = topo.n_ranks();
+    assert!(index < n, "rank index {index} out of range for {n} ranks");
+    if let Some(m) = hostmap {
+        if m.len() != n {
+            return Err(invalid_data(format!(
+                "REPRO_HOSTMAP has {} entries for a {n}-rank world",
+                m.len()
+            )));
+        }
+    }
+    let rank = topo.rank_at(index);
+    let (expect, dial) = ring_edges(topo, rank);
+
+    let bind_addr = hostmap.map_or_else(|| "127.0.0.1:0".to_string(), |m| m[index].clone());
+    let listener = TcpListener::bind(&bind_addr)?;
+    let advertised = match hostmap {
+        Some(m) => m[index].clone(),
+        None => listener.local_addr()?.to_string(),
+    };
+
+    // Accept in a thread so dialing out can't deadlock against peers
+    // dialing in.
+    let expect_n = expect.len();
+    let my_index = small_u32(index, "rank index")?;
+    let accept: thread::JoinHandle<io::Result<Vec<(DataHello, TcpStream)>>> =
+        thread::Builder::new()
+            .name(format!("accept-rank-{index}"))
+            .spawn(move || {
+                let mut got = Vec::with_capacity(expect_n);
+                for _ in 0..expect_n {
+                    let (mut s, _) = listener.accept()?;
+                    configure(&s)?;
+                    s.set_read_timeout(Some(timeout))?;
+                    let hello = DataHello::decode(&read_frame(&mut s)?).map_err(invalid_data)?;
+                    if hello.to != my_index {
+                        return Err(invalid_data(format!(
+                            "data connection addressed to rank {} reached rank {my_index}",
+                            hello.to
+                        )));
+                    }
+                    s.set_read_timeout(None)?;
+                    got.push((hello, s));
+                }
+                Ok(got)
+            })
+            .expect("spawn accept thread");
+
+    // Control rendezvous: Hello out, Peers table back.
+    let mut ctrl = connect_retry(coord_addr, timeout)?;
+    write_frame(&mut ctrl, &CtrlMsg::Hello { rank: my_index, addr: advertised })?;
+    ctrl.set_read_timeout(Some(timeout))?;
+    let peers = match CtrlMsg::decode(&read_frame(&mut ctrl)?).map_err(invalid_data)? {
+        CtrlMsg::Peers { addrs } => addrs,
+        _ => return Err(invalid_data("expected Peers from the coordinator")),
+    };
+    ctrl.set_read_timeout(None)?;
+    if peers.len() != n {
+        return Err(invalid_data(format!("coordinator sent {} peers, expected {n}", peers.len())));
+    }
+
+    // Dial the outgoing edges, self-identifying per connection.
+    let mut out_streams: HashMap<ChanKind, TcpStream> = HashMap::new();
+    for (kind, to) in dial {
+        let mut s = connect_retry(&peers[to], timeout)?;
+        write_frame(&mut s, &DataHello { chan: kind, from: my_index, to: small_u32(to, "rank")? })?;
+        out_streams.insert(kind, s);
+    }
+
+    // Collect the incoming edges and demux by channel kind.
+    let mut inc_streams: HashMap<ChanKind, TcpStream> = HashMap::new();
+    let accepted = accept.join().map_err(|_| invalid_data("accept thread panicked"))??;
+    for (hello, s) in accepted {
+        let want_from = expect.iter().find(|(k, _)| *k == hello.chan).map(|&(_, f)| f);
+        match want_from {
+            Some(f) if f == hello.from as usize => {
+                if inc_streams.insert(hello.chan, s).is_some() {
+                    return Err(invalid_data("duplicate data connection for a channel"));
+                }
+            }
+            _ => {
+                return Err(invalid_data(format!(
+                    "unexpected data connection {:?} from rank {}",
+                    hello.chan, hello.from
+                )))
+            }
+        }
+    }
+
+    let mut take = |kind: ChanKind| -> io::Result<(TcpStream, TcpStream)> {
+        let o = out_streams.remove(&kind).ok_or_else(|| invalid_data("missing outgoing edge"))?;
+        let i = inc_streams.remove(&kind).ok_or_else(|| invalid_data("missing incoming edge"))?;
+        Ok((o, i))
+    };
+
+    let pipeline = if topo.stages > 1 {
+        let (ao, ai) = take(ChanKind::PipeAct)?;
+        let (go, gi) = take(ChanKind::PipeGrad)?;
+        PipelineGroup::new(
+            Box::new(SocketPort::<PipeMsg>::new(ao, ai)),
+            Box::new(SocketPort::<PipeMsg>::new(go, gi)),
+        )
+    } else {
+        // Degenerate stage axis: the same in-process self-loops the
+        // mpsc builder wires.
+        let act = mpsc_ring::<PipeMsg>(1).pop().expect("one port");
+        let grad = mpsc_ring_rev::<PipeMsg>(1).pop().expect("one port");
+        PipelineGroup::new(Box::new(act), Box::new(grad))
+    };
+    let dp_group = if topo.dp > 1 {
+        let (o, i) = take(ChanKind::DpRing)?;
+        RingGroup::new_wire(rank.dp, topo.dp, Box::new(SocketPort::<Vec<f32>>::new(o, i)))
+    } else {
+        self_ring()
+    };
+    let tp_group = if topo.tp > 1 {
+        let (o, i) = take(ChanKind::TpRing)?;
+        RingGroup::new_wire(rank.tp, topo.tp, Box::new(SocketPort::<Vec<f32>>::new(o, i)))
+    } else {
+        self_ring()
+    };
+
+    Ok(CommWorld::from_parts(rank, topo, pipeline, dp_group, tp_group, ControlGroup::wire(ctrl)))
+}
+
+// ---------------------------------------------------------------------------
+// Netbench: measure the wire the calibration feeds on.
+
+/// Measured loopback (or hostmap'd) socket characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct NetProbe {
+    /// Median small-frame round-trip time, seconds.
+    pub rtt_secs: f64,
+    /// Sustained one-way framed bandwidth, bytes/s.
+    pub bandwidth_bytes_per_s: f64,
+    /// Effective per-rank all-reduce bandwidth over a 2-member socket
+    /// ring (payload bytes per rank per second, at the 2·(n−1)/n ring
+    /// volume).
+    pub ring_allreduce_bytes_per_s: f64,
+    /// Streaming payload size used for the bandwidth probes, bytes.
+    pub payload_bytes: usize,
+}
+
+fn disconnected(_: Disconnected) -> io::Error {
+    io::Error::new(io::ErrorKind::ConnectionAborted, "netbench peer hung up")
+}
+
+/// Measure socket round-trip latency and sustained bandwidth over
+/// loopback: the numbers `BENCH_net_calibration.json` records and
+/// [`crate::hardware::NetCalibration`] feeds back into the cost model.
+pub fn netbench(
+    payload_elems: usize,
+    pingpong_iters: usize,
+    stream_frames: usize,
+) -> io::Result<NetProbe> {
+    assert!(payload_elems > 0 && pingpong_iters > 0 && stream_frames > 0);
+    let (mut a, mut b) = socket_pair::<Vec<f32>>()?;
+
+    // Round-trip latency: tiny-frame ping-pong, median over the runs.
+    let echo = thread::spawn(move || -> Result<SocketPort<Vec<f32>>, Disconnected> {
+        for _ in 0..pingpong_iters {
+            let m = b.recv()?;
+            b.send(m)?;
+        }
+        Ok(b)
+    });
+    let mut rtts = Vec::with_capacity(pingpong_iters);
+    for _ in 0..pingpong_iters {
+        let t = Instant::now();
+        a.send(vec![1.0]).map_err(disconnected)?;
+        a.recv().map_err(disconnected)?;
+        rtts.push(t.elapsed().as_secs_f64());
+    }
+    let mut b = echo.join().expect("echo thread").map_err(disconnected)?;
+    rtts.sort_by(f64::total_cmp);
+    let rtt_secs = rtts[rtts.len() / 2];
+
+    // Sustained one-way bandwidth: stream frames, one ack back.
+    let payload_bytes = payload_elems * 4;
+    let sink = thread::spawn(move || -> Result<(), Disconnected> {
+        for _ in 0..stream_frames {
+            b.recv()?;
+        }
+        b.send(vec![0.0])?;
+        Ok(())
+    });
+    let payload = vec![0.5f32; payload_elems];
+    let t0 = Instant::now();
+    for _ in 0..stream_frames {
+        a.send(payload.clone()).map_err(disconnected)?;
+    }
+    a.recv().map_err(disconnected)?;
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    sink.join().expect("sink thread").map_err(disconnected)?;
+    let bandwidth_bytes_per_s = (stream_frames * payload_bytes) as f64 / secs;
+
+    // Ring all-reduce over sockets: per-rank wire volume for n = 2 is
+    // exactly the payload size per all-reduce.
+    let iters = 16usize;
+    let mut ports = socket_ring(2)?;
+    let p1 = ports.pop().expect("two ports");
+    let p0 = ports.pop().expect("two ports");
+    let peer = thread::spawn(move || {
+        let mut g = RingGroup::new_wire(1, 2, Box::new(p1));
+        let mut buf = vec![1.0f32; payload_elems];
+        for _ in 0..iters {
+            g.all_reduce(&mut buf);
+        }
+    });
+    let mut g = RingGroup::new_wire(0, 2, Box::new(p0));
+    let mut buf = vec![1.0f32; payload_elems];
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        g.all_reduce(&mut buf);
+    }
+    let ring_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    peer.join().expect("ring peer thread");
+    let ring_allreduce_bytes_per_s = (iters * payload_bytes) as f64 / ring_secs;
+
+    Ok(NetProbe { rtt_secs, bandwidth_bytes_per_s, ring_allreduce_bytes_per_s, payload_bytes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // -- Frame codec (socket-free: stays in the fast tier-1 path). ---------
+
+    fn roundtrip<M: Wire + PartialEq + std::fmt::Debug + Clone>(msg: &M) {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg).unwrap();
+        assert_eq!(buf.len(), 4 + msg.encoded_len(), "length prefix mismatch");
+        let payload = read_frame(&mut buf.as_slice()).unwrap();
+        assert_eq!(&M::decode(&payload).unwrap(), msg);
+    }
+
+    #[test]
+    fn f32_payloads_roundtrip_bit_exactly() {
+        let cases: Vec<Vec<f32>> = vec![
+            vec![],
+            vec![0.0, -0.0, 1.5, -2.25e-3],
+            vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY],
+            vec![1e-45, -3.0e-39, f32::MIN_POSITIVE, f32::MAX, f32::MIN],
+            (0..10_000).map(|i| (i as f32).sin() * 1e30).collect(),
+        ];
+        for v in cases {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &v).unwrap();
+            let got = Vec::<f32>::decode(&read_frame(&mut buf.as_slice()).unwrap()).unwrap();
+            assert_eq!(got.len(), v.len());
+            for (a, b) in got.iter().zip(&v) {
+                // Bit-level equality: NaN payloads and signed zeros too.
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pipe_msgs_roundtrip() {
+        roundtrip(&(0usize, 0usize, Vec::<f32>::new()));
+        roundtrip(&(7usize, 31usize, vec![1.0f32, f32::NAN, 1e-45]));
+        roundtrip(&(usize::from(u16::MAX), 2usize, vec![0.25f32; 1023]));
+    }
+
+    #[test]
+    fn control_msgs_roundtrip() {
+        roundtrip(&CtrlMsg::Hello { rank: 3, addr: "127.0.0.1:45133".into() });
+        roundtrip(&CtrlMsg::Peers { addrs: vec!["a:1".into(), "b:2".into(), String::new()] });
+        roundtrip(&CtrlMsg::Loss { step: u64::MAX, dp: 0, loss: -f64::NAN });
+        roundtrip(&CtrlMsg::Loss { step: 0, dp: 7, loss: 5.551e-308 });
+        roundtrip(&CtrlMsg::Stats(RankStats {
+            execute_secs: 1.25,
+            execute_calls: 42,
+            collective_elems_sent: u64::MAX,
+            pipeline_elems_sent: 0,
+            tp_elems_sent: 9,
+            layer_state_bytes: 1 << 40,
+            total_state_bytes: 3,
+            wall_secs: f64::INFINITY,
+            tp_sharded: true,
+            schedule: "modular-pipeline".into(),
+        }));
+        roundtrip(&CtrlMsg::Done);
+    }
+
+    #[test]
+    fn data_hello_roundtrips() {
+        for chan in [ChanKind::PipeAct, ChanKind::PipeGrad, ChanKind::DpRing, ChanKind::TpRing] {
+            roundtrip(&DataHello { chan, from: 11, to: 4 });
+        }
+    }
+
+    /// Fuzz-ish property sweep: a structured message survives the codec
+    /// for many payload shapes, and *any* truncation of its payload is
+    /// rejected rather than mis-decoded.
+    #[test]
+    fn codec_rejects_every_truncation() {
+        let msg = CtrlMsg::Stats(RankStats {
+            execute_secs: 0.5,
+            execute_calls: 1,
+            collective_elems_sent: 2,
+            pipeline_elems_sent: 3,
+            tp_elems_sent: 4,
+            layer_state_bytes: 5,
+            total_state_bytes: 6,
+            wall_secs: 7.0,
+            tp_sharded: false,
+            schedule: "probe".into(),
+        });
+        let mut buf = Vec::new();
+        msg.encode(&mut buf).unwrap();
+        for cut in 0..buf.len() {
+            assert!(CtrlMsg::decode(&buf[..cut]).is_err(), "truncation at {cut} accepted");
+        }
+        // Trailing garbage is rejected too.
+        let mut extended = buf.clone();
+        extended.push(0);
+        assert!(CtrlMsg::decode(&extended).is_err());
+    }
+
+    /// Pseudo-random frame bytes never panic the decoder — they decode
+    /// or error. (Deterministic LCG; no RNG dependency.)
+    #[test]
+    fn codec_survives_random_bytes() {
+        let mut state = 0x2545_f491_4f6c_dd1du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        for _ in 0..2000 {
+            let len = (next() % 64) as usize;
+            let bytes: Vec<u8> = (0..len).map(|_| (next() & 0xff) as u8).collect();
+            let _ = CtrlMsg::decode(&bytes);
+            let _ = DataHello::decode(&bytes);
+            let _ = <(usize, usize, Vec<f32>)>::decode(&bytes);
+            let _ = Vec::<f32>::decode(&bytes);
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_without_allocating() {
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        framed.extend_from_slice(&[0u8; 16]);
+        let err = read_frame(&mut framed.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+    }
+
+    // -- Socket transport over loopback. ------------------------------------
+
+    #[test]
+    fn socket_pair_delivers_in_order_both_directions() {
+        let (mut a, mut b) = socket_pair::<Vec<f32>>().unwrap();
+        for i in 0..10 {
+            a.send(vec![i as f32]).unwrap();
+            b.send(vec![-(i as f32)]).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(b.recv().unwrap(), vec![i as f32]);
+            assert_eq!(a.recv().unwrap(), vec![-(i as f32)]);
+        }
+    }
+
+    #[test]
+    fn torn_connection_is_a_clean_disconnect_not_a_hang() {
+        let (mut a, b) = socket_pair::<Vec<f32>>().unwrap();
+        drop(b);
+        // recv surfaces the peer's death immediately.
+        assert_eq!(a.recv(), Err(Disconnected));
+        // send errors once the kernel learns of the reset — bounded
+        // loop, never an indefinite block.
+        let mut surfaced = false;
+        for _ in 0..10_000 {
+            if a.send(vec![0.0f32; 16 * 1024]).is_err() {
+                surfaced = true;
+                break;
+            }
+        }
+        assert!(surfaced, "send never surfaced the torn connection");
+    }
+
+    #[test]
+    fn socket_ring_matches_mpsc_ring_bitwise() {
+        use super::super::ring::ring_group;
+        for n in [2usize, 3] {
+            let data = |rank: usize| -> Vec<f32> {
+                (0..37).map(|i| ((rank * 100 + i) as f32).sin() * 1e3).collect()
+            };
+            // mpsc reference.
+            let mut mpsc_results = Vec::new();
+            let handles: Vec<_> = ring_group(n)
+                .into_iter()
+                .map(|mut g| {
+                    let mut d = data(g.rank);
+                    thread::spawn(move || {
+                        g.all_reduce(&mut d);
+                        (g.rank, d, g.sent_elems())
+                    })
+                })
+                .collect();
+            for h in handles {
+                mpsc_results.push(h.join().unwrap());
+            }
+            mpsc_results.sort_by_key(|r| r.0);
+            // socket run of the same SPMD program.
+            let handles: Vec<_> = socket_ring(n)
+                .unwrap()
+                .into_iter()
+                .enumerate()
+                .map(|(rank, p)| {
+                    let mut g = RingGroup::new_wire(rank, n, Box::new(p));
+                    let mut d = data(rank);
+                    thread::spawn(move || {
+                        g.all_reduce(&mut d);
+                        g.barrier();
+                        (rank, d, g.sent_elems())
+                    })
+                })
+                .collect();
+            let mut sock_results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+            sock_results.sort_by_key(|r| r.0);
+            for ((_, md, me), (_, sd, se)) in mpsc_results.iter().zip(&sock_results) {
+                assert_eq!(me, se, "n={n}: traffic accounting diverged (barrier counted?)");
+                for (x, y) in md.iter().zip(sd) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n}: reduction diverged");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_socket_ring_is_a_self_loop() {
+        let mut ports = socket_ring(1).unwrap();
+        ports[0].send(vec![7.5]).unwrap();
+        assert_eq!(ports[0].recv().unwrap(), vec![7.5]);
+    }
+
+    #[test]
+    fn netbench_reports_sane_numbers() {
+        let p = netbench(1 << 12, 16, 8).unwrap();
+        assert!(p.rtt_secs > 0.0 && p.rtt_secs < 1.0, "rtt {:.6}s", p.rtt_secs);
+        assert!(p.bandwidth_bytes_per_s > 0.0);
+        assert!(p.ring_allreduce_bytes_per_s > 0.0);
+        assert_eq!(p.payload_bytes, 4 << 12);
+    }
+}

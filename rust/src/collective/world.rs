@@ -24,13 +24,19 @@
 //! elements it puts on the wire; [`CommWorld::traffic`] reports them
 //! per-group for `WorkerStats` and the traffic-accounting tests.
 //!
-//! All groups run over the [`super::transport::Transport`] trait with
-//! the in-process mpsc backend as the first implementation — the wiring
-//! below is the only mpsc-specific code.
+//! All groups run over the [`super::transport::Transport`] trait.
+//! [`CommWorld::build`] wires a whole topology over the in-process mpsc
+//! backend (threads in one process); `super::socket::connect_world`
+//! assembles the identical group structure per *process* over TCP via
+//! [`CommWorld::from_parts`], with the control plane switching from an
+//! mpsc sender to a framed socket back to the launch coordinator.
 
+use std::io::{BufWriter, Write};
+use std::net::TcpStream;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use super::ring::{ring_group, RingGroup};
+use super::socket::{write_frame, CtrlMsg, RankStats};
 use super::transport::{mpsc_ring, mpsc_ring_rev, Disconnected, MpscPort, Transport};
 
 /// A pipeline message: (consumer layer, micro-batch, payload).
@@ -66,6 +72,17 @@ impl Topology {
     pub fn index(&self, rank: Rank) -> usize {
         (rank.dp * self.stages + rank.stage) * self.tp + rank.tp
     }
+
+    /// Inverse of [`Topology::index`]: the grid coordinates of flat
+    /// rank `index` (what a spawned worker process is handed).
+    pub fn rank_at(&self, index: usize) -> Rank {
+        assert!(index < self.n_ranks(), "rank index {index} out of range");
+        Rank {
+            tp: index % self.tp,
+            stage: (index / self.tp) % self.stages,
+            dp: index / (self.tp * self.stages),
+        }
+    }
 }
 
 /// One rank's coordinates in the grid.
@@ -86,6 +103,12 @@ pub struct PipelineGroup {
 }
 
 impl PipelineGroup {
+    /// Wrap wired activation/gradient ports (any transport backend) as
+    /// this rank's pipeline group.
+    pub fn new(act: Box<dyn Transport<PipeMsg>>, grad: Box<dyn Transport<PipeMsg>>) -> Self {
+        PipelineGroup { act, grad, sent_elems: 0 }
+    }
+
     /// Ship a micro-batch's activations to the next stage.
     pub fn send_act(
         &mut self,
@@ -124,17 +147,56 @@ impl PipelineGroup {
     }
 }
 
-/// Control plane: loss reporting toward the coordinator. Send-only; the
-/// coordinator holds the receiving end returned by [`CommWorld::build`].
-/// Reports after the coordinator stopped listening are dropped (normal
-/// during shutdown), not errors.
+/// Where a rank's control-plane reports go: an in-process mpsc sender
+/// (thread-backed worlds) or a framed socket toward the launch
+/// coordinator (process-backed worlds).
+enum ControlSink {
+    Mpsc(Sender<LossMsg>),
+    Wire(BufWriter<TcpStream>),
+}
+
+/// Control plane: loss and end-of-run stats reporting toward the
+/// coordinator. Send-only; the coordinator holds the receiving end
+/// (the [`CommWorld::build`] receiver, or the rendezvous control
+/// stream). Reports after the coordinator stopped listening are
+/// dropped (normal during shutdown), not errors.
 pub struct ControlGroup {
-    tx: Sender<LossMsg>,
+    sink: ControlSink,
 }
 
 impl ControlGroup {
-    pub fn report_loss(&self, step: usize, dp: usize, loss: f64) {
-        let _ = self.tx.send((step, dp, loss));
+    /// In-process control plane feeding the build-time loss receiver.
+    pub(super) fn mpsc(tx: Sender<LossMsg>) -> Self {
+        ControlGroup { sink: ControlSink::Mpsc(tx) }
+    }
+
+    /// Socket control plane: the rendezvous connection, reused for
+    /// loss/stats streaming back to the launch coordinator.
+    pub fn wire(stream: TcpStream) -> Self {
+        ControlGroup { sink: ControlSink::Wire(BufWriter::new(stream)) }
+    }
+
+    pub fn report_loss(&mut self, step: usize, dp: usize, loss: f64) {
+        match &mut self.sink {
+            ControlSink::Mpsc(tx) => {
+                let _ = tx.send((step, dp, loss));
+            }
+            ControlSink::Wire(w) => {
+                let msg = CtrlMsg::Loss { step: step as u64, dp: dp as u32, loss };
+                let _ = write_frame(w, &msg).and_then(|()| w.flush());
+            }
+        }
+    }
+
+    /// Ship this rank's end-of-run statistics. A no-op on the mpsc
+    /// backend (stats return through the thread join); on the wire the
+    /// coordinator needs them streamed, followed by a `Done` marker.
+    pub fn report_stats(&mut self, stats: RankStats) {
+        if let ControlSink::Wire(w) = &mut self.sink {
+            let _ = write_frame(w, &CtrlMsg::Stats(stats))
+                .and_then(|()| write_frame(w, &CtrlMsg::Done))
+                .and_then(|()| w.flush());
+        }
     }
 }
 
@@ -144,6 +206,20 @@ pub struct Traffic {
     pub pipeline: u64,
     pub dp: u64,
     pub tp: u64,
+}
+
+impl Traffic {
+    /// The same totals as bytes on the wire, at `elem_bytes` per
+    /// payload element (the runtime dtype's width — `DType::bytes()`).
+    pub fn bytes(&self, elem_bytes: usize) -> Traffic {
+        let b = elem_bytes as u64;
+        Traffic { pipeline: self.pipeline * b, dp: self.dp * b, tp: self.tp * b }
+    }
+
+    /// Sum across groups.
+    pub fn total(&self) -> u64 {
+        self.pipeline + self.dp + self.tp
+    }
 }
 
 /// One rank's handle on every communicator of the job.
@@ -215,12 +291,26 @@ impl CommWorld {
                         pipeline,
                         dp: dp_rings[dp_at(stage, tp, dp)].take().unwrap(),
                         tp: tp_rings[tp_at(dp, stage, tp)].take().unwrap(),
-                        control: ControlGroup { tx: loss_tx.clone() },
+                        control: ControlGroup::mpsc(loss_tx.clone()),
                     });
                 }
             }
         }
         (worlds, loss_rx)
+    }
+
+    /// Assemble one rank's world from externally wired groups — the
+    /// socket backend's entry point (`super::socket::connect_world`),
+    /// and the seam any future transport plugs into.
+    pub fn from_parts(
+        rank: Rank,
+        topo: Topology,
+        pipeline: PipelineGroup,
+        dp: RingGroup,
+        tp: RingGroup,
+        control: ControlGroup,
+    ) -> Self {
+        CommWorld { rank, topo, pipeline, dp, tp, control }
     }
 
     /// This rank's grid coordinates.
@@ -259,7 +349,7 @@ impl CommWorld {
     /// rank belongs to (size-1 rings return immediately). Keeps the lag
     /// between any two ranks of a group bounded to the step in flight —
     /// the invariant the checkpoint-retention pruning relies on.
-    pub fn step_barrier(&self) {
+    pub fn step_barrier(&mut self) {
         self.dp.barrier();
         self.tp.barrier();
     }
@@ -298,6 +388,14 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rank_at_inverts_index() {
+        let t = Topology::new(3, 2, 2);
+        for i in 0..t.n_ranks() {
+            assert_eq!(t.index(t.rank_at(i)), i, "index {i}");
+        }
     }
 
     #[test]

@@ -83,7 +83,6 @@ pub fn overheads(shape: &TransformerShape, cfg: &TrainConfig, cluster: &ClusterS
     let tp = tensor_parallel_intensity(shape, cfg);
     let off = state_offload_intensity(shape, cfg);
 
-    let tp_link = cluster.tensor_parallel_link(cfg.n_a);
     let cpu_gpu = LinkKind::CpuGpu.intensity_threshold(gpu);
     let pcie = LinkKind::PciExpress.intensity_threshold(gpu);
 
@@ -91,7 +90,7 @@ pub fn overheads(shape: &TransformerShape, cfg: &TrainConfig, cluster: &ClusterS
         bubble: bubble_fraction(shape, cfg),
         data_parallel: dp.overhead(inter),
         pipeline_parallel: pp.overhead(inter),
-        tensor_parallel: tp.overhead(tp_link.intensity_threshold(gpu)),
+        tensor_parallel: tp.overhead(cluster.tensor_parallel_threshold(cfg.n_a)),
         offload: off.overhead(cpu_gpu),
         pcie_contention: 0.0,
     };

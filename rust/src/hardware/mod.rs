@@ -5,5 +5,5 @@ pub mod network;
 pub mod topology;
 
 pub use gpu::{Bytes, Flops, GpuSpec, GB, GIB, SECS_PER_DAY};
-pub use network::{InterNode, LinkKind};
+pub use network::{InterNode, LinkKind, NetCalibration};
 pub use topology::ClusterSpec;

@@ -1,11 +1,21 @@
-//! Interconnect and storage link specifications (paper Table A.1).
+//! Interconnect and storage link specifications (paper Table A.1),
+//! plus measured-wire calibration.
 //!
 //! Each link is described by its input+output bandwidth. Bandwidths are
 //! stored in the paper's GiB-scaled convention (see [`super::gpu::GIB`])
 //! so that the derived arithmetic-intensity thresholds reproduce the
 //! printed table exactly.
+//!
+//! Quoted numbers are spec sheets; [`NetCalibration`] carries what
+//! `repro netbench` actually measured (`BENCH_net_calibration.json`:
+//! sustained framed bandwidth and round-trip latency of the socket
+//! transport). Attached to a `ClusterSpec` it overrides the quoted
+//! inter-node figures, so the simulator and planner price wire ops
+//! from reality instead of the table — the [`LinkKind`] table itself
+//! stays untouched (it *is* the paper's Table A.1).
 
 use super::gpu::{GpuSpec, GIB};
+use crate::runtime::Json;
 
 /// The kinds of link that appear in the paper's analysis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -99,9 +109,79 @@ impl InterNode {
     }
 }
 
+/// Measured inter-node link parameters, as written by `repro netbench`
+/// into `BENCH_net_calibration.json`. Attach to a cluster with
+/// `ClusterSpec::with_calibration` to price wire ops from measurement.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetCalibration {
+    /// Sustained framed socket bandwidth, bytes/s.
+    pub bandwidth_bytes_per_s: f64,
+    /// Small-frame round-trip time, seconds (one-way latency = half).
+    pub rtt_secs: f64,
+}
+
+impl NetCalibration {
+    /// Parse a `BENCH_net_calibration.json` document (the `BenchJson`
+    /// shape: `{"bench": ..., "metrics": {...}}`).
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let doc = Json::parse(text)?;
+        let metrics = doc.req("metrics")?;
+        let num = |key: &str| -> anyhow::Result<f64> {
+            metrics
+                .req(key)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("calibration key '{key}' is not a number"))
+        };
+        let cal = NetCalibration {
+            bandwidth_bytes_per_s: num("bandwidth_bytes_per_s")?,
+            rtt_secs: num("rtt_secs")?,
+        };
+        anyhow::ensure!(
+            cal.bandwidth_bytes_per_s > 0.0 && cal.rtt_secs >= 0.0,
+            "calibration out of range: bandwidth {} B/s, rtt {} s",
+            cal.bandwidth_bytes_per_s,
+            cal.rtt_secs
+        );
+        Ok(cal)
+    }
+
+    /// Load from a calibration file on disk.
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading calibration {}: {e}", path.display()))?;
+        Self::from_json(&text)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn calibration_parses_the_bench_json_shape() {
+        let text = r#"{
+  "bench": "net_calibration",
+  "metrics": {
+    "rtt_secs": 0.000125,
+    "bandwidth_bytes_per_s": 2500000000,
+    "ring_allreduce_bytes_per_s": 1200000000,
+    "payload_bytes": 4194304,
+    "wall_secs": 1.5
+  }
+}"#;
+        let c = NetCalibration::from_json(text).unwrap();
+        assert_eq!(c.rtt_secs, 0.000125);
+        assert_eq!(c.bandwidth_bytes_per_s, 2.5e9);
+    }
+
+    #[test]
+    fn calibration_rejects_missing_or_non_positive_values() {
+        assert!(NetCalibration::from_json("{}").is_err());
+        assert!(NetCalibration::from_json(r#"{"metrics": {"rtt_secs": 1e-4}}"#).is_err());
+        let zero = r#"{"metrics": {"rtt_secs": 1e-4, "bandwidth_bytes_per_s": 0}}"#;
+        assert!(NetCalibration::from_json(zero).is_err());
+    }
 
     #[test]
     fn table_a1_intensity_thresholds() {

@@ -8,7 +8,7 @@
 //! Appendix C.5.
 
 use super::gpu::GpuSpec;
-use super::network::{InterNode, LinkKind};
+use super::network::{InterNode, LinkKind, NetCalibration};
 
 /// Static description of the cluster a training job runs on.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -26,6 +26,12 @@ pub struct ClusterSpec {
     /// Whether CPU-GPU offload traffic shares PCIe with the NIC
     /// (true for the HGX reference design, Appendix A).
     pub pcie_shared_with_nic: bool,
+    /// Measured inter-node link override (`repro netbench`). `None`
+    /// prices wire ops from the quoted Table A.1 figures with zero
+    /// latency — the paper's idealised model; `Some` substitutes the
+    /// measured bandwidth and half-RTT latency everywhere the
+    /// inter-node fabric is consulted.
+    pub calibration: Option<NetCalibration>,
 }
 
 impl ClusterSpec {
@@ -37,7 +43,14 @@ impl ClusterSpec {
             inter_node: InterNode::InfiniBand,
             cpu_memory_per_gpu: 128.0e9,
             pcie_shared_with_nic: true,
+            calibration: None,
         }
+    }
+
+    /// This cluster with measured link parameters attached.
+    pub fn with_calibration(mut self, cal: NetCalibration) -> Self {
+        self.calibration = Some(cal);
+        self
     }
 
     /// Figure 5 scenario: node-size limit removed (ring NVLink topology).
@@ -57,9 +70,26 @@ impl ClusterSpec {
         self.inter_node.link()
     }
 
-    /// The intensity threshold for the inter-node link.
+    /// Effective inter-node bandwidth, bytes/s: the measured figure when
+    /// calibrated, the quoted Table A.1 figure otherwise.
+    pub fn inter_node_bandwidth(&self) -> f64 {
+        match self.calibration {
+            Some(c) => c.bandwidth_bytes_per_s,
+            None => self.inter_node_link().bandwidth(),
+        }
+    }
+
+    /// One-way inter-node message latency, seconds: half the measured
+    /// RTT when calibrated, zero otherwise (the paper's idealised
+    /// bandwidth-only wire model).
+    pub fn inter_node_latency(&self) -> f64 {
+        self.calibration.map_or(0.0, |c| 0.5 * c.rtt_secs)
+    }
+
+    /// The intensity threshold for the inter-node link (calibration-
+    /// aware: a slower measured wire raises the threshold).
     pub fn inter_node_threshold(&self) -> f64 {
-        self.inter_node_link().intensity_threshold(&self.gpu)
+        self.gpu.peak_flops / self.inter_node_bandwidth()
     }
 
     /// Tensor-parallel link for a given tensor-parallel degree: NVLink
@@ -71,6 +101,22 @@ impl ClusterSpec {
         } else {
             self.inter_node_link()
         }
+    }
+
+    /// Effective tensor-parallel bandwidth: quoted NVLink inside a
+    /// node, the (possibly calibrated) inter-node figure beyond it.
+    pub fn tensor_parallel_bandwidth(&self, n_a: usize) -> f64 {
+        if n_a <= self.max_node_size {
+            LinkKind::NvLink.bandwidth()
+        } else {
+            self.inter_node_bandwidth()
+        }
+    }
+
+    /// Calibration-aware intensity threshold of the tensor-parallel
+    /// fabric at degree `n_a`.
+    pub fn tensor_parallel_threshold(&self, n_a: usize) -> f64 {
+        self.gpu.peak_flops / self.tensor_parallel_bandwidth(n_a)
     }
 }
 
@@ -102,5 +148,27 @@ mod tests {
         let eth = ClusterSpec::ethernet();
         let ib = ClusterSpec::reference();
         assert!(eth.inter_node_threshold() > ib.inter_node_threshold());
+    }
+
+    #[test]
+    fn calibration_overrides_the_quoted_inter_node_figures() {
+        let quoted = ClusterSpec::reference();
+        let cal = NetCalibration {
+            bandwidth_bytes_per_s: quoted.inter_node_bandwidth() / 4.0,
+            rtt_secs: 2.0e-4,
+        };
+        let measured = quoted.with_calibration(cal);
+        // Uncalibrated: quoted bandwidth, zero latency.
+        assert_eq!(quoted.inter_node_bandwidth(), LinkKind::InfiniBand.bandwidth());
+        assert_eq!(quoted.inter_node_latency(), 0.0);
+        // Calibrated: measured bandwidth, half-RTT latency, 4× threshold.
+        assert_eq!(measured.inter_node_bandwidth(), cal.bandwidth_bytes_per_s);
+        assert_eq!(measured.inter_node_latency(), 1.0e-4);
+        let ratio = measured.inter_node_threshold() / quoted.inter_node_threshold();
+        assert!((ratio - 4.0).abs() < 1e-9);
+        // In-node tensor parallelism stays on quoted NVLink; beyond the
+        // node it picks up the calibrated fabric.
+        assert_eq!(measured.tensor_parallel_bandwidth(16), LinkKind::NvLink.bandwidth());
+        assert_eq!(measured.tensor_parallel_bandwidth(32), cal.bandwidth_bytes_per_s);
     }
 }

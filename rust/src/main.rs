@@ -4,7 +4,10 @@
 //!   table 6.1|6.2|6.3|a.1|b.1        regenerate a paper table
 //!   figure 4|5|6|7|8                 regenerate a paper figure (ASCII)
 //!   schedule [--policy P] [...]      simulate + render a schedule Gantt
-//!   train [--preset tiny|e2e] [...]  run real distributed training
+//!   train [--preset tiny|e2e] [...]  run real distributed training (in-process)
+//!   launch --ranks N [...]           fork worker *processes* over TCP sockets
+//!   worker --rank I --coord A [...]  one launched rank (spawned by `launch`)
+//!   netbench [...]                   measure the socket wire, write calibration
 //!   plan [--x N] [--ethernet] [...]  plan the fastest configuration
 
 use std::collections::HashMap;
@@ -12,7 +15,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use lga_mpp::costmodel::{ParallelismMenu, Strategy, TrainConfig};
-use lga_mpp::hardware::{ClusterSpec, SECS_PER_DAY};
+use lga_mpp::hardware::{ClusterSpec, NetCalibration, SECS_PER_DAY, GIB};
 use lga_mpp::model::XModel;
 use lga_mpp::optim::LrSchedule;
 use lga_mpp::report;
@@ -20,7 +23,7 @@ use lga_mpp::schedule::{
     interleaved_1f1b, lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec,
 };
 use lga_mpp::sim::{render, simulate_program, CostTable};
-use lga_mpp::trainer::{train, Policy, TrainerConfig};
+use lga_mpp::trainer::{launch, train, Policy, TrainerConfig};
 
 /// Tiny flag parser: positionals + `--key value` / `--flag`.
 struct Args {
@@ -67,13 +70,22 @@ impl Args {
     }
 }
 
-fn cluster_from(args: &Args) -> ClusterSpec {
-    if args.has("ethernet") {
+/// Bytes per MiB, for report formatting.
+const MIB: f64 = (1u64 << 20) as f64;
+
+fn cluster_from(args: &Args) -> Result<ClusterSpec> {
+    let base = if args.has("ethernet") {
         ClusterSpec::ethernet()
     } else if args.has("unlimited-node") {
         ClusterSpec::unlimited_node()
     } else {
         ClusterSpec::reference()
+    };
+    // `--calibration BENCH_net_calibration.json` (written by `repro
+    // netbench`) substitutes measured wire figures for the spec sheet.
+    match args.get("calibration") {
+        Some(path) => Ok(base.with_calibration(NetCalibration::load(path)?)),
+        None => Ok(base),
     }
 }
 
@@ -90,6 +102,9 @@ fn main() -> Result<()> {
         "figure" => cmd_figure(&args),
         "schedule" => cmd_schedule(&args),
         "train" => cmd_train(&args),
+        "launch" => cmd_launch(&args),
+        "worker" => cmd_worker(&args),
+        "netbench" => cmd_netbench(&args),
         "plan" => cmd_plan(&args),
         other => bail!("unknown subcommand '{other}' (see `repro help`)"),
     }
@@ -107,15 +122,26 @@ usage:
   repro train [--preset tiny|e2e] [--dp N] [--pp N] [--tp N] [--mb N] [--steps N]
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
               [--tp-emulate] [--offload] [--store DIR] [--resume] [--artifacts DIR]
+  repro launch --ranks N [--tp T] [--dp D] [train flags...] [--probe] [--verify]
+               [--coord-bind HOST:PORT]   (pp = ranks / (tp*dp); forks one
+               `repro worker` process per rank over loopback TCP; --probe runs
+               the artifact-free connectivity exercise; --verify re-runs the
+               same spec in-process and asserts bit-identical losses;
+               --coord-bind runs only the coordinator, for multi-host jobs
+               whose workers are started by hand with REPRO_HOSTMAP set)
+  repro worker --rank I --coord HOST:PORT [train flags...] [--probe]
+  repro netbench [--payload-mib N] [--iters N] [--frames N] [--ethernet]
+               (measures socket rtt + bandwidth, writes BENCH_net_calibration.json;
+               feed it back anywhere with --calibration FILE)
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
-             [--budget-days D] [--no-sim] [--tp N]
+             [--budget-days D] [--no-sim] [--tp N] [--calibration FILE]
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
     let which = args.positional.first().map(String::as_str).unwrap_or("6.1");
     let x = args.get_usize("x", 160)?;
     let model = XModel::new(x);
-    let cluster = cluster_from(args);
+    let cluster = cluster_from(args)?;
     let out = match which {
         "6.1" => report::table61(&model, &cluster),
         "6.2" => report::table62(&model, &cluster),
@@ -253,7 +279,10 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+/// Build a [`TrainerConfig`] from the flag set shared by `train`,
+/// `launch` and `worker` — one parser so a forwarded flag list means
+/// the same run in every process.
+fn trainer_config_from(args: &Args) -> Result<TrainerConfig> {
     let preset = args.get("preset").unwrap_or("tiny").to_string();
     let mut cfg = TrainerConfig::quick(&preset);
     if let Some(dir) = args.get("artifacts") {
@@ -287,6 +316,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         total_steps: cfg.steps as u64,
         min_ratio: 0.1,
     };
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = trainer_config_from(args)?;
+    let preset = &cfg.preset;
     println!(
         "training preset={preset} dp={} pp={} tp={} mb={} policy={} partition={} offload={} \
          steps={}",
@@ -332,6 +367,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         r.tp_elems_sent as f64 / 1e6
     );
     println!(
+        "bytes on wire: {:.2} MiB dp / {:.2} MiB pipe / {:.2} MiB tp \
+         (elems x f32 width; compare `repro table sched` wire@f32)",
+        r.collective_bytes_sent as f64 / MIB,
+        r.pipeline_bytes_sent as f64 / MIB,
+        r.tp_bytes_sent as f64 / MIB,
+    );
+    println!(
         "resident state per rank (measured): {:.2} MiB layer params+optimizer, \
          {:.2} MiB total",
         r.max_layer_state_bytes as f64 / (1u64 << 20) as f64,
@@ -351,10 +393,194 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro launch`: fork one worker process per rank, rendezvous them
+/// over TCP, and merge the per-rank reports.
+fn cmd_launch(args: &Args) -> Result<()> {
+    let ranks: usize = args
+        .get("ranks")
+        .context("launch needs --ranks N (total worker processes)")?
+        .parse()
+        .context("--ranks")?;
+    let mut cfg = trainer_config_from(args)?;
+    let tp = args.get_usize("tp", 1)?;
+    let dp = args.get_usize("dp", 1)?;
+    anyhow::ensure!(
+        ranks > 0 && tp > 0 && dp > 0 && ranks % (tp * dp) == 0,
+        "--ranks {ranks} must be a positive multiple of tp*dp = {}",
+        tp * dp
+    );
+    // The pipeline depth is whatever is left once tp and dp are assigned.
+    cfg.n_b = dp;
+    cfg.tp = tp;
+    cfg.n_l = ranks / (tp * dp);
+    let probe = args.has("probe");
+
+    // Every worker re-parses this exact flag list through
+    // `trainer_config_from`, so the job config cannot skew per process.
+    let mut flags: Vec<String> = [
+        ("--preset", cfg.preset.clone()),
+        ("--dp", cfg.n_b.to_string()),
+        ("--pp", cfg.n_l.to_string()),
+        ("--tp", cfg.tp.to_string()),
+        ("--mb", cfg.n_mu.to_string()),
+        ("--steps", cfg.steps.to_string()),
+        ("--policy", cfg.policy.name().to_string()),
+        ("--lr", args.get("lr").unwrap_or("3e-3").to_string()),
+        ("--artifacts", cfg.artifacts_root.display().to_string()),
+    ]
+    .into_iter()
+    .flat_map(|(k, v)| [k.to_string(), v])
+    .collect();
+    for (flag, on) in [
+        ("--partition", cfg.partition),
+        ("--tp-emulate", cfg.force_tp_emulation),
+        ("--probe", probe),
+    ] {
+        if on {
+            flags.push(flag.to_string());
+        }
+    }
+
+    println!(
+        "launching {ranks} ranks: pp={} dp={} tp={} steps={} {}",
+        cfg.n_l,
+        dp,
+        tp,
+        cfg.steps,
+        if probe { "(connectivity probe)" } else { "(training)" }
+    );
+    let lr = if let Some(bind) = args.get("coord-bind") {
+        launch::coordinate_external(&cfg, bind)?
+    } else {
+        launch::launch_local(&cfg, &flags)?
+    };
+    let r = &lr.report;
+    for (i, l) in r.losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == r.losses.len() {
+            println!("step {i:>5}  loss {l:.4}");
+        }
+    }
+    println!(
+        "wire totals (all ranks): {:.1} M dp / {:.1} M pipe / {:.1} M tp elems \
+         = {:.2} / {:.2} / {:.2} MiB on the wire",
+        r.collective_elems_sent as f64 / 1e6,
+        r.pipeline_elems_sent as f64 / 1e6,
+        r.tp_elems_sent as f64 / 1e6,
+        r.collective_bytes_sent as f64 / MIB,
+        r.pipeline_bytes_sent as f64 / MIB,
+        r.tp_bytes_sent as f64 / MIB,
+    );
+    println!(
+        "done: {:.1}s wall | schedule {} | {} PJRT calls ({:.1}s summed) | \
+         max resident state {:.2} MiB",
+        r.wall_secs,
+        r.schedule_name,
+        r.execute_calls,
+        r.execute_secs,
+        r.max_state_bytes as f64 / MIB,
+    );
+    for (rank, s) in lr.per_rank.iter().enumerate() {
+        println!(
+            "  rank {rank}: {:.1}s wall, {} calls, {:.1} M elems sent",
+            s.wall_secs,
+            s.execute_calls,
+            (s.collective_elems_sent + s.pipeline_elems_sent + s.tp_elems_sent) as f64 / 1e6,
+        );
+    }
+
+    if args.has("verify") {
+        anyhow::ensure!(!probe, "--verify needs a real training run, not --probe");
+        println!("verify: re-running the same spec in-process over mpsc...");
+        let solo = train(&cfg)?;
+        anyhow::ensure!(
+            solo.losses.len() == r.losses.len(),
+            "verify: step count mismatch (mpsc {} vs sockets {})",
+            solo.losses.len(),
+            r.losses.len()
+        );
+        for (i, (a, b)) in solo.losses.iter().zip(&r.losses).enumerate() {
+            anyhow::ensure!(
+                a.to_bits() == b.to_bits(),
+                "verify: loss diverged at step {i}: mpsc {a:?} vs sockets {b:?}"
+            );
+        }
+        println!(
+            "verify: socket losses bit-identical to the in-process mpsc run ({} steps)",
+            r.losses.len()
+        );
+    }
+    Ok(())
+}
+
+/// `repro worker`: one launched rank. Spawned by `launch`; can also be
+/// started by hand on another host with `REPRO_HOSTMAP` set.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = trainer_config_from(args)?;
+    let rank: usize = args
+        .get("rank")
+        .context("worker needs --rank I")?
+        .parse()
+        .context("--rank")?;
+    let coord = args.get("coord").context("worker needs --coord HOST:PORT")?;
+    let probe = args.has("probe").then_some(cfg.steps);
+    launch::worker_main(&cfg, rank, coord, probe)
+}
+
+/// `repro netbench`: measure the socket transport's round-trip latency
+/// and sustained framed bandwidth over loopback, compare against the
+/// quoted link figures, and write `BENCH_net_calibration.json` for
+/// `--calibration` consumption by the simulator and planner.
+fn cmd_netbench(args: &Args) -> Result<()> {
+    let payload_mib = args.get_usize("payload-mib", 4)?;
+    let iters = args.get_usize("iters", 512)?;
+    let frames = args.get_usize("frames", 64)?;
+    let payload_elems = (payload_mib << 20) / 4;
+    let mut bench = report::BenchJson::new("net_calibration");
+    println!(
+        "netbench: loopback socket transport — {iters} ping-pongs, \
+         {frames} x {payload_mib} MiB streamed frames"
+    );
+    let probe = lga_mpp::collective::netbench(payload_elems.max(1), iters, frames)
+        .context("netbench probe")?;
+    println!("  rtt (median):      {:.1} us", probe.rtt_secs * 1e6);
+    println!("  stream bandwidth:  {:.2} GiB/s", probe.bandwidth_bytes_per_s / GIB);
+    println!(
+        "  ring all-reduce:   {:.2} GiB/s per rank",
+        probe.ring_allreduce_bytes_per_s / GIB
+    );
+    let quoted = cluster_from(args)?;
+    let link = quoted.inter_node_link();
+    println!(
+        "  quoted {}: {:.2} GiB/s — measured/quoted = {:.2}x",
+        link.name(),
+        link.bandwidth() / GIB,
+        probe.bandwidth_bytes_per_s / link.bandwidth()
+    );
+    let calibrated = quoted.with_calibration(NetCalibration {
+        bandwidth_bytes_per_s: probe.bandwidth_bytes_per_s,
+        rtt_secs: probe.rtt_secs,
+    });
+    println!(
+        "  intensity threshold: {:.3e} flops/B quoted -> {:.3e} flops/B calibrated",
+        quoted.inter_node_threshold(),
+        calibrated.inter_node_threshold()
+    );
+    bench.push("rtt_secs", probe.rtt_secs);
+    bench.push("bandwidth_bytes_per_s", probe.bandwidth_bytes_per_s);
+    bench.push("ring_allreduce_bytes_per_s", probe.ring_allreduce_bytes_per_s);
+    bench.push("payload_bytes", probe.payload_bytes as f64);
+    bench.finish();
+    println!(
+        "feed the measured wire back with `repro plan --calibration \
+         BENCH_net_calibration.json` (also accepted by `table`/`netbench`)"
+    );
+    Ok(())
+}
+
 fn cmd_plan(args: &Args) -> Result<()> {
     let x = args.get_usize("x", 160)?;
     let model = XModel::new(x);
-    let cluster = cluster_from(args);
+    let cluster = cluster_from(args)?;
     let strategy = match args.get("strategy").unwrap_or("improved") {
         "baseline" => Strategy::Baseline,
         "partitioned" => Strategy::Partitioned,

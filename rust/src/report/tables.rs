@@ -201,8 +201,12 @@ pub fn table_b1() -> String {
 /// tp trade-off the paper's C.4.3 amortisation argument is about.
 ///
 /// The `comm` column is the per-stage-batch wire volume (all transfer
-/// ops priced by the cost model's byte accounting), so tp vs non-tp
-/// runs are comparable at a glance.
+/// ops priced by the cost model's fp16 byte accounting), so tp vs
+/// non-tp runs are comparable at a glance. The final `wire@f32` column
+/// re-expresses the same op counts as runtime bytes-on-wire (payload
+/// elements × 4-byte f32, the trainer's dtype) — the figure a real
+/// `repro launch` run reports in its `TrainReport`, assertable against
+/// measured socket traffic.
 pub fn schedule_comparison(
     x: usize,
     d_l: usize,
@@ -239,8 +243,8 @@ pub fn schedule_comparison(
     }
     let mut out = format!(
         "Schedule comparison (d_l={d_l}, n_l={n_l}, n_mu={n_mu}, tp={tp}, X_{x} layers)\n\
-         {:<20} {:>3} {:>7} {:>8} {:>10} {:>8} {:>10} {:>10}\n",
-        "policy", "tp", "ops", "edges", "makespan", "bubble", "net tail", "comm"
+         {:<20} {:>3} {:>7} {:>8} {:>10} {:>8} {:>10} {:>10} {:>10}\n",
+        "policy", "tp", "ops", "edges", "makespan", "bubble", "net tail", "comm", "wire@f32"
     );
     for s in &schedules {
         let p = lower(s).expect("generated schedules lower");
@@ -249,8 +253,15 @@ pub fn schedule_comparison(
         // instance per batch), from the op counts × the cost model's
         // per-op payloads — cheap, no simulation needed.
         let comm_bytes: f64 = p.ops.iter().map(|n| costs.wire_bytes(&n.op)).sum();
+        // The same payloads in runtime elements × the trainer's f32
+        // width: what the socket transport actually puts on the wire.
+        let wire_f32_bytes: f64 = p
+            .ops
+            .iter()
+            .map(|n| costs.wire_elements(&n.op) * crate::runtime::DType::F32.bytes() as f64)
+            .sum();
         out.push_str(&format!(
-            "{:<20} {:>3} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms {:>7.2}MiB\n",
+            "{:<20} {:>3} {:>7} {:>8} {:>8.2}ms {:>8.3} {:>8.2}ms {:>7.2}MiB {:>7.2}MiB\n",
             p.name,
             p.tp,
             p.len(),
@@ -259,6 +270,7 @@ pub fn schedule_comparison(
             r.bubble_fraction(),
             r.exposed_network_tail() * 1e3,
             comm_bytes / (1u64 << 20) as f64,
+            wire_f32_bytes / (1u64 << 20) as f64,
         ));
     }
     out
@@ -354,6 +366,7 @@ mod tests {
             );
         }
         assert!(t.contains("comm"), "comm-volume column missing:\n{t}");
+        assert!(t.contains("wire@f32"), "bytes-on-wire column missing:\n{t}");
         // The tensor-parallel axis is visible per row.
         assert!(t.lines().nth(1).unwrap().contains(" tp "), "tp column missing:\n{t}");
         for name in ["standard-pipeline", "modular-pipeline"] {
@@ -378,6 +391,24 @@ mod tests {
                 grab(&t2, name) > grab(&t1, name),
                 "{name}: tp=2 volume not above tp=1\n{t1}\n{t2}"
             );
+        }
+    }
+
+    #[test]
+    fn wire_f32_column_is_the_fp16_volume_at_runtime_width() {
+        // Same op counts, different unit: the runtime moves 4-byte f32
+        // where the cost model prices 2-byte fp16, so bytes-on-wire is
+        // exactly double the comm column.
+        let t = schedule_comparison(32, 16, 4, 8, 2, &ClusterSpec::reference());
+        for name in ["standard-pipeline", "modular-pipeline"] {
+            let row = t.lines().find(|l| l.starts_with(name)).unwrap();
+            let mib: Vec<f64> = row
+                .split_whitespace()
+                .filter(|w| w.ends_with("MiB"))
+                .map(|w| w.trim_end_matches("MiB").parse().unwrap())
+                .collect();
+            assert_eq!(mib.len(), 2, "{row}");
+            assert!((mib[1] / mib[0] - 2.0).abs() < 1e-6, "{row}");
         }
     }
 

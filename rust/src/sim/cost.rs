@@ -82,11 +82,25 @@ impl WireBytes {
     }
 }
 
+/// Wire-byte convention of the cost tables: every payload is priced as
+/// fp16 (Appendix C), 2 bytes per element. The runtime's measured
+/// traffic counts *elements*, so `WireBytes / WIRE_BYTES_PER_ELEM`
+/// bridges the two (see [`CostTable::wire_elements`]).
+pub const WIRE_BYTES_PER_ELEM: f64 = 2.0;
+
 impl CostTable {
     /// Build the table for a model shape + training config on a cluster.
+    ///
+    /// Bandwidths come from the cluster's calibration-aware accessors:
+    /// uncalibrated clusters price the quoted Table A.1 figures with
+    /// zero latency (the paper's idealised model — every latency term
+    /// below is exactly 0 then); a `repro netbench` calibration
+    /// substitutes the measured bandwidth and adds per-message
+    /// half-RTT latency on every inter-node hop and ring round.
     pub fn new(shape: &TransformerShape, cfg: &TrainConfig, cluster: &ClusterSpec) -> Self {
         let peak = cluster.gpu.peak_flops;
-        let inter_bw = cluster.inter_node_link().bandwidth();
+        let inter_bw = cluster.inter_node_bandwidth();
+        let inter_lat = cluster.inter_node_latency();
         let cpu_bw = LinkKind::CpuGpu.bandwidth();
 
         let b_mu = cfg.b_mu;
@@ -102,9 +116,10 @@ impl CostTable {
         let fwd = fwd_flops / peak;
         let bwd = 3.0 * fwd;
 
-        // Pipeline boundary transfer: fp16 activations of one micro-batch.
+        // Pipeline boundary transfer: fp16 activations of one micro-batch
+        // (one inter-node message — one latency charge when calibrated).
         let act_bytes = 2.0 * b_mu * d_s * d_m / n_a;
-        let send_act = act_bytes / inter_bw;
+        let send_act = act_bytes / inter_bw + inter_lat;
         let send_grad = send_act; // gradient of the same tensor
 
         // Data-parallel gradient handling for one layer's parameters
@@ -115,17 +130,28 @@ impl CostTable {
         //    local), half the traffic; the all-gather moved into
         //    RestoreParams.
         let ring = (n_b - 1.0).max(0.0) / n_b.max(1.0);
+        let ring_rounds = (n_b - 1.0).max(0.0);
         let reduce_bytes =
             if cfg.partition { 2.0 * p_l / n_a * ring } else { 4.0 * p_l / n_a * ring };
-        let reduce_grad = if n_b > 1.0 || cfg.partition { reduce_bytes / inter_bw } else { 0.0 };
+        // Ring rounds: reduce-scatter is n_b−1 neighbour messages per
+        // rank; a full all-reduce doubles that — each round pays one
+        // latency when calibrated.
+        let reduce_rounds = if cfg.partition { ring_rounds } else { 2.0 * ring_rounds };
+        let reduce_grad = if n_b > 1.0 || cfg.partition {
+            reduce_bytes / inter_bw + reduce_rounds * inter_lat
+        } else {
+            0.0
+        };
 
         // Parameter restoration: fp16 all-gather over the data-parallel
         // group (partition), or a CPU->GPU fetch (offload), or both —
         // the slower path dominates when both apply.
         let restore_bytes = 2.0 * p_l / n_a;
         let restore_part_bytes = if cfg.partition { restore_bytes * ring } else { 0.0 };
+        let restore_part_lat = if cfg.partition { ring_rounds * inter_lat } else { 0.0 };
         let restore_off_bytes = if cfg.offload { restore_bytes } else { 0.0 };
-        let restore_params = (restore_part_bytes / inter_bw).max(restore_off_bytes / cpu_bw);
+        let restore_params =
+            (restore_part_bytes / inter_bw + restore_part_lat).max(restore_off_bytes / cpu_bw);
 
         let store_bytes = if cfg.offload { restore_bytes } else { 0.0 };
         let offload_store = store_bytes / cpu_bw;
@@ -137,10 +163,16 @@ impl CostTable {
         // moves 2·(n_a−1)/n_a of it per rank, over the tensor-parallel
         // link (NVLink while the group fits in a node).
         let tp_ring = (n_a - 1.0).max(0.0) / n_a.max(1.0);
-        let tp_bw = cluster.tensor_parallel_link(cfg.n_a).bandwidth();
+        let tp_bw = cluster.tensor_parallel_bandwidth(cfg.n_a);
+        // Latency only applies once the group spills across nodes (the
+        // §7 scenario) — in-node NVLink hops stay latency-free.
+        let tp_lat =
+            if cfg.n_a > cluster.max_node_size { cluster.inter_node_latency() } else { 0.0 };
         let tp_ar_bytes = 2.0 * b_mu * d_s * d_m * 2.0 * tp_ring;
-        let tp_all_reduce_fwd = 2.0 * tp_ar_bytes / tp_bw;
-        let tp_all_reduce_bwd = 4.0 * tp_ar_bytes / tp_bw;
+        // One ring all-reduce is 2·(n_a−1) neighbour messages per rank.
+        let tp_one = tp_ar_bytes / tp_bw + 2.0 * (n_a - 1.0).max(0.0) * tp_lat;
+        let tp_all_reduce_fwd = 2.0 * tp_one;
+        let tp_all_reduce_bwd = 4.0 * tp_one;
 
         // Optimizer step: fp32 state read-modify-write at HBM bandwidth,
         // negligible next to the layer compute but not zero.
@@ -213,6 +245,15 @@ impl CostTable {
     /// Wire bytes an op moves (per rank) — see [`WireBytes`].
     pub fn wire_bytes(&self, op: &Op) -> f64 {
         self.wire.of(op)
+    }
+
+    /// Payload *elements* an op moves (per rank): the table's fp16 wire
+    /// bytes divided by [`WIRE_BYTES_PER_ELEM`]. This is the quantity
+    /// the runtime's `Traffic` counters measure, so schedule-implied
+    /// volume and measured socket volume compare in the same unit
+    /// (multiply by the runtime dtype's width for its bytes-on-wire).
+    pub fn wire_elements(&self, op: &Op) -> f64 {
+        self.wire.of(op) / WIRE_BYTES_PER_ELEM
     }
 }
 

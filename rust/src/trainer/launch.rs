@@ -1,0 +1,405 @@
+//! Multi-process launch: fork real worker processes, rendezvous them
+//! into a socket-wired [`CommWorld`], and merge their control-plane
+//! reports into one [`TrainReport`].
+//!
+//! Three entry points, one protocol:
+//!
+//! * [`launch_local`] — `repro launch`: spawn `n_ranks` copies of the
+//!   current executable as `repro worker --rank i --coord <addr>` over
+//!   loopback, coordinate, and merge.
+//! * [`coordinate_external`] — `repro launch --coord-bind`: run only
+//!   the coordinator on a fixed address; workers are started by hand
+//!   (or a cluster scheduler) on other hosts with `REPRO_HOSTMAP` set.
+//! * [`launch_threads`] — the in-process test harness: every rank is a
+//!   thread but the full socket stack (rendezvous, TCP rings, framed
+//!   control plane) is exercised; the socket-vs-mpsc parity suite runs
+//!   through this.
+//!
+//! The coordinator drains each rank's control stream to EOF: per-step
+//! [`CtrlMsg::Loss`] reports (dp-averaged exactly like the thread
+//! backend) and exactly one [`CtrlMsg::Stats`] per rank. A worker that
+//! dies early shows up as a stream without stats — an error naming the
+//! rank, never a hang (rendezvous and handshakes carry deadlines; CI
+//! adds a hard process timeout for the steady state).
+
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::collective::socket::read_frame;
+use crate::collective::{connect_world, CommWorld, Coordinator, CtrlMsg, RankStats, Topology, Wire};
+use crate::runtime::DType;
+
+use super::{train_rank, TrainReport, TrainerConfig};
+
+/// Deadline for rendezvous and connection handshakes. Steady-state
+/// training reads carry no timeout (a slow step is not a failure) —
+/// the CI smoke run bounds those with a process-level `timeout`.
+pub const LAUNCH_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A merged multi-process run: the coordinator's view of the job plus
+/// each rank's own statistics.
+#[derive(Debug, Clone)]
+pub struct LaunchReport {
+    pub report: TrainReport,
+    /// Per-rank stats, index = rank (the `WorkerStats` the thread
+    /// backend would have joined on, shipped over the control plane).
+    pub per_rank: Vec<RankStats>,
+}
+
+/// Read control frames until the worker closes its stream.
+fn drain_ctrl(stream: TcpStream) -> Result<Vec<CtrlMsg>> {
+    let mut r = std::io::BufReader::new(stream);
+    let mut msgs = Vec::new();
+    loop {
+        match read_frame(&mut r) {
+            Ok(buf) => msgs.push(CtrlMsg::decode(&buf).context("control frame")?),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                return Ok(msgs)
+            }
+            Err(e) => return Err(e).context("control stream"),
+        }
+    }
+}
+
+/// Run the coordinator half of a launch: rendezvous `n` workers, drain
+/// their control streams, and merge losses + stats into one report.
+fn coordinate(coord: &Coordinator, n: usize, steps: usize) -> Result<LaunchReport> {
+    let t0 = std::time::Instant::now();
+    let streams = coord.rendezvous(LAUNCH_TIMEOUT).context("rendezvous")?;
+    let drains: Vec<_> = streams
+        .into_iter()
+        .enumerate()
+        .map(|(rank, s)| {
+            thread::Builder::new()
+                .name(format!("ctrl-drain-{rank}"))
+                .spawn(move || drain_ctrl(s))
+                .expect("spawn control drain thread")
+        })
+        .collect();
+
+    let mut sums = vec![0.0f64; steps];
+    let mut counts = vec![0usize; steps];
+    let mut per_rank: Vec<RankStats> = Vec::with_capacity(n);
+    for (rank, h) in drains.into_iter().enumerate() {
+        let msgs = h.join().map_err(|_| anyhow::anyhow!("control drain panicked"))?;
+        let msgs = msgs.with_context(|| format!("rank {rank} control stream"))?;
+        let mut stats: Option<RankStats> = None;
+        for m in msgs {
+            match m {
+                CtrlMsg::Loss { step, dp: _, loss } => {
+                    let step = step as usize;
+                    if step < steps {
+                        sums[step] += loss;
+                        counts[step] += 1;
+                    }
+                }
+                CtrlMsg::Stats(s) => stats = Some(s),
+                CtrlMsg::Done => {}
+                CtrlMsg::Hello { .. } | CtrlMsg::Peers { .. } => {
+                    bail!("rank {rank} sent a rendezvous message mid-run")
+                }
+            }
+        }
+        per_rank.push(stats.with_context(|| {
+            format!("rank {rank} exited without reporting stats (worker crashed?)")
+        })?);
+    }
+
+    // Config skew across processes shows up as disagreeing schedules —
+    // catch it here rather than as silent divergence.
+    let schedule_name = per_rank[0].schedule.clone();
+    for (rank, s) in per_rank.iter().enumerate() {
+        anyhow::ensure!(
+            s.schedule == schedule_name,
+            "rank {rank} ran schedule {:?} while rank 0 ran {:?} — mismatched worker configs",
+            s.schedule,
+            schedule_name
+        );
+    }
+
+    let losses: Vec<f64> = sums
+        .iter()
+        .zip(&counts)
+        .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+        .collect();
+    let sum = |f: fn(&RankStats) -> u64| per_rank.iter().map(f).sum::<u64>();
+    let elem_bytes = DType::F32.bytes() as u64;
+    let (dp_e, pipe_e, tp_e) = (
+        sum(|s| s.collective_elems_sent),
+        sum(|s| s.pipeline_elems_sent),
+        sum(|s| s.tp_elems_sent),
+    );
+    let report = TrainReport {
+        losses,
+        start_step: 0,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        collective_elems_sent: dp_e,
+        pipeline_elems_sent: pipe_e,
+        tp_elems_sent: tp_e,
+        collective_bytes_sent: dp_e * elem_bytes,
+        pipeline_bytes_sent: pipe_e * elem_bytes,
+        tp_bytes_sent: tp_e * elem_bytes,
+        tp_sharded: per_rank[0].tp_sharded,
+        max_layer_state_bytes: per_rank.iter().map(|s| s.layer_state_bytes).max().unwrap_or(0),
+        max_state_bytes: per_rank.iter().map(|s| s.total_state_bytes).max().unwrap_or(0),
+        execute_secs: per_rank.iter().map(|s| s.execute_secs).sum(),
+        execute_calls: sum(|s| s.execute_calls),
+        checkpoint_bytes_written: 0,
+        checkpoint_records: 0,
+        schedule_name,
+    };
+    Ok(LaunchReport { report, per_rank })
+}
+
+fn kill_all(children: &mut [Child]) {
+    for c in children.iter_mut() {
+        let _ = c.kill();
+    }
+}
+
+/// Fork one `repro worker` process per rank over loopback, coordinate
+/// the run, and merge the result. `worker_flags` is forwarded verbatim
+/// to every child (preset, topology, steps, …).
+pub fn launch_local(cfg: &TrainerConfig, worker_flags: &[String]) -> Result<LaunchReport> {
+    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    let n = topo.n_ranks();
+    let coord = Coordinator::bind("127.0.0.1:0", n).context("bind coordinator")?;
+    let addr = coord.local_addr()?.to_string();
+    let exe = std::env::current_exe().context("locate current executable")?;
+
+    let mut children: Vec<Child> = Vec::with_capacity(n);
+    for rank in 0..n {
+        let child = Command::new(&exe)
+            .arg("worker")
+            .arg("--rank")
+            .arg(rank.to_string())
+            .arg("--coord")
+            .arg(&addr)
+            .args(worker_flags)
+            .stdin(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawn worker rank {rank}"));
+        match child {
+            Ok(c) => children.push(c),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(e);
+            }
+        }
+    }
+
+    let merged = coordinate(&coord, n, cfg.steps);
+    if merged.is_err() {
+        kill_all(&mut children);
+    }
+    let mut failures = Vec::new();
+    for (rank, mut c) in children.into_iter().enumerate() {
+        match c.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
+        }
+    }
+    let merged = merged?;
+    if !failures.is_empty() {
+        bail!("worker processes failed: {}", failures.join("; "));
+    }
+    Ok(merged)
+}
+
+/// Run only the coordinator, bound on `bind` (multi-host mode: workers
+/// are started externally, typically with `REPRO_HOSTMAP` set).
+pub fn coordinate_external(cfg: &TrainerConfig, bind: &str) -> Result<LaunchReport> {
+    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    let n = topo.n_ranks();
+    let coord = Coordinator::bind(bind, n).context("bind coordinator")?;
+    println!(
+        "coordinator listening on {} for {n} workers (start them with `repro worker --rank I --coord <this address>`)",
+        coord.local_addr()?
+    );
+    coordinate(&coord, n, cfg.steps)
+}
+
+/// In-process harness: every rank is a thread, but all communication
+/// runs the real socket stack (rendezvous, TCP ring wiring, framed
+/// control plane). This is what the socket-vs-mpsc parity tests drive.
+pub fn launch_threads(cfg: &TrainerConfig) -> Result<LaunchReport> {
+    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    let n = topo.n_ranks();
+    let coord = Coordinator::bind("127.0.0.1:0", n).context("bind coordinator")?;
+    let addr = coord.local_addr()?.to_string();
+    let workers: Vec<_> = (0..n)
+        .map(|rank| {
+            let cfg = cfg.clone();
+            let addr = addr.clone();
+            thread::Builder::new()
+                .name(format!("launch-rank-{rank}"))
+                .spawn(move || -> Result<()> {
+                    let world = connect_world(topo, rank, &addr, None, LAUNCH_TIMEOUT)
+                        .with_context(|| format!("rank {rank} connect"))?;
+                    train_rank(&cfg, world)?;
+                    Ok(())
+                })
+                .expect("spawn launch rank thread")
+        })
+        .collect();
+    let merged = coordinate(&coord, n, cfg.steps);
+    for (rank, h) in workers.into_iter().enumerate() {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("rank {rank} panicked"))?
+            .with_context(|| format!("rank {rank}"))?;
+    }
+    merged
+}
+
+/// `repro worker` body: join the socket world as `rank` and run either
+/// real training or the artifact-free connectivity probe.
+pub fn worker_main(
+    cfg: &TrainerConfig,
+    rank: usize,
+    coord_addr: &str,
+    probe_steps: Option<usize>,
+) -> Result<()> {
+    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    let hostmap: Option<Vec<String>> = std::env::var("REPRO_HOSTMAP")
+        .ok()
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect());
+    let world = connect_world(topo, rank, coord_addr, hostmap.as_deref(), LAUNCH_TIMEOUT)
+        .with_context(|| format!("rank {rank} joining the world via {coord_addr}"))?;
+    match probe_steps {
+        Some(steps) => probe_rank(world, steps),
+        None => {
+            train_rank(cfg, world)?;
+            Ok(())
+        }
+    }
+}
+
+/// Artifact-free full-stack exercise of a socket world: per step, a
+/// verified all-reduce on the dp and tp rings, a verified ring-wrapped
+/// activation/gradient hop on the pipeline, a loss report, and the
+/// step barrier — the CI smoke path on runners without PJRT artifacts.
+pub fn probe_rank(mut world: CommWorld, steps: usize) -> Result<()> {
+    let topo = world.topology();
+    let r = world.rank();
+    let (s_n, d_n, t_n) = (topo.stages, topo.dp, topo.tp);
+    for i in 0..steps {
+        let mut d: Vec<f32> = (0..8).map(|k| (r.dp * 31 + i + k) as f32).collect();
+        world.dp_group().all_reduce(&mut d);
+        for (k, &v) in d.iter().enumerate() {
+            let want = (31 * d_n * (d_n - 1) / 2 + d_n * (i + k)) as f32;
+            anyhow::ensure!(v == want, "dp all-reduce: got {v}, want {want}");
+        }
+        let mut t: Vec<f32> = (0..8).map(|k| (r.tp * 7 + i + k) as f32).collect();
+        world.tp_group().all_reduce(&mut t);
+        for (k, &v) in t.iter().enumerate() {
+            let want = (7 * t_n * (t_n - 1) / 2 + t_n * (i + k)) as f32;
+            anyhow::ensure!(v == want, "tp all-reduce: got {v}, want {want}");
+        }
+        // Ring-wrapped pipeline hop: acts flow forward, grads backward.
+        // Buffered sends mean everyone can send before anyone receives.
+        world
+            .pipeline()
+            .send_act(r.stage, i, vec![r.stage as f32; 16])
+            .map_err(|e| anyhow::anyhow!("send_act: {e}"))?;
+        let (_, mb, act) =
+            world.pipeline().recv_act().map_err(|e| anyhow::anyhow!("recv_act: {e}"))?;
+        let prev = (r.stage + s_n - 1) % s_n;
+        anyhow::ensure!(
+            mb == i && act == vec![prev as f32; 16],
+            "activation hop: got mb {mb} payload {act:?} from stage {prev}"
+        );
+        world
+            .pipeline()
+            .send_grad(r.stage, i, vec![-(r.stage as f32); 16])
+            .map_err(|e| anyhow::anyhow!("send_grad: {e}"))?;
+        let (_, mb, grad) =
+            world.pipeline().recv_grad().map_err(|e| anyhow::anyhow!("recv_grad: {e}"))?;
+        let next = (r.stage + 1) % s_n;
+        anyhow::ensure!(
+            mb == i && grad == vec![-(next as f32); 16],
+            "gradient hop: got mb {mb} payload {grad:?} from stage {next}"
+        );
+        if r.stage == s_n - 1 && r.tp == 0 {
+            world.control().report_loss(i, r.dp, (i + 1) as f64);
+        }
+        world.step_barrier();
+    }
+    let traffic = world.traffic();
+    world.control().report_stats(RankStats {
+        collective_elems_sent: traffic.dp,
+        pipeline_elems_sent: traffic.pipeline,
+        tp_elems_sent: traffic.tp,
+        schedule: "probe".into(),
+        ..RankStats::default()
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full socket stack, no artifacts: rendezvous, ring wiring over
+    /// TCP, verified collectives and pipeline hops, merged report.
+    #[test]
+    fn probe_launch_over_threads_produces_a_merged_report() {
+        let topo = Topology::new(2, 2, 1);
+        let n = topo.n_ranks();
+        let steps = 3usize;
+        let coord = Coordinator::bind("127.0.0.1:0", n).unwrap();
+        let addr = coord.local_addr().unwrap().to_string();
+        let workers: Vec<_> = (0..n)
+            .map(|rank| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let world =
+                        connect_world(topo, rank, &addr, None, Duration::from_secs(30)).unwrap();
+                    probe_rank(world, steps).unwrap();
+                })
+            })
+            .collect();
+        let merged = coordinate(&coord, n, steps).unwrap();
+        for h in workers {
+            h.join().unwrap();
+        }
+        // Losses: each step's dp-average of (step + 1).
+        assert_eq!(merged.report.losses, vec![1.0, 2.0, 3.0]);
+        assert_eq!(merged.per_rank.len(), n);
+        assert_eq!(merged.report.schedule_name, "probe");
+        // dp rings moved traffic; no tp axis, pipeline hops counted.
+        assert!(merged.report.collective_elems_sent > 0);
+        assert_eq!(merged.report.tp_elems_sent, 0);
+        assert_eq!(merged.report.pipeline_elems_sent, (n * steps * 2 * 16) as u64);
+        assert_eq!(
+            merged.report.pipeline_bytes_sent,
+            merged.report.pipeline_elems_sent * DType::F32.bytes() as u64
+        );
+    }
+
+    #[test]
+    fn missing_worker_times_out_instead_of_hanging() {
+        let topo = Topology::new(1, 2, 1);
+        let coord = Coordinator::bind("127.0.0.1:0", 2).unwrap();
+        let addr = coord.local_addr().unwrap().to_string();
+        // Only one of the two expected workers shows up...
+        let w = thread::spawn(move || {
+            // ...and its own connect fails once the coordinator gives up.
+            let _ = connect_world(topo, 0, &addr, None, Duration::from_secs(10));
+        });
+        let err = coord.rendezvous(Duration::from_millis(300)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        w.join().unwrap();
+    }
+}

@@ -12,6 +12,7 @@
 //! program's local dependency edges before each op.
 
 pub mod config;
+pub mod launch;
 pub mod params;
 pub mod worker;
 
@@ -21,6 +22,7 @@ use std::thread;
 use anyhow::{Context, Result};
 
 pub use config::{Policy, TrainerConfig};
+pub use launch::{launch_local, LaunchReport};
 pub use params::LayerLayout;
 pub use worker::{run_worker, WorkerCtx, WorkerStats};
 
@@ -28,8 +30,8 @@ use crate::collective::{CommWorld, Topology};
 use crate::offload::store::{
     covers, slot_embed, slot_head, slot_layer, slot_pos, FileStore, MemoryStore, StateStore,
 };
-use crate::runtime::Manifest;
-use crate::schedule::lower;
+use crate::runtime::{DType, Manifest};
+use crate::schedule::{lower, ScheduleProgram};
 
 /// Result of one training run.
 #[derive(Debug, Clone)]
@@ -47,6 +49,13 @@ pub struct TrainReport {
     /// Total elements moved through the tensor-parallel rings, all
     /// workers.
     pub tp_elems_sent: u64,
+    /// The same traffic as bytes on the wire at the runtime dtype's
+    /// width (`elements × DType::bytes()`) — what a socket backend
+    /// physically moves, assertable against the schedule-implied
+    /// `WireBytes` accounting.
+    pub collective_bytes_sent: u64,
+    pub pipeline_bytes_sent: u64,
+    pub tp_bytes_sent: u64,
     /// Whether tp > 1 ran truly sharded layer compute (Megatron-style
     /// column/row-parallel artifacts) rather than replicated emulation.
     pub tp_sharded: bool,
@@ -107,8 +116,26 @@ fn latest_resumable_step(
     Ok(None)
 }
 
-/// Run a training job to completion.
-pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+/// Bytes on the wire for a payload-element count at the runtime dtype
+/// (all trainer payloads are f32 today).
+fn wire_bytes(elems: u64) -> u64 {
+    elems * DType::F32.bytes() as u64
+}
+
+/// Everything a rank needs before it can execute: the loaded manifest,
+/// the lowered schedule, the checkpoint store and the resume point.
+/// Identical per rank by construction — in the thread backend it is
+/// computed once and shared; each `repro worker` process recomputes it
+/// from the same config and artifacts.
+struct Prepared {
+    tp_sharded: bool,
+    program: Arc<ScheduleProgram>,
+    store: Option<Arc<dyn StateStore>>,
+    start_step: usize,
+    ckpt_tp: usize,
+}
+
+fn prepare(cfg: &TrainerConfig) -> Result<Prepared> {
     let manifest = Manifest::load(&cfg.artifacts_root, &cfg.preset)?;
     let d_l = manifest.model.n_layers;
     anyhow::ensure!(
@@ -195,6 +222,55 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     } else {
         0
     };
+    Ok(Prepared { tp_sharded, program, store, start_step, ckpt_tp })
+}
+
+/// Build one rank's `WorkerCtx` from the shared preparation.
+fn worker_ctx(cfg: &TrainerConfig, p: &Prepared, world: CommWorld) -> WorkerCtx {
+    WorkerCtx {
+        world,
+        n_mu: cfg.n_mu,
+        seed: cfg.seed,
+        steps: cfg.steps,
+        start_step: p.start_step,
+        lr: cfg.lr,
+        partition: cfg.partition,
+        offload: cfg.offload,
+        tp_sharded: p.tp_sharded,
+        ckpt_tp: p.ckpt_tp,
+        store: p.store.clone(),
+        program: p.program.clone(),
+        artifacts_root: cfg.artifacts_root.clone(),
+        preset: cfg.preset.clone(),
+    }
+}
+
+/// Execute exactly one rank of a training job over an externally wired
+/// world (the socket backend's per-process entry point: `repro worker`
+/// connects its `CommWorld` through the rendezvous, then calls this).
+/// Losses and end-of-run stats flow back over the world's control
+/// plane.
+pub fn train_rank(cfg: &TrainerConfig, world: CommWorld) -> Result<WorkerStats> {
+    anyhow::ensure!(
+        !cfg.offload && !cfg.resume,
+        "multi-process launch does not support --offload/--resume yet \
+         (the checkpoint store is process-local)"
+    );
+    let expected = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    anyhow::ensure!(
+        world.topology() == expected,
+        "world topology {:?} does not match the config's {:?}",
+        world.topology(),
+        expected
+    );
+    let p = prepare(cfg)?;
+    run_worker(worker_ctx(cfg, &p, world))
+}
+
+/// Run a training job to completion.
+pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
+    let p = prepare(cfg)?;
+    let (tp_sharded, start_step) = (p.tp_sharded, p.start_step);
     if start_step >= cfg.steps {
         // The checkpoint already covers everything requested (e.g. a
         // supervisor restarting a finished run): report cleanly instead
@@ -206,14 +282,17 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
             collective_elems_sent: 0,
             pipeline_elems_sent: 0,
             tp_elems_sent: 0,
+            collective_bytes_sent: 0,
+            pipeline_bytes_sent: 0,
+            tp_bytes_sent: 0,
             tp_sharded,
             max_layer_state_bytes: 0,
             max_state_bytes: 0,
             execute_secs: 0.0,
             execute_calls: 0,
-            checkpoint_bytes_written: store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
-            checkpoint_records: store.as_ref().map(|s| s.records_written()).unwrap_or(0),
-            schedule_name: program.name.clone(),
+            checkpoint_bytes_written: p.store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
+            checkpoint_records: p.store.as_ref().map(|s| s.records_written()).unwrap_or(0),
+            schedule_name: p.program.name.clone(),
         });
     }
 
@@ -228,22 +307,7 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
     let mut joins = Vec::new();
     for world in worlds {
         let rank = world.rank();
-        let ctx = WorkerCtx {
-            world,
-            n_mu: cfg.n_mu,
-            seed: cfg.seed,
-            steps: cfg.steps,
-            start_step,
-            lr: cfg.lr,
-            partition: cfg.partition,
-            offload: cfg.offload,
-            tp_sharded,
-            ckpt_tp,
-            store: store.clone(),
-            program: program.clone(),
-            artifacts_root: cfg.artifacts_root.clone(),
-            preset: cfg.preset.clone(),
-        };
+        let ctx = worker_ctx(cfg, &p, world);
         joins.push(
             thread::Builder::new()
                 .name(format!("worker-d{}s{}t{}", rank.dp, rank.stage, rank.tp))
@@ -285,14 +349,17 @@ pub fn train(cfg: &TrainerConfig) -> Result<TrainReport> {
         collective_elems_sent: stats.collective_elems_sent,
         pipeline_elems_sent: stats.pipeline_elems_sent,
         tp_elems_sent: stats.tp_elems_sent,
+        collective_bytes_sent: wire_bytes(stats.collective_elems_sent),
+        pipeline_bytes_sent: wire_bytes(stats.pipeline_elems_sent),
+        tp_bytes_sent: wire_bytes(stats.tp_elems_sent),
         tp_sharded,
         max_layer_state_bytes: stats.layer_state_bytes,
         max_state_bytes: stats.total_state_bytes,
         execute_secs: stats.execute_secs,
         execute_calls: stats.execute_calls,
-        checkpoint_bytes_written: store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
-        checkpoint_records: store.as_ref().map(|s| s.records_written()).unwrap_or(0),
-        schedule_name: program.name.clone(),
+        checkpoint_bytes_written: p.store.as_ref().map(|s| s.bytes_written()).unwrap_or(0),
+        checkpoint_records: p.store.as_ref().map(|s| s.records_written()).unwrap_or(0),
+        schedule_name: p.program.name.clone(),
     })
 }
 

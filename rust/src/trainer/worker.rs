@@ -1012,6 +1012,22 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
     }
 
     let traffic = ctx.world.traffic();
+    let wall_secs = t0.elapsed().as_secs_f64();
+    // Ship the same numbers over the control plane (a no-op on the
+    // thread backend, where stats return through the join; the socket
+    // backend's coordinator needs them streamed).
+    ctx.world.control().report_stats(crate::collective::RankStats {
+        execute_secs: engine.execute_secs,
+        execute_calls: engine.execute_calls,
+        collective_elems_sent: traffic.dp,
+        pipeline_elems_sent: traffic.pipeline,
+        tp_elems_sent: traffic.tp,
+        layer_state_bytes,
+        total_state_bytes,
+        wall_secs,
+        tp_sharded: ctx.tp_sharded,
+        schedule: prog.name.clone(),
+    });
     Ok(WorkerStats {
         execute_secs: engine.execute_secs,
         execute_calls: engine.execute_calls,
@@ -1020,7 +1036,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         tp_elems_sent: traffic.tp,
         layer_state_bytes,
         total_state_bytes,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs,
     })
 }
 

@@ -295,6 +295,76 @@ fn tp_pinned_search_agrees_with_the_unrestricted_grid() {
 }
 
 #[test]
+fn calibrated_link_changes_wire_costs_and_plan_pricing() {
+    // Closing the performance-truth loop: a `repro netbench` calibration
+    // attached to the cluster must actually reprice wire ops in the
+    // simulator's cost table AND the planner's closed-form estimate —
+    // measured figures, not spec sheets.
+    use lga_mpp::costmodel::estimate;
+    use lga_mpp::hardware::NetCalibration;
+
+    let quoted = ClusterSpec::reference();
+    let cal = NetCalibration {
+        bandwidth_bytes_per_s: quoted.inter_node_bandwidth() / 8.0,
+        rtt_secs: 2.0e-4,
+    };
+    let measured = quoted.with_calibration(cal);
+    assert!(measured.inter_node_threshold() > quoted.inter_node_threshold());
+
+    // Simulator pricing: every inter-node wire op gets strictly more
+    // expensive on the measured (slower, non-zero-latency) link.
+    let cfg = TrainConfig {
+        strategy: Strategy::Improved,
+        n_b: 8,
+        n_l: 4,
+        n_a: 1,
+        n_mu: 8,
+        b_mu: 1.0,
+        offload: false,
+        partition: true,
+    };
+    let shape = XModel::new(32).shape();
+    let tq = CostTable::new(&shape, &cfg, &quoted);
+    let tm = CostTable::new(&shape, &cfg, &measured);
+    assert!(tm.send_act > tq.send_act, "{} vs {}", tm.send_act, tq.send_act);
+    assert!(tm.reduce_grad > tq.reduce_grad, "{} vs {}", tm.reduce_grad, tq.reduce_grad);
+    assert!(
+        tm.restore_params >= tq.restore_params,
+        "{} vs {}",
+        tm.restore_params,
+        tq.restore_params
+    );
+
+    // Planner pricing: the network-bound Table 6.1 baseline-3d row gets
+    // a strictly worse efficiency and training time on the measured
+    // wire (in-node NVLink tensor parallelism stays untouched).
+    let model = XModel::x160();
+    let net_bound = TrainConfig {
+        strategy: Strategy::Baseline,
+        n_b: 14,
+        n_l: 160,
+        n_a: 16,
+        n_mu: 172,
+        b_mu: 1.0,
+        offload: false,
+        partition: false,
+    };
+    let eq = estimate(&model, &net_bound, &quoted);
+    let em = estimate(&model, &net_bound, &measured);
+    assert!(
+        em.efficiency < eq.efficiency,
+        "calibration did not reach the planner: {} vs {}",
+        em.efficiency,
+        eq.efficiency
+    );
+    assert!(em.training_secs > eq.training_secs);
+    assert!(
+        em.overheads.tensor_parallel == eq.overheads.tensor_parallel,
+        "n_a = 16 fits the node: NVLink pricing must not move"
+    );
+}
+
+#[test]
 fn scratch_reuse_across_programs_changes_nothing() {
     let spec_a = ScheduleSpec {
         d_l: 64,

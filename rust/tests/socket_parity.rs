@@ -1,0 +1,148 @@
+//! Socket-vs-mpsc backend parity: swapping the TCP transport in for the
+//! in-process channels must be invisible — loss trajectories bit for
+//! bit, traffic accounting element for element — and a torn connection
+//! must surface as a clean `Disconnected`, never a hang.
+//!
+//! The trainer-level tests are artifact-gated like the rest of the e2e
+//! suite (skipped when the PJRT artifacts are absent); the transport-
+//! level tests always run.
+
+use std::path::PathBuf;
+use std::thread;
+
+use lga_mpp::collective::{
+    ring_group, socket_pair, socket_ring, Disconnected, RingGroup, Transport,
+};
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::runtime::DType;
+use lga_mpp::trainer::{launch, train, TrainerConfig};
+
+fn have_artifacts() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny/manifest.json").exists()
+}
+
+fn base(steps: usize) -> TrainerConfig {
+    let mut c = TrainerConfig::quick("tiny");
+    c.steps = steps;
+    c.n_mu = 2;
+    c.lr = LrSchedule::constant(3e-3);
+    c
+}
+
+fn assert_bitwise(mpsc: &[f64], socket: &[f64]) {
+    assert_eq!(mpsc.len(), socket.len(), "step counts differ");
+    for (i, (a, b)) in mpsc.iter().zip(socket).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {i}: mpsc {a} vs socket {b}");
+    }
+}
+
+/// The ISSUE acceptance spec: tp=2 / dp=2 over loopback sockets, loss
+/// trajectory bit-identical to the single-process mpsc run, traffic
+/// totals equal (the wire barrier's tokens bypass the accounting), and
+/// the bytes-on-wire columns exactly elems x f32 width.
+#[test]
+fn socket_tp2_dp2_matches_mpsc_bit_for_bit() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(3);
+    cfg.n_b = 2;
+    cfg.tp = 2;
+    let mpsc = train(&cfg).unwrap();
+    let launched = launch::launch_threads(&cfg).unwrap();
+    let r = &launched.report;
+    assert_bitwise(&mpsc.losses, &r.losses);
+    assert_eq!(r.schedule_name, mpsc.schedule_name);
+    assert_eq!(r.collective_elems_sent, mpsc.collective_elems_sent);
+    assert_eq!(r.pipeline_elems_sent, mpsc.pipeline_elems_sent);
+    assert_eq!(r.tp_elems_sent, mpsc.tp_elems_sent);
+    let w = DType::F32.bytes() as u64;
+    assert_eq!(r.collective_bytes_sent, r.collective_elems_sent * w);
+    assert_eq!(r.pipeline_bytes_sent, r.pipeline_elems_sent * w);
+    assert_eq!(r.tp_bytes_sent, r.tp_elems_sent * w);
+    assert_eq!(launched.per_rank.len(), 4);
+}
+
+/// All three axes at once (8 ranks: pp=2, dp=2, tp=2): every group kind
+/// of the world runs over TCP and the trajectory still bit-matches.
+#[test]
+fn socket_full_3d_world_matches_mpsc_bit_for_bit() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base(2);
+    cfg.n_l = 2;
+    cfg.n_b = 2;
+    cfg.tp = 2;
+    cfg.force_tp_emulation = true;
+    let mpsc = train(&cfg).unwrap();
+    let launched = launch::launch_threads(&cfg).unwrap();
+    assert_bitwise(&mpsc.losses, &launched.report.losses);
+    assert_eq!(launched.report.collective_elems_sent, mpsc.collective_elems_sent);
+    assert_eq!(launched.report.pipeline_elems_sent, mpsc.pipeline_elems_sent);
+    assert_eq!(launched.report.tp_elems_sent, mpsc.tp_elems_sent);
+}
+
+/// Tearing the remote end mid-conversation yields `Disconnected` from
+/// both directions within bounded work — no hang, no panic.
+#[test]
+fn torn_connection_surfaces_disconnected_not_a_hang() {
+    let (mut a, b) = socket_pair::<Vec<f32>>().unwrap();
+    a.send(vec![1.0, 2.0]).unwrap();
+    drop(b);
+    assert_eq!(a.recv(), Err(Disconnected));
+    let mut saw_err = false;
+    for _ in 0..10_000 {
+        if a.send(vec![0.0; 16 * 1024]).is_err() {
+            saw_err = true;
+            break;
+        }
+    }
+    assert!(saw_err, "writes into a torn connection never failed");
+}
+
+fn payload(r: usize) -> Vec<f32> {
+    // 33 elements: not divisible by the ring size, so chunk boundaries
+    // are uneven — the case where backend-dependent chunking would show.
+    (0..33).map(|k| ((r * 1000 + k) as f32).sin()).collect()
+}
+
+fn run_ring(groups: Vec<RingGroup>) -> Vec<Vec<f32>> {
+    let handles: Vec<_> = groups
+        .into_iter()
+        .enumerate()
+        .map(|(r, mut g)| {
+            thread::spawn(move || {
+                let mut d = payload(r);
+                g.all_reduce(&mut d);
+                d
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// A 4-rank all-reduce of an awkward (non-divisible) length is
+/// bit-identical between the mpsc rings and the socket rings.
+#[test]
+fn socket_ring_all_reduce_matches_mpsc_for_awkward_lengths() {
+    let n = 4;
+    let wire: Vec<RingGroup> = socket_ring(n)
+        .unwrap()
+        .into_iter()
+        .enumerate()
+        .map(|(r, p)| RingGroup::new_wire(r, n, Box::new(p)))
+        .collect();
+    let a = run_ring(ring_group(n));
+    let b = run_ring(wire);
+    for (r, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(x.len(), y.len(), "rank {r}");
+        for (k, (u, v)) in x.iter().zip(y).enumerate() {
+            assert_eq!(u.to_bits(), v.to_bits(), "rank {r} elem {k}: {u} vs {v}");
+        }
+    }
+    // And the reduction is rank-invariant on both backends.
+    for x in &a[1..] {
+        assert_eq!(x, &a[0]);
+    }
+}
