@@ -1,0 +1,81 @@
+//! Perf bench: failure-recovery accounting — expected lost work vs
+//! durable-checkpoint interval, on a lowered offloaded modular-pipeline
+//! program with a seeded failure draw. This is the quantitative side of
+//! the Figure 2 restore-ratio argument: streamed (interval-1)
+//! checkpoints bound the rollback to the in-flight step, while classic
+//! intervals lose up to a whole interval per failure. Run via
+//! `cargo bench --bench chaos_recovery`; writes
+//! `BENCH_chaos_recovery.json`.
+
+use lga_mpp::costmodel::{Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
+use lga_mpp::schedule::{lower, modular_pipeline, ScheduleSpec};
+use lga_mpp::sim::{recovery_costs, simulate_with_failures, CostTable, FailureEvent};
+
+fn main() {
+    let mut json = BenchJson::new("chaos_recovery");
+
+    let spec = ScheduleSpec {
+        d_l: 32,
+        n_l: 8,
+        n_mu: 8,
+        tp: 1,
+        partition: true,
+        offload: true,
+        data_parallel: true,
+    };
+    let cfg = TrainConfig {
+        strategy: Strategy::Improved,
+        n_b: 4,
+        n_l: 8,
+        n_a: 1,
+        n_mu: 8,
+        b_mu: 1.0,
+        offload: true,
+        partition: true,
+    };
+    let costs = CostTable::new(&XModel::new(64).shape(), &cfg, &ClusterSpec::reference());
+    let program = lower(&modular_pipeline(&spec)).expect("offloaded modular pipeline lowers");
+    let (step_secs, restore_secs) = recovery_costs(&program, &costs);
+    println!("offloaded modular pipeline (d_l=32, n_l=8, n_mu=8):");
+    println!("{:>24} {:>12.3} ms", "step", step_secs * 1e3);
+    println!("{:>24} {:>12.3} ms", "restore per failure", restore_secs * 1e3);
+    json.push("step_secs", step_secs);
+    json.push("restore_secs", restore_secs);
+
+    // A seeded failure draw (golden-ratio phase spread, mean gap ~40
+    // steps) replayed against every checkpoint interval, so the only
+    // variable across rows is how much work each failure rolls back.
+    let steps = 4096usize;
+    let mean_gap = 40.0 * step_secs;
+    let mut t = 0.0f64;
+    let mut events = Vec::new();
+    let mut k = 0usize;
+    while t < 0.9 * steps as f64 * step_secs {
+        let phase = (k as f64 * 0.618_033_988_749_894_9).fract();
+        t += mean_gap * (0.5 + phase);
+        events.push(FailureEvent { at_secs: t, stage: 0 });
+        k += 1;
+    }
+    println!("{} seeded failures over {} steps (mean gap ~40 steps):", events.len(), steps);
+    json.push("failures", events.len() as f64);
+    json.push("steps", steps as f64);
+
+    for interval in [1usize, 2, 4, 8, 16, 32] {
+        let acc = simulate_with_failures(&program, &costs, steps, interval, &events);
+        let rolled: usize = acc.failures.iter().map(|f| f.rolled_back_steps).sum();
+        println!(
+            "{:>18} {:>2} {:>10.4}% lost | {:>6} steps rolled back | wall {:>10.1}s",
+            "ckpt interval",
+            interval,
+            acc.lost_fraction * 100.0,
+            rolled,
+            acc.wall_secs
+        );
+        json.push(&format!("lost_fraction_interval_{interval}"), acc.lost_fraction);
+        json.push(&format!("rolled_back_steps_interval_{interval}"), rolled as f64);
+    }
+    json.finish();
+}

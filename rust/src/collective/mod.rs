@@ -38,8 +38,8 @@ pub mod world;
 
 pub use ring::{ring_group, RingGroup};
 pub use socket::{
-    netbench, socket_pair, socket_ring, connect_world, Coordinator, CtrlMsg, NetProbe, RankStats,
-    SocketPort, Wire,
+    netbench, socket_pair, socket_ring, connect_world, connect_world_opts, Coordinator, CtrlMsg,
+    NetProbe, RankStats, ReconnectConfig, ReconnectPort, SocketPort, Wire, WorldOptions,
 };
-pub use transport::{Disconnected, Transport};
+pub use transport::{Disconnected, FaultInjector, LinkFaults, Transport};
 pub use world::{CommWorld, ControlGroup, LossMsg, PipeMsg, PipelineGroup, Rank, Topology, Traffic};

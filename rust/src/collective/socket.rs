@@ -32,9 +32,10 @@
 //! coordinator; without it, workers bind loopback ephemeral ports and
 //! the address table is discovered through the rendezvous.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{self, BufReader, BufWriter, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::marker::PhantomData;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -264,8 +265,12 @@ pub struct RankStats {
 #[derive(Debug, Clone, PartialEq)]
 pub enum CtrlMsg {
     /// Worker → coordinator, first frame on the control connection: my
-    /// rank index and the address my data listener accepts on.
-    Hello { rank: u32, addr: String },
+    /// rank index, the incarnation I belong to, the shared auth token,
+    /// and the address my data listener accepts on. A restarted worker
+    /// re-registers with a bumped `generation`; a peer from an older
+    /// incarnation (stale generation) or with the wrong token is
+    /// rejected at the rendezvous.
+    Hello { rank: u32, generation: u64, token: String, addr: String },
     /// Coordinator → worker: the rank → data-listener address table.
     Peers { addrs: Vec<String> },
     /// Worker → coordinator: one step's loss report.
@@ -274,6 +279,10 @@ pub enum CtrlMsg {
     Stats(RankStats),
     /// Worker → coordinator: clean shutdown marker.
     Done,
+    /// Worker → coordinator: per-step liveness heartbeat ("I completed
+    /// this step"). The supervisor uses it to attribute a stall or a
+    /// kill to a specific rank and to know the last completed step.
+    Progress { step: u64 },
 }
 
 const TAG_HELLO: u8 = 0;
@@ -281,23 +290,27 @@ const TAG_PEERS: u8 = 1;
 const TAG_LOSS: u8 = 2;
 const TAG_STATS: u8 = 3;
 const TAG_DONE: u8 = 4;
+const TAG_PROGRESS: u8 = 5;
 
 impl Wire for CtrlMsg {
     fn encoded_len(&self) -> usize {
         1 + match self {
-            CtrlMsg::Hello { addr, .. } => 4 + 4 + addr.len(),
+            CtrlMsg::Hello { token, addr, .. } => 4 + 8 + 4 + token.len() + 4 + addr.len(),
             CtrlMsg::Peers { addrs } => 4 + addrs.iter().map(|a| 4 + a.len()).sum::<usize>(),
             CtrlMsg::Loss { .. } => 8 + 4 + 8,
             CtrlMsg::Stats(s) => 8 * 8 + 1 + 4 + s.schedule.len(),
             CtrlMsg::Done => 0,
+            CtrlMsg::Progress { .. } => 8,
         }
     }
 
     fn encode(&self, w: &mut impl Write) -> io::Result<()> {
         match self {
-            CtrlMsg::Hello { rank, addr } => {
+            CtrlMsg::Hello { rank, generation, token, addr } => {
                 w.write_all(&[TAG_HELLO])?;
                 put_u32(w, *rank)?;
+                put_u64(w, *generation)?;
+                put_str(w, token)?;
                 put_str(w, addr)
             }
             CtrlMsg::Peers { addrs } => {
@@ -328,13 +341,22 @@ impl Wire for CtrlMsg {
                 put_str(w, &s.schedule)
             }
             CtrlMsg::Done => w.write_all(&[TAG_DONE]),
+            CtrlMsg::Progress { step } => {
+                w.write_all(&[TAG_PROGRESS])?;
+                put_u64(w, *step)
+            }
         }
     }
 
     fn decode(buf: &[u8]) -> Result<Self, FrameError> {
         let mut c = Cursor::new(buf);
         let msg = match c.u8()? {
-            TAG_HELLO => CtrlMsg::Hello { rank: c.u32()?, addr: c.string()? },
+            TAG_HELLO => CtrlMsg::Hello {
+                rank: c.u32()?,
+                generation: c.u64()?,
+                token: c.string()?,
+                addr: c.string()?,
+            },
             TAG_PEERS => {
                 let n = c.u32()? as usize;
                 let mut addrs = Vec::with_capacity(n.min(4096));
@@ -357,6 +379,7 @@ impl Wire for CtrlMsg {
                 schedule: c.string()?,
             }),
             TAG_DONE => CtrlMsg::Done,
+            TAG_PROGRESS => CtrlMsg::Progress { step: c.u64()? },
             _ => return Err(FrameError("unknown control tag")),
         };
         c.finish()?;
@@ -397,28 +420,38 @@ impl ChanKind {
 }
 
 /// First frame on every data-plane connection: the dialing rank
-/// self-identifies so the receiver can demux its accepted streams.
+/// self-identifies so the receiver can demux its accepted streams, and
+/// carries its incarnation so a stale dialer (a worker from a previous
+/// generation that survived a partial restart) is rejected instead of
+/// silently joining the wrong world.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DataHello {
     pub chan: ChanKind,
     pub from: u32,
     pub to: u32,
+    pub generation: u64,
 }
 
 impl Wire for DataHello {
     fn encoded_len(&self) -> usize {
-        9
+        17
     }
 
     fn encode(&self, w: &mut impl Write) -> io::Result<()> {
         w.write_all(&[self.chan.tag()])?;
         put_u32(w, self.from)?;
-        put_u32(w, self.to)
+        put_u32(w, self.to)?;
+        put_u64(w, self.generation)
     }
 
     fn decode(buf: &[u8]) -> Result<Self, FrameError> {
         let mut c = Cursor::new(buf);
-        let h = DataHello { chan: ChanKind::from_tag(c.u8()?)?, from: c.u32()?, to: c.u32()? };
+        let h = DataHello {
+            chan: ChanKind::from_tag(c.u8()?)?,
+            from: c.u32()?,
+            to: c.u32()?,
+            generation: c.u64()?,
+        };
         c.finish()?;
         Ok(h)
     }
@@ -471,6 +504,324 @@ impl<M: Wire> Transport<M> for SocketPort<M> {
         // The reader thread drops its sender on EOF/error, which
         // surfaces here as a clean disconnect.
         self.rx.recv().map_err(|_| Disconnected)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reconnecting port: bounded retry with an epoch handshake.
+
+/// Sent frames retained for retransmission after a reconnect. A torn
+/// link older than this window cannot be resumed (the port errors out
+/// instead of silently dropping data) — collectives exchange strictly
+/// alternating small frames, so in practice one or two frames are ever
+/// in flight.
+pub const REPLAY_WINDOW: usize = 64;
+
+/// `"RCN1"`: the reconnect-handshake magic, so a foreign stream (or a
+/// mid-stream resync against a data frame) fails loudly.
+const RC_MAGIC: u32 = 0x5243_4e31;
+
+/// The resync handshake exchanged on every (re)connect: which
+/// incarnation I belong to and the next sequence number I have not yet
+/// delivered — the peer retransmits from there.
+struct RcHello {
+    generation: u64,
+    next_expect: u64,
+}
+
+impl Wire for RcHello {
+    fn encoded_len(&self) -> usize {
+        20
+    }
+
+    fn encode(&self, w: &mut impl Write) -> io::Result<()> {
+        put_u32(w, RC_MAGIC)?;
+        put_u64(w, self.generation)?;
+        put_u64(w, self.next_expect)
+    }
+
+    fn decode(buf: &[u8]) -> Result<Self, FrameError> {
+        let mut c = Cursor::new(buf);
+        if c.u32()? != RC_MAGIC {
+            return Err(FrameError("bad reconnect handshake magic"));
+        }
+        let h = RcHello { generation: c.u64()?, next_expect: c.u64()? };
+        c.finish()?;
+        Ok(h)
+    }
+}
+
+/// Bounded-reconnect policy: attempt `i` waits
+/// `min(backoff · 2^i, max_backoff)` before re-dialing (the listening
+/// side polls its accept queue for at least as long), and the port
+/// gives up — surfacing [`Disconnected`] — after `max_attempts`.
+#[derive(Debug, Clone, Copy)]
+pub struct ReconnectConfig {
+    pub max_attempts: usize,
+    pub backoff: Duration,
+    pub max_backoff: Duration,
+}
+
+impl Default for ReconnectConfig {
+    fn default() -> Self {
+        ReconnectConfig {
+            max_attempts: 8,
+            backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_secs(1),
+        }
+    }
+}
+
+fn backoff_delay(cfg: &ReconnectConfig, attempt: usize) -> Duration {
+    cfg.backoff.saturating_mul(1u32 << attempt.min(16)).min(cfg.max_backoff)
+}
+
+fn total_budget(cfg: &ReconnectConfig) -> Duration {
+    (0..cfg.max_attempts).map(|i| backoff_delay(cfg, i)).sum::<Duration>()
+        + Duration::from_secs(1)
+}
+
+enum RcRole {
+    /// Keeps its listener and re-accepts after a tear.
+    Listen(TcpListener),
+    /// Re-dials the same address after a tear.
+    Dial(String),
+}
+
+/// A duplex [`Transport`] port over **one** TCP connection that
+/// *survives* the connection tearing: both sides detect the broken
+/// stream, re-establish it (bounded exponential backoff on the dialing
+/// side, re-accept on the listening side), resync through an
+/// [`RcHello`] epoch handshake — a peer from a different generation is
+/// rejected, not resumed — and retransmit whatever the other side had
+/// not yet delivered. Every data frame carries a `u64` sequence number;
+/// the receiver drops retransmitted duplicates and errors on gaps, so a
+/// mid-collective tear is invisible to the ring algorithms above:
+/// results are bit-identical to an untorn run.
+///
+/// Unlike [`SocketPort`] there is no reader thread and no `BufReader` —
+/// reads go straight to the socket, so no buffered bytes can be lost
+/// when the stream is replaced mid-run.
+pub struct ReconnectPort<M: Wire> {
+    role: RcRole,
+    cfg: ReconnectConfig,
+    generation: u64,
+    stream: TcpStream,
+    next_seq: u64,
+    next_expect: u64,
+    replay: VecDeque<(u64, Vec<u8>)>,
+    sends: u64,
+    tear_at: Option<u64>,
+    _msg: PhantomData<M>,
+}
+
+fn write_payload(stream: &TcpStream, seq: u64, bytes: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(8 + bytes.len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME_BYTES)
+        .ok_or_else(|| invalid_data("frame payload exceeds the 1 GiB cap"))?;
+    let mut w = stream;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&seq.to_le_bytes())?;
+    w.write_all(bytes)
+}
+
+impl<M: Wire> ReconnectPort<M> {
+    /// Accept the peer on `listener` and handshake. The listener is
+    /// retained: after a tear this side recovers by re-accepting.
+    pub fn listen(
+        listener: TcpListener,
+        generation: u64,
+        cfg: ReconnectConfig,
+    ) -> io::Result<Self> {
+        let (stream, _) = listener.accept()?;
+        configure(&stream)?;
+        let mut port = ReconnectPort::assemble(RcRole::Listen(listener), cfg, generation, stream);
+        port.handshake()?;
+        Ok(port)
+    }
+
+    /// Dial `addr` and handshake. The address is retained: after a tear
+    /// this side recovers by re-dialing it.
+    pub fn dial(addr: &str, generation: u64, cfg: ReconnectConfig) -> io::Result<Self> {
+        let stream = connect_retry(addr, total_budget(&cfg))?;
+        let role = RcRole::Dial(addr.to_string());
+        let mut port = ReconnectPort::assemble(role, cfg, generation, stream);
+        port.handshake()?;
+        Ok(port)
+    }
+
+    fn assemble(role: RcRole, cfg: ReconnectConfig, generation: u64, stream: TcpStream) -> Self {
+        ReconnectPort {
+            role,
+            cfg,
+            generation,
+            stream,
+            next_seq: 0,
+            next_expect: 0,
+            replay: VecDeque::new(),
+            sends: 0,
+            tear_at: None,
+            _msg: PhantomData,
+        }
+    }
+
+    /// Chaos hook: shut this port's own stream down right before its
+    /// `sends`-th send, simulating a connection torn mid-collective.
+    pub fn tear_after(&mut self, sends: u64) {
+        self.tear_at = Some(sends);
+    }
+
+    /// Exchange [`RcHello`]s on the current stream and retransmit what
+    /// the peer has not delivered. Errors on a generation mismatch (a
+    /// stale peer must not resume) or when the peer needs a frame that
+    /// fell out of the replay window.
+    fn handshake(&mut self) -> io::Result<()> {
+        let hello = RcHello { generation: self.generation, next_expect: self.next_expect };
+        let mut w = &self.stream;
+        write_frame(&mut w, &hello)?;
+        let mut r = &self.stream;
+        let peer = RcHello::decode(&read_frame(&mut r)?).map_err(invalid_data)?;
+        if peer.generation != self.generation {
+            return Err(invalid_data(format!(
+                "reconnect handshake from stale generation {} (ours is {})",
+                peer.generation, self.generation
+            )));
+        }
+        if peer.next_expect < self.next_seq {
+            match self.replay.front() {
+                Some(&(oldest, _)) if oldest <= peer.next_expect => {}
+                _ => {
+                    return Err(invalid_data(format!(
+                        "peer needs frame {} but it fell out of the replay window",
+                        peer.next_expect
+                    )));
+                }
+            }
+        }
+        for (seq, bytes) in &self.replay {
+            if *seq >= peer.next_expect {
+                write_payload(&self.stream, *seq, bytes)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-establish the stream within the bounded backoff budget and
+    /// resync. The last failure is surfaced when every attempt fails.
+    fn reconnect(&mut self) -> io::Result<()> {
+        let _ = self.stream.shutdown(Shutdown::Both);
+        let mut last = invalid_data("reconnect exhausted its attempts");
+        for attempt in 0..self.cfg.max_attempts {
+            let delay = backoff_delay(&self.cfg, attempt);
+            match self.reattach(delay) {
+                Ok(s) => {
+                    self.stream = s;
+                    match self.handshake() {
+                        Ok(()) => return Ok(()),
+                        Err(e) => last = e,
+                    }
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    fn reattach(&self, delay: Duration) -> io::Result<TcpStream> {
+        match &self.role {
+            RcRole::Dial(addr) => {
+                thread::sleep(delay);
+                let s = TcpStream::connect(addr.as_str())?;
+                configure(&s)?;
+                Ok(s)
+            }
+            RcRole::Listen(l) => {
+                l.set_nonblocking(true)?;
+                let t0 = Instant::now();
+                let window = delay.max(Duration::from_millis(50));
+                let r = loop {
+                    match l.accept() {
+                        Ok((s, _)) => break Ok(s),
+                        Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                            if t0.elapsed() > window {
+                                break Err(io::Error::new(
+                                    io::ErrorKind::TimedOut,
+                                    "no reconnect attempt within the backoff window",
+                                ));
+                            }
+                            thread::sleep(Duration::from_millis(2));
+                        }
+                        Err(e) => break Err(e),
+                    }
+                };
+                l.set_nonblocking(false)?;
+                let s = r?;
+                configure(&s)?;
+                Ok(s)
+            }
+        }
+    }
+
+    /// Read one data frame: `Ok(Some)` delivers the next in-sequence
+    /// message, `Ok(None)` dropped a retransmitted duplicate, `Err`
+    /// means the stream broke (or the sequence gapped) — reconnect.
+    fn read_one(&mut self) -> io::Result<Option<M>> {
+        let mut r = &self.stream;
+        let buf = read_frame(&mut r)?;
+        if buf.len() < 8 {
+            return Err(invalid_data("reconnect frame shorter than its sequence header"));
+        }
+        let seq = u64::from_le_bytes(buf[..8].try_into().expect("8-byte slice"));
+        if seq < self.next_expect {
+            return Ok(None);
+        }
+        if seq > self.next_expect {
+            return Err(invalid_data(format!(
+                "sequence gap: got frame {seq}, expected {}",
+                self.next_expect
+            )));
+        }
+        let msg = M::decode(&buf[8..]).map_err(invalid_data)?;
+        self.next_expect += 1;
+        Ok(Some(msg))
+    }
+}
+
+impl<M: Wire> Transport<M> for ReconnectPort<M> {
+    fn send(&mut self, msg: M) -> Result<(), Disconnected> {
+        if self.tear_at == Some(self.sends) {
+            self.tear_at = None;
+            let _ = self.stream.shutdown(Shutdown::Both);
+        }
+        self.sends += 1;
+        let mut bytes = Vec::with_capacity(msg.encoded_len());
+        if msg.encode(&mut bytes).is_err() {
+            return Err(Disconnected);
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.replay.push_back((seq, bytes));
+        while self.replay.len() > REPLAY_WINDOW {
+            self.replay.pop_front();
+        }
+        let last = self.replay.back().expect("just pushed");
+        if write_payload(&self.stream, last.0, &last.1).is_ok() {
+            return Ok(());
+        }
+        // The handshake retransmits this frame along with anything else
+        // the peer missed, so a successful reconnect IS the delivery.
+        self.reconnect().map_err(|_| Disconnected)
+    }
+
+    fn recv(&mut self) -> Result<M, Disconnected> {
+        loop {
+            match self.read_one() {
+                Ok(Some(m)) => return Ok(m),
+                Ok(None) => continue,
+                Err(_) => self.reconnect().map_err(|_| Disconnected)?,
+            }
+        }
     }
 }
 
@@ -546,9 +897,14 @@ fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
 
 /// The launch-side rendezvous listener: accepts one control connection
 /// per rank, collects their `Hello`s, broadcasts the `Peers` table.
+/// Hardened for elasticity: an optional shared auth token gates
+/// registration, a restarted rank may *re*-register (the newer control
+/// stream replaces the older one), and a `Hello` from a previous
+/// generation — a zombie of an earlier incarnation — is dropped.
 pub struct Coordinator {
     listener: TcpListener,
     n: usize,
+    token: String,
 }
 
 impl Coordinator {
@@ -557,18 +913,41 @@ impl Coordinator {
     /// workers.
     pub fn bind(addr: &str, n: usize) -> io::Result<Self> {
         assert!(n >= 1, "a world needs at least one rank");
-        Ok(Coordinator { listener: TcpListener::bind(addr)?, n })
+        Ok(Coordinator { listener: TcpListener::bind(addr)?, n, token: String::new() })
+    }
+
+    /// Require every `Hello` to carry this shared auth token
+    /// (`REPRO_AUTH_TOKEN` / `--auth-token`). Empty = open listener.
+    pub fn with_token(mut self, token: &str) -> Self {
+        self.token = token.to_string();
+        self
     }
 
     pub fn local_addr(&self) -> io::Result<SocketAddr> {
         self.listener.local_addr()
     }
 
-    /// Run the rendezvous: accept all `n` workers within `deadline`
-    /// (erroring out instead of hanging if one never shows up), then
-    /// broadcast the address table. Returns the per-rank control
-    /// streams, index = rank, ready for loss/stats draining.
+    /// Run the generation-0 rendezvous (see [`Coordinator::rendezvous_gen`]).
     pub fn rendezvous(&self, deadline: Duration) -> io::Result<Vec<TcpStream>> {
+        self.rendezvous_gen(deadline, 0)
+    }
+
+    /// Run the rendezvous for one incarnation: accept all `n` workers
+    /// within `deadline` (erroring out — naming the missing ranks —
+    /// instead of hanging if one never shows up), then broadcast the
+    /// address table. Returns the per-rank control streams, index =
+    /// rank, ready for loss/stats draining.
+    ///
+    /// A wrong-token `Hello` is dropped (logged, connection closed) and
+    /// the listener keeps accepting; a stale-generation `Hello` is
+    /// dropped silently (the dialer sees EOF); a duplicate `Hello` for
+    /// an already-registered rank *replaces* it — the restarted process
+    /// wins, its predecessor is dead or dying.
+    pub fn rendezvous_gen(
+        &self,
+        deadline: Duration,
+        generation: u64,
+    ) -> io::Result<Vec<TcpStream>> {
         self.listener.set_nonblocking(true)?;
         let t0 = Instant::now();
         let mut streams: Vec<Option<TcpStream>> = (0..self.n).map(|_| None).collect();
@@ -581,9 +960,18 @@ impl Coordinator {
                     configure(&s)?;
                     s.set_read_timeout(Some(deadline))?;
                     let hello = CtrlMsg::decode(&read_frame(&mut s)?).map_err(invalid_data)?;
-                    let CtrlMsg::Hello { rank, addr } = hello else {
+                    let CtrlMsg::Hello { rank, generation: g, token, addr } = hello else {
                         return Err(invalid_data("expected Hello as the first control frame"));
                     };
+                    if token != self.token {
+                        eprintln!("[coordinator] rejecting rank {rank}: bad auth token");
+                        continue; // drop the stream; keep accepting
+                    }
+                    if g != generation {
+                        // A zombie from a previous incarnation: drop it
+                        // (it sees EOF) and keep waiting for the real one.
+                        continue;
+                    }
                     let rank = rank as usize;
                     if rank >= self.n {
                         return Err(invalid_data(format!(
@@ -591,18 +979,29 @@ impl Coordinator {
                             self.n
                         )));
                     }
-                    if streams[rank].is_some() {
-                        return Err(invalid_data(format!("rank {rank} connected twice")));
+                    if streams[rank].is_none() {
+                        got += 1;
                     }
+                    // Re-registration of a restarted rank: newest wins.
                     streams[rank] = Some(s);
                     addrs[rank] = Some(addr);
-                    got += 1;
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
                     if t0.elapsed() > deadline {
+                        let missing: Vec<String> = streams
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, s)| s.is_none())
+                            .map(|(i, _)| i.to_string())
+                            .collect();
                         return Err(io::Error::new(
                             io::ErrorKind::TimedOut,
-                            format!("rendezvous timed out: {got}/{} workers connected", self.n),
+                            format!(
+                                "rendezvous timed out: {got}/{} workers connected (missing rank{} {})",
+                                self.n,
+                                if missing.len() == 1 { "" } else { "s" },
+                                missing.join(", ")
+                            ),
                         ));
                     }
                     thread::sleep(Duration::from_millis(5));
@@ -657,14 +1056,30 @@ fn self_ring() -> RingGroup {
     super::ring::ring_group(1).pop().expect("ring_group(1) yields one member")
 }
 
-/// Join a socket-wired world as rank `index` of `topo`: bind this
-/// rank's data listener, rendezvous through the coordinator at
-/// `coord_addr`, dial/accept exactly the ring edges the mpsc builder
-/// would wire, and assemble the rank's [`CommWorld`].
-///
-/// `hostmap` (from `REPRO_HOSTMAP`) gives one bindable data-listener
-/// address per rank for multi-host runs; `None` binds loopback
-/// ephemeral ports discovered through the rendezvous.
+/// Per-rank options for joining a socket world: how long to wait on
+/// peers, which incarnation this process belongs to, and the shared
+/// auth token presented at the rendezvous. `Default` reads the token
+/// from `REPRO_AUTH_TOKEN` (empty when unset) — the path a forked
+/// `repro worker` takes.
+#[derive(Debug, Clone)]
+pub struct WorldOptions {
+    pub timeout: Duration,
+    pub generation: u64,
+    pub token: String,
+}
+
+impl Default for WorldOptions {
+    fn default() -> Self {
+        WorldOptions {
+            timeout: Duration::from_secs(120),
+            generation: 0,
+            token: std::env::var("REPRO_AUTH_TOKEN").unwrap_or_default(),
+        }
+    }
+}
+
+/// Join a socket-wired world as rank `index` of `topo` at generation 0
+/// (see [`connect_world_opts`]).
 pub fn connect_world(
     topo: Topology,
     index: usize,
@@ -672,6 +1087,32 @@ pub fn connect_world(
     hostmap: Option<&[String]>,
     timeout: Duration,
 ) -> io::Result<CommWorld> {
+    let opts = WorldOptions { timeout, ..WorldOptions::default() };
+    connect_world_opts(topo, index, coord_addr, hostmap, &opts)
+}
+
+/// Join a socket-wired world as rank `index` of `topo`: bind this
+/// rank's data listener, rendezvous through the coordinator at
+/// `coord_addr`, dial/accept exactly the ring edges the mpsc builder
+/// would wire, and assemble the rank's [`CommWorld`].
+///
+/// `hostmap` (from `REPRO_HOSTMAP`) gives one bindable data-listener
+/// address per rank for multi-host runs; `None` binds loopback
+/// ephemeral ports discovered through the rendezvous. Data connections
+/// from a different generation than `opts.generation` (stale peers of
+/// a previous incarnation) are dropped and the listener keeps
+/// accepting until every expected edge arrives from the *current*
+/// incarnation.
+pub fn connect_world_opts(
+    topo: Topology,
+    index: usize,
+    coord_addr: &str,
+    hostmap: Option<&[String]>,
+    opts: &WorldOptions,
+) -> io::Result<CommWorld> {
+    let timeout = opts.timeout;
+    let generation = opts.generation;
+    let token = opts.token.clone();
     let n = topo.n_ranks();
     assert!(index < n, "rank index {index} out of range for {n} ranks");
     if let Some(m) = hostmap {
@@ -701,7 +1142,7 @@ pub fn connect_world(
             .name(format!("accept-rank-{index}"))
             .spawn(move || {
                 let mut got = Vec::with_capacity(expect_n);
-                for _ in 0..expect_n {
+                while got.len() < expect_n {
                     let (mut s, _) = listener.accept()?;
                     configure(&s)?;
                     s.set_read_timeout(Some(timeout))?;
@@ -712,6 +1153,12 @@ pub fn connect_world(
                             hello.to
                         )));
                     }
+                    if hello.generation != generation {
+                        // Stale peer from a previous incarnation: drop
+                        // the stream (the dialer sees EOF) and keep
+                        // accepting until the real edge shows up.
+                        continue;
+                    }
                     s.set_read_timeout(None)?;
                     got.push((hello, s));
                 }
@@ -721,7 +1168,8 @@ pub fn connect_world(
 
     // Control rendezvous: Hello out, Peers table back.
     let mut ctrl = connect_retry(coord_addr, timeout)?;
-    write_frame(&mut ctrl, &CtrlMsg::Hello { rank: my_index, addr: advertised })?;
+    let hello = CtrlMsg::Hello { rank: my_index, generation, token, addr: advertised };
+    write_frame(&mut ctrl, &hello)?;
     ctrl.set_read_timeout(Some(timeout))?;
     let peers = match CtrlMsg::decode(&read_frame(&mut ctrl)?).map_err(invalid_data)? {
         CtrlMsg::Peers { addrs } => addrs,
@@ -736,7 +1184,8 @@ pub fn connect_world(
     let mut out_streams: HashMap<ChanKind, TcpStream> = HashMap::new();
     for (kind, to) in dial {
         let mut s = connect_retry(&peers[to], timeout)?;
-        write_frame(&mut s, &DataHello { chan: kind, from: my_index, to: small_u32(to, "rank")? })?;
+        let h = DataHello { chan: kind, from: my_index, to: small_u32(to, "rank")?, generation };
+        write_frame(&mut s, &h)?;
         out_streams.insert(kind, s);
     }
 
@@ -937,10 +1386,23 @@ mod tests {
 
     #[test]
     fn control_msgs_roundtrip() {
-        roundtrip(&CtrlMsg::Hello { rank: 3, addr: "127.0.0.1:45133".into() });
+        roundtrip(&CtrlMsg::Hello {
+            rank: 3,
+            generation: 0,
+            token: String::new(),
+            addr: "127.0.0.1:45133".into(),
+        });
+        roundtrip(&CtrlMsg::Hello {
+            rank: 0,
+            generation: u64::MAX,
+            token: "repro-чаос".into(),
+            addr: String::new(),
+        });
         roundtrip(&CtrlMsg::Peers { addrs: vec!["a:1".into(), "b:2".into(), String::new()] });
         roundtrip(&CtrlMsg::Loss { step: u64::MAX, dp: 0, loss: -f64::NAN });
         roundtrip(&CtrlMsg::Loss { step: 0, dp: 7, loss: 5.551e-308 });
+        roundtrip(&CtrlMsg::Progress { step: 0 });
+        roundtrip(&CtrlMsg::Progress { step: u64::MAX });
         roundtrip(&CtrlMsg::Stats(RankStats {
             execute_secs: 1.25,
             execute_calls: 42,
@@ -959,7 +1421,7 @@ mod tests {
     #[test]
     fn data_hello_roundtrips() {
         for chan in [ChanKind::PipeAct, ChanKind::PipeGrad, ChanKind::DpRing, ChanKind::TpRing] {
-            roundtrip(&DataHello { chan, from: 11, to: 4 });
+            roundtrip(&DataHello { chan, from: 11, to: 4, generation: 3 });
         }
     }
 
@@ -1117,5 +1579,99 @@ mod tests {
         assert!(p.bandwidth_bytes_per_s > 0.0);
         assert!(p.ring_allreduce_bytes_per_s > 0.0);
         assert_eq!(p.payload_bytes, 4 << 12);
+    }
+
+    // -- Reconnecting port. --------------------------------------------------
+
+    fn rc_data(rank: usize) -> Vec<f32> {
+        // Awkward (non-divisible) length: uneven ring chunk boundaries.
+        (0..33).map(|i| ((rank * 1000 + i) as f32).sin() * 1e2).collect()
+    }
+
+    fn rc_run(groups: Vec<RingGroup>) -> Vec<Vec<f32>> {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut g)| {
+                thread::spawn(move || {
+                    let mut d = rc_data(r);
+                    g.all_reduce(&mut d);
+                    d
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// The satellite acceptance test: a link torn in the middle of an
+    /// all-reduce (between the two ring rounds) reconnects, resyncs and
+    /// finishes with results bit-identical to an untorn run.
+    #[test]
+    fn reconnect_mid_all_reduce_is_bit_identical_to_a_clean_run() {
+        let clean = rc_run(super::super::ring::ring_group(2));
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = ReconnectConfig::default();
+        let server =
+            thread::spawn(move || ReconnectPort::<Vec<f32>>::listen(listener, 7, cfg).unwrap());
+        let mut dialer = ReconnectPort::<Vec<f32>>::dial(&addr, 7, cfg).unwrap();
+        // A 2-rank all-reduce is two rounds of one send each: tear the
+        // dialer's stream right before its second send.
+        dialer.tear_after(1);
+        let listener_port = server.join().unwrap();
+        let groups = vec![
+            RingGroup::new_wire(0, 2, Box::new(dialer)),
+            RingGroup::new_wire(1, 2, Box::new(listener_port)),
+        ];
+        let torn = rc_run(groups);
+        for (r, (a, b)) in clean.iter().zip(&torn).enumerate() {
+            assert_eq!(a.len(), b.len(), "rank {r}");
+            for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r} elem {k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn stale_generation_peer_is_rejected_at_handshake() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let cfg = ReconnectConfig { max_attempts: 1, ..ReconnectConfig::default() };
+        let server = thread::spawn(move || ReconnectPort::<Vec<f32>>::listen(listener, 2, cfg));
+        let err = ReconnectPort::<Vec<f32>>::dial(&addr, 1, cfg).unwrap_err();
+        assert!(err.to_string().contains("stale generation"), "{err}");
+        assert!(server.join().unwrap().is_err(), "listener accepted a stale peer");
+    }
+
+    /// Rendezvous hardening: wrong-token Hellos are dropped, stale
+    /// generations ignored, and a restarted rank's re-registration
+    /// replaces its predecessor (the new address wins the Peers table).
+    #[test]
+    fn coordinator_accepts_re_registration_and_rejects_bad_token() {
+        let coord = Coordinator::bind("127.0.0.1:0", 2).unwrap().with_token("secret");
+        let addr = coord.local_addr().unwrap().to_string();
+        let h = thread::spawn(move || coord.rendezvous_gen(Duration::from_secs(10), 3));
+        let hello = |rank: u32, generation: u64, token: &str, a: &str| {
+            let mut s = TcpStream::connect(&addr).unwrap();
+            let msg = CtrlMsg::Hello { rank, generation, token: token.into(), addr: a.into() };
+            write_frame(&mut s, &msg).unwrap();
+            s
+        };
+        // Wrong token: dropped (the client sees EOF, not a Peers table).
+        let mut bad = hello(0, 3, "wrong", "x:1");
+        // Stale generation: dropped silently.
+        let _stale = hello(0, 2, "secret", "x:2");
+        // Rank 0 registers, then its restarted incarnation replaces it.
+        let _first = hello(0, 3, "secret", "old:0");
+        let mut r0 = hello(0, 3, "secret", "new:0");
+        let mut r1 = hello(1, 3, "secret", "b:1");
+        let streams = h.join().unwrap().unwrap();
+        assert_eq!(streams.len(), 2);
+        assert!(read_frame(&mut bad).is_err(), "bad-token stream saw data");
+        let want = CtrlMsg::Peers { addrs: vec!["new:0".into(), "b:1".into()] };
+        for s in [&mut r0, &mut r1] {
+            let peers = CtrlMsg::decode(&read_frame(s).unwrap()).unwrap();
+            assert_eq!(peers, want, "the restarted rank's address wins");
+        }
     }
 }

@@ -10,6 +10,7 @@
 //! touching the ring or pipeline code.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Duration;
 
 /// A peer endpoint disappeared mid-operation. During orderly trainer
 /// shutdown receivers outlive senders, so seeing this means a peer
@@ -93,6 +94,65 @@ pub fn mpsc_ring_rev<M: Send>(n: usize) -> Vec<MpscPort<M>> {
     mpsc_ring_reading(n, |r| (r + 1) % n)
 }
 
+/// Scripted fault schedule for one [`FaultInjector`]-wrapped link,
+/// keyed by the port's own operation index: sends and recvs share one
+/// counter, bumped in call order. The collectives above are
+/// deterministic, so a given schedule always hits the same op of the
+/// same collective — which is what makes chaos runs replayable.
+#[derive(Debug, Clone, Default)]
+pub struct LinkFaults {
+    /// `(op index, extra latency)`: sleep that long before the op runs.
+    pub delays: Vec<(u64, Duration)>,
+    /// Op indices that fail with [`Disconnected`] instead of running.
+    pub tears: Vec<u64>,
+}
+
+/// Fault-injecting decorator over any [`Transport`]: replays a
+/// [`LinkFaults`] schedule against the wrapped port. Delays model a
+/// congested or flapping link (the op still completes, late); tears
+/// model a dropped connection (the op fails with [`Disconnected`] and
+/// the message never moves — exactly what a torn TCP stream surfaces).
+pub struct FaultInjector<M: Send> {
+    inner: Box<dyn Transport<M>>,
+    faults: LinkFaults,
+    ops: u64,
+}
+
+impl<M: Send> FaultInjector<M> {
+    pub fn new(inner: Box<dyn Transport<M>>, faults: LinkFaults) -> Self {
+        FaultInjector { inner, faults, ops: 0 }
+    }
+
+    /// Ops executed (or torn) so far on this link.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+
+    fn fault(&mut self) -> Result<(), Disconnected> {
+        let op = self.ops;
+        self.ops += 1;
+        if let Some(&(_, d)) = self.faults.delays.iter().find(|(at, _)| *at == op) {
+            std::thread::sleep(d);
+        }
+        if self.faults.tears.contains(&op) {
+            return Err(Disconnected);
+        }
+        Ok(())
+    }
+}
+
+impl<M: Send> Transport<M> for FaultInjector<M> {
+    fn send(&mut self, msg: M) -> Result<(), Disconnected> {
+        self.fault()?;
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<M, Disconnected> {
+        self.fault()?;
+        self.inner.recv()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -135,5 +195,63 @@ mod tests {
         let mut ports = mpsc_ring::<u8>(1);
         ports[0].send(7).unwrap();
         assert_eq!(ports[0].recv().unwrap(), 7);
+    }
+
+    fn payload(r: usize) -> Vec<f32> {
+        // Awkward length: chunk boundaries uneven across the ring.
+        (0..33).map(|k| ((r * 100 + k) as f32).sin()).collect()
+    }
+
+    fn run_pair(groups: Vec<crate::collective::RingGroup>) -> Vec<Vec<f32>> {
+        let handles: Vec<_> = groups
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut g)| {
+                std::thread::spawn(move || {
+                    let mut d = payload(r);
+                    g.all_reduce(&mut d);
+                    d
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn delayed_link_all_reduce_stays_bit_identical() {
+        use crate::collective::{ring_group, RingGroup};
+        let clean = run_pair(ring_group(2));
+        let faults = LinkFaults {
+            delays: vec![(0, Duration::from_millis(5)), (3, Duration::from_millis(5))],
+            tears: vec![],
+        };
+        let mut ports = mpsc_ring::<Vec<f32>>(2).into_iter();
+        let slow = FaultInjector::new(Box::new(ports.next().unwrap()), faults);
+        let groups = vec![
+            RingGroup::new_wire(0, 2, Box::new(slow)),
+            RingGroup::new_wire(1, 2, Box::new(ports.next().unwrap())),
+        ];
+        let delayed = run_pair(groups);
+        for (r, (a, b)) in clean.iter().zip(&delayed).enumerate() {
+            assert_eq!(a.len(), b.len(), "rank {r}");
+            for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "rank {r} elem {k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn torn_link_surfaces_disconnected_at_the_scripted_op() {
+        let faults = LinkFaults { delays: vec![], tears: vec![2] };
+        let mut ports = mpsc_ring::<u8>(1); // self-loop carries the data
+        let mut p = FaultInjector::new(Box::new(ports.remove(0)), faults);
+        p.send(1).unwrap(); // op 0
+        assert_eq!(p.recv().unwrap(), 1); // op 1
+        assert_eq!(p.send(2), Err(Disconnected), "op 2 is scripted to tear");
+        // The tear models one dropped connection, not a dead link:
+        // later ops run again (reconnect policy lives a layer above).
+        p.send(3).unwrap();
+        assert_eq!(p.recv().unwrap(), 3);
+        assert_eq!(p.ops(), 5);
     }
 }

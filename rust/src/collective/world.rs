@@ -188,6 +188,18 @@ impl ControlGroup {
         }
     }
 
+    /// Per-step liveness heartbeat: "this rank completed `step`". A
+    /// no-op on the mpsc backend (threads share a fate — per-rank
+    /// liveness is meaningless); on the wire the launch supervisor uses
+    /// it to attribute stalls and kills to a specific rank and to know
+    /// each rank's last completed step.
+    pub fn report_progress(&mut self, step: usize) {
+        if let ControlSink::Wire(w) = &mut self.sink {
+            let msg = CtrlMsg::Progress { step: step as u64 };
+            let _ = write_frame(w, &msg).and_then(|()| w.flush());
+        }
+    }
+
     /// Ship this rank's end-of-run statistics. A no-op on the mpsc
     /// backend (stats return through the thread join); on the wire the
     /// coordinator needs them streamed, followed by a `Done` marker.

@@ -8,9 +8,11 @@
 //!   launch --ranks N [...]           fork worker *processes* over TCP sockets
 //!   worker --rank I --coord A [...]  one launched rank (spawned by `launch`)
 //!   netbench [...]                   measure the socket wire, write calibration
+//!   chaos [--probe] [...]            fault-injected elastic training
 //!   plan [--x N] [--ethernet] [...]  plan the fastest configuration
 
 use std::collections::HashMap;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -105,6 +107,7 @@ fn main() -> Result<()> {
         "launch" => cmd_launch(&args),
         "worker" => cmd_worker(&args),
         "netbench" => cmd_netbench(&args),
+        "chaos" => cmd_chaos(&args),
         "plan" => cmd_plan(&args),
         other => bail!("unknown subcommand '{other}' (see `repro help`)"),
     }
@@ -123,18 +126,31 @@ usage:
               [--policy baseline|improved|1f1b] [--partition] [--lr F]
               [--tp-emulate] [--offload] [--store DIR] [--resume] [--artifacts DIR]
   repro launch --ranks N [--tp T] [--dp D] [train flags...] [--probe] [--verify]
-               [--coord-bind HOST:PORT]   (pp = ranks / (tp*dp); forks one
-               `repro worker` process per rank over loopback TCP; --probe runs
-               the artifact-free connectivity exercise; --verify re-runs the
-               same spec in-process and asserts bit-identical losses;
-               --coord-bind runs only the coordinator, for multi-host jobs
-               whose workers are started by hand with REPRO_HOSTMAP set)
-  repro worker --rank I --coord HOST:PORT [train flags...] [--probe]
+               [--coord-bind HOST:PORT] [--timeout-secs S] [--auth-token TOK]
+               (pp = ranks / (tp*dp); forks one `repro worker` process per rank
+               over loopback TCP; --probe runs the artifact-free connectivity
+               exercise; --verify re-runs the same spec in-process and asserts
+               bit-identical losses; --coord-bind runs only the coordinator,
+               for multi-host jobs whose workers are started by hand with
+               REPRO_HOSTMAP set; a rank that stalls past --timeout-secs
+               (env REPRO_LAUNCH_TIMEOUT) is named with its last completed
+               step; with --store, dead workers restart from the latest
+               complete checkpoint)
+  repro worker --rank I --coord HOST:PORT [--generation G] [train flags...] [--probe]
   repro netbench [--payload-mib N] [--iters N] [--frames N] [--ethernet]
                (measures socket rtt + bandwidth, writes BENCH_net_calibration.json;
                feed it back anywhere with --calibration FILE)
+  repro chaos --store DIR [--seed N] [--kills N] [train flags...] | --probe [--steps N]
+               (fault-injected elastic training: a seeded schedule of rank
+               kills, torn checkpoint stores and dp/tp topology changes on
+               revival, checked against an uninterrupted reference run;
+               --probe instead SIGKILLs a real worker process over loopback
+               and asserts the supervisor restarts it — artifact-free)
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
              [--budget-days D] [--no-sim] [--tp N] [--calibration FILE]
+             [--mtbf HOURS] [--max-lost-work PCT]   (reliability-constrained:
+             the fastest plan whose expected failure-rollback lost work
+             stays under PCT% of wall clock at the given per-device MTBF)
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -431,14 +447,30 @@ fn cmd_launch(args: &Args) -> Result<()> {
     .into_iter()
     .flat_map(|(k, v)| [k.to_string(), v])
     .collect();
+    if let Some(dir) = &cfg.store_dir {
+        flags.push("--store".to_string());
+        flags.push(dir.display().to_string());
+    }
     for (flag, on) in [
         ("--partition", cfg.partition),
         ("--tp-emulate", cfg.force_tp_emulation),
+        ("--offload", cfg.offload),
+        ("--resume", cfg.resume),
         ("--probe", probe),
     ] {
         if on {
             flags.push(flag.to_string());
         }
+    }
+
+    // Supervision knobs: stall timeout (also settable via the
+    // REPRO_LAUNCH_TIMEOUT env default) and the rendezvous auth token.
+    let mut opts = launch::LaunchOptions::default();
+    if let Some(secs) = args.get("timeout-secs") {
+        opts.timeout = Duration::from_secs(secs.parse().context("--timeout-secs")?);
+    }
+    if let Some(tok) = args.get("auth-token") {
+        opts.auth_token = Some(tok.to_string());
     }
 
     println!(
@@ -450,10 +482,16 @@ fn cmd_launch(args: &Args) -> Result<()> {
         if probe { "(connectivity probe)" } else { "(training)" }
     );
     let lr = if let Some(bind) = args.get("coord-bind") {
-        launch::coordinate_external(&cfg, bind)?
+        launch::coordinate_external(&cfg, bind, opts.timeout)?
     } else {
-        launch::launch_local(&cfg, &flags)?
+        launch::launch_local_opts(&cfg, &flags, &opts)?
     };
+    if lr.restarts > 0 {
+        println!(
+            "supervisor: {} worker restart(s) recovered from the checkpoint store",
+            lr.restarts
+        );
+    }
     let r = &lr.report;
     for (i, l) in r.losses.iter().enumerate() {
         if i % 10 == 0 || i + 1 == r.losses.len() {
@@ -522,8 +560,62 @@ fn cmd_worker(args: &Args) -> Result<()> {
         .parse()
         .context("--rank")?;
     let coord = args.get("coord").context("worker needs --coord HOST:PORT")?;
+    // Bumped by the supervisor on every restart round so stale peers
+    // from the previous incarnation are rejected at the handshake.
+    let generation = args.get_usize("generation", 0)? as u64;
     let probe = args.has("probe").then_some(cfg.steps);
-    launch::worker_main(&cfg, rank, coord, probe)
+    launch::worker_main(&cfg, rank, coord, generation, probe)
+}
+
+/// `repro chaos`: fault-injected elastic training. A seeded schedule of
+/// rank kills (with dp/tp topology changes on revival) and torn
+/// checkpoint stores runs against an uninterrupted reference, and the
+/// final loss trajectories must agree. `--probe` instead SIGKILLs a
+/// real worker process over loopback sockets and asserts the
+/// supervisor restarts it — no artifacts needed.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    if args.has("probe") {
+        let steps = args.get_usize("steps", 6)?;
+        println!("chaos probe: {steps} paced steps, SIGKILL rank 1 mid-run, expect a restart");
+        let lr = lga_mpp::trainer::chaos_probe(steps)?;
+        println!(
+            "chaos probe survived: {} restart(s), {} steps merged, {:.1}s wall",
+            lr.restarts,
+            lr.report.losses.len(),
+            lr.report.wall_secs
+        );
+        return Ok(());
+    }
+    let mut cfg = trainer_config_from(args)?;
+    if cfg.store_dir.is_none() {
+        bail!("chaos needs --store DIR (the durable checkpoints are the recovery mechanism)");
+    }
+    // Recovery replays from the streamed checkpoint tier, so the run
+    // must produce one.
+    cfg.offload = true;
+    let seed: u64 = args.get("seed").unwrap_or("42").parse().context("--seed")?;
+    let kills = args.get_usize("kills", 2)?;
+    let plan = lga_mpp::trainer::seeded_plan(seed, cfg.steps, cfg.n_b, cfg.n_mu, kills);
+    println!("chaos: seed {seed} -> {} fault events over {} steps", plan.events.len(), cfg.steps);
+    let r = lga_mpp::trainer::run_chaos(&cfg, &plan)?;
+    println!(
+        "chaos: {} kill(s) ({} with a topology change, tp re-shard: {}), {} torn store(s)",
+        r.kills, r.topology_changes, r.tp_resharded, r.torn_stores
+    );
+    println!(
+        "loss trajectory: max |chaos - reference| = {:.3e} over {} steps (tolerance {:.1e})",
+        r.max_abs_diff,
+        r.reference.len(),
+        r.tolerance()
+    );
+    anyhow::ensure!(
+        r.max_abs_diff < r.tolerance(),
+        "chaos run diverged from the uninterrupted reference: {} >= {}",
+        r.max_abs_diff,
+        r.tolerance()
+    );
+    println!("chaos run matches the uninterrupted reference");
+    Ok(())
 }
 
 /// `repro netbench`: measure the socket transport's round-trip latency
@@ -598,6 +690,39 @@ fn cmd_plan(args: &Args) -> Result<()> {
         {
             Some(cp) => println!("{}", report::explain(&model, &cluster, &cp.plan.cfg)),
             None => println!("no feasible plan within {days} days"),
+        }
+        return Ok(());
+    }
+    // --mtbf HOURS [--max-lost-work PCT]: reliability-constrained
+    // planning — the fastest plan whose expected failure-rollback lost
+    // work stays within the budget (Figure 2's restore-ratio argument
+    // as a planner constraint).
+    if let Some(mtbf) = args.get("mtbf") {
+        let mtbf_hours: f64 = mtbf.parse().context("--mtbf")?;
+        anyhow::ensure!(mtbf_hours > 0.0, "--mtbf must be positive (hours per device)");
+        let pct: f64 =
+            args.get("max-lost-work").unwrap_or("1").parse().context("--max-lost-work")?;
+        anyhow::ensure!(pct > 0.0, "--max-lost-work must be positive (percent)");
+        let rel = lga_mpp::planner::ReliabilityParams { mtbf_hours, max_lost_work: pct / 100.0 };
+        match lga_mpp::planner::plan_with_reliability(&model, &cluster, strategy, menu, &rel) {
+            Some(rp) => {
+                println!("{}", report::explain(&model, &cluster, &rp.sim.plan.cfg));
+                println!(
+                    "reliability: n_gpu={} @ mtbf {mtbf_hours}h/device -> expected lost work \
+                     <= {:.3}% of wall clock (budget {pct}%)",
+                    rp.sim.plan.cfg.n_gpu(),
+                    100.0 * rp.bound.fraction,
+                );
+                println!(
+                    "  step {:.3}s | restore per failure {:.3}s | checkpoint interval {} \
+                     step(s){}",
+                    rp.bound.step_secs,
+                    rp.bound.restore_secs,
+                    rp.bound.ckpt_interval,
+                    if rp.sim.plan.cfg.offload { " (streamed via offload)" } else { "" },
+                );
+            }
+            None => println!("no feasible plan within a {pct}% expected-lost-work budget"),
         }
         return Ok(());
     }

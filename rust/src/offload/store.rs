@@ -472,10 +472,23 @@ impl StateStore for FileStore {
         std::fs::create_dir_all(&dir).with_context(|| format!("creating {dir:?}"))?;
         let final_path = dir.join(Self::rec_name(rec.slot, rec.lo, rec.hi));
         // Atomic publish: write the whole record to a temp name in the
-        // same directory, then rename over the final name.
+        // same directory, fsync it, rename over the final name, then
+        // fsync the directory. Without the syncs a crash shortly after
+        // the rename can surface the *name* without the *data* (rename
+        // is durable only once the directory entry is flushed) — a
+        // renamed-but-empty record would read as "complete".
         let tmp = dir.join(format!(".tmp_{}_{}_{}", rec.slot, rec.lo, rec.hi));
-        std::fs::write(&tmp, &bytes).with_context(|| format!("writing {tmp:?}"))?;
+        {
+            use std::io::Write;
+            let mut f =
+                std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(&bytes).with_context(|| format!("writing {tmp:?}"))?;
+            f.sync_all().with_context(|| format!("syncing {tmp:?}"))?;
+        }
         std::fs::rename(&tmp, &final_path).with_context(|| format!("publishing {final_path:?}"))?;
+        std::fs::File::open(&dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("syncing directory {dir:?}"))?;
         self.written.fetch_add(bytes.len() as u64, Ordering::Relaxed);
         self.records.fetch_add(1, Ordering::Relaxed);
         Ok(())

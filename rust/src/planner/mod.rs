@@ -43,6 +43,7 @@ pub mod cache;
 pub mod candidates;
 pub mod constrained;
 pub mod par;
+pub mod reliability;
 pub mod rules;
 pub mod search;
 pub mod simloop;
@@ -51,6 +52,10 @@ pub use cache::{LoweringCache, PolicyKind};
 pub use candidates::Candidates;
 pub use constrained::{min_gpu_plan, ConstrainedPlan};
 pub use par::{par_map, par_map_with, planner_threads};
+pub use reliability::{
+    ckpt_interval_steps, lost_work_bound, plan_with_reliability, LostWorkBound, ReliabilityParams,
+    ReliablePlan, CLASSIC_CKPT_INTERVAL_STEPS,
+};
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
 pub use search::{search_fastest, search_fastest_exhaustive, search_fastest_tp};
 pub use simloop::{

@@ -1,0 +1,211 @@
+//! MTBF-aware planning: "cheapest plan with ≤ X% expected lost work".
+//!
+//! At cluster scale the planner's question is not just "which
+//! configuration is fastest" but "which is fastest *subject to* a
+//! reliability budget": every failure rolls the job back to its last
+//! durable checkpoint and charges a parameter restore. Offloaded plans
+//! stream the training state through host memory every step, so their
+//! effective checkpoint interval is one step; classic in-GPU training
+//! checkpoints orders of magnitude less often. That asymmetry is the
+//! paper's Figure 2 restore-ratio argument, surfaced here as a planner
+//! constraint (`repro plan --mtbf HOURS --max-lost-work PCT`).
+//!
+//! The bound is deliberately conservative: it charges every failure the
+//! *worst-case* rollback (a full checkpoint interval plus the restore),
+//! so a plan that passes the filter also passes the discrete-event
+//! replay in [`crate::sim::simulate_with_failures`] for any failure
+//! draw (`tests/chaos.rs` checks both directions).
+
+use crate::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use crate::hardware::ClusterSpec;
+use crate::model::XModel;
+use crate::sim::{recovery_costs, CostTable};
+
+use super::rules::{fastest_plan, Plan};
+use super::search::search_fastest_tp;
+use super::simloop::{lower_plan, rank_by_simulation, SimulatedPlan};
+
+/// Reliability constraint for [`plan_with_reliability`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReliabilityParams {
+    /// Mean time between failures of a single device, hours. The job's
+    /// failure rate scales with its device count: λ_job = n_gpu / MTBF.
+    /// Must be positive.
+    pub mtbf_hours: f64,
+    /// Acceptable expected lost work, as a fraction of wall clock.
+    pub max_lost_work: f64,
+}
+
+/// Durable-checkpoint interval (steps) assumed for plans that keep the
+/// training state resident in GPU memory. Classic jobs checkpoint
+/// rarely because a full-state dump stalls training; 64 steps is the
+/// order of magnitude the Figure 2 comparison assumes. Offloaded plans
+/// pay nothing extra for durability — the state already streams through
+/// the host every step — so their interval is 1.
+pub const CLASSIC_CKPT_INTERVAL_STEPS: usize = 64;
+
+/// The checkpoint interval a configuration's storage tier implies.
+pub fn ckpt_interval_steps(cfg: &TrainConfig) -> usize {
+    if cfg.offload {
+        1
+    } else {
+        CLASSIC_CKPT_INTERVAL_STEPS
+    }
+}
+
+/// A plan's reliability accounting, from the lowered schedule's real
+/// costs (not closed-form estimates).
+#[derive(Debug, Clone, Copy)]
+pub struct LostWorkBound {
+    /// Simulated seconds per training step (one batch on one
+    /// data-parallel instance).
+    pub step_secs: f64,
+    /// Restore cost charged per failure: the slowest stage's
+    /// `RestoreParams` volume at the schedule's real wire costs.
+    pub restore_secs: f64,
+    /// Durable-checkpoint interval the bound assumes, steps.
+    pub ckpt_interval: usize,
+    /// Upper bound on the expected lost-work fraction:
+    /// λ_job · (restore + interval · step) — failure rate times the
+    /// worst-case wall clock one failure can cost.
+    pub fraction: f64,
+}
+
+/// Bound the expected lost-work fraction of `plan` under `rel`.
+pub fn lost_work_bound(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    plan: &Plan,
+    rel: &ReliabilityParams,
+) -> LostWorkBound {
+    let (cfg, prog) = lower_plan(model, plan);
+    let costs = CostTable::new(&model.shape(), &cfg, cluster);
+    let (step_secs, restore_secs) = recovery_costs(&prog, &costs);
+    let ckpt_interval = ckpt_interval_steps(&cfg);
+    let lambda_job = cfg.n_gpu() as f64 / (rel.mtbf_hours * 3600.0);
+    let fraction = lambda_job * (restore_secs + ckpt_interval as f64 * step_secs);
+    LostWorkBound { step_secs, restore_secs, ckpt_interval, fraction }
+}
+
+/// A plan annotated with its simulated speed and reliability bound.
+#[derive(Debug, Clone)]
+pub struct ReliablePlan {
+    pub sim: SimulatedPlan,
+    pub bound: LostWorkBound,
+}
+
+/// The fastest (by simulated seconds-per-sequence) configuration whose
+/// expected lost work stays within `rel.max_lost_work`.
+///
+/// Candidates: the grid-search winner, the §5 closed-form plan, and —
+/// because the offload decision is the reliability lever (checkpoint
+/// interval 1 vs [`CLASSIC_CKPT_INTERVAL_STEPS`]) — each one's
+/// offload-flipped twin, even when it is slower. Returns `None` when no
+/// candidate fits the device memory and the budget at once.
+pub fn plan_with_reliability(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    rel: &ReliabilityParams,
+) -> Option<ReliablePlan> {
+    let mut seeds: Vec<Plan> = Vec::new();
+    if let Some(p) = search_fastest_tp(model, cluster, strategy, menu, None) {
+        seeds.push(p);
+    }
+    if let Some(p) = fastest_plan(model, cluster, strategy, menu) {
+        seeds.push(p);
+    }
+    let mut candidates: Vec<Plan> = Vec::with_capacity(2 * seeds.len());
+    for p in &seeds {
+        let cfg = TrainConfig { offload: !p.cfg.offload, ..p.cfg };
+        candidates.push(Plan::build_pub(model, cfg, cluster));
+    }
+    candidates.extend(seeds);
+    candidates.retain(|p| {
+        p.fits_gpu(cluster)
+            && lost_work_bound(model, cluster, p, rel).fraction <= rel.max_lost_work
+    });
+    let sim = rank_by_simulation(model, cluster, &candidates)?;
+    let bound = lost_work_bound(model, cluster, &sim.plan, rel);
+    Some(ReliablePlan { sim, bound })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rel(mtbf_hours: f64, max_lost_work: f64) -> ReliabilityParams {
+        ReliabilityParams { mtbf_hours, max_lost_work }
+    }
+
+    fn seed_plan(model: &XModel, cluster: &ClusterSpec) -> Plan {
+        search_fastest_tp(model, cluster, Strategy::Improved, ParallelismMenu::THREE_D, None)
+            .expect("the reference cluster plans the improved strategy")
+    }
+
+    #[test]
+    fn offload_shrinks_the_checkpoint_interval_and_the_bound() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let seed = seed_plan(&model, &cluster);
+        let r = rel(200.0, 1.0);
+        let on = Plan::build_pub(&model, TrainConfig { offload: true, ..seed.cfg }, &cluster);
+        let off = Plan::build_pub(&model, TrainConfig { offload: false, ..seed.cfg }, &cluster);
+        let b_on = lost_work_bound(&model, &cluster, &on, &r);
+        let b_off = lost_work_bound(&model, &cluster, &off, &r);
+        assert_eq!(b_on.ckpt_interval, 1);
+        assert_eq!(b_off.ckpt_interval, CLASSIC_CKPT_INTERVAL_STEPS);
+        assert!(b_on.step_secs > 0.0 && b_off.step_secs > 0.0);
+        assert!(b_on.restore_secs > 0.0, "offloaded schedules restore params every step");
+        assert!(
+            b_on.fraction < b_off.fraction,
+            "streamed checkpoints must cut expected lost work: {} vs {}",
+            b_on.fraction,
+            b_off.fraction
+        );
+    }
+
+    #[test]
+    fn a_binding_budget_forces_the_streamed_checkpoint_plan() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let seed = seed_plan(&model, &cluster);
+        let r0 = rel(200.0, 1.0);
+        let on = Plan::build_pub(&model, TrainConfig { offload: true, ..seed.cfg }, &cluster);
+        let off = Plan::build_pub(&model, TrainConfig { offload: false, ..seed.cfg }, &cluster);
+        let b_on = lost_work_bound(&model, &cluster, &on, &r0).fraction;
+        let b_off = lost_work_bound(&model, &cluster, &off, &r0).fraction;
+        // A budget strictly between the two bounds admits only the
+        // streamed-checkpoint (offloaded) candidates.
+        let mid = (b_on.max(1e-15) * b_off).sqrt();
+        assert!(b_on < mid && mid < b_off);
+        let picked = plan_with_reliability(
+            &model,
+            &cluster,
+            Strategy::Improved,
+            ParallelismMenu::THREE_D,
+            &rel(200.0, mid),
+        )
+        .expect("the offloaded twin fits the budget");
+        assert!(picked.sim.plan.cfg.offload, "a binding budget must select offload");
+        assert!(picked.bound.fraction <= mid);
+    }
+
+    #[test]
+    fn a_loose_budget_does_not_distort_the_ranking() {
+        let model = XModel::x160();
+        let cluster = ClusterSpec::reference();
+        let picked = plan_with_reliability(
+            &model,
+            &cluster,
+            Strategy::Improved,
+            ParallelismMenu::THREE_D,
+            &rel(1.0e9, 1.0),
+        )
+        .expect("an effectively infinite MTBF rejects nothing");
+        assert!(picked.sim.plan.fits_gpu(&cluster));
+        assert!(picked.bound.fraction <= 1.0);
+        assert!(picked.bound.fraction < 1e-3, "a 1e9-hour MTBF implies negligible lost work");
+    }
+}

@@ -408,6 +408,138 @@ pub fn simulate_program_into(
     SimResult { makespan: now, busy, peak_memory: peak, timeline, n_stages: p.n_stages }
 }
 
+// ---------------------------------------------------------------------------
+// Failure / restart accounting (§8.2, Figure 2's restore-ratio argument)
+// ---------------------------------------------------------------------------
+
+/// One injected failure: a rank of `stage` dies `at_secs` into the
+/// job's simulated wall clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    pub at_secs: f64,
+    pub stage: usize,
+}
+
+/// What one failure cost the job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureRecord {
+    /// When the failure actually hit (clamped into the job's lifetime).
+    pub at_secs: f64,
+    pub stage: usize,
+    /// Completed-but-uncheckpointed steps the restart rolled back.
+    pub rolled_back_steps: usize,
+    /// Wall clock this failure cost: rolled-back work + in-flight
+    /// partial step + the restore itself.
+    pub lost_secs: f64,
+}
+
+/// Failure-aware accounting of a whole training job: `steps` steps of
+/// `step_secs` each, interrupted by restart events, each charged a
+/// roll-back to the last checkpoint plus `restore_secs` of restore.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryAccounting {
+    /// Simulated makespan of one step of the program.
+    pub step_secs: f64,
+    /// Restore cost per failure, from the schedule's real
+    /// `RestoreParams` volume (see [`recovery_costs`]).
+    pub restore_secs: f64,
+    pub steps: usize,
+    /// Steps between durable checkpoints (1 = the paper's real-time
+    /// streamed checkpoints).
+    pub ckpt_interval: usize,
+    pub failures: Vec<FailureRecord>,
+    /// Total wall clock including every roll-back and restore.
+    pub wall_secs: f64,
+    /// `wall_secs` minus the failure-free runtime.
+    pub lost_secs: f64,
+    /// `lost_secs / wall_secs` — the "expected lost work" the planner
+    /// bounds with `--max-lost-work`.
+    pub lost_fraction: f64,
+}
+
+/// Per-step makespan and per-failure restore cost of a program. The
+/// restore cost is charged from the schedule's own `RestoreParams`
+/// ops — the largest per-stage sum of their durations, since a
+/// restarted rank must re-load its stage's parameters from the store
+/// before compute resumes (Figure 2: `2·d_l` layer-sized transfers,
+/// not `2·d_l·n_μ`). Programs without restore ops (non-offloaded
+/// schedules) fall back to the cost table's per-layer restore figure
+/// times the layers per stage.
+pub fn recovery_costs(p: &ScheduleProgram, costs: &CostTable) -> (f64, f64) {
+    let step_secs = simulate_program_opts(p, costs, SimOptions { record_timeline: false }).makespan;
+    let mut per_stage = vec![0.0f64; p.n_stages.max(1)];
+    for op in &p.ops {
+        if let Op::RestoreParams { .. } = op.op {
+            per_stage[op.stage as usize] += costs.duration(&op.op);
+        }
+    }
+    let mut restore_secs = per_stage.iter().copied().fold(0.0f64, f64::max);
+    if restore_secs == 0.0 && p.n_stages > 0 {
+        restore_secs = costs.restore_params * (p.d_l / p.n_stages) as f64;
+    }
+    (step_secs, restore_secs)
+}
+
+/// Replay a `steps`-step job under injected per-rank failures: each
+/// failure rolls the job back to its last durable checkpoint (every
+/// `ckpt_interval` steps) and charges a restore before training
+/// resumes. Purely arithmetic on top of one program simulation — the
+/// recorded-timeline path is untouched — and deterministic in the
+/// event list, so a seeded chaos schedule prices identically every
+/// run. Failures landing after the job would have finished are
+/// ignored.
+pub fn simulate_with_failures(
+    p: &ScheduleProgram,
+    costs: &CostTable,
+    steps: usize,
+    ckpt_interval: usize,
+    events: &[FailureEvent],
+) -> RecoveryAccounting {
+    let (step_secs, restore_secs) = recovery_costs(p, costs);
+    let ckpt_interval = ckpt_interval.max(1);
+    let mut events: Vec<FailureEvent> = events.to_vec();
+    events.sort_by(|a, b| a.at_secs.total_cmp(&b.at_secs));
+
+    let mut wall = 0.0f64; // clock at the last restart point
+    let mut done = 0usize; // steps durably checkpointed at `wall`
+    let mut failures = Vec::with_capacity(events.len());
+    for ev in &events {
+        let t = ev.at_secs.max(wall);
+        let steps_run = if step_secs > 0.0 {
+            ((t - wall) / step_secs).floor() as usize
+        } else {
+            steps - done
+        };
+        let done_t = (done + steps_run).min(steps);
+        if done_t >= steps {
+            break; // the job finished before this failure hit
+        }
+        let ckpt = (done_t / ckpt_interval) * ckpt_interval;
+        let lost = t - (wall + (ckpt - done) as f64 * step_secs) + restore_secs;
+        failures.push(FailureRecord {
+            at_secs: t,
+            stage: ev.stage,
+            rolled_back_steps: done_t - ckpt,
+            lost_secs: lost,
+        });
+        wall = t + restore_secs;
+        done = ckpt;
+    }
+    wall += (steps - done) as f64 * step_secs;
+    let lost_secs = wall - steps as f64 * step_secs;
+    let lost_fraction = if wall > 0.0 { lost_secs / wall } else { 0.0 };
+    RecoveryAccounting {
+        step_secs,
+        restore_secs,
+        steps,
+        ckpt_interval,
+        failures,
+        wall_secs: wall,
+        lost_secs,
+        lost_fraction,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -768,5 +900,78 @@ mod tests {
         };
         assert_eq!(idle.compute_efficiency(), 0.0);
         assert!(idle.bubble_fraction().is_infinite());
+    }
+
+    fn offloaded_program() -> (ScheduleProgram, CostTable) {
+        let sp = ScheduleSpec {
+            d_l: 8,
+            n_l: 4,
+            n_mu: 4,
+            tp: 1,
+            partition: true,
+            offload: true,
+            data_parallel: true,
+        };
+        let p = lower(&modular_pipeline(&sp)).unwrap();
+        (p, costs(4, 4, 4, true))
+    }
+
+    #[test]
+    fn failure_free_replay_is_exactly_the_serial_runtime() {
+        let (p, c) = offloaded_program();
+        let acc = simulate_with_failures(&p, &c, 100, 1, &[]);
+        assert!(acc.step_secs > 0.0);
+        // The offloaded schedule carries real RestoreParams ops, so the
+        // restore cost comes from the schedule, not the fallback.
+        assert!(acc.restore_secs > 0.0);
+        assert!(acc.failures.is_empty());
+        // Bit-exact identity: no failures means no lost work at all.
+        assert_eq!(acc.wall_secs, 100.0 * acc.step_secs);
+        assert_eq!(acc.lost_secs, 0.0);
+        assert_eq!(acc.lost_fraction, 0.0);
+    }
+
+    #[test]
+    fn a_failure_rolls_back_to_the_checkpoint_and_charges_the_restore() {
+        let (p, c) = offloaded_program();
+        let s = recovery_costs(&p, &c).0;
+        let hit = [FailureEvent { at_secs: 3.5 * s, stage: 0 }];
+        // Real-time checkpoints (interval 1): only the in-flight half
+        // step plus the restore is lost.
+        let rt = simulate_with_failures(&p, &c, 10, 1, &hit);
+        assert_eq!(rt.failures.len(), 1);
+        assert_eq!(rt.failures[0].rolled_back_steps, 0);
+        let want = 10.0 * s + 0.5 * s + rt.restore_secs;
+        assert!((rt.wall_secs - want).abs() < 1e-9 * want, "{} vs {want}", rt.wall_secs);
+        // Classic interval-4 checkpoints: the same failure also rolls
+        // back 3 completed steps — Figure 2's argument, quantified.
+        let classic = simulate_with_failures(&p, &c, 10, 4, &hit);
+        assert_eq!(classic.failures[0].rolled_back_steps, 3);
+        assert!(classic.lost_secs > rt.lost_secs);
+        assert!(classic.lost_fraction > rt.lost_fraction);
+        // The per-failure records account for every lost second.
+        let sum: f64 = classic.failures.iter().map(|f| f.lost_secs).sum();
+        assert!((classic.lost_secs - sum).abs() < 1e-9 * sum.max(1.0));
+    }
+
+    #[test]
+    fn failures_after_completion_cost_nothing() {
+        let (p, c) = offloaded_program();
+        let s = recovery_costs(&p, &c).0;
+        let acc =
+            simulate_with_failures(&p, &c, 5, 1, &[FailureEvent { at_secs: 100.0 * s, stage: 2 }]);
+        assert!(acc.failures.is_empty());
+        assert_eq!(acc.wall_secs, 5.0 * s);
+        // And events arrive unsorted without changing the accounting.
+        let ev = [
+            FailureEvent { at_secs: 3.2 * s, stage: 1 },
+            FailureEvent { at_secs: 1.4 * s, stage: 0 },
+        ];
+        let mut rev = ev;
+        rev.reverse();
+        let a = simulate_with_failures(&p, &c, 10, 1, &ev);
+        let b = simulate_with_failures(&p, &c, 10, 1, &rev);
+        assert_eq!(a, b);
+        assert_eq!(a.failures.len(), 2);
     }
 }

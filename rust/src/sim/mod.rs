@@ -14,7 +14,8 @@ pub mod gantt;
 
 pub use cost::{CostTable, Stream, WireBytes};
 pub use engine::{
-    simulate, simulate_program, simulate_program_into, simulate_program_opts, SimOptions,
-    SimResult, SimScratch, TimedOp,
+    recovery_costs, simulate, simulate_program, simulate_program_into, simulate_program_opts,
+    simulate_with_failures, FailureEvent, FailureRecord, RecoveryAccounting, SimOptions, SimResult,
+    SimScratch, TimedOp,
 };
 pub use gantt::render;

@@ -6,7 +6,12 @@
 //!
 //! * [`launch_local`] — `repro launch`: spawn `n_ranks` copies of the
 //!   current executable as `repro worker --rank i --coord <addr>` over
-//!   loopback, coordinate, and merge.
+//!   loopback, coordinate, and merge. [`launch_local_opts`] adds the
+//!   supervision knobs: a configurable inactivity timeout, a shared
+//!   auth token, and an elastic restart budget — when a worker dies
+//!   mid-run the whole incarnation is torn down and every rank is
+//!   relaunched under a bumped generation, resuming from the latest
+//!   complete checkpoint when the job has a durable store.
 //! * [`coordinate_external`] — `repro launch --coord-bind`: run only
 //!   the coordinator on a fixed address; workers are started by hand
 //!   (or a cluster scheduler) on other hosts with `REPRO_HOSTMAP` set.
@@ -15,30 +20,67 @@
 //!   control plane) is exercised; the socket-vs-mpsc parity suite runs
 //!   through this.
 //!
-//! The coordinator drains each rank's control stream to EOF: per-step
+//! The coordinator drains each rank's control stream: per-step
 //! [`CtrlMsg::Loss`] reports (dp-averaged exactly like the thread
-//! backend) and exactly one [`CtrlMsg::Stats`] per rank. A worker that
-//! dies early shows up as a stream without stats — an error naming the
-//! rank, never a hang (rendezvous and handshakes carry deadlines; CI
-//! adds a hard process timeout for the steady state).
+//! backend), a [`CtrlMsg::Progress`] heartbeat after every step, and
+//! exactly one [`CtrlMsg::Stats`] per rank. A worker that dies early
+//! shows up as a stream without stats — under [`launch_local_opts`]
+//! that triggers a restart round instead of failing the job, and a
+//! stalled job is killed with an error naming the laggard rank and its
+//! last completed step, never a hang.
 
 use std::net::TcpStream;
+use std::path::Path;
 use std::process::{Child, Command, Stdio};
+use std::sync::mpsc::{channel, RecvTimeoutError, Sender};
 use std::thread;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::collective::socket::read_frame;
-use crate::collective::{connect_world, CommWorld, Coordinator, CtrlMsg, RankStats, Topology, Wire};
+use crate::collective::{
+    connect_world, connect_world_opts, CommWorld, Coordinator, CtrlMsg, RankStats, Topology, Wire,
+    WorldOptions,
+};
 use crate::runtime::DType;
 
 use super::{train_rank, TrainReport, TrainerConfig};
 
-/// Deadline for rendezvous and connection handshakes. Steady-state
-/// training reads carry no timeout (a slow step is not a failure) —
-/// the CI smoke run bounds those with a process-level `timeout`.
+/// Default deadline for rendezvous, connection handshakes and
+/// steady-state inactivity (no control frame from any rank). Override
+/// with `repro launch --timeout-secs` or `REPRO_LAUNCH_TIMEOUT`.
 pub const LAUNCH_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Supervision knobs for [`launch_local_opts`].
+#[derive(Debug, Clone)]
+pub struct LaunchOptions {
+    /// Rendezvous deadline *and* steady-state inactivity bound: if no
+    /// rank produces a control frame for this long the job is killed
+    /// with an error naming the stalled rank.
+    pub timeout: Duration,
+    /// Shared rendezvous secret (`REPRO_AUTH_TOKEN` in the workers).
+    /// `None` generates a per-launch token so stray processes can
+    /// never join a loopback job.
+    pub auth_token: Option<String>,
+    /// How many whole-job restart rounds a dying worker may trigger
+    /// before the launch gives up.
+    pub max_restarts: usize,
+    /// Chaos hook: `(step, rank)` pairs — when `rank` reports progress
+    /// at or past `step`, it is SIGKILLed. Each entry fires once.
+    pub kill_plan: Vec<(u64, usize)>,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        let timeout = std::env::var("REPRO_LAUNCH_TIMEOUT")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .map(Duration::from_secs)
+            .unwrap_or(LAUNCH_TIMEOUT);
+        LaunchOptions { timeout, auth_token: None, max_restarts: 2, kill_plan: Vec::new() }
+    }
+}
 
 /// A merged multi-process run: the coordinator's view of the job plus
 /// each rank's own statistics.
@@ -47,7 +89,11 @@ pub struct LaunchReport {
     pub report: TrainReport,
     /// Per-rank stats, index = rank (the `WorkerStats` the thread
     /// backend would have joined on, shipped over the control plane).
+    /// After an elastic restart these come from the final incarnation.
     pub per_rank: Vec<RankStats>,
+    /// Whole-job restart rounds the supervisor performed (0 for a
+    /// clean run).
+    pub restarts: usize,
 }
 
 /// Read control frames until the worker closes its stream.
@@ -72,50 +118,36 @@ fn drain_ctrl(stream: TcpStream) -> Result<Vec<CtrlMsg>> {
     }
 }
 
-/// Run the coordinator half of a launch: rendezvous `n` workers, drain
-/// their control streams, and merge losses + stats into one report.
-fn coordinate(coord: &Coordinator, n: usize, steps: usize) -> Result<LaunchReport> {
-    let t0 = std::time::Instant::now();
-    let streams = coord.rendezvous(LAUNCH_TIMEOUT).context("rendezvous")?;
-    let drains: Vec<_> = streams
-        .into_iter()
-        .enumerate()
-        .map(|(rank, s)| {
-            thread::Builder::new()
-                .name(format!("ctrl-drain-{rank}"))
-                .spawn(move || drain_ctrl(s))
-                .expect("spawn control drain thread")
-        })
-        .collect();
+/// Persistent per-step loss accumulator: survives restart rounds so a
+/// resumed incarnation's reports merge with its predecessor's (a
+/// re-executed step simply averages both incarnations' identical
+/// values).
+struct MergeAcc {
+    sums: Vec<f64>,
+    counts: Vec<usize>,
+}
 
-    let mut sums = vec![0.0f64; steps];
-    let mut counts = vec![0usize; steps];
-    let mut per_rank: Vec<RankStats> = Vec::with_capacity(n);
-    for (rank, h) in drains.into_iter().enumerate() {
-        let msgs = h.join().map_err(|_| anyhow::anyhow!("control drain panicked"))?;
-        let msgs = msgs.with_context(|| format!("rank {rank} control stream"))?;
-        let mut stats: Option<RankStats> = None;
-        for m in msgs {
-            match m {
-                CtrlMsg::Loss { step, dp: _, loss } => {
-                    let step = step as usize;
-                    if step < steps {
-                        sums[step] += loss;
-                        counts[step] += 1;
-                    }
-                }
-                CtrlMsg::Stats(s) => stats = Some(s),
-                CtrlMsg::Done => {}
-                CtrlMsg::Hello { .. } | CtrlMsg::Peers { .. } => {
-                    bail!("rank {rank} sent a rendezvous message mid-run")
-                }
-            }
-        }
-        per_rank.push(stats.with_context(|| {
-            format!("rank {rank} exited without reporting stats (worker crashed?)")
-        })?);
+impl MergeAcc {
+    fn new(steps: usize) -> Self {
+        MergeAcc { sums: vec![0.0; steps], counts: vec![0; steps] }
     }
 
+    fn add(&mut self, step: u64, loss: f64) {
+        let step = step as usize;
+        if step < self.sums.len() {
+            self.sums[step] += loss;
+            self.counts[step] += 1;
+        }
+    }
+}
+
+/// Fold per-rank stats and the accumulated losses into one report.
+fn merge_report(
+    acc: &MergeAcc,
+    per_rank: Vec<RankStats>,
+    wall_secs: f64,
+    restarts: usize,
+) -> Result<LaunchReport> {
     // Config skew across processes shows up as disagreeing schedules —
     // catch it here rather than as silent divergence.
     let schedule_name = per_rank[0].schedule.clone();
@@ -128,9 +160,10 @@ fn coordinate(coord: &Coordinator, n: usize, steps: usize) -> Result<LaunchRepor
         );
     }
 
-    let losses: Vec<f64> = sums
+    let losses: Vec<f64> = acc
+        .sums
         .iter()
-        .zip(&counts)
+        .zip(&acc.counts)
         .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
         .collect();
     let sum = |f: fn(&RankStats) -> u64| per_rank.iter().map(f).sum::<u64>();
@@ -143,7 +176,7 @@ fn coordinate(coord: &Coordinator, n: usize, steps: usize) -> Result<LaunchRepor
     let report = TrainReport {
         losses,
         start_step: 0,
-        wall_secs: t0.elapsed().as_secs_f64(),
+        wall_secs,
         collective_elems_sent: dp_e,
         pipeline_elems_sent: pipe_e,
         tp_elems_sent: tp_e,
@@ -159,7 +192,53 @@ fn coordinate(coord: &Coordinator, n: usize, steps: usize) -> Result<LaunchRepor
         checkpoint_records: 0,
         schedule_name,
     };
-    Ok(LaunchReport { report, per_rank })
+    Ok(LaunchReport { report, per_rank, restarts })
+}
+
+/// Run the coordinator half of a launch: rendezvous `n` workers, drain
+/// their control streams, and merge losses + stats into one report.
+/// The drain-to-EOF protocol (no supervision, no restarts) — the
+/// thread-harness and external-coordinator path.
+fn coordinate(
+    coord: &Coordinator,
+    n: usize,
+    steps: usize,
+    timeout: Duration,
+) -> Result<LaunchReport> {
+    let t0 = Instant::now();
+    let streams = coord.rendezvous(timeout).context("rendezvous")?;
+    let drains: Vec<_> = streams
+        .into_iter()
+        .enumerate()
+        .map(|(rank, s)| {
+            thread::Builder::new()
+                .name(format!("ctrl-drain-{rank}"))
+                .spawn(move || drain_ctrl(s))
+                .expect("spawn control drain thread")
+        })
+        .collect();
+
+    let mut acc = MergeAcc::new(steps);
+    let mut per_rank: Vec<RankStats> = Vec::with_capacity(n);
+    for (rank, h) in drains.into_iter().enumerate() {
+        let msgs = h.join().map_err(|_| anyhow::anyhow!("control drain panicked"))?;
+        let msgs = msgs.with_context(|| format!("rank {rank} control stream"))?;
+        let mut stats: Option<RankStats> = None;
+        for m in msgs {
+            match m {
+                CtrlMsg::Loss { step, dp: _, loss } => acc.add(step, loss),
+                CtrlMsg::Stats(s) => stats = Some(s),
+                CtrlMsg::Progress { .. } | CtrlMsg::Done => {}
+                CtrlMsg::Hello { .. } | CtrlMsg::Peers { .. } => {
+                    bail!("rank {rank} sent a rendezvous message mid-run")
+                }
+            }
+        }
+        per_rank.push(stats.with_context(|| {
+            format!("rank {rank} exited without reporting stats (worker crashed?)")
+        })?);
+    }
+    merge_report(&acc, per_rank, t0.elapsed().as_secs_f64(), 0)
 }
 
 fn kill_all(children: &mut [Child]) {
@@ -168,59 +247,290 @@ fn kill_all(children: &mut [Child]) {
     }
 }
 
-/// Fork one `repro worker` process per rank over loopback, coordinate
-/// the run, and merge the result. `worker_flags` is forwarded verbatim
-/// to every child (preset, topology, steps, …).
-pub fn launch_local(cfg: &TrainerConfig, worker_flags: &[String]) -> Result<LaunchReport> {
-    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
-    let n = topo.n_ranks();
-    let coord = Coordinator::bind("127.0.0.1:0", n).context("bind coordinator")?;
-    let addr = coord.local_addr()?.to_string();
-    let exe = std::env::current_exe().context("locate current executable")?;
+/// Kill and reap every child (between restart rounds: exit statuses of
+/// a torn-down incarnation are expected to be failures).
+fn reap_all(children: &mut Vec<Child>) {
+    kill_all(children);
+    for mut c in children.drain(..) {
+        let _ = c.wait();
+    }
+}
 
+/// One event from a rank's control-stream drain thread.
+enum DrainEvent {
+    Msg(CtrlMsg),
+    Eof,
+    Err(String),
+}
+
+fn drain_to(rank: usize, stream: TcpStream, tx: Sender<(usize, DrainEvent)>) {
+    let mut r = std::io::BufReader::new(stream);
+    loop {
+        match read_frame(&mut r) {
+            Ok(buf) => match CtrlMsg::decode(&buf) {
+                Ok(m) => {
+                    if tx.send((rank, DrainEvent::Msg(m))).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = tx.send((rank, DrainEvent::Err(format!("control frame: {e}"))));
+                    return;
+                }
+            },
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::UnexpectedEof
+                        | std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                ) =>
+            {
+                let _ = tx.send((rank, DrainEvent::Eof));
+                return;
+            }
+            Err(e) => {
+                let _ = tx.send((rank, DrainEvent::Err(e.to_string())));
+                return;
+            }
+        }
+    }
+}
+
+/// Outcome of one supervised incarnation of the job.
+enum Round {
+    /// Every rank reported stats and closed its stream cleanly.
+    Done(Vec<RankStats>),
+    /// A rank's stream ended before it reported stats — the process
+    /// died (crash or chaos SIGKILL).
+    WorkerDied { rank: usize, last_step: Option<u64> },
+}
+
+/// Supervised coordination of one process incarnation: rendezvous
+/// under `generation`, then multiplex every rank's control stream
+/// through one event channel so death, progress and inactivity are
+/// observed *live* (the drain-to-EOF path would block on rank order
+/// while a dead rank's peers hang in a collective).
+#[allow(clippy::too_many_arguments)]
+fn coordinate_processes(
+    coord: &Coordinator,
+    children: &mut Vec<Child>,
+    n: usize,
+    generation: u64,
+    opts: &LaunchOptions,
+    acc: &mut MergeAcc,
+    kill_plan: &mut Vec<(u64, usize)>,
+) -> Result<Round> {
+    let streams = coord.rendezvous_gen(opts.timeout, generation).context("rendezvous")?;
+    let (tx, rx) = channel::<(usize, DrainEvent)>();
+    for (rank, s) in streams.into_iter().enumerate() {
+        let tx = tx.clone();
+        thread::Builder::new()
+            .name(format!("ctrl-drain-{rank}"))
+            .spawn(move || drain_to(rank, s, tx))
+            .expect("spawn control drain thread");
+    }
+    drop(tx);
+
+    let mut per_rank: Vec<Option<RankStats>> = vec![None; n];
+    let mut last_step: Vec<Option<u64>> = vec![None; n];
+    let mut eofs = 0usize;
+    while eofs < n {
+        match rx.recv_timeout(opts.timeout) {
+            Ok((rank, DrainEvent::Msg(m))) => match m {
+                CtrlMsg::Loss { step, dp: _, loss } => acc.add(step, loss),
+                CtrlMsg::Progress { step } => {
+                    last_step[rank] = Some(step);
+                    if let Some(i) =
+                        kill_plan.iter().position(|&(at, kr)| kr == rank && step >= at)
+                    {
+                        kill_plan.remove(i);
+                        let _ = children[rank].kill();
+                    }
+                }
+                CtrlMsg::Stats(s) => per_rank[rank] = Some(s),
+                CtrlMsg::Done => {}
+                CtrlMsg::Hello { .. } | CtrlMsg::Peers { .. } => {
+                    bail!("rank {rank} sent a rendezvous message mid-run")
+                }
+            },
+            Ok((rank, DrainEvent::Eof)) => {
+                if per_rank[rank].is_none() {
+                    return Ok(Round::WorkerDied { rank, last_step: last_step[rank] });
+                }
+                eofs += 1;
+            }
+            Ok((rank, DrainEvent::Err(e))) => {
+                if per_rank[rank].is_none() {
+                    eprintln!("[launch] rank {rank} control stream error: {e}");
+                    return Ok(Round::WorkerDied { rank, last_step: last_step[rank] });
+                }
+                eofs += 1;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                kill_all(children);
+                let stalled = (0..n)
+                    .filter(|&r| per_rank[r].is_none())
+                    .min_by_key(|&r| last_step[r].map(|s| s + 1).unwrap_or(0))
+                    .unwrap_or(0);
+                let at = match last_step[stalled] {
+                    Some(s) => format!("after completing step {s}"),
+                    None => "before completing any step".to_string(),
+                };
+                bail!(
+                    "no worker activity for {:.0?}: rank {stalled} stalled {at} \
+                     (raise --timeout-secs / REPRO_LAUNCH_TIMEOUT if the steps are just slow)",
+                    opts.timeout
+                );
+            }
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let mut stats = Vec::with_capacity(n);
+    for (rank, s) in per_rank.into_iter().enumerate() {
+        stats.push(s.with_context(|| {
+            format!("rank {rank} exited without reporting stats (worker crashed?)")
+        })?);
+    }
+    Ok(Round::Done(stats))
+}
+
+fn spawn_ranks(
+    exe: &Path,
+    n: usize,
+    addr: &str,
+    worker_flags: &[String],
+    generation: u64,
+    token: &str,
+    timeout: Duration,
+) -> Result<Vec<Child>> {
     let mut children: Vec<Child> = Vec::with_capacity(n);
     for rank in 0..n {
-        let child = Command::new(&exe)
+        let child = Command::new(exe)
             .arg("worker")
             .arg("--rank")
             .arg(rank.to_string())
             .arg("--coord")
-            .arg(&addr)
+            .arg(addr)
+            .arg("--generation")
+            .arg(generation.to_string())
             .args(worker_flags)
+            .env("REPRO_AUTH_TOKEN", token)
+            .env("REPRO_LAUNCH_TIMEOUT", timeout.as_secs().max(1).to_string())
             .stdin(Stdio::null())
             .spawn()
             .with_context(|| format!("spawn worker rank {rank}"));
         match child {
             Ok(c) => children.push(c),
             Err(e) => {
-                kill_all(&mut children);
+                reap_all(&mut children);
                 return Err(e);
             }
         }
     }
+    Ok(children)
+}
 
-    let merged = coordinate(&coord, n, cfg.steps);
-    if merged.is_err() {
-        kill_all(&mut children);
-    }
-    let mut failures = Vec::new();
-    for (rank, mut c) in children.into_iter().enumerate() {
-        match c.wait() {
-            Ok(status) if status.success() => {}
-            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
-            Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
+/// Fork one `repro worker` process per rank over loopback, coordinate
+/// the run, and merge the result. `worker_flags` is forwarded verbatim
+/// to every child (preset, topology, steps, …).
+pub fn launch_local(cfg: &TrainerConfig, worker_flags: &[String]) -> Result<LaunchReport> {
+    launch_local_opts(cfg, worker_flags, &LaunchOptions::default())
+}
+
+/// [`launch_local`] with supervision: an elastic restart loop. When a
+/// worker dies mid-run, the whole incarnation is killed (its peers are
+/// wedged in collectives anyway), the generation is bumped so stale
+/// sockets can never rejoin, and every rank is relaunched — with
+/// `--resume` appended when the job has a durable store, so training
+/// continues from the latest complete checkpoint instead of step 0.
+pub fn launch_local_opts(
+    cfg: &TrainerConfig,
+    worker_flags: &[String],
+    opts: &LaunchOptions,
+) -> Result<LaunchReport> {
+    let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+    let n = topo.n_ranks();
+    let coord = Coordinator::bind("127.0.0.1:0", n).context("bind coordinator")?;
+    let addr = coord.local_addr()?.to_string();
+    let token = opts.auth_token.clone().unwrap_or_else(|| {
+        let port = addr.rsplit(':').next().unwrap_or("0");
+        format!("repro-{}-{}", std::process::id(), port)
+    });
+    let coord = coord.with_token(&token);
+    let exe = std::env::current_exe().context("locate current executable")?;
+
+    let t0 = Instant::now();
+    let mut acc = MergeAcc::new(cfg.steps);
+    let mut kill_plan = opts.kill_plan.clone();
+    let mut generation: u64 = 0;
+    let mut restarts = 0usize;
+    loop {
+        let mut flags = worker_flags.to_vec();
+        if generation > 0 && cfg.store_dir.is_some() && !flags.iter().any(|f| f == "--resume") {
+            flags.push("--resume".to_string());
+        }
+        let mut children = spawn_ranks(&exe, n, &addr, &flags, generation, &token, opts.timeout)?;
+        let round = coordinate_processes(
+            &coord,
+            &mut children,
+            n,
+            generation,
+            opts,
+            &mut acc,
+            &mut kill_plan,
+        );
+        match round {
+            Ok(Round::Done(per_rank)) => {
+                let mut failures = Vec::new();
+                for (rank, mut c) in children.into_iter().enumerate() {
+                    match c.wait() {
+                        Ok(status) if status.success() => {}
+                        Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+                        Err(e) => failures.push(format!("rank {rank} unwaitable: {e}")),
+                    }
+                }
+                if !failures.is_empty() {
+                    bail!("worker processes failed: {}", failures.join("; "));
+                }
+                return merge_report(&acc, per_rank, t0.elapsed().as_secs_f64(), restarts);
+            }
+            Ok(Round::WorkerDied { rank, last_step }) => {
+                reap_all(&mut children);
+                let at = match last_step {
+                    Some(s) => format!("after completing step {s}"),
+                    None => "before completing any step".to_string(),
+                };
+                if restarts >= opts.max_restarts {
+                    bail!(
+                        "rank {rank} died {at}; restart budget exhausted \
+                         ({} rounds)",
+                        opts.max_restarts
+                    );
+                }
+                restarts += 1;
+                generation += 1;
+                eprintln!(
+                    "[launch] rank {rank} died {at}; restarting all ranks \
+                     (generation {generation}, round {restarts}/{})",
+                    opts.max_restarts
+                );
+            }
+            Err(e) => {
+                reap_all(&mut children);
+                return Err(e);
+            }
         }
     }
-    let merged = merged?;
-    if !failures.is_empty() {
-        bail!("worker processes failed: {}", failures.join("; "));
-    }
-    Ok(merged)
 }
 
 /// Run only the coordinator, bound on `bind` (multi-host mode: workers
 /// are started externally, typically with `REPRO_HOSTMAP` set).
-pub fn coordinate_external(cfg: &TrainerConfig, bind: &str) -> Result<LaunchReport> {
+pub fn coordinate_external(
+    cfg: &TrainerConfig,
+    bind: &str,
+    timeout: Duration,
+) -> Result<LaunchReport> {
     let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
     let n = topo.n_ranks();
     let coord = Coordinator::bind(bind, n).context("bind coordinator")?;
@@ -228,7 +538,7 @@ pub fn coordinate_external(cfg: &TrainerConfig, bind: &str) -> Result<LaunchRepo
         "coordinator listening on {} for {n} workers (start them with `repro worker --rank I --coord <this address>`)",
         coord.local_addr()?
     );
-    coordinate(&coord, n, cfg.steps)
+    coordinate(&coord, n, cfg.steps, timeout)
 }
 
 /// In-process harness: every rank is a thread, but all communication
@@ -254,7 +564,7 @@ pub fn launch_threads(cfg: &TrainerConfig) -> Result<LaunchReport> {
                 .expect("spawn launch rank thread")
         })
         .collect();
-    let merged = coordinate(&coord, n, cfg.steps);
+    let merged = coordinate(&coord, n, cfg.steps, LAUNCH_TIMEOUT);
     for (rank, h) in workers.into_iter().enumerate() {
         h.join()
             .map_err(|_| anyhow::anyhow!("rank {rank} panicked"))?
@@ -263,19 +573,26 @@ pub fn launch_threads(cfg: &TrainerConfig) -> Result<LaunchReport> {
     merged
 }
 
-/// `repro worker` body: join the socket world as `rank` and run either
-/// real training or the artifact-free connectivity probe.
+/// `repro worker` body: join the socket world as `rank` (under
+/// `generation`, with the auth token from `REPRO_AUTH_TOKEN`) and run
+/// either real training or the artifact-free connectivity probe.
 pub fn worker_main(
     cfg: &TrainerConfig,
     rank: usize,
     coord_addr: &str,
+    generation: u64,
     probe_steps: Option<usize>,
 ) -> Result<()> {
     let topo = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
     let hostmap: Option<Vec<String>> = std::env::var("REPRO_HOSTMAP")
         .ok()
         .map(|v| v.split(',').map(|s| s.trim().to_string()).collect());
-    let world = connect_world(topo, rank, coord_addr, hostmap.as_deref(), LAUNCH_TIMEOUT)
+    let opts = WorldOptions {
+        timeout: LaunchOptions::default().timeout,
+        generation,
+        ..WorldOptions::default()
+    };
+    let world = connect_world_opts(topo, rank, coord_addr, hostmap.as_deref(), &opts)
         .with_context(|| format!("rank {rank} joining the world via {coord_addr}"))?;
     match probe_steps {
         Some(steps) => probe_rank(world, steps),
@@ -288,13 +605,19 @@ pub fn worker_main(
 
 /// Artifact-free full-stack exercise of a socket world: per step, a
 /// verified all-reduce on the dp and tp rings, a verified ring-wrapped
-/// activation/gradient hop on the pipeline, a loss report, and the
-/// step barrier — the CI smoke path on runners without PJRT artifacts.
+/// activation/gradient hop on the pipeline, a loss report, a progress
+/// heartbeat and the step barrier — the CI smoke path on runners
+/// without PJRT artifacts. `REPRO_PROBE_STEP_MS` paces each step so a
+/// chaos kill plan can target a live step deterministically.
 pub fn probe_rank(mut world: CommWorld, steps: usize) -> Result<()> {
     let topo = world.topology();
     let r = world.rank();
     let (s_n, d_n, t_n) = (topo.stages, topo.dp, topo.tp);
+    let pace = std::env::var("REPRO_PROBE_STEP_MS").ok().and_then(|v| v.parse::<u64>().ok());
     for i in 0..steps {
+        if let Some(ms) = pace {
+            thread::sleep(Duration::from_millis(ms));
+        }
         let mut d: Vec<f32> = (0..8).map(|k| (r.dp * 31 + i + k) as f32).collect();
         world.dp_group().all_reduce(&mut d);
         for (k, &v) in d.iter().enumerate() {
@@ -334,6 +657,7 @@ pub fn probe_rank(mut world: CommWorld, steps: usize) -> Result<()> {
         if r.stage == s_n - 1 && r.tp == 0 {
             world.control().report_loss(i, r.dp, (i + 1) as f64);
         }
+        world.control().report_progress(i);
         world.step_barrier();
     }
     let traffic = world.traffic();
@@ -370,13 +694,14 @@ mod tests {
                 })
             })
             .collect();
-        let merged = coordinate(&coord, n, steps).unwrap();
+        let merged = coordinate(&coord, n, steps, Duration::from_secs(30)).unwrap();
         for h in workers {
             h.join().unwrap();
         }
         // Losses: each step's dp-average of (step + 1).
         assert_eq!(merged.report.losses, vec![1.0, 2.0, 3.0]);
         assert_eq!(merged.per_rank.len(), n);
+        assert_eq!(merged.restarts, 0);
         assert_eq!(merged.report.schedule_name, "probe");
         // dp rings moved traffic; no tp axis, pipeline hops counted.
         assert!(merged.report.collective_elems_sent > 0);
@@ -401,5 +726,14 @@ mod tests {
         let err = coord.rendezvous(Duration::from_millis(300)).unwrap_err();
         assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
         w.join().unwrap();
+    }
+
+    #[test]
+    fn launch_timeout_honors_the_environment_variable() {
+        std::env::set_var("REPRO_LAUNCH_TIMEOUT", "7");
+        let opts = LaunchOptions::default();
+        std::env::remove_var("REPRO_LAUNCH_TIMEOUT");
+        assert_eq!(opts.timeout, Duration::from_secs(7));
+        assert_eq!(LaunchOptions::default().timeout, LAUNCH_TIMEOUT);
     }
 }

@@ -11,6 +11,7 @@
 //! worker, which dispatches its stage's run queue and checks the
 //! program's local dependency edges before each op.
 
+pub mod chaos;
 pub mod config;
 pub mod launch;
 pub mod params;
@@ -21,8 +22,9 @@ use std::thread;
 
 use anyhow::{Context, Result};
 
+pub use chaos::{chaos_probe, run_chaos, seeded_plan, ChaosEvent, ChaosPlan, ChaosReport, Revive};
 pub use config::{Policy, TrainerConfig};
-pub use launch::{launch_local, LaunchReport};
+pub use launch::{launch_local, launch_local_opts, LaunchOptions, LaunchReport};
 pub use params::LayerLayout;
 pub use worker::{run_worker, WorkerCtx, WorkerStats};
 
@@ -251,10 +253,13 @@ fn worker_ctx(cfg: &TrainerConfig, p: &Prepared, world: CommWorld) -> WorkerCtx 
 /// Losses and end-of-run stats flow back over the world's control
 /// plane.
 pub fn train_rank(cfg: &TrainerConfig, world: CommWorld) -> Result<WorkerStats> {
+    // The in-memory store tier is process-local, so offload/resume in a
+    // multi-process world needs the durable file tier every rank can
+    // see — with one, elastic restarts resume from it.
     anyhow::ensure!(
-        !cfg.offload && !cfg.resume,
-        "multi-process launch does not support --offload/--resume yet \
-         (the checkpoint store is process-local)"
+        (!cfg.offload && !cfg.resume) || cfg.store_dir.is_some(),
+        "multi-process --offload/--resume needs --store DIR \
+         (the in-memory checkpoint tier is process-local)"
     );
     let expected = Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
     anyhow::ensure!(

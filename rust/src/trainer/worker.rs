@@ -1008,6 +1008,9 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
             }
         }
+        // Heartbeat: tells a supervising coordinator this rank finished
+        // the step (feeds the stall detector and chaos kill plans).
+        ctx.world.control().report_progress(step);
         ctx.world.step_barrier();
     }
 
