@@ -1,0 +1,102 @@
+//! Perf bench: whole-world static verification at planner scale.
+//!
+//! The planner's simulate-in-the-loop ranking now runs every candidate
+//! through the static verifier ([`lga_mpp::planner::statically_valid`])
+//! before paying for a simulation. That filter is only free if
+//! verification is much cheaper than the simulation it gates — this
+//! bench sweeps the same candidate set the planner enumerates at X_32
+//! (~160 configurations across the three strategies) and times the
+//! full verification pass (structural verdict via the lowering cache's
+//! memo + per-candidate memory bound) against simulating the same
+//! candidates.
+//!
+//! Acceptance: verification of the sweep must be at least 10x cheaper
+//! than simulating it.
+//!
+//! Run via `cargo bench --bench analysis`.
+
+use std::time::Instant;
+
+use lga_mpp::costmodel::Strategy;
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::planner::{simulate_plan, statically_valid, Candidates, Plan};
+use lga_mpp::report::{menu_for, BenchJson};
+
+fn best_of<F: FnMut() -> f64>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    let mut json = BenchJson::new("analysis");
+    let model = XModel::new(32);
+    let cluster = ClusterSpec::reference();
+
+    // The planner's candidate sweep: every configuration the grid search
+    // enumerates, built into full plans (fit-checked like the search).
+    let mut plans: Vec<Plan> = Vec::new();
+    for strategy in Strategy::ALL {
+        for cfg in Candidates::new(&model, &cluster, strategy, menu_for(strategy)) {
+            let plan = Plan::build_pub(&model, cfg, &cluster);
+            if plan.fits_gpu(&cluster) {
+                plans.push(plan);
+            }
+        }
+    }
+    println!("candidate sweep: {} plans at X_32\n", plans.len());
+
+    // Warm pass doubles as correctness: every enumerated candidate must
+    // verify (the filter may never shrink the search space).
+    for plan in &plans {
+        if let Err(e) = statically_valid(&model, &cluster, plan) {
+            panic!("candidate {:?} rejected by the static verifier: {e}", plan.cfg);
+        }
+    }
+
+    let verify_t = best_of(7, || {
+        let mut ok = 0usize;
+        for plan in &plans {
+            if statically_valid(&model, &cluster, plan).is_ok() {
+                ok += 1;
+            }
+        }
+        ok as f64
+    });
+    let sim_t = best_of(3, || {
+        let mut total = 0.0;
+        for plan in &plans {
+            total += simulate_plan(&model, &cluster, plan).secs_per_sequence;
+        }
+        total
+    });
+
+    let speedup = sim_t / verify_t;
+    println!(
+        "verify sweep:   {:>9.3} ms ({:>7.1} us/candidate)",
+        verify_t * 1e3,
+        verify_t * 1e6 / plans.len() as f64
+    );
+    println!(
+        "simulate sweep: {:>9.3} ms ({:>7.1} us/candidate)",
+        sim_t * 1e3,
+        sim_t * 1e6 / plans.len() as f64
+    );
+    println!("\nverification is {speedup:.1}x cheaper than simulation (target: >= 10x)");
+
+    json.push("candidates", plans.len() as f64);
+    json.push("verify_sweep_secs", verify_t);
+    json.push("simulate_sweep_secs", sim_t);
+    json.push("speedup_vs_simulation", speedup);
+    json.finish();
+
+    assert!(
+        speedup >= 10.0,
+        "static verification must be >= 10x cheaper than simulation, got {speedup:.1}x"
+    );
+}

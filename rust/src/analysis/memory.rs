@@ -1,0 +1,145 @@
+//! Static per-rank peak-memory bound (check 4).
+//!
+//! A live-range walk over one rank's op sequence: checkpoints are
+//! acquired by `Fwd` and released by the matching `Bwd`, channel
+//! payloads are live while a transfer op runs, and the compute working
+//! set is live while a compute op runs. The walk is deliberately a
+//! *bound*, not a simulation: at every op the footprint is
+//!
+//! ```text
+//! state + stashed·checkpoint + max(payload, live)
+//! ```
+//!
+//! taking the *max* (not the sum) of the transfer and compute terms.
+//! That makes the bound provably no larger than the analytic
+//! [`MemoryBreakdown`] total for any generated schedule — the stash
+//! high-water mark is exactly the analytic checkpoints term, and both
+//! `payload` and `live` are individually covered by the activations
+//! term — so the planner's static filter can never reject a candidate
+//! the analytic memory filter admitted (planner parity by
+//! construction), while still catching hand-mutated or pathological
+//! worlds that stash more than the generators ever would.
+//!
+//! [`MemoryBreakdown`]: crate::costmodel::MemoryBreakdown
+
+use crate::costmodel::MemoryBreakdown;
+use crate::schedule::Op;
+use crate::sim::CostTable;
+
+/// Byte coefficients for the live-range walk, plus the device budget.
+/// Built from the same [`CostTable`] / [`MemoryBreakdown`] pair the
+/// planner already evaluates, so the static bound and the analytic
+/// model price one world identically.
+#[derive(Debug, Clone, Copy)]
+pub struct MemoryModel {
+    /// Device budget the peak is checked against
+    /// (`cluster.gpu.memory_bytes`).
+    pub budget: f64,
+    /// Always-resident bytes: fp16 params + Adam state (zero when
+    /// offloaded to CPU, mirroring
+    /// [`MemoryBreakdown::gpu_resident`]) plus gradient/transfer
+    /// buffers.
+    pub state_bytes: f64,
+    /// Bytes stashed per outstanding activation checkpoint (zero when
+    /// offloaded — the stash lives in CPU memory).
+    pub checkpoint_bytes: f64,
+    /// In-flight channel payload bytes while a send/recv runs.
+    pub payload_bytes: f64,
+    /// Working-set bytes while a compute op runs.
+    pub live_bytes: f64,
+}
+
+impl MemoryModel {
+    pub fn new(costs: &CostTable, mem: &MemoryBreakdown, budget: f64, offload: bool) -> Self {
+        MemoryModel {
+            budget,
+            state_bytes: (if offload { 0.0 } else { mem.state }) + mem.buffers,
+            checkpoint_bytes: if offload { 0.0 } else { costs.checkpoint_bytes },
+            payload_bytes: costs.wire.send_act,
+            live_bytes: costs.live_activation_bytes,
+        }
+    }
+}
+
+/// Walk one rank's ops and return `(peak bytes, position of the op
+/// where the peak is first reached)`.
+pub(crate) fn rank_peak(ops: &[Op], model: &MemoryModel) -> (f64, usize) {
+    let mut stashed: f64 = 0.0;
+    let mut peak = model.state_bytes;
+    let mut at = 0usize;
+    for (pos, op) in ops.iter().enumerate() {
+        // Acquire before measuring: a Fwd's checkpoint is written while
+        // the op runs.
+        if matches!(op, Op::Fwd { .. }) {
+            stashed += 1.0;
+        }
+        let extra = match op {
+            Op::Fwd { .. } | Op::Bwd { .. } | Op::TensorAllReduce { .. } => model.live_bytes,
+            Op::SendAct { .. } | Op::RecvAct { .. } | Op::SendGrad { .. } | Op::RecvGrad { .. } => {
+                model.payload_bytes
+            }
+            _ => 0.0,
+        };
+        let cur = model.state_bytes + stashed * model.checkpoint_bytes + extra;
+        if cur > peak {
+            peak = cur;
+            at = pos;
+        }
+        // Release after measuring: the Bwd consumes (and frees) its
+        // layer's checkpoint, but needs it resident to run.
+        if matches!(op, Op::Bwd { .. }) {
+            stashed = (stashed - 1.0).max(0.0);
+        }
+    }
+    (peak, at)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(state: f64, ckpt: f64, payload: f64, live: f64) -> MemoryModel {
+        MemoryModel {
+            budget: f64::INFINITY,
+            state_bytes: state,
+            checkpoint_bytes: ckpt,
+            payload_bytes: payload,
+            live_bytes: live,
+        }
+    }
+
+    #[test]
+    fn peak_counts_outstanding_checkpoints() {
+        // Two fwd stashes outstanding when the second Fwd runs.
+        let ops = [
+            Op::Fwd { layer: 0, mb: 0 },
+            Op::Fwd { layer: 0, mb: 1 },
+            Op::Bwd { layer: 0, mb: 1 },
+            Op::Bwd { layer: 0, mb: 0 },
+        ];
+        let (peak, at) = rank_peak(&ops, &model(10.0, 4.0, 0.0, 1.0));
+        assert_eq!(peak, 10.0 + 2.0 * 4.0 + 1.0);
+        assert_eq!(at, 1);
+    }
+
+    #[test]
+    fn transfer_and_compute_terms_take_the_max_not_the_sum() {
+        let ops = [Op::Fwd { layer: 0, mb: 0 }, Op::SendAct { layer: 0, mb: 0 }];
+        // payload > live: the send sets the peak even with one stash out.
+        let (peak, at) = rank_peak(&ops, &model(0.0, 1.0, 7.0, 2.0));
+        assert_eq!(peak, 1.0 + 7.0);
+        assert_eq!(at, 1);
+    }
+
+    #[test]
+    fn bwd_frees_its_checkpoint_after_running() {
+        let ops = [
+            Op::Fwd { layer: 0, mb: 0 },
+            Op::Bwd { layer: 0, mb: 0 },
+            Op::Fwd { layer: 0, mb: 1 },
+        ];
+        let (peak, _) = rank_peak(&ops, &model(0.0, 4.0, 0.0, 1.0));
+        // Never two checkpoints at once.
+        assert_eq!(peak, 4.0 + 1.0);
+    }
+}

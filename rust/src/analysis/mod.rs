@@ -1,0 +1,211 @@
+//! Whole-world static schedule verification — the **verify** stage of
+//! the pipeline: generate → lower → **verify** → simulate | execute.
+//!
+//! [`crate::schedule::lower`] proves a *single rank's* program
+//! self-consistent: ownership, compute counts, transfer pairing, and
+//! the in-order deadlock condition — all within one
+//! [`ScheduleProgram`]. But a training job is a grid of ranks,
+//! [`Topology`] `{stages, dp, tp}`, and the failures that hang real
+//! clusters are *cross-rank*: a send with no ordered receive on the
+//! neighbor stage, two members of a ring issuing their collectives in
+//! different orders, a wait-for cycle threading through pipeline
+//! channels and a collective rendezvous, a rank whose stashed
+//! activations overflow the device mid-batch. None of those are
+//! visible to a per-rank check — they pass `validate` today and hang
+//! (or silently skew gradients) at run time.
+//!
+//! [`WorldModel::compose`] replicates a lowered program across every
+//! rank of a topology — each rank executes its stage's op slice, dp
+//! and tp replicas run identical copies, exactly how
+//! [`crate::trainer`] dispatches the program over a
+//! [`crate::collective::CommWorld`] — and [`WorldModel::verify`] runs
+//! four checks over the composed world:
+//!
+//! 1. **p2p matching.** The pipeline rings are FIFO per directed
+//!    channel, so the k-th `SendAct` issued by stage *s* is consumed by
+//!    the k-th `RecvAct` on stage *s+1* (and symmetrically for
+//!    gradients toward *s−1*). Every pair must agree on `(layer, mb)`
+//!    identity, every channel on message count, and sender/receiver on
+//!    the payload element count their [`WireBytes`] tables imply — the
+//!    static form of the worker's `check_payload`.
+//! 2. **collective congruence.** All members of each `dp_group()` /
+//!    `tp_group()` ring must issue an *identical ordered sequence* of
+//!    collectives (kind, layer/micro-batch identity, element count):
+//!    `ReduceGrad` and partitioned `RestoreParams` on the dp axis,
+//!    `TensorAllReduce` on the tp axis. A reordered or missing
+//!    collective on one rank becomes a compile-time diagnostic instead
+//!    of a whole-ring hang.
+//! 3. **global deadlock freedom.** A cross-rank wait-for graph: each
+//!    rank's in-order dispatch and local CSR edges, channel edges
+//!    pairing the k-th send with the k-th receive (the transports'
+//!    FIFO semantics; buffering is unbounded, so sends never block),
+//!    and rendezvous edges for every ring collective (a member's k-th
+//!    collective completes only after *every* member has reached its
+//!    own k-th). A Kahn pass proves the whole world executable; on
+//!    failure the *minimal cycle* is reported as a rank/op chain. This
+//!    subsumes the per-rank
+//!    [`ScheduleProgram::check_inorder_executable`].
+//! 4. **static peak memory.** A live-range walk of each rank's ops
+//!    (checkpoints stashed between fwd/bwd, in-flight channel payload
+//!    buffers, the working set while compute runs) on top of the
+//!    resident state/buffer terms of
+//!    [`crate::costmodel::MemoryBreakdown`], checked against the
+//!    device budget — see [`MemoryModel`].
+//!
+//! The verifier is wired in three places: the `repro verify` CLI, the
+//! planner's candidate filter (statically-invalid plans are rejected
+//! before simulation; structural verdicts are memoised in
+//! [`crate::planner::LoweringCache`]), and a debug assertion in
+//! `trainer::prepare` before any worker launches.
+//!
+//! dp/tp replicas are byte-identical by construction, so for a
+//! *generated* world every degree beyond 2 adds only symmetric copies
+//! of existing constraints; [`verify_structural`] exploits that by
+//! clamping both axes to ≤ 2, keeping planner-scale verification
+//! O(stages · ops) regardless of the data-parallel degree. Mutation
+//! tooling ([`WorldModel::remove_op`], [`WorldModel::swap_ops`], a
+//! per-rank wire table) exists precisely so tests can build the
+//! *asymmetric* worlds the reduction assumes away.
+
+mod memory;
+mod world;
+
+use std::fmt;
+
+use crate::collective::{Rank, Topology};
+use crate::schedule::ScheduleProgram;
+use crate::sim::WireBytes;
+
+pub use memory::MemoryModel;
+pub use world::{RankProgram, WorldModel};
+
+/// Render a rank's grid coordinates for diagnostics.
+fn fmt_rank(r: &Rank) -> String {
+    format!("rank(stage {}, dp {}, tp {})", r.stage, r.dp, r.tp)
+}
+
+/// One whole-world verification failure. Every variant names the
+/// offending rank(s) and op(s) — the diagnostics are the point: a
+/// mismatched collective at compile time beats a thousand-GPU hang at
+/// step 40k.
+#[derive(Debug, Clone)]
+pub enum WorldError {
+    /// The program cannot be composed over the requested topology at
+    /// all (stage-count mismatch, tp grid without `TensorAllReduce`
+    /// ops, dp grid without `ReduceGrad` coverage).
+    Topology { detail: String },
+    /// A FIFO-paired send/receive disagrees on identity, or one side of
+    /// a channel has more messages than the other.
+    P2p { from: Rank, to: Rank, index: usize, detail: String },
+    /// Sender and receiver price the same message differently — the
+    /// static form of the worker's payload length check.
+    Payload { from: Rank, to: Rank, op: String, sent_elems: f64, expected_elems: f64 },
+    /// Two members of a dp/tp ring diverge in their collective
+    /// sequences at `index`.
+    Collective { axis: &'static str, a: Rank, b: Rank, index: usize, got: String, want: String },
+    /// The cross-rank wait-for graph has a cycle; `cycle` is the
+    /// minimal one found, as `rank: op@position` entries in order.
+    Deadlock { cycle: Vec<String> },
+    /// A rank's statically-bounded peak memory exceeds the device
+    /// budget, first reached at op `at`.
+    Memory { rank: Rank, op: String, at: usize, peak_bytes: f64, budget_bytes: f64 },
+}
+
+impl fmt::Display for WorldError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorldError::Topology { detail } => write!(f, "topology mismatch: {detail}"),
+            WorldError::P2p { from, to, index, detail } => write!(
+                f,
+                "p2p mismatch on channel {} -> {} at message {index}: {detail}",
+                fmt_rank(from),
+                fmt_rank(to)
+            ),
+            WorldError::Payload { from, to, op, sent_elems, expected_elems } => write!(
+                f,
+                "payload mismatch for {op} from {} to {}: sender puts {sent_elems} \
+                 elements on the wire, receiver expects {expected_elems}",
+                fmt_rank(from),
+                fmt_rank(to)
+            ),
+            WorldError::Collective { axis, a, b, index, got, want } => write!(
+                f,
+                "{axis} collective sequences diverge at index {index}: {} issues {got}, \
+                 {} issues {want}",
+                fmt_rank(b),
+                fmt_rank(a)
+            ),
+            WorldError::Deadlock { cycle } => {
+                write!(f, "cross-rank deadlock, minimal wait-for cycle: ")?;
+                for (i, n) in cycle.iter().enumerate() {
+                    write!(f, "{}{n}", if i == 0 { "" } else { " -> " })?;
+                }
+                Ok(())
+            }
+            WorldError::Memory { rank, op, at, peak_bytes, budget_bytes } => write!(
+                f,
+                "{} exceeds the device budget: static peak {:.3e} B > {:.3e} B, first \
+                 reached at op {op} (position {at})",
+                fmt_rank(rank),
+                peak_bytes,
+                budget_bytes
+            ),
+        }
+    }
+}
+
+/// Compose `program` over `topo` and run every check. `mem = None`
+/// skips the memory bound (structural checks only — e.g. when no
+/// device budget is in scope). Returns all failures, not just the
+/// first.
+pub fn verify_program(
+    program: &ScheduleProgram,
+    topo: Topology,
+    wire: WireBytes,
+    mem: Option<&MemoryModel>,
+) -> Result<(), Vec<WorldError>> {
+    let world = WorldModel::compose(program, topo, wire).map_err(|e| vec![e])?;
+    let errors = world.verify(mem);
+    if errors.is_empty() {
+        Ok(())
+    } else {
+        Err(errors)
+    }
+}
+
+/// Structural verification only (p2p, congruence, deadlock) with the
+/// replicated axes clamped to degree ≤ 2: dp/tp replicas of a lowered
+/// program are identical, so higher degrees only add symmetric copies
+/// of constraints already checked — this is what makes the planner
+/// filter and the trainer's pre-launch assertion O(stages · ops).
+/// Returns the first failure.
+pub fn verify_structural(program: &ScheduleProgram, topo: Topology) -> Result<(), WorldError> {
+    let reduced = Topology::new(topo.stages, topo.dp.min(2), topo.tp.min(2));
+    verify_program(program, reduced, WireBytes::default(), None).map_err(|mut v| v.remove(0))
+}
+
+/// The memory bound alone, straight off a lowered program (dp/tp
+/// replicas share their stage's live ranges, so one pass per stage
+/// covers the world). Used by the planner's candidate filter, where
+/// the structural verdict is memoised but the budget depends on the
+/// per-candidate cost table.
+pub fn check_program_memory(
+    program: &ScheduleProgram,
+    model: &MemoryModel,
+) -> Result<(), WorldError> {
+    for stage in 0..program.n_stages {
+        let ops: Vec<crate::schedule::Op> =
+            program.stage_ops(stage).iter().map(|n| n.op).collect();
+        let (peak, at) = memory::rank_peak(&ops, model);
+        if peak > model.budget {
+            return Err(WorldError::Memory {
+                rank: Rank { stage, dp: 0, tp: 0 },
+                op: ops.get(at).map(|o| o.to_string()).unwrap_or_default(),
+                at,
+                peak_bytes: peak,
+                budget_bytes: model.budget,
+            });
+        }
+    }
+    Ok(())
+}

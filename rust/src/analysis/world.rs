@@ -1,0 +1,612 @@
+//! World composition and the structural checks (p2p matching,
+//! collective congruence, cross-rank deadlock detection).
+
+use std::collections::VecDeque;
+
+use crate::collective::{Rank, Topology};
+use crate::schedule::{Op, ScheduleProgram};
+use crate::sim::cost::WIRE_BYTES_PER_ELEM;
+use crate::sim::WireBytes;
+
+use super::memory::rank_peak;
+use super::{fmt_rank, MemoryModel, WorldError};
+
+/// One rank's view of the world: the op sequence it dispatches in
+/// order, the local dependency edges between those ops (positions, not
+/// arena ids), and the wire table it prices payloads with. Generated
+/// worlds replicate their stage's slice of the program; tests mutate
+/// individual ranks to build the adversarial worlds the checks exist
+/// to reject.
+#[derive(Debug, Clone)]
+pub struct RankProgram {
+    pub rank: Rank,
+    pub ops: Vec<Op>,
+    /// This rank's payload pricing. All ranks share one table in a
+    /// generated world; a divergent entry models a rank that would
+    /// put the wrong number of elements on the wire.
+    pub wire: WireBytes,
+    /// Local dependency edges `(producer, consumer)` as positions into
+    /// `ops`. In-order dispatch edges are implied and not stored.
+    pub(crate) edges: Vec<(u32, u32)>,
+}
+
+/// The composed whole world: every rank of a topology with its op
+/// sequence. See the module docs for the four checks [`verify`] runs.
+///
+/// [`verify`]: WorldModel::verify
+#[derive(Debug, Clone)]
+pub struct WorldModel {
+    pub topo: Topology,
+    /// Indexed by [`Topology::index`].
+    pub ranks: Vec<RankProgram>,
+    /// Whether `RestoreParams` is a dp-ring all-gather (partitioned
+    /// state) rather than a local CPU fetch (offload-only) — decides
+    /// its membership in the dp collective sequence.
+    partitioned: bool,
+}
+
+impl WorldModel {
+    /// Replicate a lowered program over a rank grid: each rank runs its
+    /// stage's op slice, dp/tp replicas run identical copies (exactly
+    /// how the trainer dispatches the program). Fails when the program
+    /// cannot inhabit the topology at all.
+    pub fn compose(
+        program: &ScheduleProgram,
+        topo: Topology,
+        wire: WireBytes,
+    ) -> Result<WorldModel, WorldError> {
+        if topo.stages != program.n_stages {
+            return Err(WorldError::Topology {
+                detail: format!(
+                    "program has {} stages, topology has {}",
+                    program.n_stages, topo.stages
+                ),
+            });
+        }
+        if topo.tp > 1 && program.tp <= 1 {
+            return Err(WorldError::Topology {
+                detail: format!(
+                    "tensor-parallel grid (tp = {}) over a program with no \
+                     TensorAllReduce ops — tp ranks would never reduce",
+                    topo.tp
+                ),
+            });
+        }
+        if topo.dp > 1 {
+            let mut reduced = vec![false; program.d_l];
+            for node in &program.ops {
+                if let Op::ReduceGrad { layer } = node.op {
+                    reduced[layer] = true;
+                }
+            }
+            if let Some(layer) = reduced.iter().position(|r| !r) {
+                return Err(WorldError::Topology {
+                    detail: format!(
+                        "data-parallel grid (dp = {}) but layer {layer} has no \
+                         ReduceGrad — its gradients would diverge across replicas",
+                        topo.dp
+                    ),
+                });
+            }
+        }
+
+        // Per-stage op slices and local edges, shared by every replica.
+        let mut stage_ops: Vec<Vec<Op>> = Vec::with_capacity(topo.stages);
+        let mut stage_edges: Vec<Vec<(u32, u32)>> = Vec::with_capacity(topo.stages);
+        for s in 0..topo.stages {
+            let slice = program.stage_ops(s);
+            let base = slice.first().map(|n| n.id).unwrap_or(0);
+            let mut edges = Vec::new();
+            for (pos, node) in slice.iter().enumerate() {
+                debug_assert_eq!(node.id - base, pos as u32, "stage arena must be contiguous");
+                for &pred in program.preds_of(node.id) {
+                    if program.ops[pred as usize].stage == s as u32 {
+                        edges.push((pred - base, pos as u32));
+                    }
+                }
+            }
+            stage_ops.push(slice.iter().map(|n| n.op).collect());
+            stage_edges.push(edges);
+        }
+
+        let ranks = (0..topo.n_ranks())
+            .map(|i| {
+                let rank = topo.rank_at(i);
+                RankProgram {
+                    rank,
+                    ops: stage_ops[rank.stage].clone(),
+                    wire,
+                    edges: stage_edges[rank.stage].clone(),
+                }
+            })
+            .collect();
+        Ok(WorldModel { topo, ranks, partitioned: program.partitioned })
+    }
+
+    fn idx(&self, stage: usize, dp: usize, tp: usize) -> usize {
+        self.topo.index(Rank { stage, dp, tp })
+    }
+
+    /// Position of the first op matching `pred` on rank `rank` — test
+    /// and tooling convenience for targeting mutations.
+    pub fn find_op(&self, rank: usize, pred: impl Fn(&Op) -> bool) -> Option<usize> {
+        self.ranks[rank].ops.iter().position(pred)
+    }
+
+    /// Delete one op from one rank (a dropped receive, a skipped
+    /// collective), keeping the local edges consistent: edges incident
+    /// to the removed position disappear, later positions shift down.
+    pub fn remove_op(&mut self, rank: usize, pos: usize) -> Op {
+        let rp = &mut self.ranks[rank];
+        let op = rp.ops.remove(pos);
+        let p = pos as u32;
+        rp.edges.retain(|&(a, b)| a != p && b != p);
+        for e in rp.edges.iter_mut() {
+            if e.0 > p {
+                e.0 -= 1;
+            }
+            if e.1 > p {
+                e.1 -= 1;
+            }
+        }
+        op
+    }
+
+    /// Swap two ops on one rank (a reordered collective). Local edges
+    /// follow their ops, so the *data* dependencies stay attached to
+    /// the right computation — what changes is the dispatch order.
+    pub fn swap_ops(&mut self, rank: usize, i: usize, j: usize) {
+        let rp = &mut self.ranks[rank];
+        rp.ops.swap(i, j);
+        let (pi, pj) = (i as u32, j as u32);
+        for e in rp.edges.iter_mut() {
+            for end in [&mut e.0, &mut e.1] {
+                *end = if *end == pi {
+                    pj
+                } else if *end == pj {
+                    pi
+                } else {
+                    *end
+                };
+            }
+        }
+    }
+
+    /// Run every check; returns all failures (empty = the world is
+    /// statically sound). `mem = None` skips the memory bound.
+    pub fn verify(&self, mem: Option<&MemoryModel>) -> Vec<WorldError> {
+        let mut errors = Vec::new();
+        self.check_p2p(&mut errors);
+        self.check_congruence(&mut errors);
+        self.check_deadlock(&mut errors);
+        if let Some(model) = mem {
+            self.check_memory(model, &mut errors);
+        }
+        errors
+    }
+
+    // ---- check 1: p2p matching ----------------------------------------
+
+    /// The pipeline transports are FIFO per directed channel, so the
+    /// k-th send *is* the k-th receive: pair them by index and demand
+    /// identity agreement (`SendAct{l}` feeds `RecvAct{l+1}`,
+    /// `SendGrad{l}` feeds `RecvGrad{l−1}`, same micro-batch), equal
+    /// message counts, and an element count both wire tables agree on.
+    fn check_p2p(&self, errors: &mut Vec<WorldError>) {
+        if self.topo.stages <= 1 {
+            return;
+        }
+        for dp in 0..self.topo.dp {
+            for tp in 0..self.topo.tp {
+                for s in 0..self.topo.stages {
+                    let next = (s + 1) % self.topo.stages;
+                    let prev = (s + self.topo.stages - 1) % self.topo.stages;
+                    self.check_channel(self.idx(s, dp, tp), self.idx(next, dp, tp), false, errors);
+                    self.check_channel(self.idx(s, dp, tp), self.idx(prev, dp, tp), true, errors);
+                }
+            }
+        }
+    }
+
+    fn check_channel(&self, from: usize, to: usize, grads: bool, errors: &mut Vec<WorldError>) {
+        let (tx, rx) = (&self.ranks[from], &self.ranks[to]);
+        let sends: Vec<(usize, usize)> = tx
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::SendAct { layer, mb } if !grads => Some((*layer, *mb)),
+                Op::SendGrad { layer, mb } if grads => Some((*layer, *mb)),
+                _ => None,
+            })
+            .collect();
+        let recvs: Vec<(usize, usize)> = rx
+            .ops
+            .iter()
+            .filter_map(|op| match op {
+                Op::RecvAct { layer, mb } if !grads => Some((*layer, *mb)),
+                Op::RecvGrad { layer, mb } if grads => Some((*layer, *mb)),
+                _ => None,
+            })
+            .collect();
+        let (skind, rkind) = if grads { ("sg", "rg") } else { ("sa", "ra") };
+        for (k, (&(sl, smb), &(rl, rmb))) in sends.iter().zip(&recvs).enumerate() {
+            // The receive names the consuming layer: the act of layer l
+            // feeds layer l+1, the grad of layer l's output comes from
+            // layer l+1 and is received as the grad *for* layer l.
+            let want = if grads { sl.wrapping_sub(1) } else { sl + 1 };
+            if rl != want || smb != rmb {
+                errors.push(WorldError::P2p {
+                    from: tx.rank,
+                    to: rx.rank,
+                    index: k,
+                    detail: format!(
+                        "{skind}{sl}.{smb} is consumed by {rkind}{rl}.{rmb}, \
+                         want {rkind}{want}.{smb}"
+                    ),
+                });
+                return; // FIFO: everything after a shift is noise
+            }
+        }
+        if sends.len() != recvs.len() {
+            let k = sends.len().min(recvs.len());
+            let detail = if sends.len() > recvs.len() {
+                let (l, mb) = sends[k];
+                format!(
+                    "{} sends but only {} receives: {skind}{l}.{mb} is never consumed \
+                     (dropped receive?)",
+                    sends.len(),
+                    recvs.len()
+                )
+            } else {
+                let (l, mb) = recvs[k];
+                format!(
+                    "{} receives but only {} sends: {rkind}{l}.{mb} waits forever",
+                    recvs.len(),
+                    sends.len()
+                )
+            };
+            errors.push(WorldError::P2p { from: tx.rank, to: rx.rank, index: k, detail });
+        }
+        // Payload sizing: one verdict per channel — the wire table is
+        // per-rank, so every message on the channel mis-sizes together.
+        if let Some(&(l, mb)) = sends.first() {
+            let pick = |w: &WireBytes| if grads { w.send_grad } else { w.send_act };
+            let sent = pick(&tx.wire) / WIRE_BYTES_PER_ELEM;
+            let expected = pick(&rx.wire) / WIRE_BYTES_PER_ELEM;
+            if sent != expected {
+                errors.push(WorldError::Payload {
+                    from: tx.rank,
+                    to: rx.rank,
+                    op: format!("{skind}{l}.{mb}"),
+                    sent_elems: sent,
+                    expected_elems: expected,
+                });
+            }
+        }
+    }
+
+    // ---- check 2: collective congruence -------------------------------
+
+    /// Whether `op` runs on the given collective axis. `RestoreParams`
+    /// is a dp all-gather only under a partition; offload-only restores
+    /// are local CPU fetches.
+    fn on_axis(&self, op: &Op, dp_axis: bool) -> bool {
+        match op {
+            Op::ReduceGrad { .. } => dp_axis,
+            Op::RestoreParams { .. } => dp_axis && self.partitioned,
+            Op::TensorAllReduce { .. } => !dp_axis,
+            _ => false,
+        }
+    }
+
+    /// The (identity, element-count) sequence rank `r` issues on one
+    /// axis — what every other member of its ring must match exactly.
+    fn collective_seq(&self, r: usize, dp_axis: bool) -> Vec<(String, f64)> {
+        let rp = &self.ranks[r];
+        rp.ops
+            .iter()
+            .filter(|op| self.on_axis(op, dp_axis))
+            .map(|op| (op.to_string(), rp.wire.of(op) / WIRE_BYTES_PER_ELEM))
+            .collect()
+    }
+
+    fn check_congruence(&self, errors: &mut Vec<WorldError>) {
+        let mut rings: Vec<(Vec<usize>, bool)> = Vec::new();
+        if self.topo.dp > 1 {
+            for s in 0..self.topo.stages {
+                for tp in 0..self.topo.tp {
+                    rings.push(((0..self.topo.dp).map(|d| self.idx(s, d, tp)).collect(), true));
+                }
+            }
+        }
+        if self.topo.tp > 1 {
+            for s in 0..self.topo.stages {
+                for dp in 0..self.topo.dp {
+                    rings.push(((0..self.topo.tp).map(|t| self.idx(s, dp, t)).collect(), false));
+                }
+            }
+        }
+        for (members, dp_axis) in rings {
+            let axis = if dp_axis { "dp" } else { "tp" };
+            let want = self.collective_seq(members[0], dp_axis);
+            for &m in &members[1..] {
+                let got = self.collective_seq(m, dp_axis);
+                let diverge = want
+                    .iter()
+                    .zip(&got)
+                    .position(|(a, b)| a != b)
+                    .or_else(|| (want.len() != got.len()).then(|| want.len().min(got.len())));
+                if let Some(i) = diverge {
+                    let show = |seq: &[(String, f64)]| {
+                        seq.get(i)
+                            .map(|(op, n)| format!("{op} ({n} elems)"))
+                            .unwrap_or_else(|| "(end of sequence)".into())
+                    };
+                    errors.push(WorldError::Collective {
+                        axis,
+                        a: self.ranks[members[0]].rank,
+                        b: self.ranks[m].rank,
+                        index: i,
+                        got: show(&got),
+                        want: show(&want),
+                    });
+                    break; // one divergence per ring member pair is enough
+                }
+            }
+        }
+    }
+
+    // ---- check 3: global deadlock freedom ------------------------------
+
+    /// Build the cross-rank wait-for graph and Kahn it. Edges:
+    /// * in-order dispatch (op i → op i+1 on each rank) — the workers
+    ///   are synchronous in-order executors;
+    /// * local data edges (the program's CSR, per replica);
+    /// * channel edges: k-th send → k-th receive per directed FIFO
+    ///   channel (buffering is unbounded — mpsc / buffered TCP — so
+    ///   sends never block and need no back-edges);
+    /// * rendezvous edges: a ring collective completes only once every
+    ///   member has *reached* its k-th instance, i.e. finished the op
+    ///   before it.
+    fn check_deadlock(&self, errors: &mut Vec<WorldError>) {
+        let mut base = Vec::with_capacity(self.ranks.len() + 1);
+        let mut n = 0u32;
+        for rp in &self.ranks {
+            base.push(n);
+            n += rp.ops.len() as u32;
+        }
+        base.push(n);
+        let node = |r: usize, pos: u32| base[r] + pos;
+
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for (r, rp) in self.ranks.iter().enumerate() {
+            for i in 1..rp.ops.len() as u32 {
+                edges.push((node(r, i - 1), node(r, i)));
+            }
+            for &(a, b) in &rp.edges {
+                edges.push((node(r, a), node(r, b)));
+            }
+        }
+        // Channel edges, by FIFO index (up to the shorter side; count
+        // mismatches are already p2p errors).
+        if self.topo.stages > 1 {
+            for dp in 0..self.topo.dp {
+                for tp in 0..self.topo.tp {
+                    for s in 0..self.topo.stages {
+                        let next = (s + 1) % self.topo.stages;
+                        let prev = (s + self.topo.stages - 1) % self.topo.stages;
+                        for (grads, to) in [(false, next), (true, prev)] {
+                            let (fi, ti) = (self.idx(s, dp, tp), self.idx(to, dp, tp));
+                            let sends = positions(&self.ranks[fi].ops, grads, true);
+                            let recvs = positions(&self.ranks[ti].ops, grads, false);
+                            for (sp, rp) in sends.iter().zip(&recvs) {
+                                edges.push((node(fi, *sp), node(ti, *rp)));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Rendezvous edges for every ring collective instance.
+        let mut rendezvous = |members: &[usize], dp_axis: bool| {
+            let pos: Vec<Vec<u32>> = members
+                .iter()
+                .map(|&m| {
+                    self.ranks[m]
+                        .ops
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, op)| self.on_axis(op, dp_axis))
+                        .map(|(i, _)| i as u32)
+                        .collect()
+                })
+                .collect();
+            let depth = pos.iter().map(|p| p.len()).min().unwrap_or(0);
+            for k in 0..depth {
+                for (ai, &a) in members.iter().enumerate() {
+                    if pos[ai][k] == 0 {
+                        continue; // reached at dispatch start
+                    }
+                    for (bi, &b) in members.iter().enumerate() {
+                        if ai != bi {
+                            edges.push((node(a, pos[ai][k] - 1), node(b, pos[bi][k])));
+                        }
+                    }
+                }
+            }
+        };
+        if self.topo.dp > 1 {
+            for s in 0..self.topo.stages {
+                for tp in 0..self.topo.tp {
+                    let members: Vec<usize> =
+                        (0..self.topo.dp).map(|d| self.idx(s, d, tp)).collect();
+                    rendezvous(&members, true);
+                }
+            }
+        }
+        if self.topo.tp > 1 {
+            for s in 0..self.topo.stages {
+                for dp in 0..self.topo.dp {
+                    let members: Vec<usize> =
+                        (0..self.topo.tp).map(|t| self.idx(s, dp, t)).collect();
+                    rendezvous(&members, false);
+                }
+            }
+        }
+
+        // CSR + Kahn.
+        let n = n as usize;
+        let mut succ_off = vec![0u32; n + 1];
+        for &(a, _) in &edges {
+            succ_off[a as usize + 1] += 1;
+        }
+        for i in 0..n {
+            succ_off[i + 1] += succ_off[i];
+        }
+        let mut succs = vec![0u32; edges.len()];
+        let mut cursor = succ_off.clone();
+        let mut indeg = vec![0u32; n];
+        for &(a, b) in &edges {
+            succs[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            indeg[b as usize] += 1;
+        }
+        let mut queue: VecDeque<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+        let mut done = 0usize;
+        let mut alive = vec![true; n];
+        while let Some(u) = queue.pop_front() {
+            done += 1;
+            alive[u as usize] = false;
+            let (lo, hi) = (succ_off[u as usize] as usize, succ_off[u as usize + 1] as usize);
+            for &v in &succs[lo..hi] {
+                indeg[v as usize] -= 1;
+                if indeg[v as usize] == 0 {
+                    queue.push_back(v);
+                }
+            }
+        }
+        if done == n {
+            return;
+        }
+        let cycle = minimal_cycle(n, &succ_off, &succs, &alive);
+        let label = |id: u32| {
+            let r = base.partition_point(|&b| b <= id) - 1;
+            let pos = (id - base[r]) as usize;
+            format!("{}: {}@{}", fmt_rank(&self.ranks[r].rank), self.ranks[r].ops[pos], pos)
+        };
+        errors.push(WorldError::Deadlock { cycle: cycle.into_iter().map(label).collect() });
+    }
+
+    // ---- check 4: static peak memory -----------------------------------
+
+    fn check_memory(&self, model: &MemoryModel, errors: &mut Vec<WorldError>) {
+        for rp in &self.ranks {
+            let (peak, at) = rank_peak(&rp.ops, model);
+            if peak > model.budget {
+                errors.push(WorldError::Memory {
+                    rank: rp.rank,
+                    op: rp.ops.get(at).map(|o| o.to_string()).unwrap_or_default(),
+                    at,
+                    peak_bytes: peak,
+                    budget_bytes: model.budget,
+                });
+            }
+        }
+    }
+}
+
+/// Positions of the sends (or receives) of one channel kind in an op
+/// sequence, in dispatch order.
+fn positions(ops: &[Op], grads: bool, sends: bool) -> Vec<u32> {
+    ops.iter()
+        .enumerate()
+        .filter(|(_, op)| match op {
+            Op::SendAct { .. } => sends && !grads,
+            Op::SendGrad { .. } => sends && grads,
+            Op::RecvAct { .. } => !sends && !grads,
+            Op::RecvGrad { .. } => !sends && grads,
+            _ => false,
+        })
+        .map(|(i, _)| i as u32)
+        .collect()
+}
+
+/// A short cycle through the residual (non-executable) subgraph: find
+/// any cycle by DFS, then BFS from each of its nodes (bounded) to
+/// shrink it — the minimal diagnostic beats a thousand-op residue dump.
+fn minimal_cycle(n: usize, succ_off: &[u32], succs: &[u32], alive: &[bool]) -> Vec<u32> {
+    let succs_of = |u: u32| {
+        let (lo, hi) = (succ_off[u as usize] as usize, succ_off[u as usize + 1] as usize);
+        succs[lo..hi].iter().copied().filter(|&v| alive[v as usize])
+    };
+    // DFS for any cycle. Colors: 0 unvisited, 1 on stack, 2 finished.
+    let mut color = vec![0u8; n];
+    let mut found: Vec<u32> = Vec::new();
+    'roots: for root in 0..n as u32 {
+        if !alive[root as usize] || color[root as usize] != 0 {
+            continue;
+        }
+        let mut stack: Vec<(u32, Vec<u32>)> = vec![(root, succs_of(root).collect())];
+        color[root as usize] = 1;
+        while let Some((u, rest)) = stack.last_mut() {
+            let u = *u;
+            match rest.pop() {
+                Some(v) if color[v as usize] == 1 => {
+                    // Back edge: the stack from v to u is a cycle.
+                    let start = stack.iter().position(|(w, _)| *w == v).expect("on stack");
+                    found = stack[start..].iter().map(|(w, _)| *w).collect();
+                    break 'roots;
+                }
+                Some(v) if color[v as usize] == 0 => {
+                    color[v as usize] = 1;
+                    let kids = succs_of(v).collect();
+                    stack.push((v, kids));
+                }
+                Some(_) => {}
+                None => {
+                    color[u as usize] = 2;
+                    stack.pop();
+                }
+            }
+        }
+    }
+    if found.is_empty() {
+        return found; // unreachable for a stuck Kahn, but stay total
+    }
+    // Shrink: shortest cycle through any of (a bounded number of) the
+    // found cycle's nodes.
+    let mut best = found.clone();
+    let mut parent = vec![u32::MAX; n];
+    let mut stamp = vec![0u32; n];
+    for (pass, &seed) in found.iter().take(64).enumerate() {
+        let gen = pass as u32 + 1;
+        let mut q = VecDeque::new();
+        stamp[seed as usize] = gen;
+        q.push_back(seed);
+        'bfs: while let Some(u) = q.pop_front() {
+            for v in succs_of(u) {
+                if v == seed {
+                    // Reconstruct seed -> ... -> u, a cycle via the edge
+                    // u -> seed.
+                    let mut path = vec![u];
+                    let mut w = u;
+                    while w != seed {
+                        w = parent[w as usize];
+                        path.push(w);
+                    }
+                    path.reverse();
+                    if path.len() < best.len() {
+                        best = path;
+                    }
+                    break 'bfs;
+                }
+                if stamp[v as usize] != gen {
+                    stamp[v as usize] = gen;
+                    parent[v as usize] = u;
+                    q.push_back(v);
+                }
+            }
+        }
+    }
+    best
+}

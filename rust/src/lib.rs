@@ -15,7 +15,7 @@
 //!   whose per-layer compute is AOT-compiled from JAX (+ Pallas kernels)
 //!   to HLO and executed via PJRT, with Python never on the hot path.
 //!
-//! ## The scheduling pipeline: generate → lower → (validate | simulate | execute)
+//! ## The scheduling pipeline: generate → lower → verify → (simulate | execute)
 //!
 //! Scheduling policy lives in [`schedule`]: generators emit each policy
 //! (standard/layered gradient accumulation × contiguous/modular pipeline,
@@ -28,10 +28,17 @@
 //! explicit edge, per-stage/per-stream run queues, and a cycle check that
 //! is exactly the deadlock condition of an in-order executor.
 //!
-//! Three consumers share that one graph, so they cannot disagree about
+//! Four consumers share that one graph, so they cannot disagree about
 //! legality:
 //!
 //! * the **validator** ([`schedule::validate`]) reports lowering errors;
+//! * the **whole-world verifier** ([`analysis`]) composes the program
+//!   over every rank of a `{stages, dp, tp}` topology and statically
+//!   proves cross-rank properties no per-rank check can see: p2p
+//!   send/recv matching, collective congruence across dp/tp rings,
+//!   global deadlock freedom (with minimal-cycle diagnostics) and a
+//!   peak-memory bound — run by the `repro verify` CLI, the planner's
+//!   candidate filter, and a pre-launch debug assertion in the trainer;
 //! * the **discrete-event simulator** ([`sim`]) walks the edges in
 //!   O(V+E), which is what lets the planner simulate candidate
 //!   configurations in the loop ([`planner::simloop`]) at
@@ -48,6 +55,7 @@
 //! New policies (e.g. interleaved 1F1B) are generator-only changes — the
 //! graph semantics downstream are untouched.
 
+pub mod analysis;
 pub mod collective;
 pub mod costmodel;
 pub mod data;

@@ -10,19 +10,23 @@
 //!   netbench [...]                   measure the socket wire, write calibration
 //!   chaos [--probe] [...]            fault-injected elastic training
 //!   plan [--x N] [--ethernet] [...]  plan the fastest configuration
+//!   verify [--policy P] [--grid]     whole-world static schedule verification
 
 use std::collections::HashMap;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use lga_mpp::costmodel::{ParallelismMenu, Strategy, TrainConfig};
+use lga_mpp::analysis::{verify_program, MemoryModel};
+use lga_mpp::collective::Topology;
+use lga_mpp::costmodel::{MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
 use lga_mpp::hardware::{ClusterSpec, NetCalibration, SECS_PER_DAY, GIB};
-use lga_mpp::model::XModel;
+use lga_mpp::model::{TransformerShape, XModel};
 use lga_mpp::optim::LrSchedule;
 use lga_mpp::report;
 use lga_mpp::schedule::{
-    interleaved_1f1b, lower, modular_pipeline, one_f_one_b, standard_ga, ScheduleSpec,
+    interleaved_1f1b, interleaved_applicable, layered_ga, lower, modular_pipeline, one_f_one_b,
+    standard_ga, Schedule, ScheduleSpec,
 };
 use lga_mpp::sim::{render, simulate_program, CostTable};
 use lga_mpp::trainer::{launch, train, Policy, TrainerConfig};
@@ -109,6 +113,7 @@ fn main() -> Result<()> {
         "netbench" => cmd_netbench(&args),
         "chaos" => cmd_chaos(&args),
         "plan" => cmd_plan(&args),
+        "verify" => cmd_verify(&args),
         other => bail!("unknown subcommand '{other}' (see `repro help`)"),
     }
 }
@@ -151,6 +156,16 @@ usage:
              [--mtbf HOURS] [--max-lost-work PCT]   (reliability-constrained:
              the fastest plan whose expected failure-rollback lost work
              stays under PCT% of wall clock at the given per-device MTBF)
+  repro verify [--policy baseline|improved|1f1b|interleaved|all]
+               [--spec LAYERS:STAGES:MB | --layers N --stages N --mb N]
+               [--dp N] [--tp N] [--partition] [--offload] [--chunks V]
+               [--x N] [--grid] [--ethernet|--unlimited-node]
+               (whole-world static verification: composes the lowered
+               program over every rank of the {stages, dp, tp} grid and
+               checks p2p send/recv matching, collective congruence on
+               every dp/tp ring, cross-rank deadlock freedom and the
+               static peak-memory bound; --grid sweeps all policies
+               across stages x dp x tp x {plain, partition, offload})
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -757,6 +772,182 @@ fn cmd_plan(args: &Args) -> Result<()> {
             }
         }
         None => println!("no feasible plan"),
+    }
+    Ok(())
+}
+
+/// Generate the schedule a `repro verify` policy name means for a spec,
+/// or `None` when the policy cannot inhabit the shape (interleaved
+/// divisibility). "improved" is the paper's pair: layered GA at one
+/// stage, the modular pipeline otherwise — together with baseline,
+/// 1f1b and interleaved that covers all five generators.
+fn verify_schedule(policy: &str, spec: &ScheduleSpec, chunks: usize) -> Result<Option<Schedule>> {
+    Ok(match policy {
+        "baseline" => Some(standard_ga(spec)),
+        "improved" => {
+            Some(if spec.n_l == 1 { layered_ga(spec) } else { modular_pipeline(spec) })
+        }
+        "1f1b" => Some(one_f_one_b(spec)),
+        "interleaved" => interleaved_applicable(spec, chunks)
+            .then(|| interleaved_1f1b(spec, chunks)),
+        other => bail!("unknown policy {other} (baseline|improved|1f1b|interleaved|all)"),
+    })
+}
+
+/// Lower one (policy, spec) pair, compose it over the `{stages, dp, tp}`
+/// grid and run the whole-world verifier with the cluster's real wire
+/// table and memory budget. `Ok(false)` = policy inapplicable to the
+/// shape; any verification failure is an error naming rank and op.
+fn verify_world(
+    cluster: &ClusterSpec,
+    shape: &TransformerShape,
+    policy: &str,
+    spec: &ScheduleSpec,
+    dp: usize,
+    chunks: usize,
+    verbose: bool,
+) -> Result<bool> {
+    let Some(schedule) = verify_schedule(policy, spec, chunks)? else {
+        return Ok(false);
+    };
+    let program = lower(&schedule).map_err(|e| anyhow::anyhow!("invalid schedule: {e:?}"))?;
+    let cfg = TrainConfig {
+        strategy: if policy == "baseline" { Strategy::Baseline } else { Strategy::Improved },
+        n_b: dp,
+        n_l: spec.n_l,
+        n_a: spec.tp,
+        n_mu: spec.n_mu,
+        b_mu: 1.0,
+        offload: spec.offload,
+        partition: spec.partition,
+    };
+    let costs = CostTable::new(shape, &cfg, cluster);
+    let memory = MemoryBreakdown::evaluate(shape, &cfg);
+    let budget = MemoryModel::new(&costs, &memory, cluster.gpu.memory_bytes, spec.offload);
+    let topo = Topology::new(spec.n_l, dp, spec.tp);
+    match verify_program(&program, topo, costs.wire, Some(&budget)) {
+        Ok(()) => {
+            if verbose {
+                println!(
+                    "ok: {} over {} ranks (stages {} x dp {} x tp {}) — {} ops/stage-rank, \
+                     p2p + congruence + deadlock + memory all pass",
+                    program.name,
+                    topo.n_ranks(),
+                    topo.stages,
+                    topo.dp,
+                    topo.tp,
+                    program.len() / topo.stages.max(1),
+                );
+            }
+            Ok(true)
+        }
+        Err(errors) => {
+            for e in &errors {
+                eprintln!("  {e}");
+            }
+            bail!(
+                "static verification FAILED for {policy} (layers {}, stages {}, mb {}, dp {dp}, \
+                 tp {}, partition {}, offload {}): {} error(s) above",
+                spec.d_l,
+                spec.n_l,
+                spec.n_mu,
+                spec.tp,
+                spec.partition,
+                spec.offload,
+                errors.len(),
+            )
+        }
+    }
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let cluster = cluster_from(args)?;
+    let shape = XModel::new(args.get_usize("x", 32)?).shape();
+    // Shape: --spec LAYERS:STAGES:MB shorthand, individual flags win.
+    let (mut d_l, mut n_l, mut n_mu) = (16usize, 4usize, 8usize);
+    if let Some(spec) = args.get("spec") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        anyhow::ensure!(parts.len() == 3, "--spec wants LAYERS:STAGES:MB, got {spec}");
+        d_l = parts[0].parse().with_context(|| format!("--spec layers '{}'", parts[0]))?;
+        n_l = parts[1].parse().with_context(|| format!("--spec stages '{}'", parts[1]))?;
+        n_mu = parts[2].parse().with_context(|| format!("--spec mb '{}'", parts[2]))?;
+    }
+    let d_l = args.get_usize("layers", d_l)?;
+    let n_l = args.get_usize("stages", n_l)?;
+    let n_mu = args.get_usize("mb", n_mu)?;
+    let chunks = args.get_usize("chunks", 2)?;
+    let policy = args.get("policy").unwrap_or("all");
+    let policies: Vec<&str> = if policy == "all" {
+        vec!["baseline", "improved", "1f1b", "interleaved"]
+    } else {
+        vec![policy]
+    };
+
+    if args.has("grid") {
+        // The acceptance sweep: every policy x stages x dp x tp x
+        // {plain, partition, offload} world that is applicable must
+        // verify clean.
+        let (mut verified, mut skipped) = (0usize, 0usize);
+        for policy in &policies {
+            for stages in [1usize, 2, 3, 4] {
+                if d_l % stages != 0 || n_mu < stages {
+                    skipped += 1;
+                    continue;
+                }
+                for dp in [1usize, 2] {
+                    for tp in [1usize, 2] {
+                        for (partition, offload) in [(false, false), (true, false), (false, true)]
+                        {
+                            let spec = ScheduleSpec {
+                                d_l,
+                                n_l: stages,
+                                n_mu,
+                                tp,
+                                partition,
+                                offload,
+                                data_parallel: dp > 1,
+                            };
+                            if verify_world(
+                                &cluster, &shape, policy, &spec, dp, chunks, false,
+                            )? {
+                                verified += 1;
+                            } else {
+                                skipped += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        println!(
+            "verified {verified} whole worlds clean ({skipped} inapplicable combinations \
+             skipped) across {} policies x stages {{1,2,3,4}} x dp {{1,2}} x tp {{1,2}} x \
+             {{plain, partition, offload}}",
+            policies.len(),
+        );
+        return Ok(());
+    }
+
+    let dp = args.get_usize("dp", 1)?;
+    let tp = args.get_usize("tp", 1)?;
+    anyhow::ensure!(d_l % n_l == 0, "--layers {d_l} not divisible by --stages {n_l}");
+    anyhow::ensure!(n_mu >= n_l, "--mb {n_mu} must be at least --stages {n_l}");
+    let spec = ScheduleSpec {
+        d_l,
+        n_l,
+        n_mu,
+        tp,
+        partition: args.has("partition"),
+        offload: args.has("offload"),
+        data_parallel: dp > 1,
+    };
+    for policy in &policies {
+        if !verify_world(&cluster, &shape, policy, &spec, dp, chunks, true)? {
+            println!(
+                "skip: {policy} is not applicable to layers {d_l} / stages {n_l} / \
+                 chunks {chunks}"
+            );
+        }
     }
     Ok(())
 }

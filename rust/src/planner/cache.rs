@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
+use crate::collective::Topology;
 use crate::costmodel::Strategy;
 use crate::schedule::{
     layered_ga, lower, modular_pipeline, standard_ga, Schedule, ScheduleProgram, ScheduleSpec,
@@ -104,6 +105,12 @@ const MAX_ENTRIES: usize = 512;
 #[derive(Debug, Default)]
 pub struct LoweringCache {
     map: Mutex<HashMap<Key, Arc<ScheduleProgram>>>,
+    /// Whole-world structural verdicts ([`crate::analysis`]) for the
+    /// same snapped shapes. The structural checks are topology-shape
+    /// invariant (dp/tp clamp to ≤ 2 inside the verifier), so a verdict
+    /// is as cacheable as the lowering itself — the planner's static
+    /// filter costs one hash lookup per candidate after the first.
+    verdicts: Mutex<HashMap<Key, Result<(), String>>>,
     hits: AtomicUsize,
     misses: AtomicUsize,
 }
@@ -140,6 +147,35 @@ impl LoweringCache {
             map.clear();
         }
         Arc::clone(map.entry(key).or_insert(program))
+    }
+
+    /// Whole-world structural verification
+    /// ([`crate::analysis::verify_structural`]) of the program `spec`
+    /// lowers to, memoised under the same key as the lowering. The
+    /// replicated-axis degrees only matter up to "is the axis on" —
+    /// exactly the information [`Key`] already captures — so the
+    /// verdict for dp/tp degree 2 answers for every higher degree.
+    pub fn verify_structural(&self, kind: PolicyKind, spec: &ScheduleSpec) -> Result<(), String> {
+        let key = Key::new(kind, spec);
+        if let Some(v) = self.verdicts.lock().expect("verdict cache poisoned").get(&key) {
+            return v.clone();
+        }
+        // Miss: verify outside the lock (the lowering itself may also
+        // miss and lower). Racing verifiers agree — first insert wins.
+        let program = self.lower(kind, spec);
+        let topo = Topology::new(
+            program.n_stages,
+            if spec.data_parallel { 2 } else { 1 },
+            if spec.tp > 1 { 2 } else { 1 },
+        );
+        let verdict =
+            crate::analysis::verify_structural(&program, topo).map_err(|e| e.to_string());
+        let mut verdicts = self.verdicts.lock().expect("verdict cache poisoned");
+        if verdicts.len() >= MAX_ENTRIES {
+            verdicts.clear();
+        }
+        verdicts.entry(key).or_insert_with(|| verdict.clone());
+        verdict
     }
 
     /// Cache hits so far (lifetime of this cache instance).

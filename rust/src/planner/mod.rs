@@ -31,7 +31,11 @@
 //!   [`search::search_fastest_exhaustive`], so the optimised search
 //!   provably returns the same plan (`tests/planner_parity.rs`).
 //! * **simulate** ([`simloop`]): candidate plans are re-ranked by real
-//!   simulated makespan. Lowerings are memoised in
+//!   simulated makespan, after the whole-world static verifier
+//!   ([`search::statically_valid`] → [`crate::analysis`]) rejects any
+//!   statically-invalid plan — structural verdicts are memoised in
+//!   [`cache::LoweringCache`] alongside the lowerings, so the filter
+//!   costs one hash lookup per candidate. Lowerings are memoised in
 //!   [`cache::LoweringCache`] — the cache hits whenever two candidates
 //!   snap to the same executable spec (n_a/n_b/b_μ differences only
 //!   change the cost table, not the schedule), which in a typical sweep
@@ -57,7 +61,9 @@ pub use reliability::{
     ReliablePlan, CLASSIC_CKPT_INTERVAL_STEPS,
 };
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
-pub use search::{search_fastest, search_fastest_exhaustive, search_fastest_tp};
+pub use search::{
+    search_fastest, search_fastest_exhaustive, search_fastest_tp, statically_valid,
+};
 pub use simloop::{
-    lower_plan, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,
+    lower_plan, plan_spec, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,
 };

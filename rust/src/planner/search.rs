@@ -35,9 +35,14 @@ use crate::costmodel::{MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
 use crate::hardware::ClusterSpec;
 use crate::model::XModel;
 
+use crate::analysis::{check_program_memory, MemoryModel};
+use crate::sim::CostTable;
+
+use super::cache::{LoweringCache, PolicyKind};
 use super::candidates::{optimistic_secs, Candidates};
 use super::par::{in_parallel_region, mark_worker, planner_threads};
 use super::rules::Plan;
+use super::simloop::plan_spec;
 
 /// A candidate must be this factor faster to displace the incumbent.
 const STRICT_IMPROVE: f64 = 0.9999;
@@ -105,6 +110,35 @@ pub fn search_fastest_exhaustive(
         }
     }
     best
+}
+
+/// Whole-world static verification of one candidate plan — the
+/// planner-side hook of [`crate::analysis`]. Snaps the plan to the
+/// executable spec the simulator would run ([`plan_spec`]), checks the
+/// structural properties (p2p matching, collective congruence, global
+/// deadlock freedom) through the memoised verdict in
+/// [`LoweringCache::global`], then bounds the per-rank peak memory
+/// against the device budget with the candidate's own cost table.
+///
+/// For generated schedules this accepts everything the planner's
+/// analytic feasibility checks admit: the structural checks hold by
+/// construction, and the static memory bound is provably ≤ the
+/// analytic [`MemoryBreakdown`] footprint the search already requires
+/// to fit (see [`crate::analysis`]'s memory docs). The filter therefore
+/// only bites on hand-built or corrupted plans — which is the point:
+/// statically-invalid plans never reach the simulator, let alone a
+/// cluster.
+pub fn statically_valid(model: &XModel, cluster: &ClusterSpec, plan: &Plan) -> Result<(), String> {
+    let shape = model.shape();
+    let (cfg, spec) = plan_spec(shape.d_l, &plan.cfg);
+    let kind = PolicyKind::for_config(cfg.strategy, cfg.n_l);
+    let cache = LoweringCache::global();
+    cache.verify_structural(kind, &spec)?;
+    let program = cache.lower(kind, &spec);
+    let costs = CostTable::new(&shape, &cfg, cluster);
+    let memory = MemoryBreakdown::evaluate(&shape, &cfg);
+    let budget = MemoryModel::new(&costs, &memory, cluster.gpu.memory_bytes, cfg.offload);
+    check_program_memory(&program, &budget).map_err(|e| e.to_string())
 }
 
 /// The shared selection fold step. `plan` displaces `best` when it is

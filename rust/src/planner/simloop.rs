@@ -48,8 +48,11 @@ pub struct SimulatedPlan {
 
 /// Snap a planner configuration to an executable schedule shape: the
 /// pipeline degree must divide the layer count and the micro-batch count
-/// must feed every stage. Returns the adjusted config and spec.
-fn executable_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec) {
+/// must feed every stage. Returns the adjusted config and spec. Public
+/// so the static verifier ([`super::search::statically_valid`], the
+/// `repro verify` CLI) analyses exactly the shape the planner would
+/// execute.
+pub fn plan_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec) {
     let mut cfg = *cfg;
     if cfg.strategy == Strategy::Partitioned {
         cfg.n_l = 1; // §5: the partitioned approach forgoes pipelining
@@ -86,7 +89,7 @@ fn executable_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec)
 /// costs one hash lookup.
 pub fn lower_plan(model: &XModel, plan: &Plan) -> (TrainConfig, Arc<ScheduleProgram>) {
     let d_l = model.shape().d_l;
-    let (cfg, spec) = executable_spec(d_l, &plan.cfg);
+    let (cfg, spec) = plan_spec(d_l, &plan.cfg);
     let kind = PolicyKind::for_config(cfg.strategy, cfg.n_l);
     (cfg, LoweringCache::global().lower(kind, &spec))
 }
@@ -132,17 +135,30 @@ pub fn simulate_plan_with(
 /// Re-rank candidate plans by simulated seconds-per-sequence and return
 /// the winner (first of equals, so the result is deterministic).
 /// Candidates simulate concurrently; returns `None` on an empty set.
+///
+/// Each candidate first passes the whole-world static verifier
+/// ([`super::search::statically_valid`]): a statically-invalid plan is
+/// dropped before any simulation runs. For generated schedules the
+/// filter accepts everything the planner's own feasibility checks
+/// admit (the static memory bound is provably no larger than the
+/// analytic one), so the selected plan is identical with or without
+/// the filter — `tests/analysis.rs` proves it on the planner-parity
+/// configurations.
 pub fn rank_by_simulation(
     model: &XModel,
     cluster: &ClusterSpec,
     candidates: &[Plan],
 ) -> Option<SimulatedPlan> {
     let sims = par_map_with(candidates, SimScratch::new, |scratch, _, plan| {
-        simulate_plan_with(model, cluster, plan, scratch)
+        super::search::statically_valid(model, cluster, plan)
+            .ok()
+            .map(|()| simulate_plan_with(model, cluster, plan, scratch))
     });
     // `total_cmp`: a NaN cost (degenerate schedule) sorts deterministically
     // instead of panicking mid-sweep.
-    sims.into_iter().min_by(|a, b| a.secs_per_sequence.total_cmp(&b.secs_per_sequence))
+    sims.into_iter()
+        .flatten()
+        .min_by(|a, b| a.secs_per_sequence.total_cmp(&b.secs_per_sequence))
 }
 
 #[cfg(test)]

@@ -162,6 +162,20 @@ fn prepare(cfg: &TrainerConfig) -> Result<Prepared> {
     program
         .check_inorder_executable()
         .map_err(|e| anyhow::anyhow!("schedule would deadlock in-order workers: {e:?}"))?;
+    // Debug builds additionally verify the *whole world* before any
+    // worker launches: the program composed over every rank of this
+    // run's {stages, dp, tp} grid must have matched p2p channels,
+    // congruent collective sequences on every ring, and a cycle-free
+    // cross-rank wait-for graph. Release builds skip it — the planner
+    // already filters statically-invalid plans, and the check is
+    // O(world) on the launch path.
+    #[cfg(debug_assertions)]
+    {
+        let topo = crate::collective::Topology::new(cfg.n_l, cfg.n_b, cfg.tp);
+        if let Err(e) = crate::analysis::verify_structural(&program, topo) {
+            panic!("whole-world static verification failed before launch: {e}");
+        }
+    }
 
     // Checkpoint store: the durable file tier when a directory is given,
     // else the in-process CPU-memory tier. Needed to execute OffloadStore

@@ -44,7 +44,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::collective::{CommWorld, RingGroup};
+use crate::collective::{CommWorld, Rank, RingGroup};
 use crate::data::Corpus;
 use crate::offload::store::{
     assemble, slot_embed, slot_head, slot_layer, slot_pos, StateRecord, StateStore,
@@ -122,18 +122,29 @@ pub struct WorkerStats {
 /// rings deliver in program order, so an identity mismatch is a
 /// schedule/engine bug; a wrong element count would otherwise surface
 /// later as a shape error deep inside PJRT (or, for gradients, silently
-/// skew an accumulation). `got`/`want` are (layer, micro-batch, len).
+/// skew an accumulation). `got`/`want` are (layer, micro-batch, len);
+/// `peer` is the rank whose send this receive pairs with and `op_id`
+/// the receiving op's arena id — a payload error on a thousand-rank
+/// job must name where to look, not just what went wrong.
 fn check_payload(
     kind: &str,
+    peer: Rank,
+    op_id: u32,
     got: (usize, usize, usize),
     want: (usize, usize, usize),
 ) -> Result<()> {
     let ((l, mb, len), (wl, wmb, wlen)) = (got, want);
+    let from = format!(
+        "from peer rank(stage {}, dp {}, tp {}) at op {op_id}",
+        peer.stage, peer.dp, peer.tp
+    );
     if l != wl || mb != wmb {
-        bail!("{kind} ring out of order: got ({l},{mb}), want ({wl},{wmb})");
+        bail!("{kind} ring out of order {from}: got ({l},{mb}), want ({wl},{wmb})");
     }
     if len != wlen {
-        bail!("bad {kind} payload for ({l},{mb}): {len} elements, want {wlen}");
+        bail!(
+            "bad {kind} payload for ({l},{mb}) {from}: got {len} elements, expected {wlen}"
+        );
     }
     Ok(())
 }
@@ -640,7 +651,9 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 Op::RecvAct { layer, mb } => {
                     let (l, m_, y) =
                         ctx.world.pipeline().recv_act().context("act ring closed")?;
-                    check_payload("act", (l, m_, y.len()), (layer, mb, act_elems))?;
+                    let peer =
+                        Rank { stage: prog.stage_of(layer - 1), dp: dp_rank, tp: tp_rank };
+                    check_payload("act", peer, op_id, (l, m_, y.len()), (layer, mb, act_elems))?;
                     inbox.insert((layer, mb), y);
                 }
                 Op::Bwd { layer, mb } => {
@@ -760,7 +773,9 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                     // The output-gradient has the activation's shape; an
                     // unchecked length here skewed nothing visibly until
                     // layer_bwd rejected the tensor much later.
-                    check_payload("grad", (l, m_, g.len()), (layer, mb, act_elems))?;
+                    let peer =
+                        Rank { stage: prog.stage_of(layer + 1), dp: dp_rank, tp: tp_rank };
+                    check_payload("grad", peer, op_id, (l, m_, g.len()), (layer, mb, act_elems))?;
                     douts.insert((layer, mb), g);
                 }
                 Op::TensorAllReduce { layer, mb, bwd } => {
@@ -1046,25 +1061,33 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
 #[cfg(test)]
 mod tests {
     use super::{add_into, check_payload, tp_all_reduce, tp_reduce_spans};
-    use crate::collective::ring_group;
+    use crate::collective::{ring_group, Rank};
 
-    #[test]
-    fn payload_check_accepts_exact_match_only() {
-        assert!(check_payload("act", (3, 2, 64), (3, 2, 64)).is_ok());
-        // Identity mismatches.
-        assert!(check_payload("act", (4, 2, 64), (3, 2, 64)).is_err());
-        assert!(check_payload("act", (3, 1, 64), (3, 2, 64)).is_err());
-        // Size mismatches — both directions (a short *gradient* payload
-        // used to be accepted silently, unlike activations).
-        assert!(check_payload("grad", (3, 2, 63), (3, 2, 64)).is_err());
-        assert!(check_payload("grad", (3, 2, 65), (3, 2, 64)).is_err());
+    fn peer() -> Rank {
+        Rank { stage: 2, dp: 1, tp: 0 }
     }
 
     #[test]
-    fn payload_check_reports_what_and_where() {
-        let err = check_payload("grad", (1, 0, 10), (1, 0, 20)).unwrap_err();
+    fn payload_check_accepts_exact_match_only() {
+        assert!(check_payload("act", peer(), 7, (3, 2, 64), (3, 2, 64)).is_ok());
+        // Identity mismatches.
+        assert!(check_payload("act", peer(), 7, (4, 2, 64), (3, 2, 64)).is_err());
+        assert!(check_payload("act", peer(), 7, (3, 1, 64), (3, 2, 64)).is_err());
+        // Size mismatches — both directions (a short *gradient* payload
+        // used to be accepted silently, unlike activations).
+        assert!(check_payload("grad", peer(), 7, (3, 2, 63), (3, 2, 64)).is_err());
+        assert!(check_payload("grad", peer(), 7, (3, 2, 65), (3, 2, 64)).is_err());
+    }
+
+    #[test]
+    fn payload_check_reports_what_where_and_who() {
+        let err = check_payload("grad", peer(), 41, (1, 0, 10), (1, 0, 20)).unwrap_err();
         let msg = format!("{err:#}");
+        // What went wrong: kind + actual/expected element counts.
         assert!(msg.contains("grad") && msg.contains("10") && msg.contains("20"), "{msg}");
+        // Where to look: the peer's full grid coordinates and the op id.
+        assert!(msg.contains("stage 2") && msg.contains("dp 1") && msg.contains("tp 0"), "{msg}");
+        assert!(msg.contains("op 41"), "{msg}");
     }
 
     #[test]

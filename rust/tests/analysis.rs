@@ -1,0 +1,358 @@
+//! Whole-world static analyzer tests: adversarial mutations must be
+//! rejected with diagnostics naming the offending rank and op, every
+//! generated world must be accepted, and the planner's static filter
+//! must not change which plan the search selects.
+
+use lga_mpp::analysis::{verify_program, MemoryModel, WorldError, WorldModel};
+use lga_mpp::collective::{Rank, Topology};
+use lga_mpp::costmodel::{MemoryBreakdown, Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::planner::{
+    fastest_plan, rank_by_simulation, search_fastest, simulate_plan, statically_valid, Plan,
+    SimulatedPlan,
+};
+use lga_mpp::report::menu_for;
+use lga_mpp::schedule::{
+    interleaved_1f1b, interleaved_applicable, layered_ga, lower, modular_pipeline, one_f_one_b,
+    standard_ga, Op, Schedule, ScheduleProgram, ScheduleSpec,
+};
+use lga_mpp::sim::{CostTable, WireBytes};
+
+fn spec(d_l: usize, n_l: usize, n_mu: usize, tp: usize) -> ScheduleSpec {
+    ScheduleSpec { d_l, n_l, n_mu, tp, partition: false, offload: false, data_parallel: true }
+}
+
+fn program(s: &Schedule) -> ScheduleProgram {
+    lower(s).expect("generated schedules lower")
+}
+
+fn costs_for(sp: &ScheduleSpec, dp: usize) -> CostTable {
+    let cfg = TrainConfig {
+        strategy: Strategy::Improved,
+        n_b: dp,
+        n_l: sp.n_l,
+        n_a: sp.tp,
+        n_mu: sp.n_mu,
+        b_mu: 1.0,
+        offload: sp.offload,
+        partition: sp.partition,
+    };
+    CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
+}
+
+// ---- mutation class 1: dropped receive ---------------------------------
+
+#[test]
+fn dropped_recv_is_rejected_naming_the_channel() {
+    let sp = spec(16, 4, 8, 1);
+    let prog = program(&modular_pipeline(&sp));
+    let topo = Topology::new(4, 1, 1);
+    let mut world = WorldModel::compose(&prog, topo, WireBytes::default()).unwrap();
+    assert!(world.verify(None).is_empty(), "unmutated world must be clean");
+
+    let victim = topo.index(Rank { stage: 1, dp: 0, tp: 0 });
+    let pos = world
+        .find_op(victim, |op| matches!(op, Op::RecvAct { .. }))
+        .expect("stage 1 receives activations");
+    let dropped = world.remove_op(victim, pos);
+    assert!(matches!(dropped, Op::RecvAct { .. }));
+
+    let errors = world.verify(None);
+    let p2p = errors
+        .iter()
+        .find_map(|e| match e {
+            WorldError::P2p { from, to, .. } => Some((from, to)),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("expected a p2p error, got {errors:?}"));
+    // The diagnostic names the exact channel: sender stage 0, starved
+    // receiver stage 1.
+    assert_eq!((p2p.0.stage, p2p.1.stage), (0, 1));
+    let msg = errors.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("\n");
+    assert!(msg.contains("rank(stage 0") && msg.contains("rank(stage 1"), "{msg}");
+}
+
+// ---- mutation class 2: reordered collective ----------------------------
+
+#[test]
+fn reordered_tensor_all_reduce_is_rejected_naming_the_rank() {
+    let sp = spec(16, 4, 8, 2);
+    let prog = program(&modular_pipeline(&sp));
+    let topo = Topology::new(4, 1, 2);
+    let mut world = WorldModel::compose(&prog, topo, WireBytes::default()).unwrap();
+    assert!(world.verify(None).is_empty(), "unmutated world must be clean");
+
+    // Swap one rank's first two TensorAllReduce ops: its tp ring peers
+    // now issue a different sequence — the classic whole-ring hang.
+    let victim = topo.index(Rank { stage: 2, dp: 0, tp: 1 });
+    let tars: Vec<usize> = world.ranks[victim]
+        .ops
+        .iter()
+        .enumerate()
+        .filter(|(_, op)| matches!(op, Op::TensorAllReduce { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    assert!(tars.len() >= 2, "need two collectives to reorder");
+    assert_ne!(
+        world.ranks[victim].ops[tars[0]].to_string(),
+        world.ranks[victim].ops[tars[1]].to_string()
+    );
+    world.swap_ops(victim, tars[0], tars[1]);
+
+    let errors = world.verify(None);
+    let bad = errors
+        .iter()
+        .find_map(|e| match e {
+            WorldError::Collective { axis, b, index, .. } => Some((*axis, b, *index)),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("expected a collective error, got {errors:?}"));
+    assert_eq!(bad.0, "tp");
+    assert_eq!(*bad.1, Rank { stage: 2, dp: 0, tp: 1 });
+    assert_eq!(bad.2, 0, "divergence is at the first swapped instance");
+    let msg = errors.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("\n");
+    assert!(msg.contains("rank(stage 2, dp 0, tp 1)"), "{msg}");
+}
+
+// ---- mutation class 3: payload size mismatch ---------------------------
+
+#[test]
+fn undersized_payload_is_rejected_naming_peer_and_counts() {
+    let sp = spec(16, 4, 8, 1);
+    let prog = program(&modular_pipeline(&sp));
+    let topo = Topology::new(4, 1, 1);
+    let wire = costs_for(&sp, 1).wire;
+    assert!(wire.send_act > 0.0);
+    let mut world = WorldModel::compose(&prog, topo, wire).unwrap();
+    assert!(world.verify(None).is_empty(), "unmutated world must be clean");
+
+    // Stage 0 halves what it puts on the activation wire.
+    let victim = topo.index(Rank { stage: 0, dp: 0, tp: 0 });
+    world.ranks[victim].wire.send_act /= 2.0;
+
+    let errors = world.verify(None);
+    let pay = errors
+        .iter()
+        .find_map(|e| match e {
+            WorldError::Payload { from, to, sent_elems, expected_elems, .. } => {
+                Some((from, to, *sent_elems, *expected_elems))
+            }
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("expected a payload error, got {errors:?}"));
+    assert_eq!((pay.0.stage, pay.1.stage), (0, 1));
+    assert!((pay.2 - pay.3 / 2.0).abs() < 1e-9, "sender halved: {} vs {}", pay.2, pay.3);
+    let msg = errors.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("\n");
+    assert!(msg.contains("rank(stage 0") && msg.contains("elements"), "{msg}");
+}
+
+// ---- mutation class 4: memory overflow ---------------------------------
+
+#[test]
+fn overfull_stage_is_rejected_naming_rank_and_op() {
+    let sp = spec(16, 4, 8, 1);
+    let prog = program(&standard_ga(&sp));
+    let topo = Topology::new(4, 1, 1);
+    let world = WorldModel::compose(&prog, topo, WireBytes::default()).unwrap();
+
+    // A budget the stashed checkpoints cannot fit: standard GA holds
+    // every forward's checkpoint at once (4 layers x 8 micro-batches).
+    let tiny = MemoryModel {
+        budget: 10.0,
+        state_bytes: 4.0,
+        checkpoint_bytes: 3.0,
+        payload_bytes: 1.0,
+        live_bytes: 2.0,
+    };
+    let errors = world.verify(Some(&tiny));
+    let mem = errors
+        .iter()
+        .find_map(|e| match e {
+            WorldError::Memory { rank, op, peak_bytes, budget_bytes, .. } => {
+                Some((rank, op, *peak_bytes, *budget_bytes))
+            }
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("expected a memory error, got {errors:?}"));
+    assert!(mem.2 > mem.3);
+    assert!(!mem.1.is_empty(), "error names the op where the peak is reached");
+    let msg = errors.iter().map(|e| e.to_string()).collect::<Vec<_>>().join("\n");
+    assert!(msg.contains(&format!("rank(stage {}", mem.0.stage)), "{msg}");
+    assert!(msg.contains("budget"), "{msg}");
+}
+
+// ---- property: every generated world is accepted -----------------------
+
+#[test]
+fn all_generators_compose_to_accepted_worlds() {
+    // All five generators x stages 1..4 x dp {1,2} x tp {1,2} x
+    // {partition, offload}: every applicable combination must lower to
+    // a world the analyzer accepts — structurally and under the real
+    // device budget.
+    let cluster = ClusterSpec::reference();
+    let shape = XModel::new(32).shape();
+    let (d_l, n_mu, chunks) = (12usize, 4usize, 2usize);
+    let mut verified = 0usize;
+    for stages in 1..=4usize {
+        if d_l % stages != 0 || n_mu < stages {
+            continue;
+        }
+        for dp in [1usize, 2] {
+            for tp in [1usize, 2] {
+                for (partition, offload) in
+                    [(false, false), (true, false), (false, true), (true, true)]
+                {
+                    let sp = ScheduleSpec {
+                        d_l,
+                        n_l: stages,
+                        n_mu,
+                        tp,
+                        partition,
+                        offload,
+                        data_parallel: dp > 1,
+                    };
+                    let schedules: Vec<(&str, Option<Schedule>)> = vec![
+                        ("standard_ga", Some(standard_ga(&sp))),
+                        ("layered_ga", (stages == 1).then(|| layered_ga(&sp))),
+                        ("modular_pipeline", Some(modular_pipeline(&sp))),
+                        ("one_f_one_b", Some(one_f_one_b(&sp))),
+                        (
+                            "interleaved_1f1b",
+                            interleaved_applicable(&sp, chunks)
+                                .then(|| interleaved_1f1b(&sp, chunks)),
+                        ),
+                    ];
+                    for (name, schedule) in schedules {
+                        let Some(schedule) = schedule else { continue };
+                        let prog = program(&schedule);
+                        let topo = Topology::new(stages, dp, tp);
+                        let costs = costs_for(&sp, dp);
+                        let cfg = TrainConfig {
+                            strategy: Strategy::Improved,
+                            n_b: dp,
+                            n_l: stages,
+                            n_a: tp,
+                            n_mu,
+                            b_mu: 1.0,
+                            offload,
+                            partition,
+                        };
+                        let memory = MemoryBreakdown::evaluate(&shape, &cfg);
+                        let budget =
+                            MemoryModel::new(&costs, &memory, cluster.gpu.memory_bytes, offload);
+                        let tag = format!(
+                            "{name} s{stages} dp{dp} tp{tp} part={partition} off={offload}"
+                        );
+                        match verify_program(&prog, topo, costs.wire, Some(&budget)) {
+                            Ok(()) => verified += 1,
+                            Err(errors) => {
+                                panic!("{tag}: rejected a generated world:\n{errors:?}")
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(verified > 150, "grid unexpectedly small: {verified} worlds");
+}
+
+// ---- planner parity: the static filter changes nothing -----------------
+
+fn rank_unfiltered(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    candidates: &[Plan],
+) -> Option<SimulatedPlan> {
+    candidates
+        .iter()
+        .map(|p| simulate_plan(model, cluster, p))
+        .min_by(|a, b| a.secs_per_sequence.total_cmp(&b.secs_per_sequence))
+}
+
+#[test]
+fn static_filter_preserves_planner_selection() {
+    // On the planner-parity configurations (cluster x strategy at X_32)
+    // every candidate the search produces must pass the static verifier,
+    // and the filtered ranking must select exactly the plan the
+    // unfiltered ranking selects.
+    let clusters = [
+        (ClusterSpec::reference(), "reference"),
+        (ClusterSpec::ethernet(), "ethernet"),
+        (ClusterSpec::unlimited_node(), "unlimited_node"),
+    ];
+    let model = XModel::new(32);
+    for (cluster, cname) in &clusters {
+        for strategy in Strategy::ALL {
+            let menu = menu_for(strategy);
+            let mut cands = Vec::new();
+            cands.extend(search_fastest(&model, cluster, strategy, menu));
+            cands.extend(fastest_plan(&model, cluster, strategy, menu));
+            if cands.is_empty() {
+                continue;
+            }
+            let tag = format!("{cname}/{strategy:?}");
+            for plan in &cands {
+                if let Err(e) = statically_valid(&model, cluster, plan) {
+                    panic!("{tag}: search candidate rejected by the static filter: {e}");
+                }
+            }
+            let filtered = rank_by_simulation(&model, cluster, &cands).expect("winner");
+            let unfiltered = rank_unfiltered(&model, cluster, &cands).expect("winner");
+            assert_eq!(
+                filtered.plan.cfg, unfiltered.plan.cfg,
+                "{tag}: the static filter changed the selected plan"
+            );
+            assert_eq!(
+                filtered.secs_per_sequence.to_bits(),
+                unfiltered.secs_per_sequence.to_bits(),
+                "{tag}: the static filter changed the winning time"
+            );
+        }
+    }
+}
+
+// ---- deadlock: a cross-rank cycle no per-rank check can see ------------
+
+#[test]
+fn cross_rank_wait_cycle_reports_a_minimal_cycle() {
+    // Build a world where every rank stays locally in-order executable
+    // and every channel's send/recv sequences still agree, but two
+    // ranks wait on each other: rotate stage 0's first RecvGrad ahead
+    // of its first SendAct. Stage 0 then blocks on a gradient that
+    // stage 1 can only produce after consuming the very activation
+    // stage 0 is now withholding — invisible to every per-rank and
+    // per-channel check, only the cross-rank wait-for graph sees it.
+    let sp = spec(8, 2, 4, 1);
+    let prog = program(&one_f_one_b(&sp));
+    let topo = Topology::new(2, 1, 1);
+    let mut world = WorldModel::compose(&prog, topo, WireBytes::default()).unwrap();
+    assert!(world.verify(None).is_empty(), "unmutated world must be clean");
+
+    let r0 = topo.index(Rank { stage: 0, dp: 0, tp: 0 });
+    let send = world.find_op(r0, |op| matches!(op, Op::SendAct { .. })).unwrap();
+    let recv = world.find_op(r0, |op| matches!(op, Op::RecvGrad { .. })).unwrap();
+    assert!(send < recv, "1F1B sends the first activation before any grad arrives");
+    // Repeated adjacent swaps = a stable rotate: the recv lands at the
+    // send's position, everything in between shifts one slot later, and
+    // both channels' internal send/recv orders are untouched.
+    for i in ((send + 1)..=recv).rev() {
+        world.swap_ops(r0, i - 1, i);
+    }
+
+    let errors = world.verify(None);
+    let cycle = errors
+        .iter()
+        .find_map(|e| match e {
+            WorldError::Deadlock { cycle } => Some(cycle),
+            _ => None,
+        })
+        .unwrap_or_else(|| panic!("expected a deadlock, got {errors:?}"));
+    assert!(cycle.len() >= 2, "a cross-rank cycle spans at least two ops: {cycle:?}");
+    let joined = cycle.join(" -> ");
+    assert!(
+        joined.contains("rank(stage 0") && joined.contains("rank(stage 1"),
+        "cycle must name both ranks: {joined}"
+    );
+}
