@@ -1,0 +1,96 @@
+//! Perf bench: continuous-batching serving latency vs offered load.
+//!
+//! Replays seeded Poisson traces through the serving batcher
+//! ([`lga_mpp::serve::run_trace`]) on a fixed `{stages, tp}` deployment
+//! at a sweep of offered rates around the deployment's saturation
+//! point, and records the p50/p99 time-to-first-token, per-token
+//! latency and tokens/sec at each rate. Because wave latencies are
+//! memoised simulations of the compiled prefill/decode schedules, the
+//! replay itself is pure arithmetic — the bench also times it to keep
+//! the batcher's own overhead honest (a thousand-request trace must
+//! replay in well under a second).
+//!
+//! Acceptance: p99 TTFT is monotonically non-decreasing in offered
+//! rate, and the saturated run's throughput is within 1% of the
+//! decode-bound ceiling.
+//!
+//! Run via `cargo bench --bench serve_latency`.
+
+use std::time::Instant;
+
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::serve::{run_trace, ServeCosts, Trace};
+use lga_mpp::report::BenchJson;
+
+fn main() {
+    let mut json = BenchJson::new("serve_latency");
+    let shape = XModel::new(16).shape();
+    let cluster = ClusterSpec::reference();
+    let (stages, tp, max_batch) = (4usize, 1usize, 8usize);
+    let (n_requests, prompt, decode) = (1000usize, 64usize, 16usize);
+
+    // Saturation rate: one full batch of decode waves per wall-clock
+    // second of wave time, requests/sec.
+    let mut costs = ServeCosts::new(&shape, &cluster, stages, tp);
+    let wave = costs.decode_latency(max_batch);
+    let saturation = max_batch as f64 / (decode as f64 * wave);
+    println!(
+        "deployment stages {stages} x tp {tp}, cap {max_batch}: wave {:.3} ms, \
+         saturation ~{saturation:.1} req/s\n",
+        wave * 1e3
+    );
+
+    let mut last_p99 = 0.0f64;
+    let mut saturated_tps = 0.0f64;
+    for (i, mult) in [0.25f64, 0.5, 1.0, 2.0, 4.0].iter().enumerate() {
+        let rate = saturation * mult;
+        let trace = Trace::poisson(42, rate, n_requests, prompt, decode);
+        let t0 = Instant::now();
+        let r = run_trace(&shape, &cluster, stages, tp, max_batch, &trace)
+            .expect("reference deployment must be feasible");
+        let replay = t0.elapsed().as_secs_f64();
+        println!(
+            "rate {rate:>7.1} req/s ({mult:>4}x sat): ttft p50 {:>8.1} ms  p99 {:>8.1} ms  \
+             token p99 {:>6.1} ms  {:>8.1} tok/s  (replayed {n_requests} requests in {:.1} ms)",
+            r.ttft_p50 * 1e3,
+            r.ttft_p99 * 1e3,
+            r.token_p99 * 1e3,
+            r.tokens_per_sec,
+            replay * 1e3
+        );
+        assert_eq!(r.completed, n_requests, "the batcher may not drop requests");
+        assert!(
+            r.ttft_p99 >= last_p99 - 1e-9,
+            "p99 TTFT must not improve as offered load grows: {} after {last_p99}",
+            r.ttft_p99
+        );
+        assert!(replay < 1.0, "replaying {n_requests} requests took {replay:.2}s");
+        last_p99 = r.ttft_p99;
+        saturated_tps = r.tokens_per_sec;
+        json.push(&format!("rate_{i}_req_per_sec"), rate);
+        json.push(&format!("rate_{i}_ttft_p50_ms"), r.ttft_p50 * 1e3);
+        json.push(&format!("rate_{i}_ttft_p99_ms"), r.ttft_p99 * 1e3);
+        json.push(&format!("rate_{i}_token_p99_ms"), r.token_p99 * 1e3);
+        json.push(&format!("rate_{i}_tokens_per_sec"), r.tokens_per_sec);
+        json.push(&format!("rate_{i}_replay_secs"), replay);
+    }
+
+    // At 4x saturation the pipeline never starves: throughput must sit
+    // on the decode-bound ceiling (every wave full, prefills amortised).
+    let ceiling = max_batch as f64 / wave;
+    println!(
+        "\nsaturated throughput {saturated_tps:.1} tok/s vs decode-bound ceiling {ceiling:.1}"
+    );
+    json.push("decode_ceiling_tokens_per_sec", ceiling);
+    json.finish();
+    assert!(
+        saturated_tps <= ceiling * 1.01,
+        "throughput {saturated_tps:.1} cannot beat the decode-bound ceiling {ceiling:.1}"
+    );
+    assert!(
+        saturated_tps >= ceiling * 0.5,
+        "saturated throughput {saturated_tps:.1} too far under the ceiling {ceiling:.1} — \
+         prefill is dominating a decode-bound workload"
+    );
+}

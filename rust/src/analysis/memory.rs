@@ -22,7 +22,7 @@
 //!
 //! [`MemoryBreakdown`]: crate::costmodel::MemoryBreakdown
 
-use crate::costmodel::MemoryBreakdown;
+use crate::costmodel::{KvCacheModel, MemoryBreakdown};
 use crate::schedule::Op;
 use crate::sim::CostTable;
 
@@ -55,6 +55,32 @@ impl MemoryModel {
             budget,
             state_bytes: (if offload { 0.0 } else { mem.state }) + mem.buffers,
             checkpoint_bytes: if offload { 0.0 } else { costs.checkpoint_bytes },
+            payload_bytes: costs.wire.send_act,
+            live_bytes: costs.live_activation_bytes,
+        }
+    }
+
+    /// KV-aware model for a forward-only serving program. The walk's
+    /// stash term *is* the KV cache: every `Fwd` appends
+    /// `tokens_per_fwd` tokens' K/V for one layer (the whole prompt in
+    /// a prefill program, one token in a decode wave) and — with no
+    /// `Bwd` to release it — the stash grows monotonically, exactly
+    /// like the cache of an in-flight request. Cache already resident
+    /// when the program starts (`in_flight` requests at `context`
+    /// tokens, zero for a cold prefill) rides in the state term beside
+    /// the weights, so the verified peak is the residency at the *end*
+    /// of the program plus the transient compute/transfer terms.
+    pub fn serving(
+        kv: &KvCacheModel,
+        costs: &CostTable,
+        in_flight: usize,
+        context: usize,
+        tokens_per_fwd: usize,
+    ) -> Self {
+        MemoryModel {
+            budget: kv.budget,
+            state_bytes: kv.residency(in_flight, context),
+            checkpoint_bytes: tokens_per_fwd as f64 * kv.bytes_per_token_layer,
             payload_bytes: costs.wire.send_act,
             live_bytes: costs.live_activation_bytes,
         }
@@ -129,6 +155,63 @@ mod tests {
         let (peak, at) = rank_peak(&ops, &model(0.0, 1.0, 7.0, 2.0));
         assert_eq!(peak, 1.0 + 7.0);
         assert_eq!(at, 1);
+    }
+
+    #[test]
+    fn serving_walk_peak_is_the_final_kv_residency() {
+        use crate::costmodel::KvCacheModel;
+        use crate::model::XModel;
+        use crate::runtime::DType;
+        use crate::schedule::{decode_waves, lower, prefill_pipeline, ScheduleSpec};
+
+        let shape = XModel::new(8).shape();
+        let kv = KvCacheModel::new(&shape, 2, 1, DType::F32, f64::INFINITY);
+        let spec = ScheduleSpec {
+            d_l: shape.d_l,
+            n_l: 2,
+            n_mu: 3, // in-flight requests
+            tp: 1,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
+
+        // Prefill: cold cache, each Fwd appends a whole 16-token prompt.
+        let mut m = MemoryModel::serving(&kv, &costs_inf(), 3, 0, 16);
+        m.payload_bytes = 0.0;
+        m.live_bytes = 0.0;
+        let p = lower(&prefill_pipeline(&spec)).unwrap();
+        let ops: Vec<Op> = p.stage_ops(0).iter().map(|n| n.op).collect();
+        let (peak, _) = rank_peak(&ops, &m);
+        assert!((peak - kv.residency(3, 16)).abs() < 1e-6, "prefill peak {peak}");
+
+        // Decode: 3 requests already at 16 tokens, 2 more waves.
+        let mut m = MemoryModel::serving(&kv, &costs_inf(), 3, 16, 1);
+        m.payload_bytes = 0.0;
+        m.live_bytes = 0.0;
+        let d = lower(&decode_waves(&spec, 2)).unwrap();
+        let ops: Vec<Op> = d.stage_ops(0).iter().map(|n| n.op).collect();
+        let (peak, _) = rank_peak(&ops, &m);
+        assert!((peak - kv.residency(3, 18)).abs() < 1e-6, "decode peak {peak}");
+    }
+
+    /// A cost table only used for its payload/live fields, which the
+    /// serving walk tests zero out anyway.
+    fn costs_inf() -> CostTable {
+        use crate::costmodel::{Strategy, TrainConfig};
+        use crate::hardware::ClusterSpec;
+        use crate::model::XModel;
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 1,
+            n_l: 2,
+            n_a: 1,
+            n_mu: 1,
+            b_mu: 1.0,
+            offload: false,
+            partition: false,
+        };
+        CostTable::new(&XModel::new(8).shape(), &cfg, &ClusterSpec::reference())
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! KV-cache memory model for the serving workload.
+//!
+//! Inference replaces the training memory ledger wholesale: there is no
+//! optimizer state, no gradients, no activation checkpoints — the
+//! footprint is resident weights plus the per-request key/value cache,
+//! which grows by one (K, V) pair per layer per generated token and
+//! lives until the request completes. The KV cache is the serving
+//! analogue of the activation-checkpoint term the training model
+//! stashes between forward and backward: it is acquired by `Fwd` and
+//! — unlike training — never released by a `Bwd`, so a forward-only
+//! program's static memory walk shows exactly the monotone cache
+//! growth of a decode.
+//!
+//! All byte accounting routes through [`DType::bytes`], the same
+//! plumbing every other byte path in the repo uses, so a future
+//! half-precision cache automatically re-prices admission limits.
+
+use crate::model::TransformerShape;
+use crate::runtime::DType;
+
+/// Per-stage KV-cache accounting for one serving deployment
+/// `{stages, tp}` of a model shape.
+#[derive(Debug, Clone, Copy)]
+pub struct KvCacheModel {
+    /// Bytes one token adds to one layer's cache on one rank: K + V,
+    /// each `d_m` elements, sharded over the tensor-parallel group
+    /// (each tp rank holds its heads' slice).
+    pub bytes_per_token_layer: f64,
+    /// Layers resident on each pipeline stage (`d_l / stages`).
+    pub layers_per_stage: usize,
+    /// Resident weight bytes per rank: this stage's layers, sharded
+    /// over tp. Inference keeps no optimizer state or gradients.
+    pub weight_bytes: f64,
+    /// Device budget the residency is checked against.
+    pub budget: f64,
+}
+
+impl KvCacheModel {
+    /// Build the model for a deployment of `shape` over `stages`
+    /// pipeline stages at tensor-parallel degree `tp`, with per-element
+    /// width `dtype` and a per-device byte budget.
+    pub fn new(
+        shape: &TransformerShape,
+        stages: usize,
+        tp: usize,
+        dtype: DType,
+        budget: f64,
+    ) -> Self {
+        let stages = stages.max(1);
+        let tp = tp.max(1) as f64;
+        let elem = dtype.bytes() as f64;
+        let layers_per_stage = shape.d_l.div_ceil(stages);
+        KvCacheModel {
+            bytes_per_token_layer: 2.0 * shape.d_m() as f64 * elem / tp,
+            layers_per_stage,
+            weight_bytes: shape.params_per_layer() * layers_per_stage as f64 * elem / tp,
+            budget,
+        }
+    }
+
+    /// Cache bytes one request with `context` tokens holds on one rank
+    /// (all of this stage's layers).
+    pub fn request_bytes(&self, context: usize) -> f64 {
+        context as f64 * self.bytes_per_token_layer * self.layers_per_stage as f64
+    }
+
+    /// Total per-rank residency: weights plus the cache of `in_flight`
+    /// requests at `context` tokens each.
+    pub fn residency(&self, in_flight: usize, context: usize) -> f64 {
+        self.weight_bytes + in_flight as f64 * self.request_bytes(context)
+    }
+
+    /// Headroom left for cache after the weights.
+    pub fn cache_budget(&self) -> f64 {
+        (self.budget - self.weight_bytes).max(0.0)
+    }
+
+    /// Admission limit: the largest in-flight request count whose
+    /// full-context (`prompt + decode`) cache fits beside the weights.
+    /// Zero means the weights alone overflow (or a single request
+    /// cannot fit) — the deployment is infeasible at this context.
+    pub fn admission_limit(&self, context: usize) -> usize {
+        let per = self.request_bytes(context);
+        if self.budget < self.weight_bytes || per <= 0.0 {
+            return 0;
+        }
+        (self.cache_budget() / per).floor() as usize
+    }
+
+    /// Whether `in_flight` requests at full `context` fit.
+    pub fn fits(&self, in_flight: usize, context: usize) -> bool {
+        self.residency(in_flight, context) <= self.budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::XModel;
+
+    fn model(budget: f64) -> KvCacheModel {
+        KvCacheModel::new(&XModel::new(8).shape(), 2, 1, DType::F32, budget)
+    }
+
+    #[test]
+    fn per_token_bytes_follow_the_shape_and_dtype() {
+        let shape = XModel::new(8).shape();
+        let m = model(f64::INFINITY);
+        assert_eq!(m.bytes_per_token_layer, 2.0 * shape.d_m() as f64 * 4.0);
+        assert_eq!(m.layers_per_stage, shape.d_l / 2);
+        // tp shards both the weights and the cache.
+        let m2 = KvCacheModel::new(&shape, 2, 2, DType::F32, f64::INFINITY);
+        assert!((m.bytes_per_token_layer / m2.bytes_per_token_layer - 2.0).abs() < 1e-12);
+        assert!((m.weight_bytes / m2.weight_bytes - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residency_is_linear_in_requests_and_context() {
+        let m = model(f64::INFINITY);
+        let base = m.residency(0, 128);
+        assert_eq!(base, m.weight_bytes);
+        let one = m.residency(1, 128) - base;
+        assert!((m.residency(4, 128) - base - 4.0 * one).abs() < 1e-6);
+        assert!((m.residency(1, 256) - base - 2.0 * one).abs() < 1e-6);
+    }
+
+    #[test]
+    fn admission_limit_matches_the_residency_check() {
+        let m0 = model(f64::INFINITY);
+        // Budget for the weights plus ~5.5 requests of 64-token cache.
+        let budget = m0.weight_bytes + 5.5 * m0.request_bytes(64);
+        let m = model(budget);
+        let limit = m.admission_limit(64);
+        assert_eq!(limit, 5);
+        assert!(m.fits(limit, 64));
+        assert!(!m.fits(limit + 1, 64));
+    }
+
+    #[test]
+    fn overflowing_weights_admit_nothing() {
+        let m0 = model(f64::INFINITY);
+        let m = model(m0.weight_bytes * 0.5);
+        assert_eq!(m.admission_limit(64), 0);
+        assert!(!m.fits(1, 64));
+    }
+}

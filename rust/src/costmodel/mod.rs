@@ -5,9 +5,11 @@
 pub mod config;
 pub mod efficiency;
 pub mod intensity;
+pub mod kv;
 pub mod memory;
 
 pub use config::{ParallelismMenu, Strategy, TrainConfig};
+pub use kv::KvCacheModel;
 pub use efficiency::{bubble_fraction, estimate, overheads, Overheads, SpeedEstimate};
 pub use intensity::{
     checkpoint_offload_intensity, data_parallel_intensity, pipeline_parallel_intensity,

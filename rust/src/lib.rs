@@ -7,8 +7,10 @@
 //! The crate has two halves joined by one scheduling compiler:
 //!
 //! * an **analytical half** ([`model`], [`costmodel`], [`planner`],
-//!   [`offload`], [`elastic`], [`report`]) that reimplements the paper's
-//!   cost model and regenerates every table and figure;
+//!   [`offload`], [`elastic`], [`serve`], [`report`]) that reimplements
+//!   the paper's cost model, regenerates every table and figure, and
+//!   prices the forward-only serving workload (continuous batching +
+//!   SLO planning over the same compiled schedules);
 //! * an **executable half** ([`runtime`], [`collective`], [`partition`],
 //!   [`optim`], [`data`], [`trainer`]) — a real multi-worker training
 //!   runtime where the schedules drive numeric training of a transformer
@@ -69,5 +71,6 @@ pub mod planner;
 pub mod report;
 pub mod runtime;
 pub mod schedule;
+pub mod serve;
 pub mod sim;
 pub mod trainer;

@@ -19,16 +19,19 @@ use anyhow::{bail, Context, Result};
 
 use lga_mpp::analysis::{verify_program, MemoryModel};
 use lga_mpp::collective::Topology;
-use lga_mpp::costmodel::{MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
+use lga_mpp::costmodel::{KvCacheModel, MemoryBreakdown, ParallelismMenu, Strategy, TrainConfig};
 use lga_mpp::hardware::{ClusterSpec, NetCalibration, SECS_PER_DAY, GIB};
 use lga_mpp::model::{TransformerShape, XModel};
 use lga_mpp::optim::LrSchedule;
+use lga_mpp::planner::{plan_slo, verify_serving, SloSpec};
 use lga_mpp::report;
+use lga_mpp::runtime::DType;
 use lga_mpp::schedule::{
-    interleaved_1f1b, interleaved_applicable, layered_ga, lower, modular_pipeline, one_f_one_b,
-    standard_ga, Schedule, ScheduleSpec,
+    decode_waves, interleaved_1f1b, interleaved_applicable, layered_ga, lower, modular_pipeline,
+    one_f_one_b, prefill_pipeline, standard_ga, Schedule, ScheduleSpec,
 };
-use lga_mpp::sim::{render, simulate_program, CostTable};
+use lga_mpp::serve::{run_trace, ServeCosts, Trace};
+use lga_mpp::sim::{render, render_requests, simulate_program, CostTable};
 use lga_mpp::trainer::{launch, train, Policy, TrainerConfig};
 
 /// Tiny flag parser: positionals + `--key value` / `--flag`.
@@ -65,6 +68,13 @@ impl Args {
     }
 
     fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+        }
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
@@ -113,6 +123,7 @@ fn main() -> Result<()> {
         "netbench" => cmd_netbench(&args),
         "chaos" => cmd_chaos(&args),
         "plan" => cmd_plan(&args),
+        "serve" => cmd_serve(&args),
         "verify" => cmd_verify(&args),
         other => bail!("unknown subcommand '{other}' (see `repro help`)"),
     }
@@ -156,16 +167,35 @@ usage:
              [--mtbf HOURS] [--max-lost-work PCT]   (reliability-constrained:
              the fastest plan whose expected failure-rollback lost work
              stays under PCT% of wall clock at the given per-device MTBF)
-  repro verify [--policy baseline|improved|1f1b|interleaved|all]
+  repro serve [--rate R] [--requests N] [--prompt P] [--decode D] [--seed S]
+              [--stages N] [--tp N] [--max-batch B] [--x N] [--trace FILE]
+              [--timeline] [--width N] [--probe] [--ethernet|--unlimited-node]
+               (continuous-batching inference over the compiled forward-only
+               schedules: replays a seeded Poisson stream — or --trace FILE
+               with `arrival prompt decode` lines — through the KV-gated
+               batcher and reports p50/p99 TTFT, per-token latency and
+               tokens/sec; every deployment's prefill/decode programs pass
+               whole-world verification first; --timeline renders
+               request-labelled prefill and decode Gantt charts; --probe is
+               the artifact-free CI smoke)
+  repro serve plan --slo-p99-ms MS [--rate R] [--requests N] [--prompt P]
+              [--decode D] [--seed S] [--x N] [--ethernet|--unlimited-node]
+               (SLO planner: searches stages x tp x max-batch for the
+               highest-throughput deployment whose p99 time-to-first-token
+               meets the SLO, or reports the binding constraint)
+  repro verify [--policy baseline|improved|1f1b|interleaved|serve|all]
                [--spec LAYERS:STAGES:MB | --layers N --stages N --mb N]
                [--dp N] [--tp N] [--partition] [--offload] [--chunks V]
+               [--prompt P] [--decode D]
                [--x N] [--grid] [--ethernet|--unlimited-node]
                (whole-world static verification: composes the lowered
                program over every rank of the {stages, dp, tp} grid and
                checks p2p send/recv matching, collective congruence on
                every dp/tp ring, cross-rank deadlock freedom and the
                static peak-memory bound; --grid sweeps all policies
-               across stages x dp x tp x {plain, partition, offload})
+               across stages x dp x tp x {plain, partition, offload},
+               plus the forward-only serving worlds — prefill + decode
+               at dp = 1 under the KV-aware memory bound)
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -776,6 +806,216 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `repro serve` — continuous-batching inference over the compiled
+/// forward-only schedules: replay a request trace (seeded Poisson or
+/// `--trace FILE`) through the KV-gated batcher and report latency and
+/// throughput percentiles. `repro serve plan` instead searches
+/// {stages, tp, max batch} for the highest throughput meeting a p99
+/// TTFT SLO; `--probe` is the artifact-free CI smoke.
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.positional.first().map(String::as_str) == Some("plan") {
+        return cmd_serve_plan(args);
+    }
+    if args.has("probe") {
+        return cmd_serve_probe();
+    }
+    let cluster = cluster_from(args)?;
+    let shape = XModel::new(args.get_usize("x", 16)?).shape();
+    let stages = args.get_usize("stages", 2)?;
+    let tp = args.get_usize("tp", 1)?;
+    let max_batch = args.get_usize("max-batch", 8)?;
+    let prompt = args.get_usize("prompt", 128)?;
+    let decode = args.get_usize("decode", 32)?;
+    let rate = args.get_f64("rate", 10.0)?;
+    let requests = args.get_usize("requests", 64)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    anyhow::ensure!(
+        shape.d_l % stages == 0,
+        "model depth {} not divisible by --stages {stages}",
+        shape.d_l
+    );
+    let trace = match args.get("trace") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).with_context(|| format!("--trace {path}"))?;
+            Trace::parse(&text).map_err(|e| anyhow::anyhow!("--trace {path}: {e}"))?
+        }
+        None => Trace::poisson(seed, rate, requests, prompt, decode),
+    };
+
+    // Acceptance gate: before replaying anything, the deployment's
+    // prefill and decode programs must pass whole-world verification
+    // at the cap the batcher will actually run (KV-aware memory bound
+    // at the trace's worst-case context).
+    let kv = KvCacheModel::new(&shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
+    let cap = max_batch.min(kv.admission_limit(trace.max_context()));
+    if cap > 0 {
+        let max_prompt = trace.requests.iter().map(|r| r.prompt).max().unwrap_or(1);
+        let max_decode = trace.requests.iter().map(|r| r.decode).max().unwrap_or(1);
+        verify_serving(&shape, &cluster, stages, tp, cap, max_prompt, max_decode)
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
+
+    let report = run_trace(&shape, &cluster, stages, tp, max_batch, &trace)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "serve: {} requests in {:.2}s simulated wall clock (verified prefill + decode worlds)",
+        report.completed, report.makespan
+    );
+    println!(
+        "  deployment   stages {} x tp {}, batch cap {} ({})",
+        report.stages, report.tp, report.cap, report.cap_bound
+    );
+    println!(
+        "  ttft         p50 {:8.1} ms   p99 {:8.1} ms",
+        report.ttft_p50 * 1e3,
+        report.ttft_p99 * 1e3
+    );
+    println!(
+        "  per-token    p50 {:8.1} ms   p99 {:8.1} ms",
+        report.token_p50 * 1e3,
+        report.token_p99 * 1e3
+    );
+    println!(
+        "  throughput   {:.1} tokens/sec over {} decode waves",
+        report.tokens_per_sec, report.waves
+    );
+    println!(
+        "  kv cache     peak {:.3} GiB at {} in-flight (admission limit {})",
+        report.kv_peak_bytes / GIB,
+        report.peak_in_flight,
+        kv.admission_limit(trace.max_context()),
+    );
+
+    if args.has("timeline") {
+        let width = args.get_usize("width", 100)?;
+        let n_req = report.cap.max(1);
+        let spec = ScheduleSpec {
+            d_l: shape.d_l,
+            n_l: stages,
+            n_mu: n_req,
+            tp,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
+        let costs = ServeCosts::new(&shape, &cluster, stages, tp);
+        let pre = lower(&prefill_pipeline(&spec))
+            .map_err(|e| anyhow::anyhow!("prefill lowering: {e:?}"))?;
+        let dec = lower(&decode_waves(&spec, 3))
+            .map_err(|e| anyhow::anyhow!("decode lowering: {e:?}"))?;
+        println!("\nprefill ({n_req} prompts pipelined, one digit per request):");
+        print!("{}", render_requests(&simulate_program(&pre, &costs.table(prompt)), width, n_req));
+        println!("decode (3 token waves x {n_req} requests):");
+        print!("{}", render_requests(&simulate_program(&dec, &costs.table(1)), width, n_req));
+    }
+    Ok(())
+}
+
+/// `repro serve plan` — the SLO-driven deployment search.
+fn cmd_serve_plan(args: &Args) -> Result<()> {
+    let cluster = cluster_from(args)?;
+    let shape = XModel::new(args.get_usize("x", 16)?).shape();
+    let spec = SloSpec {
+        rate: args.get_f64("rate", 10.0)?,
+        slo_p99_ttft: args.get_f64("slo-p99-ms", 500.0)? / 1e3,
+        n_requests: args.get_usize("requests", 64)?,
+        prompt: args.get_usize("prompt", 128)?,
+        decode: args.get_usize("decode", 32)?,
+        seed: args.get_usize("seed", 0)? as u64,
+    };
+    let plan = plan_slo(&shape, &cluster, &spec).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "slo plan: p99 TTFT <= {:.0} ms at {} req/s ({} requests, prompt {}, decode {}, seed {})",
+        spec.slo_p99_ttft * 1e3,
+        spec.rate,
+        spec.n_requests,
+        spec.prompt,
+        spec.decode,
+        spec.seed
+    );
+    println!(
+        "  {:>6} {:>4} {:>6} {:>12} {:>12} {:>12}",
+        "stages", "tp", "batch", "p50 ttft", "p99 ttft", "tokens/sec"
+    );
+    for c in plan.evaluated.iter().take(10) {
+        println!(
+            "  {:>6} {:>4} {:>6} {:>10.1}ms {:>10.1}ms {:>12.1}  {}",
+            c.stages,
+            c.tp,
+            c.max_batch,
+            c.report.ttft_p50 * 1e3,
+            c.report.ttft_p99 * 1e3,
+            c.report.tokens_per_sec,
+            if c.meets(spec.slo_p99_ttft) { "meets slo" } else { "misses slo" },
+        );
+    }
+    if plan.evaluated.len() > 10 {
+        println!("  ... {} more evaluated", plan.evaluated.len() - 10);
+    }
+    if !plan.rejected.is_empty() {
+        println!("  ({} deployments rejected before replay)", plan.rejected.len());
+    }
+    match &plan.infeasible {
+        None => println!(
+            "winner: stages={} tp={} max-batch={} — {:.1} tokens/sec at p99 TTFT {:.1} ms",
+            plan.best.stages,
+            plan.best.tp,
+            plan.best.max_batch,
+            plan.best.report.tokens_per_sec,
+            plan.best.report.ttft_p99 * 1e3,
+        ),
+        Some(diag) => println!("infeasible: {diag}"),
+    }
+    Ok(())
+}
+
+/// `repro serve --probe` — artifact-free smoke for CI: tiny model,
+/// short seeded stream, determinism + token-conservation assertions
+/// and one relaxed-SLO plan. Writes no files.
+fn cmd_serve_probe() -> Result<()> {
+    let cluster = ClusterSpec::reference();
+    let shape = XModel::new(8).shape();
+    let trace = Trace::poisson(7, 20.0, 16, 16, 4);
+    verify_serving(&shape, &cluster, 2, 1, 4, 16, 4).map_err(|e| anyhow::anyhow!(e))?;
+    let a = run_trace(&shape, &cluster, 2, 1, 4, &trace).map_err(|e| anyhow::anyhow!(e))?;
+    let b = run_trace(&shape, &cluster, 2, 1, 4, &trace).map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(a.completed == trace.requests.len(), "probe lost requests");
+    anyhow::ensure!(
+        (a.makespan - b.makespan).abs() < 1e-12 && a.tokens_per_sec == b.tokens_per_sec,
+        "probe replay diverged between identical runs"
+    );
+    anyhow::ensure!(
+        (a.tokens_per_sec * a.makespan - trace.total_decode_tokens() as f64).abs() < 1e-6,
+        "probe did not conserve decode tokens"
+    );
+    let plan = plan_slo(
+        &shape,
+        &cluster,
+        &SloSpec {
+            rate: 20.0,
+            slo_p99_ttft: f64::INFINITY,
+            n_requests: 8,
+            prompt: 16,
+            decode: 4,
+            seed: 7,
+        },
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    anyhow::ensure!(plan.infeasible.is_none(), "probe slo plan infeasible under an infinite SLO");
+    println!(
+        "serve probe ok: {} requests, {:.1} tokens/sec, p99 ttft {:.1} ms; slo winner \
+         stages={} tp={} batch={}",
+        a.completed,
+        a.tokens_per_sec,
+        a.ttft_p99 * 1e3,
+        plan.best.stages,
+        plan.best.tp,
+        plan.best.max_batch,
+    );
+    Ok(())
+}
+
 /// Generate the schedule a `repro verify` policy name means for a spec,
 /// or `None` when the policy cannot inhabit the shape (interleaved
 /// divisibility). "improved" is the paper's pair: layered GA at one
@@ -876,12 +1116,18 @@ fn cmd_verify(args: &Args) -> Result<()> {
     let n_l = args.get_usize("stages", n_l)?;
     let n_mu = args.get_usize("mb", n_mu)?;
     let chunks = args.get_usize("chunks", 2)?;
+    let prompt = args.get_usize("prompt", 64)?;
+    let decode = args.get_usize("decode", 16)?;
     let policy = args.get("policy").unwrap_or("all");
     let policies: Vec<&str> = if policy == "all" {
         vec!["baseline", "improved", "1f1b", "interleaved"]
+    } else if policy == "serve" {
+        vec![]
     } else {
         vec![policy]
     };
+    // "serve" covers both forward-only programs (prefill + decode).
+    let want_serving = policy == "all" || policy == "serve";
 
     if args.has("grid") {
         // The acceptance sweep: every policy x stages x dp x tp x
@@ -919,18 +1165,64 @@ fn cmd_verify(args: &Args) -> Result<()> {
                 }
             }
         }
-        println!(
-            "verified {verified} whole worlds clean ({skipped} inapplicable combinations \
-             skipped) across {} policies x stages {{1,2,3,4}} x dp {{1,2}} x tp {{1,2}} x \
-             {{plain, partition, offload}}",
-            policies.len(),
-        );
+        if !policies.is_empty() {
+            println!(
+                "verified {verified} whole worlds clean ({skipped} inapplicable combinations \
+                 skipped) across {} policies x stages {{1,2,3,4}} x dp {{1,2}} x tp {{1,2}} x \
+                 {{plain, partition, offload}}",
+                policies.len(),
+            );
+        }
+        if want_serving {
+            // Serving worlds: forward-only prefill + decode programs at
+            // dp = 1 with the KV-aware memory bound, across stages x tp
+            // x in-flight batch.
+            // Serving prices the model's real depth, so stage counts
+            // must divide shape.d_l (= x), not the --layers flag.
+            let mut serve_verified = 0usize;
+            for stages in [1usize, 2, 3, 4] {
+                if shape.d_l % stages != 0 {
+                    continue;
+                }
+                for tp in [1usize, 2] {
+                    for cap in [1usize, 2, 4, 8] {
+                        verify_serving(&shape, &cluster, stages, tp, cap, prompt, decode)
+                            .map_err(|e| anyhow::anyhow!(e))?;
+                        serve_verified += 1;
+                    }
+                }
+            }
+            println!(
+                "verified {serve_verified} serving worlds clean (prefill + decode at dp 1, \
+                 stages {{1,2,3,4}} x tp {{1,2}} x in-flight {{1,2,4,8}}, prompt {prompt}, \
+                 decode {decode}, KV-aware memory bound)"
+            );
+        }
         return Ok(());
     }
 
     let dp = args.get_usize("dp", 1)?;
     let tp = args.get_usize("tp", 1)?;
     anyhow::ensure!(d_l % n_l == 0, "--layers {d_l} not divisible by --stages {n_l}");
+    if policy == "serve" {
+        // Serving verifies at the model's own depth (the KV model and
+        // ServeCosts price real layers), composes at dp = 1, and —
+        // unlike training — legally runs fewer in-flight requests than
+        // stages (a starved decode wave).
+        anyhow::ensure!(
+            shape.d_l % n_l == 0,
+            "model depth {} (--x) not divisible by --stages {n_l}",
+            shape.d_l
+        );
+        verify_serving(&shape, &cluster, n_l, tp, n_mu, prompt, decode)
+            .map_err(|e| anyhow::anyhow!(e))?;
+        println!(
+            "ok: serving world (stages {n_l} x tp {tp}, {n_mu} in-flight, prompt {prompt}, \
+             decode {decode}) — prefill + decode programs pass p2p + congruence + deadlock + \
+             KV-aware memory"
+        );
+        return Ok(());
+    }
     anyhow::ensure!(n_mu >= n_l, "--mb {n_mu} must be at least --stages {n_l}");
     let spec = ScheduleSpec {
         d_l,

@@ -23,7 +23,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::collective::Topology;
 use crate::costmodel::Strategy;
 use crate::schedule::{
-    layered_ga, lower, modular_pipeline, standard_ga, Schedule, ScheduleProgram, ScheduleSpec,
+    decode_wave, layered_ga, lower, modular_pipeline, prefill_pipeline, standard_ga, Schedule,
+    ScheduleProgram, ScheduleSpec,
 };
 
 /// Which generator a planner configuration executes.
@@ -35,6 +36,12 @@ pub enum PolicyKind {
     LayeredGa,
     /// Layered accumulation over the modular pipeline split.
     ModularPipeline,
+    /// Forward-only serving prefill (n_mu = in-flight requests, one
+    /// prompt per micro-batch slot).
+    ServePrefill,
+    /// Forward-only serving decode: one wave, every in-flight request
+    /// advances one token.
+    ServeDecode,
 }
 
 impl PolicyKind {
@@ -55,6 +62,8 @@ impl PolicyKind {
             PolicyKind::StandardGa => standard_ga(spec),
             PolicyKind::LayeredGa => layered_ga(spec),
             PolicyKind::ModularPipeline => modular_pipeline(spec),
+            PolicyKind::ServePrefill => prefill_pipeline(spec),
+            PolicyKind::ServeDecode => decode_wave(spec),
         }
     }
 }

@@ -51,6 +51,7 @@ pub mod reliability;
 pub mod rules;
 pub mod search;
 pub mod simloop;
+pub mod slo;
 
 pub use cache::{LoweringCache, PolicyKind};
 pub use candidates::Candidates;
@@ -67,3 +68,4 @@ pub use search::{
 pub use simloop::{
     lower_plan, plan_spec, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,
 };
+pub use slo::{plan_slo, verify_serving, SloCandidate, SloPlan, SloSpec};

@@ -1,0 +1,304 @@
+//! SLO-driven serving planner: pick `{stages, tp, max batch}` to
+//! maximise throughput subject to a latency SLO.
+//!
+//! The training planner optimises step time; serving optimises
+//! tokens/sec *under a constraint* — here p99 time-to-first-token.
+//! The search enumerates the deployment grid the same way
+//! `candidates.rs` enumerates training configurations (structural
+//! filters first, expensive evaluation after), reuses the global
+//! [`LoweringCache`] through [`ServeCosts`], statically verifies every
+//! candidate's prefill/decode programs (whole-world compose at dp = 1,
+//! KV-aware memory bound), and replays one seeded request trace
+//! through the continuous batcher per surviving candidate. Feasible
+//! candidates are ranked by measured tokens/sec; if none meets the
+//! SLO, the closest miss is returned with a diagnostic naming the
+//! binding constraint (SLO, KV admission, or memory).
+
+use crate::analysis::{verify_program, MemoryModel};
+use crate::collective::Topology;
+use crate::costmodel::KvCacheModel;
+use crate::hardware::ClusterSpec;
+use crate::model::TransformerShape;
+use crate::runtime::DType;
+use crate::schedule::ScheduleSpec;
+use crate::serve::{run_trace, ServeCosts, ServeReport, Trace};
+
+use super::{LoweringCache, PolicyKind};
+
+/// What the planner optimises against.
+#[derive(Debug, Clone, Copy)]
+pub struct SloSpec {
+    /// Offered load, requests per second.
+    pub rate: f64,
+    /// p99 time-to-first-token SLO, seconds.
+    pub slo_p99_ttft: f64,
+    /// Requests in the evaluation trace.
+    pub n_requests: usize,
+    /// Prompt / decode lengths of the synthetic trace.
+    pub prompt: usize,
+    pub decode: usize,
+    /// Seed of the Poisson arrival stream (all candidates replay the
+    /// identical trace).
+    pub seed: u64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { rate: 10.0, slo_p99_ttft: 0.5, n_requests: 64, prompt: 128, decode: 32, seed: 0 }
+    }
+}
+
+/// One evaluated deployment.
+#[derive(Debug, Clone)]
+pub struct SloCandidate {
+    pub stages: usize,
+    pub tp: usize,
+    pub max_batch: usize,
+    pub report: ServeReport,
+}
+
+impl SloCandidate {
+    pub fn meets(&self, slo: f64) -> bool {
+        self.report.ttft_p99 <= slo
+    }
+}
+
+/// Search outcome: the winner (feasible or closest miss), a diagnostic
+/// when infeasible, and the full ranked table for reporting.
+#[derive(Debug, Clone)]
+pub struct SloPlan {
+    /// Best candidate: highest tokens/sec among SLO-feasible ones, or
+    /// the lowest-p99 one if nothing is feasible.
+    pub best: SloCandidate,
+    /// `None` when `best` meets the SLO; otherwise names the binding
+    /// constraint.
+    pub infeasible: Option<String>,
+    /// Every evaluated candidate, ranked like the search (feasible by
+    /// tokens/sec desc, then by p99 asc).
+    pub evaluated: Vec<SloCandidate>,
+    /// Deployments rejected before evaluation, as (stages, tp, reason).
+    pub rejected: Vec<(usize, usize, String)>,
+}
+
+/// Stage counts to try: divisors of d_l up to the layer count.
+fn stage_grid(d_l: usize) -> Vec<usize> {
+    (1..=d_l.min(16)).filter(|s| d_l % s == 0).collect()
+}
+
+/// Tensor-parallel degrees to try: powers of two within one node.
+fn tp_grid(cluster: &ClusterSpec) -> Vec<usize> {
+    let mut g = vec![1usize];
+    while g.last().unwrap() * 2 <= cluster.max_node_size {
+        g.push(g.last().unwrap() * 2);
+    }
+    g
+}
+
+/// Batch caps to try, clamped to the KV admission limit per candidate.
+const BATCH_GRID: [usize; 6] = [1, 2, 4, 8, 16, 32];
+
+/// Statically verify one serving deployment's prefill and decode
+/// programs: whole-world compose at `{stages, dp = 1, tp}` with the
+/// KV-aware memory model at the *worst* residency the batcher can
+/// reach (cap requests at full context).
+pub fn verify_serving(
+    shape: &TransformerShape,
+    cluster: &ClusterSpec,
+    stages: usize,
+    tp: usize,
+    cap: usize,
+    prompt: usize,
+    decode: usize,
+) -> Result<(), String> {
+    let kv = KvCacheModel::new(shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
+    let spec = ScheduleSpec {
+        d_l: shape.d_l,
+        n_l: stages,
+        n_mu: cap,
+        tp,
+        partition: false,
+        offload: false,
+        data_parallel: false,
+    };
+    let topo = Topology::new(stages, 1, tp);
+    for (kind, tokens_per_fwd, context) in [
+        // Prefill: cold cache, each Fwd stashes a whole prompt.
+        (PolicyKind::ServePrefill, prompt, 0usize),
+        // Decode wave at the worst case: every slot one token from done.
+        (PolicyKind::ServeDecode, 1, prompt + decode - 1),
+    ] {
+        let program = LoweringCache::global().lower(kind, &spec);
+        let table = ServeCosts::new(shape, cluster, stages, tp).table(tokens_per_fwd);
+        let model = MemoryModel::serving(&kv, &table, cap, context, tokens_per_fwd);
+        verify_program(&program, topo, table.wire, Some(&model)).map_err(|errs| {
+            format!("{} fails whole-world verify: {}", program.name, errs[0])
+        })?;
+    }
+    Ok(())
+}
+
+/// Search the deployment grid. Every candidate replays the same seeded
+/// trace; ranking is measured tokens/sec among SLO-feasible
+/// candidates. Returns `Err` only if *no* deployment even admits one
+/// request (the grid is structurally empty).
+pub fn plan_slo(
+    shape: &TransformerShape,
+    cluster: &ClusterSpec,
+    spec: &SloSpec,
+) -> Result<SloPlan, String> {
+    let trace = Trace::poisson(spec.seed, spec.rate, spec.n_requests, spec.prompt, spec.decode);
+    let context = spec.prompt + spec.decode;
+    let mut evaluated: Vec<SloCandidate> = Vec::new();
+    let mut rejected: Vec<(usize, usize, String)> = Vec::new();
+
+    for &stages in &stage_grid(shape.d_l) {
+        for &tp in &tp_grid(cluster) {
+            let kv = KvCacheModel::new(shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
+            let admission = kv.admission_limit(context);
+            if admission == 0 {
+                rejected.push((
+                    stages,
+                    tp,
+                    format!(
+                        "kv-admission: weights {:.3e} B + one request {:.3e} B exceed \
+                         budget {:.3e} B",
+                        kv.weight_bytes,
+                        kv.request_bytes(context),
+                        kv.budget
+                    ),
+                ));
+                continue;
+            }
+            // Distinct effective caps only (clamping collapses the top
+            // of the batch grid onto the admission limit).
+            let mut caps: Vec<usize> =
+                BATCH_GRID.iter().map(|&b| b.min(admission)).collect();
+            caps.dedup();
+            for cap in caps {
+                if let Err(e) =
+                    verify_serving(shape, cluster, stages, tp, cap, spec.prompt, spec.decode)
+                {
+                    rejected.push((stages, tp, format!("cap {cap}: {e}")));
+                    continue;
+                }
+                match run_trace(shape, cluster, stages, tp, cap, &trace) {
+                    Ok(report) => {
+                        evaluated.push(SloCandidate { stages, tp, max_batch: cap, report })
+                    }
+                    Err(e) => rejected.push((stages, tp, format!("cap {cap}: {e}"))),
+                }
+            }
+        }
+    }
+
+    if evaluated.is_empty() {
+        return Err(format!(
+            "no deployment admits a single request at context {context}; tightest miss: {}",
+            rejected
+                .first()
+                .map(|(s, t, r)| format!("stages={s} tp={t}: {r}"))
+                .unwrap_or_else(|| "empty grid".into())
+        ));
+    }
+
+    // Rank: feasible first by tokens/sec (desc), then closest miss by
+    // p99 (asc).
+    evaluated.sort_by(|a, b| {
+        let fa = a.meets(spec.slo_p99_ttft);
+        let fb = b.meets(spec.slo_p99_ttft);
+        fb.cmp(&fa)
+            .then_with(|| {
+                if fa && fb {
+                    b.report.tokens_per_sec.total_cmp(&a.report.tokens_per_sec)
+                } else {
+                    a.report.ttft_p99.total_cmp(&b.report.ttft_p99)
+                }
+            })
+    });
+    let best = evaluated[0].clone();
+    let infeasible = if best.meets(spec.slo_p99_ttft) {
+        None
+    } else {
+        Some(format!(
+            "no deployment meets p99 TTFT ≤ {:.3}s at {} req/s: closest is stages={} \
+             tp={} batch={} at p99 {:.3}s (binding constraint: {})",
+            spec.slo_p99_ttft,
+            spec.rate,
+            best.stages,
+            best.tp,
+            best.max_batch,
+            best.report.ttft_p99,
+            if best.report.cap_bound == "kv-admission" {
+                "KV admission limit caps the batch below the offered load"
+            } else {
+                "latency SLO (queueing at the offered rate)"
+            }
+        ))
+    };
+    Ok(SloPlan { best, infeasible, evaluated, rejected })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::XModel;
+
+    #[test]
+    fn grids_are_sane() {
+        assert_eq!(stage_grid(8), vec![1, 2, 4, 8]);
+        assert_eq!(stage_grid(12), vec![1, 2, 3, 4, 6, 12]);
+        let g = tp_grid(&ClusterSpec::reference());
+        assert_eq!(g[0], 1);
+        assert!(g.windows(2).all(|w| w[1] == w[0] * 2));
+    }
+
+    #[test]
+    fn verify_serving_passes_on_the_reference_cluster() {
+        let shape = XModel::new(8).shape();
+        let cluster = ClusterSpec::reference();
+        verify_serving(&shape, &cluster, 2, 2, 4, 32, 8).expect("serving world must verify");
+    }
+
+    #[test]
+    fn relaxed_slo_is_feasible_and_ranked_by_throughput() {
+        let shape = XModel::new(8).shape();
+        let cluster = ClusterSpec::reference();
+        let spec = SloSpec {
+            rate: 5.0,
+            slo_p99_ttft: f64::INFINITY,
+            n_requests: 8,
+            prompt: 16,
+            decode: 4,
+            seed: 1,
+        };
+        let plan = plan_slo(&shape, &cluster, &spec).unwrap();
+        assert!(plan.infeasible.is_none());
+        assert!(!plan.evaluated.is_empty());
+        // Winner has the highest tokens/sec of all evaluated (all are
+        // feasible under an infinite SLO).
+        let best_tps = plan.best.report.tokens_per_sec;
+        assert!(plan
+            .evaluated
+            .iter()
+            .all(|c| c.report.tokens_per_sec <= best_tps + 1e-9));
+    }
+
+    #[test]
+    fn impossible_slo_reports_the_binding_constraint() {
+        let shape = XModel::new(8).shape();
+        let cluster = ClusterSpec::reference();
+        let spec = SloSpec {
+            rate: 5.0,
+            slo_p99_ttft: 0.0, // unmeetable: TTFT is strictly positive
+            n_requests: 4,
+            prompt: 16,
+            decode: 2,
+            seed: 1,
+        };
+        let plan = plan_slo(&shape, &cluster, &spec).unwrap();
+        let diag = plan.infeasible.expect("a zero SLO cannot be met");
+        assert!(diag.contains("binding constraint"), "{diag}");
+        // The closest miss is still a fully-evaluated deployment.
+        assert!(plan.best.report.completed > 0);
+    }
+}

@@ -10,7 +10,9 @@
 //! Generators ([`generators`]) express the paper's policies — standard /
 //! layered gradient accumulation × contiguous / modular pipeline split,
 //! plus the 1F1B and interleaved-1F1B Megatron-LM baselines — as
-//! per-stage ordered op lists ([`ir::Schedule`]). The lowering pass
+//! per-stage ordered op lists ([`ir::Schedule`]); the forward-only
+//! serving generators ([`serve`]) emit inference prefill/decode
+//! programs through the same IR. The lowering pass
 //! ([`program::lower`]) compiles a schedule once into a
 //! [`program::ScheduleProgram`]: a flat op arena with explicit dependency
 //! edges and per-stream run queues. The validator ([`validate`]), the
@@ -21,6 +23,7 @@
 pub mod generators;
 pub mod ir;
 pub mod program;
+pub mod serve;
 pub mod validate;
 
 pub use generators::{
@@ -29,4 +32,5 @@ pub use generators::{
 };
 pub use ir::{LayerAssignment, Op, Schedule};
 pub use program::{lower, ProgOp, ScheduleProgram, Stream, N_STREAMS, STREAMS};
+pub use serve::{decode_identity, decode_wave, decode_waves, prefill_pipeline};
 pub use validate::{validate, ScheduleError};

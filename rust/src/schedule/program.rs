@@ -369,9 +369,16 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
         }
     }
 
+    // A schedule with no Bwd anywhere is a forward-only (inference)
+    // program — serving prefill/decode schedules. Its compute contract
+    // is exactly one Fwd and zero Bwd per (layer, mb); a training
+    // schedule merely *missing* some backwards still fails (the counts
+    // are not all zero).
+    let inference = bwd_count.iter().all(|row| row.iter().all(|&c| c == 0));
+    let want_bwd = usize::from(!inference);
     for l in 0..s.d_l {
         for mb in 0..s.n_mu {
-            if fwd_count[l][mb] != 1 || bwd_count[l][mb] != 1 {
+            if fwd_count[l][mb] != 1 || bwd_count[l][mb] != want_bwd {
                 errors.push(ScheduleError::BadComputeCount {
                     layer: l,
                     mb,

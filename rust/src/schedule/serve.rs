@@ -1,0 +1,250 @@
+//! Forward-only serving schedules: prefill and decode.
+//!
+//! Inference reuses the training pipeline wholesale — micro-batch slots
+//! become in-flight requests, pipeline stages stay stages, and the
+//! tensor-parallel all-reduces stay per layer (the Megatron-LM
+//! decomposition: one reduced activation per layer pass, forward
+//! phase only). The generators here emit ordinary [`Schedule`]s with
+//! zero `Bwd` ops; [`super::program::lower`] recognises the
+//! forward-only compute contract (exactly one `Fwd`, zero `Bwd` per
+//! (layer, mb)) and compiles them through the same CSR machinery, so
+//! `repro verify` proves p2p matching, collective congruence, deadlock
+//! freedom and the KV-aware memory bound for serving worlds exactly as
+//! it does for training worlds.
+//!
+//! Two shapes:
+//!
+//! * **Prefill** ([`prefill_pipeline`]): each in-flight request's whole
+//!   prompt runs through the pipeline as one micro-batch — GPipe-style
+//!   forward-only pipelining, request-major per stage so requests
+//!   overlap across stages.
+//! * **Decode** ([`decode_wave`] / [`decode_waves`]): one wave advances
+//!   every in-flight request by one token. A wave is layer-major per
+//!   stage (all requests pass a layer before the next layer starts),
+//!   the natural batched-GEMM order of a serving engine. Multi-wave
+//!   programs encode token identity into the micro-batch index:
+//!   `mb = token · n_req + request` (see [`decode_identity`]).
+//!
+//! The [`ScheduleSpec`] vocabulary is reused — `n_mu` is the in-flight
+//! request count, `tp` the tensor-parallel degree — so the planner's
+//! [`crate::planner::LoweringCache`] can memoise serving lowerings
+//! beside training ones. `partition`/`offload`/`data_parallel` are
+//! training-only concepts and must be off: serving keeps weights
+//! resident and has no gradients to reduce.
+
+use super::generators::ScheduleSpec;
+use super::ir::{LayerAssignment, Op, Schedule};
+
+/// Validate a spec for serving: the training-only axes must be off, and
+/// the pipeline-starvation rule (`n_mu ≥ n_l`) is *not* applied — a
+/// decode wave legitimately runs fewer in-flight requests than stages
+/// (it bubbles, and the simulator prices that bubble).
+fn validate_serve(spec: &ScheduleSpec) {
+    assert!(
+        spec.n_l > 0 && spec.d_l > 0 && spec.n_mu > 0 && spec.tp > 0,
+        "zero dimension in serving spec"
+    );
+    assert!(
+        spec.d_l % spec.n_l == 0,
+        "d_l = {} not divisible by n_l = {}",
+        spec.d_l,
+        spec.n_l
+    );
+    assert!(
+        !spec.partition && !spec.offload && !spec.data_parallel,
+        "partition/offload/data_parallel are training-only axes"
+    );
+}
+
+/// Emit one forward pass of layer `l` for micro-batch slot `mb` on
+/// `stage`: boundary receive, compute, tensor-parallel reduce, boundary
+/// send — the per-layer idiom every training generator uses, minus the
+/// backward half.
+fn push_fwd(ops: &mut Vec<Op>, spec: &ScheduleSpec, stage: usize, l: usize, mb: usize) {
+    let a = LayerAssignment::Contiguous;
+    if l > 0 && a.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
+        ops.push(Op::RecvAct { layer: l, mb });
+    }
+    ops.push(Op::Fwd { layer: l, mb });
+    if spec.tp > 1 {
+        ops.push(Op::TensorAllReduce { layer: l, mb, bwd: false });
+    }
+    if l + 1 < spec.d_l && a.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
+        ops.push(Op::SendAct { layer: l, mb });
+    }
+}
+
+/// Prefill: `n_mu` in-flight requests, each one prompt as one
+/// micro-batch, pipelined forward-only over `n_l` contiguous stages.
+/// Request-major per stage, so request r+1 enters stage 0 while
+/// request r runs on stage 1 — the training pipeline's fill phase,
+/// which is *all* there is without a backward.
+pub fn prefill_pipeline(spec: &ScheduleSpec) -> Schedule {
+    validate_serve(spec);
+    let assignment = LayerAssignment::Contiguous;
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); spec.n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let layers = assignment.layers_of(stage, spec.d_l, spec.n_l);
+        for mb in 0..spec.n_mu {
+            for &l in &layers {
+                push_fwd(stage_ops, spec, stage, l, mb);
+            }
+        }
+    }
+    Schedule {
+        name: format!("serve-prefill(stages={}, tp={}, reqs={})", spec.n_l, spec.tp, spec.n_mu),
+        n_stages: spec.n_l,
+        d_l: spec.d_l,
+        n_mu: spec.n_mu,
+        assignment,
+        ops,
+        tp: spec.tp,
+        partitioned: false,
+        offloaded: false,
+    }
+}
+
+/// One decode wave: every in-flight request (`n_mu` of them) advances
+/// by one token. Layer-major per stage — the batched order a serving
+/// engine runs, with one `TensorAllReduce` per (layer, request) when
+/// `tp > 1`.
+pub fn decode_wave(spec: &ScheduleSpec) -> Schedule {
+    let mut s = decode_waves(spec, 1);
+    s.name = format!("serve-decode(stages={}, tp={}, reqs={})", spec.n_l, spec.tp, spec.n_mu);
+    s
+}
+
+/// `tokens` consecutive decode waves. Token identity rides in the
+/// micro-batch index (`mb = token · n_req + request`, where
+/// `n_req = spec.n_mu`), keeping every (layer, mb) pair unique so the
+/// forward-only lowering contract holds; [`decode_identity`] inverts
+/// the encoding for timeline labelling. Per-stage order is
+/// wave-by-wave, but the lowering adds no cross-wave barrier: wave
+/// t+1 may enter stage 0 while wave t drains later stages, which
+/// models requests whose next token is already scheduled — the
+/// continuous batcher accounts the sequential per-request dependency
+/// by stepping one wave at a time.
+pub fn decode_waves(spec: &ScheduleSpec, tokens: usize) -> Schedule {
+    validate_serve(spec);
+    assert!(tokens > 0, "a decode program needs at least one wave");
+    let n_req = spec.n_mu;
+    let assignment = LayerAssignment::Contiguous;
+    let mut ops: Vec<Vec<Op>> = vec![Vec::new(); spec.n_l];
+    for (stage, stage_ops) in ops.iter_mut().enumerate() {
+        let layers = assignment.layers_of(stage, spec.d_l, spec.n_l);
+        for t in 0..tokens {
+            for &l in &layers {
+                for r in 0..n_req {
+                    push_fwd(stage_ops, spec, stage, l, t * n_req + r);
+                }
+            }
+        }
+    }
+    Schedule {
+        name: format!(
+            "serve-decode(stages={}, tp={}, reqs={}, tokens={tokens})",
+            spec.n_l, spec.tp, n_req
+        ),
+        n_stages: spec.n_l,
+        d_l: spec.d_l,
+        n_mu: n_req * tokens,
+        assignment,
+        ops,
+        tp: spec.tp,
+        partitioned: false,
+        offloaded: false,
+    }
+}
+
+/// Invert the decode micro-batch encoding: `mb -> (token, request)`
+/// for a program built with `n_req` in-flight requests.
+pub fn decode_identity(mb: usize, n_req: usize) -> (usize, usize) {
+    let n = n_req.max(1);
+    (mb / n, mb % n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::validate::validate;
+    use super::*;
+
+    fn spec(d_l: usize, n_l: usize, n_mu: usize, tp: usize) -> ScheduleSpec {
+        ScheduleSpec { d_l, n_l, n_mu, tp, partition: false, offload: false, data_parallel: false }
+    }
+
+    #[test]
+    fn prefill_lowers_cleanly_across_the_grid() {
+        for (d_l, n_l) in [(8, 1), (8, 2), (8, 4), (12, 3)] {
+            for n_mu in [1, 2, 6] {
+                for tp in [1, 2] {
+                    let s = prefill_pipeline(&spec(d_l, n_l, n_mu, tp));
+                    validate(&s).unwrap_or_else(|e| panic!("{}: {e:?}", s.name));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_waves_lower_cleanly_across_the_grid() {
+        for (d_l, n_l) in [(8, 1), (8, 2), (8, 4)] {
+            for n_req in [1, 2, 4] {
+                for tokens in [1, 3] {
+                    for tp in [1, 2] {
+                        let sp = spec(d_l, n_l, n_req, tp);
+                        let s = decode_waves(&sp, tokens);
+                        validate(&s).unwrap_or_else(|e| panic!("{}: {e:?}", s.name));
+                        assert_eq!(s.n_mu, n_req * tokens);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serving_schedules_are_forward_only() {
+        let p = prefill_pipeline(&spec(8, 4, 3, 2));
+        let d = decode_waves(&spec(8, 4, 3, 2), 2);
+        for s in [&p, &d] {
+            assert_eq!(s.count(|o| matches!(o, Op::Bwd { .. })), 0, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 0, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::OptimStep { .. })), 0, "{}", s.name);
+            assert_eq!(
+                s.count(|o| matches!(o, Op::TensorAllReduce { bwd: true, .. })),
+                0,
+                "{}",
+                s.name
+            );
+        }
+        // Exactly one Fwd per (layer, slot), with the per-layer forward
+        // all-reduce beside it.
+        assert_eq!(p.count(|o| matches!(o, Op::Fwd { .. })), 8 * 3);
+        assert_eq!(p.count(|o| matches!(o, Op::TensorAllReduce { .. })), 8 * 3);
+        assert_eq!(d.count(|o| matches!(o, Op::Fwd { .. })), 8 * 3 * 2);
+    }
+
+    #[test]
+    fn single_stage_has_no_transfers() {
+        let s = prefill_pipeline(&spec(8, 1, 4, 1));
+        assert_eq!(s.count(|o| matches!(o, Op::SendAct { .. } | Op::RecvAct { .. })), 0);
+        assert_eq!(s.count(|o| matches!(o, Op::Fwd { .. })), 32);
+    }
+
+    #[test]
+    fn decode_identity_roundtrips() {
+        let n_req = 3;
+        for t in 0..4 {
+            for r in 0..n_req {
+                assert_eq!(decode_identity(t * n_req + r, n_req), (t, r));
+            }
+        }
+        assert_eq!(decode_identity(5, 0), (5, 0));
+    }
+
+    #[test]
+    fn fewer_requests_than_stages_is_legal_for_serving() {
+        // Training's n_mu >= n_l starvation rule does not apply: a
+        // half-empty decode wave is a real serving state.
+        let s = decode_wave(&spec(8, 4, 1, 1));
+        validate(&s).expect("starved decode wave must still lower");
+    }
+}

@@ -1,0 +1,418 @@
+//! Continuous-batching simulator: a thin serving driver over
+//! `sim/engine.rs`.
+//!
+//! The batcher alternates two phases over one shared pipeline, the
+//! standard chunked continuous-batching discipline:
+//!
+//! 1. **Admit + prefill.** Requests whose arrival time has passed are
+//!    admitted up to the batch cap (the user's `--max-batch`, clamped
+//!    by the KV admission limit) and their prompts run one pipelined
+//!    forward pass together.
+//! 2. **Decode wave.** Every in-flight request advances one token.
+//!    Requests that reach their output length complete at the wave
+//!    boundary and their cache slots are evicted before the next
+//!    admission check.
+//!
+//! Wave and prefill latencies are not modelled analytically: each
+//! distinct (batch, tokens-per-fwd) point lowers the actual serving
+//! schedule (memoised in the planner's [`LoweringCache`]) and runs the
+//! discrete-event simulator against the (optionally wire-calibrated)
+//! [`CostTable`]. The batcher's event loop is then pure arithmetic
+//! over those measured wave latencies, so thousand-request traces cost
+//! only a handful of simulations.
+
+use std::collections::HashMap;
+
+use crate::costmodel::{KvCacheModel, Strategy, TrainConfig};
+use crate::hardware::ClusterSpec;
+use crate::model::TransformerShape;
+use crate::planner::{LoweringCache, PolicyKind};
+use crate::runtime::DType;
+use crate::schedule::ScheduleSpec;
+use crate::sim::{simulate_program_opts, CostTable, SimOptions};
+
+use super::Trace;
+
+/// Simulated serving latencies for one deployment `{stages, tp}` of a
+/// model shape on a cluster: prefill time per (batch, prompt) and
+/// decode-wave time per batch, each measured by simulating the
+/// compiled forward-only schedule and memoised.
+pub struct ServeCosts<'a> {
+    shape: &'a TransformerShape,
+    cluster: &'a ClusterSpec,
+    pub stages: usize,
+    pub tp: usize,
+    prefill: HashMap<(usize, usize), f64>,
+    decode: HashMap<usize, f64>,
+}
+
+impl<'a> ServeCosts<'a> {
+    pub fn new(
+        shape: &'a TransformerShape,
+        cluster: &'a ClusterSpec,
+        stages: usize,
+        tp: usize,
+    ) -> Self {
+        assert!(stages > 0 && shape.d_l % stages == 0, "stages must divide d_l");
+        ServeCosts { shape, cluster, stages, tp, prefill: HashMap::new(), decode: HashMap::new() }
+    }
+
+    fn spec(&self, batch: usize) -> ScheduleSpec {
+        ScheduleSpec {
+            d_l: self.shape.d_l,
+            n_l: self.stages,
+            n_mu: batch,
+            tp: self.tp,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        }
+    }
+
+    /// Cost table for forward passes covering `tokens_per_fwd` tokens
+    /// each. The training table prices one `Fwd` as `b_μ · d_s` tokens
+    /// of compute, so a serving pass over T tokens is exactly
+    /// `b_μ = T / d_s` — prompt-length for prefill, 1/d_s for decode.
+    pub fn table(&self, tokens_per_fwd: usize) -> CostTable {
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 1,
+            n_l: self.stages,
+            n_a: self.tp,
+            n_mu: 1,
+            b_mu: tokens_per_fwd as f64 / self.shape.d_s as f64,
+            offload: false,
+            partition: false,
+        };
+        CostTable::new(self.shape, &cfg, self.cluster)
+    }
+
+    /// Simulated makespan of one serving program.
+    fn simulate(&self, kind: PolicyKind, batch: usize, tokens_per_fwd: usize) -> f64 {
+        let program = LoweringCache::global().lower(kind, &self.spec(batch));
+        let costs = self.table(tokens_per_fwd);
+        simulate_program_opts(&program, &costs, SimOptions { record_timeline: false }).makespan
+    }
+
+    /// Wall-clock of prefilling `batch` prompts of `prompt` tokens
+    /// through the pipeline together.
+    pub fn prefill_latency(&mut self, batch: usize, prompt: usize) -> f64 {
+        if let Some(&v) = self.prefill.get(&(batch, prompt)) {
+            return v;
+        }
+        let v = self.simulate(PolicyKind::ServePrefill, batch, prompt);
+        self.prefill.insert((batch, prompt), v);
+        v
+    }
+
+    /// Wall-clock of one decode wave advancing `batch` requests by one
+    /// token each.
+    pub fn decode_latency(&mut self, batch: usize) -> f64 {
+        if let Some(&v) = self.decode.get(&batch) {
+            return v;
+        }
+        let v = self.simulate(PolicyKind::ServeDecode, batch, 1);
+        self.decode.insert(batch, v);
+        v
+    }
+}
+
+/// Per-request outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestMetrics {
+    pub id: usize,
+    pub arrival: f64,
+    /// When the request entered the batch (start of its prefill).
+    pub admitted: f64,
+    /// When its first output token completed (end of its first decode
+    /// wave) — TTFT is `first_token - arrival`.
+    pub first_token: f64,
+    pub finish: f64,
+    pub decode: usize,
+}
+
+impl RequestMetrics {
+    pub fn ttft(&self) -> f64 {
+        self.first_token - self.arrival
+    }
+}
+
+/// Aggregate serving report for one trace on one deployment.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub stages: usize,
+    pub tp: usize,
+    /// Effective batch cap: `min(max_batch, KV admission limit)`.
+    pub cap: usize,
+    /// What bound the cap: `"max-batch"` or `"kv-admission"`.
+    pub cap_bound: &'static str,
+    pub completed: usize,
+    pub waves: usize,
+    /// Clock when the last request finished (time origin = first
+    /// arrival at 0).
+    pub makespan: f64,
+    pub ttft_p50: f64,
+    pub ttft_p99: f64,
+    pub token_p50: f64,
+    pub token_p99: f64,
+    /// Decoded output tokens per second of makespan.
+    pub tokens_per_sec: f64,
+    pub peak_in_flight: usize,
+    /// Highest per-rank residency (weights + live KV) the run reached.
+    pub kv_peak_bytes: f64,
+    pub per_request: Vec<RequestMetrics>,
+}
+
+/// Nearest-rank percentile of an unsorted sample; 0 for an empty one.
+pub(crate) fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v = values.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+    v[rank.clamp(1, v.len()) - 1]
+}
+
+struct Active {
+    id: usize,
+    remaining: usize,
+    produced: usize,
+    prompt: usize,
+}
+
+/// Run `trace` through the continuous batcher on a `{stages, tp}`
+/// deployment capped at `max_batch` in-flight requests. Fails with a
+/// diagnostic naming the binding constraint when the deployment cannot
+/// admit even one request.
+pub fn run_trace(
+    shape: &TransformerShape,
+    cluster: &ClusterSpec,
+    stages: usize,
+    tp: usize,
+    max_batch: usize,
+    trace: &Trace,
+) -> Result<ServeReport, String> {
+    if trace.requests.is_empty() {
+        return Err("empty trace".into());
+    }
+    if max_batch == 0 {
+        return Err("max_batch must be at least 1".into());
+    }
+    let kv = KvCacheModel::new(shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
+    let context = trace.max_context();
+    let admission = kv.admission_limit(context);
+    if admission == 0 {
+        return Err(if kv.budget < kv.weight_bytes {
+            format!(
+                "infeasible: resident weights ({:.3e} B/rank) exceed the device budget \
+                 ({:.3e} B) at stages={stages}, tp={tp} — shard further",
+                kv.weight_bytes, kv.budget
+            )
+        } else {
+            format!(
+                "infeasible: one request's KV cache at context {context} ({:.3e} B/rank) \
+                 does not fit beside the weights ({:.3e} B of {:.3e} B budget) at \
+                 stages={stages}, tp={tp}",
+                kv.request_bytes(context),
+                kv.weight_bytes,
+                kv.budget
+            )
+        });
+    }
+    let (cap, cap_bound) = if max_batch <= admission {
+        (max_batch, "max-batch")
+    } else {
+        (admission, "kv-admission")
+    };
+
+    let mut costs = ServeCosts::new(shape, cluster, stages, tp);
+    let mut queue: Vec<&super::Request> = trace.requests.iter().collect();
+    queue.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+    let mut next = 0usize; // first not-yet-admitted request
+    let mut active: Vec<Active> = Vec::new();
+    let mut done: Vec<RequestMetrics> = Vec::new();
+    let mut token_lats: Vec<f64> = Vec::new();
+    let mut t = 0.0f64;
+    let mut waves = 0usize;
+    let mut peak_in_flight = 0usize;
+    let mut kv_peak = kv.weight_bytes;
+    // Indexed by request id.
+    let mut metrics: Vec<RequestMetrics> = trace
+        .requests
+        .iter()
+        .map(|r| RequestMetrics {
+            id: r.id,
+            arrival: r.arrival,
+            admitted: f64::NAN,
+            first_token: f64::NAN,
+            finish: f64::NAN,
+            decode: r.decode,
+        })
+        .collect();
+
+    while next < queue.len() || !active.is_empty() {
+        // Admission: fill free slots with requests that have arrived.
+        let mut newly: Vec<usize> = Vec::new(); // indices into `active`
+        while next < queue.len() && active.len() < cap && queue[next].arrival <= t {
+            let r = queue[next];
+            metrics[r.id].admitted = t;
+            active.push(Active { id: r.id, remaining: r.decode, produced: 0, prompt: r.prompt });
+            newly.push(active.len() - 1);
+            next += 1;
+        }
+        if active.is_empty() {
+            // Idle: jump to the next arrival.
+            t = t.max(queue[next].arrival);
+            continue;
+        }
+        peak_in_flight = peak_in_flight.max(active.len());
+
+        // Prefill the newly admitted prompts as one pipelined pass.
+        if !newly.is_empty() {
+            let prompt = newly.iter().map(|&i| active[i].prompt).max().unwrap();
+            t += costs.prefill_latency(newly.len(), prompt);
+        }
+
+        // One decode wave over everything in flight.
+        let dt = costs.decode_latency(active.len());
+        t += dt;
+        waves += 1;
+        let mut resident = kv.weight_bytes;
+        for a in active.iter_mut() {
+            a.produced += 1;
+            a.remaining -= 1;
+            token_lats.push(dt);
+            let m = &mut metrics[a.id];
+            if m.first_token.is_nan() {
+                m.first_token = t;
+            }
+            resident += kv.request_bytes(a.prompt + a.produced);
+        }
+        kv_peak = kv_peak.max(resident);
+        // Evict completions at the wave boundary.
+        active.retain(|a| {
+            if a.remaining == 0 {
+                metrics[a.id].finish = t;
+                done.push(metrics[a.id]);
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    let ttfts: Vec<f64> = done.iter().map(|m| m.ttft()).collect();
+    let total_tokens = trace.total_decode_tokens();
+    done.sort_by_key(|m| m.id);
+    Ok(ServeReport {
+        stages,
+        tp,
+        cap,
+        cap_bound,
+        completed: done.len(),
+        waves,
+        makespan: t,
+        ttft_p50: percentile(&ttfts, 50.0),
+        ttft_p99: percentile(&ttfts, 99.0),
+        token_p50: percentile(&token_lats, 50.0),
+        token_p99: percentile(&token_lats, 99.0),
+        tokens_per_sec: if t > 0.0 { total_tokens as f64 / t } else { 0.0 },
+        peak_in_flight,
+        kv_peak_bytes: kv_peak,
+        per_request: done,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::XModel;
+
+    fn setup() -> (TransformerShape, ClusterSpec) {
+        (XModel::new(8).shape(), ClusterSpec::reference())
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let v = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&v, 50.0), 2.0);
+        assert_eq!(percentile(&v, 99.0), 4.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn single_request_latency_is_prefill_plus_decode_waves() {
+        let (shape, cluster) = setup();
+        let trace = Trace::uniform(1, 1.0, 16, 4);
+        let r = run_trace(&shape, &cluster, 1, 1, 8, &trace).unwrap();
+        let mut costs = ServeCosts::new(&shape, &cluster, 1, 1);
+        let prefill = costs.prefill_latency(1, 16);
+        let wave = costs.decode_latency(1);
+        let m = r.per_request[0];
+        assert!((m.ttft() - (prefill + wave)).abs() < 1e-12, "ttft {}", m.ttft());
+        assert!((m.finish - (prefill + 4.0 * wave)).abs() < 1e-12);
+        assert_eq!(r.completed, 1);
+        assert_eq!(r.waves, 4);
+    }
+
+    #[test]
+    fn identity_single_stage_latency_is_the_summed_op_cost() {
+        // 1 stage, tp = 1, one request: the simulated prefill is d_l
+        // serial Fwd ops and a wave is d_l one-token Fwd ops — the
+        // batcher's latency must equal the summed per-op cost exactly.
+        let (shape, cluster) = setup();
+        let mut costs = ServeCosts::new(&shape, &cluster, 1, 1);
+        let d_l = shape.d_l as f64;
+        assert!((costs.prefill_latency(1, 16) - d_l * costs.table(16).fwd).abs() < 1e-15);
+        assert!((costs.decode_latency(1) - d_l * costs.table(1).fwd).abs() < 1e-15);
+    }
+
+    #[test]
+    fn batcher_is_deterministic_and_conserves_tokens() {
+        let (shape, cluster) = setup();
+        let trace = Trace::poisson(7, 50.0, 24, 16, 6);
+        let a = run_trace(&shape, &cluster, 2, 1, 4, &trace).unwrap();
+        let b = run_trace(&shape, &cluster, 2, 1, 4, &trace).unwrap();
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.waves, b.waves);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.completed, 24);
+        // Every decoded token shows up once in the per-token sample.
+        assert!(a.waves >= 6, "at least one request's worth of waves");
+        let tokens: usize = a.per_request.iter().map(|m| m.decode).sum();
+        assert_eq!(tokens, trace.total_decode_tokens());
+        assert!((a.tokens_per_sec * a.makespan - tokens as f64).abs() < 1e-6);
+        assert!(a.peak_in_flight <= a.cap);
+    }
+
+    #[test]
+    fn overload_raises_tail_latency() {
+        let (shape, cluster) = setup();
+        let mut costs = ServeCosts::new(&shape, &cluster, 2, 1);
+        let wave = costs.decode_latency(4);
+        // Offered rate far above and far below one request per wave.
+        let slow = Trace::uniform(16, wave * 0.01, 16, 8);
+        let fast = Trace::uniform(16, wave * 100.0, 16, 8);
+        let hot = run_trace(&shape, &cluster, 2, 1, 4, &slow).unwrap();
+        let cold = run_trace(&shape, &cluster, 2, 1, 4, &fast).unwrap();
+        assert!(
+            hot.ttft_p99 > cold.ttft_p99,
+            "queueing at overload must raise p99 TTFT ({} vs {})",
+            hot.ttft_p99,
+            cold.ttft_p99
+        );
+    }
+
+    #[test]
+    fn infeasible_deployments_name_the_binding_constraint() {
+        let (shape, _) = setup();
+        let mut small = ClusterSpec::reference();
+        small.gpu.memory_bytes = 1.0;
+        let trace = Trace::uniform(2, 1.0, 16, 4);
+        let err = run_trace(&shape, &small, 1, 1, 4, &trace).unwrap_err();
+        assert!(err.contains("infeasible"), "{err}");
+        assert!(err.contains("weights"), "{err}");
+    }
+}

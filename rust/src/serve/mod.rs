@@ -1,0 +1,192 @@
+//! Inference serving: continuous batching over the compiled-schedule
+//! pipeline.
+//!
+//! This module turns the training machinery into a serving engine
+//! without forking any of it. The request lifecycle maps onto the
+//! existing concepts one-to-one:
+//!
+//! ```text
+//! request arrives ──► admitted into a batch slot (micro-batch index)
+//!   │                   gated by the KV admission limit
+//!   ├─ prefill: the prompt runs the forward pipeline once
+//!   │    (schedule::prefill_pipeline — GPipe fill phase, no drain)
+//!   ├─ decode: one token per wave, all in-flight requests together
+//!   │    (schedule::decode_wave — layer-major stage waves,
+//!   │     TensorAllReduce per layer when tp > 1)
+//!   └─ completion: the request leaves, its KV cache is evicted
+//! ```
+//!
+//! * **Schedules** are forward-only [`crate::schedule::Schedule`]s,
+//!   lowered through the same CSR machinery and verified by the same
+//!   whole-world analyzer (`repro verify`) as training — with the
+//!   KV-cache taking the activation checkpoints' place in the static
+//!   memory walk ([`crate::analysis::MemoryModel::serving`]).
+//! * **Memory** is priced by [`crate::costmodel::KvCacheModel`]: the
+//!   admission limit (how many requests fit at full context beside the
+//!   resident weights) gates the batcher.
+//! * **Time** comes from the discrete-event simulator: per-wave
+//!   latencies are measured by simulating the compiled prefill/decode
+//!   programs against the calibrated [`crate::sim::CostTable`]
+//!   (memoised per batch size in [`batcher::ServeCosts`]).
+//! * **Load** is a seeded Poisson stream or an explicit trace
+//!   ([`Trace`]), drawn from the shared audited PRNG
+//!   ([`crate::sim::Xorshift`]) so every run is replayable.
+//!
+//! The continuous batcher ([`batcher::run_trace`]) alternates
+//! admission+prefill with decode waves and reports p50/p99
+//! time-to-first-token, per-token latency and tokens/sec; the SLO
+//! planner ([`crate::planner::slo`]) searches {stages, tp, max batch}
+//! over these reports.
+
+pub mod batcher;
+
+pub use batcher::{run_trace, RequestMetrics, ServeCosts, ServeReport};
+
+use crate::sim::Xorshift;
+
+/// One inference request: arrival time (seconds), prompt length and
+/// the number of output tokens to decode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Request {
+    pub id: usize,
+    pub arrival: f64,
+    pub prompt: usize,
+    pub decode: usize,
+}
+
+/// A request stream, sorted by arrival time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub requests: Vec<Request>,
+}
+
+impl Trace {
+    /// Seeded Poisson arrivals: `n` requests at `rate` per second
+    /// (exponential inter-arrival gaps from the shared generator),
+    /// each `prompt` tokens in and `decode` tokens out.
+    pub fn poisson(seed: u64, rate: f64, n: usize, prompt: usize, decode: usize) -> Trace {
+        assert!(rate > 0.0, "arrival rate must be positive");
+        let mut rng = Xorshift::new(seed);
+        let mut t = 0.0;
+        let requests = (0..n)
+            .map(|id| {
+                t += rng.next_exp(rate);
+                Request { id, arrival: t, prompt, decode }
+            })
+            .collect();
+        Trace { requests }
+    }
+
+    /// Deterministic uniform arrivals: `n` requests `gap` seconds
+    /// apart — the regression-test stream (no randomness at all).
+    pub fn uniform(n: usize, gap: f64, prompt: usize, decode: usize) -> Trace {
+        let requests = (0..n)
+            .map(|id| Request { id, arrival: id as f64 * gap, prompt, decode })
+            .collect();
+        Trace { requests }
+    }
+
+    /// Parse a trace file: one request per line as
+    /// `arrival_secs prompt_tokens decode_tokens`, `#` comments and
+    /// blank lines ignored. Requests are re-sorted by arrival.
+    pub fn parse(text: &str) -> Result<Trace, String> {
+        let mut requests = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 3 {
+                return Err(format!(
+                    "trace line {}: want `arrival prompt decode`, got {line:?}",
+                    lineno + 1
+                ));
+            }
+            let arrival: f64 = fields[0]
+                .parse()
+                .map_err(|e| format!("trace line {}: bad arrival: {e}", lineno + 1))?;
+            let prompt: usize = fields[1]
+                .parse()
+                .map_err(|e| format!("trace line {}: bad prompt length: {e}", lineno + 1))?;
+            let decode: usize = fields[2]
+                .parse()
+                .map_err(|e| format!("trace line {}: bad decode length: {e}", lineno + 1))?;
+            if prompt == 0 || decode == 0 {
+                return Err(format!(
+                    "trace line {}: prompt and decode must be nonzero",
+                    lineno + 1
+                ));
+            }
+            requests.push(Request { id: requests.len(), arrival, prompt, decode });
+        }
+        if requests.is_empty() {
+            return Err("trace holds no requests".into());
+        }
+        let mut t = Trace { requests };
+        t.requests.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
+        for (id, r) in t.requests.iter_mut().enumerate() {
+            r.id = id;
+        }
+        Ok(t)
+    }
+
+    /// Largest full context (`prompt + decode`) any request reaches —
+    /// what the admission limit must budget for.
+    pub fn max_context(&self) -> usize {
+        self.requests.iter().map(|r| r.prompt + r.decode).max().unwrap_or(0)
+    }
+
+    /// Total output tokens the whole trace decodes.
+    pub fn total_decode_tokens(&self) -> usize {
+        self.requests.iter().map(|r| r.decode).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_is_seed_deterministic() {
+        let a = Trace::poisson(11, 4.0, 64, 32, 8);
+        let b = Trace::poisson(11, 4.0, 64, 32, 8);
+        assert_eq!(a, b);
+        let c = Trace::poisson(12, 4.0, 64, 32, 8);
+        assert_ne!(a, c, "different seeds must produce different arrival streams");
+    }
+
+    #[test]
+    fn poisson_arrivals_are_increasing_at_roughly_the_rate() {
+        let t = Trace::poisson(5, 10.0, 2000, 16, 4);
+        assert!(t.requests.windows(2).all(|w| w[0].arrival < w[1].arrival));
+        let span = t.requests.last().unwrap().arrival;
+        let rate = t.requests.len() as f64 / span;
+        assert!((rate / 10.0 - 1.0).abs() < 0.1, "measured rate {rate}, want ~10");
+    }
+
+    #[test]
+    fn uniform_trace_is_exact() {
+        let t = Trace::uniform(4, 0.5, 32, 8);
+        let arr: Vec<f64> = t.requests.iter().map(|r| r.arrival).collect();
+        assert_eq!(arr, vec![0.0, 0.5, 1.0, 1.5]);
+        assert_eq!(t.max_context(), 40);
+        assert_eq!(t.total_decode_tokens(), 32);
+    }
+
+    #[test]
+    fn parse_roundtrips_and_sorts() {
+        let t = Trace::parse(
+            "# a comment\n0.5 32 8\n0.0 16 4  # inline comment\n\n1.0 8 2\n",
+        )
+        .unwrap();
+        assert_eq!(t.requests.len(), 3);
+        assert_eq!(t.requests[0].prompt, 16);
+        assert_eq!(t.requests[0].id, 0);
+        assert_eq!(t.requests[2].arrival, 1.0);
+        assert!(Trace::parse("").is_err());
+        assert!(Trace::parse("0.0 32").is_err());
+        assert!(Trace::parse("0.0 32 0").is_err());
+        assert!(Trace::parse("x 32 8").is_err());
+    }
+}

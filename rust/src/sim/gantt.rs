@@ -32,10 +32,40 @@ fn glyph(op: &Op) -> char {
     }
 }
 
+/// Serving glyphs: label forward-only ops with *request* identity
+/// instead of the raw micro-batch index. Decode programs encode
+/// `mb = token · n_req + request` (see
+/// [`crate::schedule::decode_identity`]); a prefill program is the
+/// `n_req = n_mu` special case, where the two labellings coincide.
+/// Compute cells show the request digit; transfer cells keep the
+/// direction glyphs (the request is readable from the adjacent
+/// compute cell).
+fn serve_glyph(op: &Op, n_req: usize) -> char {
+    match op {
+        Op::Fwd { mb, .. } | Op::TensorAllReduce { mb, .. } => {
+            let (_token, req) = crate::schedule::decode_identity(*mb, n_req);
+            char::from_digit((req % 10) as u32, 10).unwrap()
+        }
+        other => glyph(other),
+    }
+}
+
 /// Render a simulated timeline as ASCII, `width` characters across.
 /// Needs a result produced with `record_timeline: true` (the default);
 /// a timeline-free planner-loop result renders as all-idle rows.
 pub fn render(result: &SimResult, width: usize) -> String {
+    render_with(result, width, glyph)
+}
+
+/// Render a *serving* timeline: forward-only ops are labelled with the
+/// request slot they advance (`n_req` in-flight requests), so a decode
+/// Gantt reads as waves of request digits instead of ever-growing
+/// micro-batch indices.
+pub fn render_requests(result: &SimResult, width: usize, n_req: usize) -> String {
+    render_with(result, width, |op| serve_glyph(op, n_req))
+}
+
+fn render_with(result: &SimResult, width: usize, glyph_of: impl Fn(&Op) -> char) -> String {
     let span = result.makespan.max(1e-30);
     let scale = width as f64 / span;
     let mut out = String::new();
@@ -43,7 +73,7 @@ pub fn render(result: &SimResult, width: usize) -> String {
         for (stream, label) in [(Stream::Compute, "comp"), (Stream::NetOut, "nout"), (Stream::NetIn, "nin ")] {
             let mut row = vec!['·'; width];
             for t in result.timeline.iter().filter(|t| t.stage == stage && t.stream == stream) {
-                paint(&mut row, t, scale);
+                paint(&mut row, t, scale, &glyph_of);
             }
             // Skip all-idle network rows to keep small figures compact.
             if stream != Stream::Compute && row.iter().all(|&c| c == '·') {
@@ -55,11 +85,11 @@ pub fn render(result: &SimResult, width: usize) -> String {
     out
 }
 
-fn paint(row: &mut [char], t: &TimedOp, scale: f64) {
+fn paint(row: &mut [char], t: &TimedOp, scale: f64, glyph_of: &impl Fn(&Op) -> char) {
     let width = row.len();
     let a = ((t.start * scale).floor() as usize).min(width.saturating_sub(1));
     let b = ((t.end * scale).ceil() as usize).clamp(a + 1, width);
-    let g = glyph(&t.op);
+    let g = glyph_of(&t.op);
     for cell in row.iter_mut().take(b).skip(a) {
         *cell = g;
     }
@@ -106,6 +136,45 @@ mod tests {
         for stage in 0..4 {
             assert!(g.contains(&format!("s{stage} comp")), "{g}");
         }
+    }
+
+    #[test]
+    fn serving_timeline_labels_requests_not_micro_batches() {
+        use crate::schedule::{decode_waves, lower, ScheduleSpec};
+        use crate::sim::engine::simulate_program;
+
+        let sp = ScheduleSpec {
+            d_l: 4,
+            n_l: 2,
+            n_mu: 2, // two in-flight requests
+            tp: 1,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+        };
+        let program = lower(&decode_waves(&sp, 3)).unwrap();
+        let cfg = TrainConfig {
+            strategy: Strategy::Improved,
+            n_b: 1,
+            n_l: 2,
+            n_a: 1,
+            n_mu: 1,
+            b_mu: 1.0 / 256.0,
+            offload: false,
+            partition: false,
+        };
+        let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &ClusterSpec::reference());
+        let result = simulate_program(&program, &costs);
+        let plain = render(&result, 80);
+        let served = render_requests(&result, 80, 2);
+        // Six micro-batch slots (2 requests × 3 waves): the raw render
+        // leaks wave-encoded indices 2..5, the serving render shows
+        // only request digits 0 and 1.
+        for bad in ['2', '3', '4', '5'] {
+            assert!(plain.contains(bad), "raw render should show slot {bad}:\n{plain}");
+            assert!(!served.contains(bad), "serving render leaks slot {bad}:\n{served}");
+        }
+        assert!(served.contains('0') && served.contains('1'), "{served}");
     }
 
     #[test]

@@ -11,6 +11,7 @@
 pub mod cost;
 pub mod engine;
 pub mod gantt;
+pub mod rng;
 
 pub use cost::{CostTable, Stream, WireBytes};
 pub use engine::{
@@ -18,4 +19,5 @@ pub use engine::{
     simulate_with_failures, FailureEvent, FailureRecord, RecoveryAccounting, SimOptions, SimResult,
     SimScratch, TimedOp,
 };
-pub use gantt::render;
+pub use gantt::{render, render_requests};
+pub use rng::Xorshift;

@@ -1,0 +1,122 @@
+//! Shared seeded PRNG: one audited xorshift64* generator for every
+//! subsystem that needs reproducible randomness — chaos fault plans
+//! ([`crate::trainer`]'s `repro chaos`) and serving request traces
+//! ([`crate::serve`]'s Poisson arrival stream) draw from this exact
+//! sequence, so a seed printed in a report replays the run bit-for-bit.
+//!
+//! The generator is deliberately tiny and fully specified here (no
+//! external crates, no global state): an xorshift64* step with a
+//! golden-ratio seed scramble, the same recurrence the chaos module
+//! originally inlined — extracting it did not change a single drawn
+//! value (the chaos determinism tests pin that).
+
+/// Seedable xorshift64* generator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Xorshift {
+    state: u64,
+}
+
+impl Xorshift {
+    /// Seed the generator. The golden-ratio XOR decorrelates small
+    /// consecutive seeds; the all-zero state (the one fixed point of
+    /// the recurrence) is remapped to 1.
+    pub fn new(seed: u64) -> Self {
+        let mut state = seed ^ 0x9e37_79b9_7f4a_7c15;
+        if state == 0 {
+            state = 1;
+        }
+        Xorshift { state }
+    }
+
+    /// Next raw 64-bit draw (xorshift64* step).
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.state = x;
+        x.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    /// Uniform draw in `[0, 1)` from the top 53 bits (the full f64
+    /// mantissa — every representable value in the grid is reachable).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)`; `n = 0` is treated as 1.
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() as usize) % n.max(1)
+    }
+
+    /// Exponential draw with the given rate (mean `1/rate`) — the
+    /// inter-arrival gap of a Poisson process by inverse transform.
+    /// The uniform is reflected to `(0, 1]` so the log is finite.
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        let u = 1.0 - self.next_f64();
+        -u.ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_sequence() {
+        let mut a = Xorshift::new(42);
+        let mut b = Xorshift::new(42);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Xorshift::new(1);
+        let mut b = Xorshift::new(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 4, "seeds 1 and 2 collide on {same}/64 draws");
+    }
+
+    #[test]
+    fn zero_seed_is_usable() {
+        // seed ^ scramble could in principle hit the xorshift fixed
+        // point; the constructor guards it, and seed 0 must still
+        // produce a non-degenerate stream.
+        let mut r = Xorshift::new(0x9e37_79b9_7f4a_7c15); // maps to state 0 -> 1
+        let draws: Vec<u64> = (0..8).map(|_| r.next_u64()).collect();
+        assert!(draws.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn uniform_is_in_range_and_covers_both_halves() {
+        let mut r = Xorshift::new(7);
+        let draws: Vec<f64> = (0..1000).map(|_| r.next_f64()).collect();
+        assert!(draws.iter().all(|u| (0.0..1.0).contains(u)));
+        assert!(draws.iter().any(|u| *u < 0.5) && draws.iter().any(|u| *u >= 0.5));
+    }
+
+    #[test]
+    fn exponential_matches_its_mean() {
+        let mut r = Xorshift::new(3);
+        let rate = 4.0;
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_exp(rate)).sum::<f64>() / n as f64;
+        assert!(
+            (mean * rate - 1.0).abs() < 0.05,
+            "exp(rate={rate}) sample mean {mean}, want ~{}",
+            1.0 / rate
+        );
+        let mut r = Xorshift::new(3);
+        assert!((0..1000).all(|_| r.next_exp(rate) > 0.0));
+    }
+
+    #[test]
+    fn next_below_stays_in_range() {
+        let mut r = Xorshift::new(9);
+        assert!((0..1000).all(|_| r.next_below(7) < 7));
+        assert_eq!(r.next_below(0), 0);
+        assert_eq!(r.next_below(1), 0);
+    }
+}

@@ -34,6 +34,7 @@ use anyhow::{Context, Result};
 
 use crate::elastic::cluster_schedule;
 use crate::model::XModel;
+use crate::sim::Xorshift;
 
 use super::launch::{launch_local_opts, LaunchOptions, LaunchReport};
 use super::{train, TrainReport, TrainerConfig};
@@ -75,17 +76,6 @@ pub struct ChaosPlan {
     pub events: Vec<ChaosEvent>,
 }
 
-/// xorshift64* step: deterministic, seedable, no global state — the
-/// same seed always replays the same fault schedule.
-fn xorshift(state: &mut u64) -> u64 {
-    let mut x = *state;
-    x ^= x << 13;
-    x ^= x >> 7;
-    x ^= x << 17;
-    *state = x;
-    x.wrapping_mul(0x2545_f491_4f6c_dd1d)
-}
-
 /// Largest divisor of `g` that is ≤ `target` (≥ 1): clamps an elastic
 /// cluster-size suggestion to a data-parallel degree that preserves
 /// the global micro-batch count.
@@ -97,30 +87,30 @@ fn clamp_to_divisor(g: usize, target: usize) -> usize {
 /// seeded steps, each reviving under a topology suggested by the §8.1
 /// elastic cluster schedule at that point of training (clamped to a
 /// divisor of the global batch `n_b · n_mu`), plus one torn store.
+/// Draws come from the shared [`Xorshift`] generator — the same
+/// recurrence this module used to inline, so old seeds replay the same
+/// schedules.
 pub fn seeded_plan(seed: u64, steps: usize, n_b: usize, n_mu: usize, kills: usize) -> ChaosPlan {
     let g = (n_b * n_mu).max(1);
     let span = steps.saturating_sub(1).max(1);
-    let mut state = seed ^ 0x9e37_79b9_7f4a_7c15;
-    if state == 0 {
-        state = 1;
-    }
+    let mut rng = Xorshift::new(seed);
     // The elastic schedule says how many workers training *wants* at
     // each progress fraction; a kill at step s revives onto that size.
     let sched = cluster_schedule(&XModel::new(32), g, steps.max(1), 0.05);
     let mut events = Vec::with_capacity(kills + 1);
     for _ in 0..kills {
-        let at_step = 1 + (xorshift(&mut state) as usize) % span;
-        let rank = (xorshift(&mut state) as usize) % g;
+        let at_step = 1 + (rng.next_u64() as usize) % span;
+        let rank = (rng.next_u64() as usize) % g;
         let suggested = sched[at_step.min(sched.len() - 1)].1;
         let n_b2 = clamp_to_divisor(g, suggested);
-        let tp = 1 + (xorshift(&mut state) % 2) as usize;
+        let tp = 1 + (rng.next_u64() % 2) as usize;
         events.push(ChaosEvent::Kill {
             at_step,
             rank,
             revive: Revive { n_b: n_b2, n_mu: g / n_b2, tp },
         });
     }
-    events.push(ChaosEvent::TearStore { at_step: 1 + (xorshift(&mut state) as usize) % span });
+    events.push(ChaosEvent::TearStore { at_step: 1 + (rng.next_u64() as usize) % span });
     events.sort_by_key(|e| e.at_step());
     ChaosPlan { seed, events }
 }

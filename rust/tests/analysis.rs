@@ -258,6 +258,68 @@ fn all_generators_compose_to_accepted_worlds() {
     assert!(verified > 150, "grid unexpectedly small: {verified} worlds");
 }
 
+// ---- serving worlds: forward-only programs under the KV bound ----------
+
+#[test]
+fn serving_grid_composes_to_accepted_worlds() {
+    // The inference-serving generators ride the same analyzer: every
+    // stages x tp x in-flight point must compose at dp = 1 and pass
+    // all whole-world checks with the KV-cache memory model standing
+    // in for the activation-checkpoint budget.
+    use lga_mpp::costmodel::KvCacheModel;
+    use lga_mpp::runtime::DType;
+    use lga_mpp::schedule::{decode_wave, prefill_pipeline};
+
+    let cluster = ClusterSpec::reference();
+    let shape = XModel::new(8).shape();
+    let (prompt, decode) = (32usize, 8usize);
+    let mut verified = 0usize;
+    for stages in [1usize, 2, 4, 8] {
+        for tp in [1usize, 2] {
+            for cap in [1usize, 2, 4, 8] {
+                let sp = ScheduleSpec {
+                    d_l: shape.d_l,
+                    n_l: stages,
+                    n_mu: cap,
+                    tp,
+                    partition: false,
+                    offload: false,
+                    data_parallel: false,
+                };
+                let kv =
+                    KvCacheModel::new(&shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
+                let topo = Topology::new(stages, 1, tp);
+                for (name, schedule, tokens, context) in [
+                    ("prefill", prefill_pipeline(&sp), prompt, 0usize),
+                    ("decode", decode_wave(&sp), 1, prompt + decode - 1),
+                ] {
+                    let prog = program(&schedule);
+                    let cfg = TrainConfig {
+                        strategy: Strategy::Improved,
+                        n_b: 1,
+                        n_l: stages,
+                        n_a: tp,
+                        n_mu: 1,
+                        b_mu: tokens as f64 / shape.d_s as f64,
+                        offload: false,
+                        partition: false,
+                    };
+                    let costs = CostTable::new(&shape, &cfg, &cluster);
+                    let budget = MemoryModel::serving(&kv, &costs, cap, context, tokens);
+                    match verify_program(&prog, topo, costs.wire, Some(&budget)) {
+                        Ok(()) => verified += 1,
+                        Err(errors) => panic!(
+                            "serving {name} s{stages} tp{tp} cap{cap}: rejected a generated \
+                             world:\n{errors:?}"
+                        ),
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(verified, 64, "the stages x tp x in-flight grid must fully verify");
+}
+
 // ---- planner parity: the static filter changes nothing -----------------
 
 fn rank_unfiltered(

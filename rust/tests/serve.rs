@@ -1,0 +1,156 @@
+//! End-to-end serving subsystem tests: deterministic-trace latency
+//! regression, the simulator identity check, and whole-world static
+//! verification of every serving deployment in a small grid.
+
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::{TransformerShape, XModel};
+use lga_mpp::planner::{plan_slo, verify_serving, SloSpec};
+use lga_mpp::serve::{run_trace, ServeCosts, Trace};
+use lga_mpp::sim::Xorshift;
+
+fn setup() -> (TransformerShape, ClusterSpec) {
+    (XModel::new(8).shape(), ClusterSpec::reference())
+}
+
+/// Latency regression on a fixed deterministic trace: the numbers are
+/// relational (prefill + wave identities), so the test pins behaviour
+/// without hard-coding absolute seconds that drift with the cost model.
+#[test]
+fn deterministic_trace_latency_regression() {
+    let (shape, cluster) = setup();
+    // 6 requests all arriving at t=0: one admission burst of `cap`,
+    // then a second burst as slots free up.
+    let trace = Trace::uniform(6, 0.0, 16, 3);
+    let r = run_trace(&shape, &cluster, 2, 1, 4, &trace).unwrap();
+    assert_eq!(r.completed, 6);
+    assert_eq!(r.cap, 4);
+    assert_eq!(r.cap_bound, "max-batch");
+    assert_eq!(r.peak_in_flight, 4);
+
+    let mut costs = ServeCosts::new(&shape, &cluster, 2, 1);
+    // First burst: 4 prompts prefill together, then 3 waves of 4.
+    // The remaining 2 admit after the first completions evict.
+    let m0 = r.per_request[0];
+    let expected_ttft = costs.prefill_latency(4, 16) + costs.decode_latency(4);
+    assert!(
+        (m0.ttft() - expected_ttft).abs() < 1e-12,
+        "first-burst TTFT {} != prefill+wave {}",
+        m0.ttft(),
+        expected_ttft
+    );
+    assert!(
+        (m0.finish - (costs.prefill_latency(4, 16) + 3.0 * costs.decode_latency(4))).abs()
+            < 1e-12
+    );
+    // The late requests are admitted strictly after the early finishes.
+    let m5 = r.per_request[5];
+    assert!(m5.admitted >= m0.finish - 1e-12);
+
+    // Replay determinism: bit-identical report.
+    let again = run_trace(&shape, &cluster, 2, 1, 4, &trace).unwrap();
+    assert_eq!(r.makespan, again.makespan);
+    assert_eq!(r.ttft_p99, again.ttft_p99);
+    assert_eq!(r.token_p99, again.token_p99);
+    assert_eq!(r.waves, again.waves);
+
+    // Token conservation ties throughput to the trace exactly.
+    assert!(
+        (r.tokens_per_sec * r.makespan - trace.total_decode_tokens() as f64).abs() < 1e-9
+    );
+}
+
+/// Simulator identity: one request on one stage at tp = 1 means no
+/// transfers, no collectives, no overlap — the reported latency must
+/// equal the summed per-op cost of the compiled schedule.
+#[test]
+fn identity_latency_equals_summed_op_cost() {
+    let (shape, cluster) = setup();
+    let trace = Trace::uniform(1, 0.0, 16, 4);
+    let r = run_trace(&shape, &cluster, 1, 1, 1, &trace).unwrap();
+    let mut costs = ServeCosts::new(&shape, &cluster, 1, 1);
+    let d_l = shape.d_l as f64;
+    let prefill = d_l * costs.table(16).fwd;
+    let wave = d_l * costs.table(1).fwd;
+    assert!((costs.prefill_latency(1, 16) - prefill).abs() < 1e-15);
+    assert!((costs.decode_latency(1) - wave).abs() < 1e-15);
+    let m = r.per_request[0];
+    assert!((m.ttft() - (prefill + wave)).abs() < 1e-12);
+    assert!((m.finish - (prefill + 4.0 * wave)).abs() < 1e-12);
+}
+
+/// The arrival stream is seed-deterministic end to end: same seed,
+/// same trace, same report; different seed, different makespan.
+#[test]
+fn poisson_serving_is_seed_deterministic() {
+    let (shape, cluster) = setup();
+    let a = run_trace(&shape, &cluster, 2, 2, 4, &Trace::poisson(3, 30.0, 20, 16, 4)).unwrap();
+    let b = run_trace(&shape, &cluster, 2, 2, 4, &Trace::poisson(3, 30.0, 20, 16, 4)).unwrap();
+    assert_eq!(a.makespan, b.makespan);
+    assert_eq!(a.ttft_p50, b.ttft_p50);
+    let c = run_trace(&shape, &cluster, 2, 2, 4, &Trace::poisson(4, 30.0, 20, 16, 4)).unwrap();
+    assert_ne!(a.makespan, c.makespan, "a different seed must reshuffle arrivals");
+
+    // And the shared generator itself replays.
+    let mut x = Xorshift::new(3);
+    let mut y = Xorshift::new(3);
+    assert!((0..64).all(|_| x.next_u64() == y.next_u64()));
+}
+
+/// Saturating the batcher (all arrivals at once, rate far above one
+/// request per wave) must raise tail latency over a trickle.
+#[test]
+fn overload_raises_tail_latency_monotonically() {
+    let (shape, cluster) = setup();
+    let mut costs = ServeCosts::new(&shape, &cluster, 2, 1);
+    let wave = costs.decode_latency(4);
+    let hot = run_trace(&shape, &cluster, 2, 1, 4, &Trace::uniform(16, wave * 0.01, 16, 8))
+        .unwrap();
+    let cold = run_trace(&shape, &cluster, 2, 1, 4, &Trace::uniform(16, wave * 100.0, 16, 8))
+        .unwrap();
+    assert!(hot.ttft_p99 > cold.ttft_p99);
+    assert!(hot.ttft_p50 >= cold.ttft_p50);
+    // Batching amortises: the saturated run decodes more tokens per
+    // second than the one-at-a-time trickle.
+    assert!(hot.tokens_per_sec > cold.tokens_per_sec);
+}
+
+/// Every serving deployment in the grid — prefill and decode programs
+/// composed over all ranks at dp = 1 — passes whole-world verification
+/// including the KV-aware static memory bound.
+#[test]
+fn serving_grid_passes_whole_world_verification() {
+    let (shape, cluster) = setup();
+    let mut verified = 0usize;
+    for stages in [1usize, 2, 4, 8] {
+        for tp in [1usize, 2] {
+            for cap in [1usize, 2, 4, 8] {
+                verify_serving(&shape, &cluster, stages, tp, cap, 32, 8).unwrap_or_else(|e| {
+                    panic!("stages={stages} tp={tp} cap={cap}: {e}")
+                });
+                verified += 1;
+            }
+        }
+    }
+    assert_eq!(verified, 32);
+}
+
+/// The SLO planner end to end: a relaxed SLO yields a feasible winner
+/// whose own report satisfies it, and the winner dominates every other
+/// evaluated deployment on tokens/sec.
+#[test]
+fn slo_planner_finds_a_feasible_throughput_maximum() {
+    let (shape, cluster) = setup();
+    let spec = SloSpec {
+        rate: 10.0,
+        slo_p99_ttft: f64::INFINITY,
+        n_requests: 8,
+        prompt: 16,
+        decode: 4,
+        seed: 2,
+    };
+    let plan = plan_slo(&shape, &cluster, &spec).unwrap();
+    assert!(plan.infeasible.is_none());
+    assert!(plan.best.meets(spec.slo_p99_ttft));
+    let best = plan.best.report.tokens_per_sec;
+    assert!(plan.evaluated.iter().all(|c| c.report.tokens_per_sec <= best + 1e-9));
+}
