@@ -25,6 +25,7 @@ fn main() {
         partition: true,
         offload: true,
         data_parallel: true,
+        zero: 0,
     };
     let cfg = TrainConfig {
         strategy: Strategy::Improved,
@@ -35,6 +36,7 @@ fn main() {
         b_mu: 1.0,
         offload: true,
         partition: true,
+        zero: 0,
     };
     let costs = CostTable::new(&XModel::new(64).shape(), &cfg, &ClusterSpec::reference());
     let program = lower(&modular_pipeline(&spec)).expect("offloaded modular pipeline lowers");

@@ -22,6 +22,7 @@ fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
         b_mu: 1.0,
         offload: false,
         partition,
+        zero: 0,
     };
     CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
 }
@@ -37,6 +38,7 @@ fn main() {
         partition: false,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let c = costs(8, 1, 8, false);
     let rs = simulate(&standard_ga(&spec), &c);
@@ -62,6 +64,7 @@ fn main() {
         partition: true,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let cp = costs(8, 1, 8, true);
     let s2 = standard_ga(&spec_p);
@@ -88,6 +91,7 @@ fn main() {
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let c3 = costs(1, 4, 8, false);
     let rn = simulate(&standard_ga(&spec3), &c3);
@@ -111,6 +115,7 @@ fn main() {
         partition: true,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let cb = costs(16, 5, 32, true);
     let sched = modular_pipeline(&big);

@@ -108,6 +108,7 @@ fn main() {
             partition: false,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
     let cfg = TrainConfig {
         strategy: Strategy::Baseline,
@@ -118,6 +119,7 @@ fn main() {
         b_mu: 1.0,
         offload: false,
         partition: false,
+        zero: 0,
     };
     let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
     let program = lower(&modular_pipeline(&spec)).expect("lowers");

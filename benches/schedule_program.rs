@@ -65,6 +65,7 @@ fn main() {
             b_mu: 1.0,
             offload: false,
             partition: part,
+            zero: 0,
         };
         CostTable::new(&XModel::new(32).shape(), &cfg, &cluster)
     };
@@ -81,6 +82,7 @@ fn main() {
             partition: part,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         let costs = mk_costs(n_l, n_mu, part);
         bench_one(&format!("modular {d_l}L/{n_l}S/{n_mu}mb"), &modular_pipeline(&spec), &costs);
@@ -106,6 +108,7 @@ fn main() {
             partition: false,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
     let costs = mk_costs(32, 128, false);
     let mut worst = f64::MAX;

@@ -54,6 +54,7 @@ fn main() {
             partition: part,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         let cfg = TrainConfig {
             strategy: if part { Strategy::Improved } else { Strategy::Baseline },
@@ -64,6 +65,7 @@ fn main() {
             b_mu: 1.0,
             offload: false,
             partition: part,
+            zero: 0,
         };
         let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
         for (policy, sched) in [

@@ -38,6 +38,7 @@ fn main() {
             b_mu,
             offload: false,
             partition: false,
+            zero: 0,
         };
         let costs = CostTable::new(&shape, &cfg, &cluster);
 

@@ -1,0 +1,94 @@
+//! ZeRO state-sharding scaling accounting: per-device training state
+//! and dp wire bytes vs the data-parallel degree, per stage, from the
+//! shared memory model (`MemoryBreakdown`) and the simulator's cost
+//! table. Asserts the 1/dp optimizer-state slope the sharding exists to
+//! buy: stages 1–2 shard the 8 B/param Adam moments across the dp
+//! group, stage 3 shards all 12 B/param, while the reduce-scatter +
+//! all-gather wire volume stays exactly the all-reduce's for stage 2.
+//! Run via `cargo bench --bench zero_scaling`; writes
+//! BENCH_zero_scaling.json.
+
+use lga_mpp::costmodel::{MemoryBreakdown, Strategy, TrainConfig};
+use lga_mpp::hardware::ClusterSpec;
+use lga_mpp::model::XModel;
+use lga_mpp::report::BenchJson;
+use lga_mpp::sim::CostTable;
+
+fn cfg(n_b: usize, zero: u8) -> TrainConfig {
+    TrainConfig {
+        strategy: Strategy::Improved,
+        n_b,
+        n_l: 1,
+        n_a: 1,
+        n_mu: 4,
+        b_mu: 1.0,
+        offload: false,
+        partition: false,
+        zero,
+    }
+}
+
+fn main() {
+    let mut json = BenchJson::new("zero_scaling");
+    let cluster = ClusterSpec::reference();
+    let model = XModel::new(64);
+    let shape = model.shape();
+    let p = shape.params();
+
+    println!("== zero scaling (X_64, single stage, b_mu = 1) ==");
+    println!(
+        "{:>4} {:>5} {:>16} {:>16} {:>16}",
+        "dp", "zero", "state B/device", "dp wire B/layer", "vs all-reduce"
+    );
+
+    for dp in [2usize, 4, 8] {
+        let full = MemoryBreakdown::evaluate(&shape, &cfg(dp, 0)).state;
+        let all_reduce =
+            CostTable::new(&shape, &cfg(dp, 0), &cluster).wire.reduce_grad;
+        assert!((full - 12.0 * p).abs() < 1e-3, "zero=0 state is 12 B/param");
+
+        for zero in [1u8, 2, 3] {
+            let c = cfg(dp, zero);
+            let state = MemoryBreakdown::evaluate(&shape, &c).state;
+            let wire = CostTable::new(&shape, &c, &cluster).wire;
+            let zero_wire = wire.reduce_scatter_grad + wire.all_gather_params;
+
+            // The slope the sharding buys: the sharded fraction of the
+            // 12 B/param divides exactly by dp.
+            let want = match zero {
+                1 | 2 => (4.0 + 8.0 / dp as f64) * p,
+                _ => 12.0 / dp as f64 * p,
+            };
+            assert!(
+                (state / want - 1.0).abs() < 1e-9,
+                "dp={dp} zero={zero}: state {state:.3e} vs 1/dp law {want:.3e}"
+            );
+            assert!(state < full, "sharded state must shrink");
+
+            // Stage 2's reduce-scatter + all-gather move exactly the
+            // bytes the all-reduce they replace would have moved (each
+            // half is half the ring volume).
+            let vs = if zero >= 2 { zero_wire / all_reduce } else { f64::NAN };
+            if zero >= 2 {
+                assert!(
+                    (vs - 1.0).abs() < 1e-9,
+                    "dp={dp} zero={zero}: stage-2 volume {zero_wire:.3e} \
+                     vs all-reduce {all_reduce:.3e}"
+                );
+            }
+
+            println!("{dp:>4} {zero:>5} {state:>16.3e} {zero_wire:>16.3e} {vs:>16.3}");
+            json.push(&format!("dp{dp}.zero{zero}.state_bytes_per_device"), state);
+            json.push(&format!("dp{dp}.zero{zero}.dp_wire_bytes_per_layer"), zero_wire);
+        }
+
+        // Cross-stage ordering at this dp: stage 3 ≤ stages 1–2 < full.
+        let s12 = MemoryBreakdown::evaluate(&shape, &cfg(dp, 2)).state;
+        let s3 = MemoryBreakdown::evaluate(&shape, &cfg(dp, 3)).state;
+        assert!(s3 < s12 && s12 < full);
+        json.push(&format!("dp{dp}.state_ratio_zero2"), s12 / full);
+        json.push(&format!("dp{dp}.state_ratio_zero3"), s3 / full);
+    }
+
+    json.finish();
+}

@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let cfg = lga_mpp::costmodel::TrainConfig {
         strategy: Strategy::Baseline,
@@ -49,6 +50,7 @@ fn main() -> anyhow::Result<()> {
         b_mu: 1.0,
         offload: false,
         partition: false,
+        zero: 0,
     };
     let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &cluster);
     let naive = simulate(&standard_ga(&spec), &costs);

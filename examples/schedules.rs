@@ -23,6 +23,7 @@ fn costs(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable {
         b_mu: 1.0,
         offload: false,
         partition,
+        zero: 0,
     };
     CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
 }
@@ -50,6 +51,7 @@ fn main() {
         partition: false,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let c = costs(8, 1, 4, false);
     let std_s = standard_ga(&spec);
@@ -75,6 +77,7 @@ fn main() {
         partition: true,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let c = costs(8, 1, 4, true);
     let std_s = standard_ga(&spec);
@@ -101,6 +104,7 @@ fn main() {
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let c = costs(1, 4, 6, false);
     let naive = standard_ga(&spec);
@@ -128,6 +132,7 @@ fn main() {
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let c = costs(1, 4, 8, false);
     let fb = one_f_one_b(&spec);

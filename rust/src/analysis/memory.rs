@@ -174,6 +174,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
 
         // Prefill: cold cache, each Fwd appends a whole 16-token prompt.
@@ -210,6 +211,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition: false,
+            zero: 0,
         };
         CostTable::new(&XModel::new(8).shape(), &cfg, &ClusterSpec::reference())
     }

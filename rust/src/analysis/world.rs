@@ -75,7 +75,7 @@ impl WorldModel {
         if topo.dp > 1 {
             let mut reduced = vec![false; program.d_l];
             for node in &program.ops {
-                if let Op::ReduceGrad { layer } = node.op {
+                if let Op::ReduceGrad { layer } | Op::ReduceScatterGrad { layer } = node.op {
                     reduced[layer] = true;
                 }
             }
@@ -289,10 +289,12 @@ impl WorldModel {
 
     /// Whether `op` runs on the given collective axis. `RestoreParams`
     /// is a dp all-gather only under a partition; offload-only restores
-    /// are local CPU fetches.
+    /// are local CPU fetches. The ZeRO collectives (reduce-scatter,
+    /// parameter all-gather) always rendezvous on the dp ring.
     fn on_axis(&self, op: &Op, dp_axis: bool) -> bool {
         match op {
             Op::ReduceGrad { .. } => dp_axis,
+            Op::ReduceScatterGrad { .. } | Op::AllGatherParams { .. } => dp_axis,
             Op::RestoreParams { .. } => dp_axis && self.partitioned,
             Op::TensorAllReduce { .. } => !dp_axis,
             _ => false,

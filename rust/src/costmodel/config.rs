@@ -96,6 +96,14 @@ pub struct TrainConfig {
     /// direction (always true for `Partitioned`; default true for
     /// `Improved`; always false for `Baseline`).
     pub partition: bool,
+    /// ZeRO stage (0–3, Rajbhandari et al.) over the data-parallel
+    /// group: 1 shards the Adam moments 1/n_b, 2 additionally
+    /// reduce-scatters the gradients, 3 additionally divides the
+    /// parameters (gather-before-use). Mutually exclusive with
+    /// `partition` — the two are competing ways to shard the state, and
+    /// keeping them distinct is what lets the planner quantify
+    /// ZeRO vs the paper's modular partition.
+    pub zero: u8,
 }
 
 impl TrainConfig {
@@ -135,6 +143,13 @@ impl TrainConfig {
         if self.strategy == Strategy::Partitioned && !self.partition {
             return Err("Partitioned strategy must partition the state".into());
         }
+        if self.zero > 3 {
+            return Err(format!("ZeRO stage {} out of range (stages are 0-3)", self.zero));
+        }
+        if self.zero > 0 && self.partition {
+            return Err("ZeRO sharding and the modular state partition are mutually exclusive"
+                .into());
+        }
         Ok(())
     }
 }
@@ -153,6 +168,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition: true,
+            zero: 0,
         }
     }
 
@@ -173,6 +189,17 @@ mod tests {
         assert!(c.validate().is_ok());
         c.strategy = Strategy::Partitioned;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_rejects_zero_partition_overlap() {
+        let mut c = cfg();
+        c.zero = 4;
+        assert!(c.validate().is_err());
+        c.zero = 2;
+        assert!(c.validate().is_err(), "zero and partition are mutually exclusive");
+        c.partition = false;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -169,7 +169,7 @@ mod tests {
         offload: bool,
         partition: bool,
     ) -> TrainConfig {
-        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition }
+        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition, zero: 0 }
     }
 
     /// Reproduce Table 6.1's efficiency and training-time columns.

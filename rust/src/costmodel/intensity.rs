@@ -158,7 +158,7 @@ mod tests {
     use crate::model::XModel;
 
     fn x160_cfg(strategy: Strategy, n_b: usize, n_l: usize, n_a: usize, n_mu: usize, b_mu: f64, partition: bool) -> TrainConfig {
-        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload: false, partition }
+        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload: false, partition, zero: 0 }
     }
 
     #[test]

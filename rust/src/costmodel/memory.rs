@@ -43,7 +43,19 @@ impl MemoryBreakdown {
 
         // Training state: 12 bytes/param (fp32 params + Adam mean and
         // variance; gradients folded away by eager weight updates, C.3).
-        let state = if cfg.partition { 12.0 * p / n_gpu } else { 12.0 * p / (n_l * n_a) };
+        // The modular partition divides all 12 bytes by every device;
+        // ZeRO divides per stage: 1–2 shard only the 8 bytes of Adam
+        // moments 1/n_b (params stay replicated across the dp group),
+        // 3 shards all 12.
+        let state = if cfg.partition {
+            12.0 * p / n_gpu
+        } else {
+            match cfg.zero {
+                1 | 2 => (4.0 + 8.0 / n_b) * p / (n_l * n_a),
+                3 => 12.0 / n_b * p / (n_l * n_a),
+                _ => 12.0 * p / (n_l * n_a),
+            }
+        };
 
         // Activation checkpoints: fp16 layer outputs for the whole batch,
         // split across data, pipeline and tensor dimensions (C.3).
@@ -105,7 +117,7 @@ mod tests {
         offload: bool,
         partition: bool,
     ) -> TrainConfig {
-        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition }
+        TrainConfig { strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition, zero: 0 }
     }
 
     /// Full check of Table 6.2 (all 9 rows, all 6 columns), tolerance 1%.
@@ -167,6 +179,33 @@ mod tests {
         assert_eq!(mb.checkpoints, mp.checkpoints);
         assert_eq!(mb.buffers, mp.buffers);
         assert_eq!(mb.activations, mp.activations);
+    }
+
+    #[test]
+    fn zero_stages_divide_state_per_rajbhandari() {
+        let shape = XModel::x160().shape();
+        let base = cfg(Strategy::Baseline, 483, 1, 1, 1, 5.0, true, false);
+        let m0 = MemoryBreakdown::evaluate(&shape, &base);
+        let mut z = base;
+        // Stage 1 and 2 shard the 8/12 of state that is Adam moments;
+        // stage 2 changes traffic, not residency, so they coincide here.
+        z.zero = 1;
+        let m1 = MemoryBreakdown::evaluate(&shape, &z);
+        z.zero = 2;
+        let m2 = MemoryBreakdown::evaluate(&shape, &z);
+        assert_eq!(m1.state, m2.state);
+        let want12 = m0.state * (4.0 + 8.0 / 483.0) / 12.0;
+        assert!((m1.state / want12 - 1.0).abs() < 1e-12);
+        // Stage 3 shards all 12 bytes: state / n_b, the partition's
+        // division along the dp axis alone (n_l = n_a = 1 here, so the
+        // two coincide).
+        z.zero = 3;
+        let m3 = MemoryBreakdown::evaluate(&shape, &z);
+        assert!((m0.state / m3.state - 483.0).abs() < 1e-6);
+        // Non-state categories are unaffected by ZeRO.
+        assert_eq!(m0.checkpoints, m3.checkpoints);
+        assert_eq!(m0.buffers, m3.buffers);
+        assert_eq!(m0.activations, m3.activations);
     }
 
     #[test]

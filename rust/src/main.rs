@@ -137,10 +137,13 @@ usage:
   repro figure <4|5|6|7|8>            [--max-x N]
   repro schedule [--policy baseline|improved|1f1b|interleaved] [--layers N]
                  [--stages N] [--mb N] [--tp N] [--chunks V] [--partition]
-                 [--offload] [--x N] [--width N]
+                 [--zero 0-3] [--offload] [--x N] [--width N]
   repro train [--preset tiny|e2e] [--dp N] [--pp N] [--tp N] [--mb N] [--steps N]
-              [--policy baseline|improved|1f1b] [--partition] [--lr F]
+              [--policy baseline|improved|1f1b] [--partition] [--zero 0-3] [--lr F]
               [--tp-emulate] [--offload] [--store DIR] [--resume] [--artifacts DIR]
+              (--zero shards optimizer state 1/dp ZeRO-style: stage 1 shards
+              Adam moments, 2 adds reduce-scattered gradients, 3 gathers
+              params before use; losses stay bit-identical to --zero 0)
   repro launch --ranks N [--tp T] [--dp D] [train flags...] [--probe] [--verify]
                [--coord-bind HOST:PORT] [--timeout-secs S] [--auth-token TOK]
                (pp = ranks / (tp*dp); forks one `repro worker` process per rank
@@ -163,7 +166,7 @@ usage:
                --probe instead SIGKILLs a real worker process over loopback
                and asserts the supervisor restarts it — artifact-free)
   repro plan [--x N] [--strategy S] [--menu M] [--ethernet|--unlimited-node]
-             [--budget-days D] [--no-sim] [--tp N] [--calibration FILE]
+             [--budget-days D] [--no-sim] [--tp N] [--zero 0-3] [--calibration FILE]
              [--mtbf HOURS] [--max-lost-work PCT]   (reliability-constrained:
              the fastest plan whose expected failure-rollback lost work
              stays under PCT% of wall clock at the given per-device MTBF)
@@ -185,17 +188,18 @@ usage:
                meets the SLO, or reports the binding constraint)
   repro verify [--policy baseline|improved|1f1b|interleaved|serve|all]
                [--spec LAYERS:STAGES:MB | --layers N --stages N --mb N]
-               [--dp N] [--tp N] [--partition] [--offload] [--chunks V]
-               [--prompt P] [--decode D]
+               [--dp N] [--tp N] [--partition] [--zero 0-3] [--offload]
+               [--chunks V] [--prompt P] [--decode D]
                [--x N] [--grid] [--ethernet|--unlimited-node]
                (whole-world static verification: composes the lowered
                program over every rank of the {stages, dp, tp} grid and
                checks p2p send/recv matching, collective congruence on
                every dp/tp ring, cross-rank deadlock freedom and the
                static peak-memory bound; --grid sweeps all policies
-               across stages x dp x tp x {plain, partition, offload},
-               plus the forward-only serving worlds — prefill + decode
-               at dp = 1 under the KV-aware memory bound)
+               across stages x dp x tp x {plain, partition, offload,
+               zero 1-3}, plus the forward-only serving worlds —
+               prefill + decode at dp = 1 under the KV-aware memory
+               bound)
 ";
 
 fn cmd_table(args: &Args) -> Result<()> {
@@ -279,6 +283,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     let x = args.get_usize("x", 32)?;
     let width = args.get_usize("width", 110)?;
     let tp = args.get_usize("tp", 1)?;
+    let zero = args.get_usize("zero", 0)? as u8;
     let spec = ScheduleSpec {
         d_l,
         n_l,
@@ -287,7 +292,9 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         partition: args.has("partition"),
         offload: args.has("offload"),
         data_parallel: true,
+        zero,
     };
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     let s = match policy {
         "baseline" => standard_ga(&spec),
         "improved" => {
@@ -320,6 +327,7 @@ fn cmd_schedule(args: &Args) -> Result<()> {
         b_mu: 1.0,
         offload: args.has("offload"),
         partition: args.has("partition"),
+        zero,
     };
     let costs = CostTable::new(&XModel::new(x).shape(), &cfg, &ClusterSpec::reference());
     let program = lower(&s).map_err(|e| anyhow::anyhow!("invalid schedule: {e:?}"))?;
@@ -356,6 +364,7 @@ fn trainer_config_from(args: &Args) -> Result<TrainerConfig> {
     cfg.n_mu = args.get_usize("mb", 2)?;
     cfg.steps = args.get_usize("steps", 20)?;
     cfg.partition = args.has("partition");
+    cfg.zero = args.get_usize("zero", 0)? as u8;
     cfg.offload = args.has("offload");
     cfg.resume = args.has("resume");
     if let Some(dir) = args.get("store") {
@@ -384,14 +393,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let cfg = trainer_config_from(args)?;
     let preset = &cfg.preset;
     println!(
-        "training preset={preset} dp={} pp={} tp={} mb={} policy={} partition={} offload={} \
-         steps={}",
+        "training preset={preset} dp={} pp={} tp={} mb={} policy={} partition={} zero={} \
+         offload={} steps={}",
         cfg.n_b,
         cfg.n_l,
         cfg.tp,
         cfg.n_mu,
         cfg.policy.name(),
         cfg.partition,
+        cfg.zero,
         cfg.offload,
         cfg.steps
     );
@@ -486,6 +496,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         ("--mb", cfg.n_mu.to_string()),
         ("--steps", cfg.steps.to_string()),
         ("--policy", cfg.policy.name().to_string()),
+        ("--zero", cfg.zero.to_string()),
         ("--lr", args.get("lr").unwrap_or("3e-3").to_string()),
         ("--artifacts", cfg.artifacts_root.display().to_string()),
     ]
@@ -777,7 +788,24 @@ fn cmd_plan(args: &Args) -> Result<()> {
         Some(v) => Some(v.parse::<usize>().with_context(|| format!("--tp {v}"))?),
         None => None,
     };
-    match lga_mpp::planner::search_fastest_tp(&model, &cluster, strategy, menu, tp) {
+    // --zero Z re-prices the whole candidate grid at one ZeRO stage
+    // (dropping the partitioned candidates — the shardings are mutually
+    // exclusive), so memory-bound configs a full-state plan cannot fit
+    // become feasible.
+    let zero = match args.get("zero") {
+        Some(v) => {
+            let z: u8 = v.parse().with_context(|| format!("--zero {v}"))?;
+            anyhow::ensure!(z <= 3, "--zero {z} out of range (ZeRO stages are 0-3)");
+            anyhow::ensure!(tp.is_none(), "--zero and --tp pin different sweeps; pick one");
+            Some(z)
+        }
+        None => None,
+    };
+    let searched = match zero {
+        Some(_) => lga_mpp::planner::search_fastest_zero(&model, &cluster, strategy, menu, zero),
+        None => lga_mpp::planner::search_fastest_tp(&model, &cluster, strategy, menu, tp),
+    };
+    match searched {
         Some(p) => {
             println!("{}", report::explain(&model, &cluster, &p.cfg));
             if !args.has("no-sim") {
@@ -898,6 +926,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let costs = ServeCosts::new(&shape, &cluster, stages, tp);
         let pre = lower(&prefill_pipeline(&spec))
@@ -1060,6 +1089,7 @@ fn verify_world(
         b_mu: 1.0,
         offload: spec.offload,
         partition: spec.partition,
+        zero: spec.zero,
     };
     let costs = CostTable::new(shape, &cfg, cluster);
     let memory = MemoryBreakdown::evaluate(shape, &cfg);
@@ -1087,13 +1117,14 @@ fn verify_world(
             }
             bail!(
                 "static verification FAILED for {policy} (layers {}, stages {}, mb {}, dp {dp}, \
-                 tp {}, partition {}, offload {}): {} error(s) above",
+                 tp {}, partition {}, offload {}, zero {}): {} error(s) above",
                 spec.d_l,
                 spec.n_l,
                 spec.n_mu,
                 spec.tp,
                 spec.partition,
                 spec.offload,
+                spec.zero,
                 errors.len(),
             )
         }
@@ -1142,8 +1173,17 @@ fn cmd_verify(args: &Args) -> Result<()> {
                 }
                 for dp in [1usize, 2] {
                     for tp in [1usize, 2] {
-                        for (partition, offload) in [(false, false), (true, false), (false, true)]
-                        {
+                        // The ZeRO worlds ride the same sweep: every
+                        // stage must compose clean over the dp ring the
+                        // reduce-scatter and all-gather rendezvous on.
+                        for (partition, offload, zero) in [
+                            (false, false, 0u8),
+                            (true, false, 0),
+                            (false, true, 0),
+                            (false, false, 1),
+                            (false, false, 2),
+                            (false, false, 3),
+                        ] {
                             let spec = ScheduleSpec {
                                 d_l,
                                 n_l: stages,
@@ -1152,6 +1192,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
                                 partition,
                                 offload,
                                 data_parallel: dp > 1,
+                                zero,
                             };
                             if verify_world(
                                 &cluster, &shape, policy, &spec, dp, chunks, false,
@@ -1169,7 +1210,7 @@ fn cmd_verify(args: &Args) -> Result<()> {
             println!(
                 "verified {verified} whole worlds clean ({skipped} inapplicable combinations \
                  skipped) across {} policies x stages {{1,2,3,4}} x dp {{1,2}} x tp {{1,2}} x \
-                 {{plain, partition, offload}}",
+                 {{plain, partition, offload, zero 1-3}}",
                 policies.len(),
             );
         }
@@ -1232,7 +1273,9 @@ fn cmd_verify(args: &Args) -> Result<()> {
         partition: args.has("partition"),
         offload: args.has("offload"),
         data_parallel: dp > 1,
+        zero: args.get_usize("zero", 0)? as u8,
     };
+    spec.validate().map_err(|e| anyhow::anyhow!(e))?;
     for policy in &policies {
         if !verify_world(&cluster, &shape, policy, &spec, dp, chunks, true)? {
             println!(

@@ -121,6 +121,7 @@ mod tests {
             b_mu: 1.0,
             offload: true,
             partition: true,
+            zero: 0,
         }
     }
 

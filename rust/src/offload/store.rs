@@ -37,10 +37,14 @@ pub const STORE_MAGIC: u64 = 0x4c47_4153_544f_5245;
 /// provenance (`tp`, `tp_rank`): with truly sharded layer compute every
 /// tp rank owns a *different* slice of the state, so records carry which
 /// shard layout they were written under and resume can re-shard across a
-/// tp change.
-pub const STORE_VERSION: u64 = 2;
-/// Header length in bytes: 11 u64 fields.
-const HEADER_U64S: usize = 11;
+/// tp change. v3 added the data-parallel sharding provenance (`zero`,
+/// `dp_rank`): which ZeRO stage the writer ran (0 also covers the
+/// modular partition and full slots) and which dp rank owned the shard —
+/// resume re-slices by `[lo, hi)` regardless, the provenance makes a
+/// store auditable across a dp/zero change.
+pub const STORE_VERSION: u64 = 3;
+/// Header length in bytes: 13 u64 fields.
+const HEADER_U64S: usize = 13;
 
 /// Slot id of one layer's state written by one tensor-parallel rank:
 /// each tp rank owns a disjoint block of `d_l + 3` slot ids, so shard
@@ -95,6 +99,13 @@ pub struct StateRecord {
     pub tp: u64,
     /// Which tp rank's shard this slot holds (0 when `tp` is 1).
     pub tp_rank: u64,
+    /// ZeRO stage (0–3) the writer ran under. 0 for full slots and for
+    /// the modular partition (whose shards are `[lo, hi)`-described the
+    /// same way).
+    pub zero: u64,
+    /// Data-parallel rank that owned this `[lo, hi)` shard (0 for full
+    /// slots).
+    pub dp_rank: u64,
     /// Parameter values over `[lo, hi)`.
     pub params: Vec<f32>,
     /// Adam first moment over `[lo, hi)`.
@@ -138,6 +149,9 @@ impl StateRecord {
         if self.tp == 0 || self.tp_rank >= self.tp {
             bail!("bad shard provenance: tp rank {} of {}", self.tp_rank, self.tp);
         }
+        if self.zero > 3 {
+            bail!("bad shard provenance: ZeRO stage {} (stages are 0-3)", self.zero);
+        }
         Ok(())
     }
 
@@ -157,6 +171,8 @@ impl StateRecord {
             self.global_mbs,
             self.tp,
             self.tp_rank,
+            self.zero,
+            self.dp_rank,
         ] {
             out.extend_from_slice(&x.to_le_bytes());
         }
@@ -182,11 +198,15 @@ impl StateRecord {
         }
         let (step, slot, lo, hi, total, adam_t) = (u(2), u(3), u(4), u(5), u(6), u(7));
         let (global_mbs, tp, tp_rank) = (u(8), u(9), u(10));
+        let (zero, dp_rank) = (u(11), u(12));
         if lo > hi || hi > total {
             bail!("bad record range [{lo}, {hi}) of {total}");
         }
         if tp == 0 || tp_rank >= tp {
             bail!("bad shard provenance: tp rank {tp_rank} of {tp}");
+        }
+        if zero > 3 {
+            bail!("bad shard provenance: ZeRO stage {zero} (stages are 0-3)");
         }
         let n = (hi - lo) as usize;
         let w = DType::F32.bytes();
@@ -210,6 +230,8 @@ impl StateRecord {
             global_mbs,
             tp,
             tp_rank,
+            zero,
+            dp_rank,
             params: floats(0),
             m: floats(1),
             v: floats(2),
@@ -594,6 +616,8 @@ mod tests {
             global_mbs: 4,
             tp: 1,
             tp_rank: 0,
+            zero: 0,
+            dp_rank: 0,
             params: vec![fill; n],
             m: vec![fill * 0.5; n],
             v: vec![fill * 0.25; n],
@@ -739,6 +763,23 @@ mod tests {
         assert!(r.to_bytes().is_err());
         let mut bad = b.clone();
         bad[8 * 10..8 * 11].copy_from_slice(&5u64.to_le_bytes());
+        assert!(StateRecord::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn zero_provenance_roundtrips_and_is_validated() {
+        let mut r = rec(1, 0, 4, 8, 16, 1.0);
+        r.zero = 2;
+        r.dp_rank = 3;
+        let b = r.to_bytes().unwrap();
+        let got = StateRecord::from_bytes(&b).unwrap();
+        assert_eq!(got, r);
+        assert_eq!((got.zero, got.dp_rank), (2, 3));
+        // An out-of-range ZeRO stage is rejected on both paths.
+        r.zero = 4;
+        assert!(r.to_bytes().is_err());
+        let mut bad = b;
+        bad[8 * 11..8 * 12].copy_from_slice(&7u64.to_le_bytes());
         assert!(StateRecord::from_bytes(&bad).is_err());
     }
 }

@@ -86,6 +86,10 @@ struct Key {
     partition: bool,
     offload: bool,
     data_parallel: bool,
+    /// ZeRO stage: stages emit different op shapes (≥2 swaps the
+    /// reduce, 1–2 vs 3 place the gathers differently), so each keys
+    /// its own program.
+    zero: u8,
 }
 
 impl Key {
@@ -99,6 +103,7 @@ impl Key {
             partition: spec.partition,
             offload: spec.offload,
             data_parallel: spec.data_parallel,
+            zero: spec.zero,
         }
     }
 }
@@ -220,6 +225,7 @@ mod tests {
             partition: true,
             offload: false,
             data_parallel: true,
+            zero: 0,
         }
     }
 

@@ -141,8 +141,20 @@ impl Candidates {
         if self.menu.data && (n_b as f64) * (n_mu as f64) * b_mu > self.bc * 1.001 {
             return None; // overshoots the batch budget
         }
-        let cfg =
-            TrainConfig { strategy: self.strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition };
+        let cfg = TrainConfig {
+            strategy: self.strategy,
+            n_b,
+            n_l,
+            n_a,
+            n_mu,
+            b_mu,
+            offload,
+            partition,
+            // The ZeRO axis enters the search through
+            // `search_fastest_zero`, which rewrites the enumerated grid
+            // — enumerating it here would break the frozen legacy order.
+            zero: 0,
+        };
         cfg.validate().ok()?;
         Some(cfg)
     }
@@ -322,6 +334,7 @@ mod tests {
                                     b_mu,
                                     offload,
                                     partition,
+                                    zero: 0,
                                 };
                                 if cfg.validate().is_err() {
                                     continue;

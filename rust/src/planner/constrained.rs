@@ -81,6 +81,7 @@ pub fn min_gpu_plan(
                         for _ in 0..12 {
                             let cfg = TrainConfig {
                                 strategy, n_b, n_l, n_a, n_mu, b_mu, offload, partition,
+                                zero: 0,
                             };
                             if cfg.validate().is_err() {
                                 break;

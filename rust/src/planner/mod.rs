@@ -63,7 +63,8 @@ pub use reliability::{
 };
 pub use rules::{fastest_plan, Plan, MAX_OVERHEAD};
 pub use search::{
-    search_fastest, search_fastest_exhaustive, search_fastest_tp, statically_valid,
+    search_fastest, search_fastest_exhaustive, search_fastest_tp, search_fastest_zero,
+    statically_valid,
 };
 pub use simloop::{
     lower_plan, plan_spec, rank_by_simulation, simulate_plan, simulate_plan_with, SimulatedPlan,

@@ -171,6 +171,7 @@ fn baseline_plan(model: &XModel, cluster: &ClusterSpec, menu: ParallelismMenu) -
             b_mu,
             offload,
             partition: false,
+            zero: 0,
         };
         let plan = Plan::build(model, cfg, cluster);
         if plan.fits_gpu(cluster) {
@@ -212,6 +213,7 @@ fn partitioned_plan(model: &XModel, cluster: &ClusterSpec, menu: ParallelismMenu
         b_mu,
         offload: false,
         partition: true,
+        zero: 0,
     };
     let mut plan = Plan::build(model, cfg, cluster);
     if !plan.fits_gpu(cluster) {
@@ -277,6 +279,7 @@ fn improved_plan(
             b_mu,
             offload: false,
             partition,
+            zero: 0,
         };
         let mut plan = Plan::build(model, cfg, cluster);
         if !plan.fits_gpu(cluster) {

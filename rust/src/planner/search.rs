@@ -93,6 +93,33 @@ pub fn search_fastest_tp(
     search_over(model, cluster, &cands)
 }
 
+/// [`search_fastest`] with the candidate grid moved to one ZeRO stage:
+/// the `repro plan --zero N` axis. `Some(z)` with z > 0 drops the
+/// partitioned candidates (the two state shardings are mutually
+/// exclusive) and re-prices the survivors at stage `z` — the memory
+/// model then shards the optimizer state 1/n_b and the cost table
+/// prices the reduce-scatter + all-gather volume. `Some(0)` / `None`
+/// leave the grid untouched (identical to `search_fastest`).
+pub fn search_fastest_zero(
+    model: &XModel,
+    cluster: &ClusterSpec,
+    strategy: Strategy,
+    menu: ParallelismMenu,
+    zero: Option<u8>,
+) -> Option<Plan> {
+    let mut cands: Vec<TrainConfig> =
+        Candidates::new(model, cluster, strategy, menu).collect();
+    if let Some(z) = zero {
+        if z > 0 {
+            cands.retain(|c| !c.partition);
+            for c in &mut cands {
+                c.zero = z;
+            }
+        }
+    }
+    search_over(model, cluster, &cands)
+}
+
 /// The retained serial reference: full cost-model evaluation of every
 /// enumerated candidate, no pruning, no threads. Kept so the parity
 /// tests can prove the optimised search changes nothing, and as the

@@ -75,6 +75,10 @@ pub fn plan_spec(d_l: usize, cfg: &TrainConfig) -> (TrainConfig, ScheduleSpec) {
         // the cost table only — sim/cost parity with the generators.
         offload: cfg.offload,
         data_parallel: cfg.n_b > 1,
+        // ZeRO plans simulate the ops they imply: ≥2 swaps the reduce
+        // for its reduce-scatter half, 1–2 gather post-step, 3 gathers
+        // before every use.
+        zero: cfg.zero,
     };
     (cfg, spec)
 }

@@ -119,6 +119,7 @@ pub fn verify_serving(
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let topo = Topology::new(stages, 1, tp);
     for (kind, tokens_per_fwd, context) in [

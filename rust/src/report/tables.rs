@@ -223,6 +223,7 @@ pub fn schedule_comparison(
         partition: false,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let cfg = TrainConfig {
         strategy: Strategy::Baseline,
@@ -233,6 +234,7 @@ pub fn schedule_comparison(
         b_mu: 1.0,
         offload: false,
         partition: false,
+        zero: 0,
     };
     let costs = CostTable::new(&XModel::new(x).shape(), &cfg, cluster);
     let mut schedules: Vec<Schedule> =

@@ -48,6 +48,14 @@ pub struct ScheduleSpec {
     pub offload: bool,
     /// Whether to emit data-parallel ReduceGrad ops (n_b > 1).
     pub data_parallel: bool,
+    /// ZeRO stage (0–3, Rajbhandari et al. 1910.02054) over the
+    /// data-parallel group. Stage ≥1 shards Adam state 1/dp and emits a
+    /// post-step `AllGatherParams` per layer; stage ≥2 additionally
+    /// replaces `ReduceGrad` with `ReduceScatterGrad`; stage 3 moves the
+    /// gather to before each use (FSDP-style) and drops the post-step
+    /// one. Mutually exclusive with `partition` (the paper's modular
+    /// state partition is the comparison baseline, not a composition).
+    pub zero: u8,
 }
 
 impl ScheduleSpec {
@@ -56,6 +64,32 @@ impl ScheduleSpec {
     /// either way the parameters must be staged.
     pub fn restores(&self) -> bool {
         self.partition || self.offload
+    }
+
+    /// The dp gradient-reduction op for one layer: a plain ring
+    /// all-reduce, or a reduce-scatter when ZeRO stage ≥2 leaves each dp
+    /// rank owning only its 1/dp slice of the reduced gradient.
+    pub fn reduce_op(&self, layer: usize) -> Op {
+        if self.data_parallel && self.zero >= 2 {
+            Op::ReduceScatterGrad { layer }
+        } else {
+            Op::ReduceGrad { layer }
+        }
+    }
+
+    /// Whether generators emit one post-step `AllGatherParams` per layer
+    /// (ZeRO stages 1–2 rebuild full params right after the sharded
+    /// optimizer update).
+    pub fn zero_gathers_post_step(&self) -> bool {
+        self.data_parallel && (self.zero == 1 || self.zero == 2)
+    }
+
+    /// Whether generators emit `AllGatherParams` before each use of a
+    /// layer (ZeRO stage 3 / FSDP gather-before-use) — the same emission
+    /// points as `RestoreParams`, so standard accumulation pays the
+    /// Figure 2 per-micro-batch gather pathology here too.
+    pub fn zero_gathers_before_use(&self) -> bool {
+        self.data_parallel && self.zero == 3
     }
 
     pub fn validate(&self) -> Result<(), String> {
@@ -67,6 +101,14 @@ impl ScheduleSpec {
         }
         if self.n_mu < self.n_l {
             return Err(format!("n_mu = {} < n_l = {} starves the pipeline", self.n_mu, self.n_l));
+        }
+        if self.zero > 3 {
+            return Err(format!("zero = {} out of range (ZeRO stages are 0-3)", self.zero));
+        }
+        if self.zero > 0 && self.partition {
+            return Err(
+                "ZeRO sharding and the modular state partition are mutually exclusive".into()
+            );
         }
         Ok(())
     }
@@ -90,6 +132,9 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
                 if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, spec.n_l) != stage {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
@@ -108,6 +153,9 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
                 if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, spec.n_l) != stage {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
@@ -121,7 +169,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
                 // Gradient complete only after the last micro-batch:
                 // the reduction bunches at the end (Figure 1 top).
                 if mb + 1 == spec.n_mu && (spec.data_parallel || spec.partition) {
-                    stage_ops.push(Op::ReduceGrad { layer: l });
+                    stage_ops.push(spec.reduce_op(l));
                 }
             }
         }
@@ -136,6 +184,9 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
             if spec.offload {
                 stage_ops.push(Op::OffloadStore { layer: l });
             }
+            if spec.zero_gathers_post_step() {
+                stage_ops.push(Op::AllGatherParams { layer: l });
+            }
         }
     }
     Schedule {
@@ -148,6 +199,7 @@ pub fn standard_ga(spec: &ScheduleSpec) -> Schedule {
         tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
+        zero: spec.zero,
     }
 }
 
@@ -164,6 +216,9 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         if spec.restores() {
             stage_ops.push(Op::RestoreParams { layer: l }); // once per layer!
         }
+        if spec.zero_gathers_before_use() {
+            stage_ops.push(Op::AllGatherParams { layer: l }); // once per layer!
+        }
         for mb in 0..spec.n_mu {
             stage_ops.push(Op::Fwd { layer: l, mb });
             if spec.tp > 1 {
@@ -175,6 +230,9 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         if spec.restores() {
             stage_ops.push(Op::RestoreParams { layer: l });
         }
+        if spec.zero_gathers_before_use() {
+            stage_ops.push(Op::AllGatherParams { layer: l });
+        }
         for mb in 0..spec.n_mu {
             stage_ops.push(Op::Bwd { layer: l, mb });
             if spec.tp > 1 {
@@ -184,13 +242,16 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         // Gradient for layer l is complete here — the reduction spreads
         // over the whole backward pass (Figure 1 bottom).
         if spec.data_parallel || spec.partition {
-            stage_ops.push(Op::ReduceGrad { layer: l });
+            stage_ops.push(spec.reduce_op(l));
         }
     }
     for l in 0..spec.d_l {
         stage_ops.push(Op::OptimStep { layer: l });
         if spec.offload {
             stage_ops.push(Op::OffloadStore { layer: l });
+        }
+        if spec.zero_gathers_post_step() {
+            stage_ops.push(Op::AllGatherParams { layer: l });
         }
     }
     Schedule {
@@ -203,6 +264,7 @@ pub fn layered_ga(spec: &ScheduleSpec) -> Schedule {
         tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
+        zero: spec.zero,
     }
 }
 
@@ -220,6 +282,9 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
         for &l in &layers {
             if spec.restores() {
                 stage_ops.push(Op::RestoreParams { layer: l }); // once per layer
+            }
+            if spec.zero_gathers_before_use() {
+                stage_ops.push(Op::AllGatherParams { layer: l }); // once per layer
             }
             for mb in 0..spec.n_mu {
                 if l > 0 {
@@ -241,6 +306,9 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
             if spec.restores() {
                 stage_ops.push(Op::RestoreParams { layer: l });
             }
+            if spec.zero_gathers_before_use() {
+                stage_ops.push(Op::AllGatherParams { layer: l });
+            }
             for mb in 0..spec.n_mu {
                 if l + 1 < spec.d_l {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
@@ -254,13 +322,16 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
                 }
             }
             if spec.data_parallel || spec.partition {
-                stage_ops.push(Op::ReduceGrad { layer: l });
+                stage_ops.push(spec.reduce_op(l));
             }
         }
         for &l in &layers {
             stage_ops.push(Op::OptimStep { layer: l });
             if spec.offload {
                 stage_ops.push(Op::OffloadStore { layer: l });
+            }
+            if spec.zero_gathers_post_step() {
+                stage_ops.push(Op::AllGatherParams { layer: l });
             }
         }
     }
@@ -274,6 +345,7 @@ pub fn modular_pipeline(spec: &ScheduleSpec) -> Schedule {
         tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
+        zero: spec.zero,
     }
 }
 
@@ -296,6 +368,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                 if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
@@ -313,6 +388,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                 if restore {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
@@ -324,7 +402,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
                     stage_ops.push(Op::SendGrad { layer: l, mb });
                 }
                 if last && (dp || spec.partition) {
-                    stage_ops.push(Op::ReduceGrad { layer: l });
+                    stage_ops.push(spec.reduce_op(l));
                 }
             }
         };
@@ -348,6 +426,9 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
             if spec.offload {
                 stage_ops.push(Op::OffloadStore { layer: l });
             }
+            if spec.zero_gathers_post_step() {
+                stage_ops.push(Op::AllGatherParams { layer: l });
+            }
         }
     }
     Schedule {
@@ -360,6 +441,7 @@ pub fn one_f_one_b(spec: &ScheduleSpec) -> Schedule {
         tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
+        zero: spec.zero,
     }
 }
 
@@ -435,6 +517,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                 if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l > 0 && assignment.stage_of(l - 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::RecvAct { layer: l, mb });
                 }
@@ -453,6 +538,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                 if spec.restores() {
                     stage_ops.push(Op::RestoreParams { layer: l });
                 }
+                if spec.zero_gathers_before_use() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
                 if l + 1 < spec.d_l && assignment.stage_of(l + 1, spec.d_l, n_l) != stage {
                     stage_ops.push(Op::RecvGrad { layer: l, mb });
                 }
@@ -466,7 +554,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                 bwd_done[l] += 1;
                 // Gradient complete after the layer's last micro-batch.
                 if bwd_done[l] == spec.n_mu && (spec.data_parallel || spec.partition) {
-                    stage_ops.push(Op::ReduceGrad { layer: l });
+                    stage_ops.push(spec.reduce_op(l));
                 }
             }
         };
@@ -498,6 +586,9 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
                 if spec.offload {
                     stage_ops.push(Op::OffloadStore { layer: l });
                 }
+                if spec.zero_gathers_post_step() {
+                    stage_ops.push(Op::AllGatherParams { layer: l });
+                }
             }
         }
     }
@@ -511,6 +602,7 @@ pub fn interleaved_1f1b(spec: &ScheduleSpec, chunks: usize) -> Schedule {
         tp: spec.tp,
         partitioned: spec.partition,
         offloaded: spec.offload,
+        zero: spec.zero,
     }
 }
 
@@ -519,7 +611,20 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true }
+        ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            tp: 1,
+            partition,
+            offload: false,
+            data_parallel: true,
+            zero: 0,
+        }
+    }
+
+    fn count_gather(s: &Schedule) -> usize {
+        s.count(|o| matches!(o, Op::AllGatherParams { .. }))
     }
 
     fn count_fwd(s: &Schedule) -> usize {
@@ -790,5 +895,67 @@ mod tests {
         // n_mu = 6 not divisible by n_l = 4.
         let sp = spec(16, 4, 6, false);
         interleaved_1f1b(&sp, 2);
+    }
+
+    #[test]
+    fn zero2_replaces_reduce_with_reduce_scatter_and_gathers_post_step() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.zero = 2;
+        for s in [standard_ga(&sp), modular_pipeline(&sp), one_f_one_b(&sp)] {
+            assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 0, "{}", s.name);
+            assert_eq!(s.count(|o| matches!(o, Op::ReduceScatterGrad { .. })), 8, "{}", s.name);
+            // One post-step gather per layer rebuilds full params.
+            assert_eq!(count_gather(&s), 8, "{}", s.name);
+            assert_eq!(s.zero, 2, "{}", s.name);
+        }
+        assert_eq!(count_gather(&interleaved_1f1b(&sp, 2)), 8);
+    }
+
+    #[test]
+    fn zero1_keeps_all_reduce_but_gathers_post_step() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.zero = 1;
+        let s = modular_pipeline(&sp);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 8);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceScatterGrad { .. })), 0);
+        assert_eq!(count_gather(&s), 8);
+    }
+
+    #[test]
+    fn zero3_gathers_keep_figure2_shape() {
+        // Stage 3 gathers before use, mirroring RestoreParams: standard
+        // GA pays per micro-batch (2·d_l·n_μ), LGA and the modular
+        // pipeline once per layer per pass (2·d_l) — no post-step gather.
+        let mut single = spec(6, 1, 10, false);
+        single.zero = 3;
+        assert_eq!(count_gather(&standard_ga(&single)), 2 * 6 * 10);
+        assert_eq!(count_gather(&layered_ga(&single)), 2 * 6);
+        let mut piped = spec(8, 4, 8, false);
+        piped.zero = 3;
+        let s = modular_pipeline(&piped);
+        assert_eq!(count_gather(&s), 2 * 8);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceScatterGrad { .. })), 8);
+    }
+
+    #[test]
+    fn zero_without_data_parallel_is_inert() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.data_parallel = false;
+        sp.zero = 2;
+        let s = modular_pipeline(&sp);
+        assert_eq!(count_gather(&s), 0);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceScatterGrad { .. })), 0);
+        assert_eq!(s.count(|o| matches!(o, Op::ReduceGrad { .. })), 0);
+    }
+
+    #[test]
+    fn zero_spec_validation() {
+        let mut sp = spec(8, 4, 8, true);
+        sp.zero = 1;
+        assert!(sp.validate().is_err(), "zero + partition must be rejected");
+        sp.partition = false;
+        assert!(sp.validate().is_ok());
+        sp.zero = 4;
+        assert!(sp.validate().is_err(), "zero stages beyond 3 must be rejected");
     }
 }

@@ -49,6 +49,14 @@ pub enum Op {
     /// Optimizer update for one layer (runs once the layer's gradients
     /// are reduced; negligible compute in the paper's accounting).
     OptimStep { layer: usize },
+    /// ZeRO stage ≥2 gradient reduction: ring reduce-scatter over the
+    /// data-parallel group — afterwards each dp rank owns only its
+    /// contiguous 1/dp slice of the layer's reduced gradient.
+    ReduceScatterGrad { layer: usize },
+    /// ZeRO all-gather of one layer's parameters over the data-parallel
+    /// group: post-step (stages 1–2) to rebuild full params from the
+    /// owned slices, or gather-before-use (stage 3, FSDP-style).
+    AllGatherParams { layer: usize },
 }
 
 impl Op {
@@ -81,7 +89,9 @@ impl Op {
             | Op::RestoreParams { layer }
             | Op::TensorAllReduce { layer, .. }
             | Op::OffloadStore { layer }
-            | Op::OptimStep { layer } => layer,
+            | Op::OptimStep { layer }
+            | Op::ReduceScatterGrad { layer }
+            | Op::AllGatherParams { layer } => layer,
         }
     }
 }
@@ -102,6 +112,8 @@ impl fmt::Display for Op {
             }
             Op::OffloadStore { layer } => write!(f, "O{layer}"),
             Op::OptimStep { layer } => write!(f, "U{layer}"),
+            Op::ReduceScatterGrad { layer } => write!(f, "S{layer}"),
+            Op::AllGatherParams { layer } => write!(f, "A{layer}"),
         }
     }
 }
@@ -171,6 +183,11 @@ pub struct Schedule {
     /// over the CPU link and OffloadStore ops stream the post-step state
     /// back out — the §8.2 real-time checkpoint path).
     pub offloaded: bool,
+    /// ZeRO stage (0–3) the schedule was generated for: stage ≥1 shards
+    /// Adam state 1/dp, stage ≥2 replaces `ReduceGrad` with
+    /// `ReduceScatterGrad`, stage 3 moves the post-step
+    /// `AllGatherParams` to gather-before-use.
+    pub zero: u8,
 }
 
 impl Schedule {
@@ -252,6 +269,8 @@ mod tests {
         assert!(Op::SendAct { layer: 0, mb: 0 }.is_transfer());
         assert!(Op::ReduceGrad { layer: 0 }.is_transfer());
         assert!(Op::RestoreParams { layer: 0 }.is_transfer());
+        assert!(Op::ReduceScatterGrad { layer: 0 }.is_transfer());
+        assert!(Op::AllGatherParams { layer: 0 }.is_transfer());
         // Serialised with the layer math (C.4.3) — compute-side.
         assert!(Op::TensorAllReduce { layer: 0, mb: 0, bwd: true }.is_compute());
     }
@@ -260,5 +279,7 @@ mod tests {
     fn display_is_compact() {
         assert_eq!(Op::Fwd { layer: 3, mb: 1 }.to_string(), "F3.1");
         assert_eq!(Op::ReduceGrad { layer: 7 }.to_string(), "R7");
+        assert_eq!(Op::ReduceScatterGrad { layer: 2 }.to_string(), "S2");
+        assert_eq!(Op::AllGatherParams { layer: 5 }.to_string(), "A5");
     }
 }

@@ -17,7 +17,11 @@
 //!   stage (wire time is charged on the sender);
 //! * **restore-before-use** — `Fwd`/`Bwd` of layer `l` depend on the
 //!   latest preceding `RestoreParams(l)` on their stage, when present;
-//! * **reduce-after-last-bwd** — `ReduceGrad(l)` depends on every local
+//! * **gather-before-use** — likewise for the latest preceding
+//!   `AllGatherParams(l)` (ZeRO stage 3); a post-step gather (stages
+//!   1–2) instead depends on its layer's `OptimStep`;
+//! * **reduce-after-last-bwd** — `ReduceGrad(l)` (and its ZeRO ≥2
+//!   replacement `ReduceScatterGrad(l)`) depends on every local
 //!   `Bwd(l, ·)`;
 //! * **optim-after-reduce** — `OptimStep(l)` depends on the stage's
 //!   `ReduceGrad(l)` when present, else on every local `Bwd(l, ·)`;
@@ -71,8 +75,14 @@ impl Stream {
     pub fn of(op: &Op) -> Stream {
         match op {
             Op::Fwd { .. } | Op::Bwd { .. } | Op::OptimStep { .. } => Stream::Compute,
-            Op::SendAct { .. } | Op::SendGrad { .. } | Op::ReduceGrad { .. } => Stream::NetOut,
-            Op::RecvAct { .. } | Op::RecvGrad { .. } | Op::RestoreParams { .. } => Stream::NetIn,
+            Op::SendAct { .. }
+            | Op::SendGrad { .. }
+            | Op::ReduceGrad { .. }
+            | Op::ReduceScatterGrad { .. } => Stream::NetOut,
+            Op::RecvAct { .. }
+            | Op::RecvGrad { .. }
+            | Op::RestoreParams { .. }
+            | Op::AllGatherParams { .. } => Stream::NetIn,
             // Serialised with compute (C.4.3).
             Op::TensorAllReduce { .. } => Stream::Compute,
             Op::OffloadStore { .. } => Stream::CpuLink,
@@ -118,6 +128,8 @@ pub struct ScheduleProgram {
     pub tp: usize,
     pub partitioned: bool,
     pub offloaded: bool,
+    /// ZeRO stage (0–3) inherited from the source [`Schedule`].
+    pub zero: u8,
     /// Flat arena, stage-major, each stage's ops in source order.
     pub ops: Vec<ProgOp>,
     /// Run queues: `queues[stage][stream_index]` lists op ids in issue
@@ -347,7 +359,7 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                 recv_grad.entry((l + 1, mb)).or_insert(id);
                 grad_producer.entry((stage, l + 1, mb)).or_insert(id);
             }
-            Op::ReduceGrad { layer: l } => {
+            Op::ReduceGrad { layer: l } | Op::ReduceScatterGrad { layer: l } => {
                 reduce_id.entry((stage, l)).or_insert(id);
             }
             Op::OptimStep { layer: l } => {
@@ -437,6 +449,11 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
     for stage in 0..s.n_stages {
         // Latest preceding RestoreParams per layer, positional.
         let mut last_restore: HashMap<usize, u32> = HashMap::new();
+        // Latest preceding AllGatherParams per layer (ZeRO stage 3
+        // gather-before-use), positional — post-step gathers come after
+        // every compute op of their stage and are never "latest
+        // preceding" for one.
+        let mut last_gather: HashMap<usize, u32> = HashMap::new();
         for node in &ops[stage_starts[stage]..stage_starts[stage + 1]] {
             let id = node.id;
             let mut missing = |needs: String| {
@@ -450,6 +467,17 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                 Op::RestoreParams { layer } => {
                     last_restore.insert(layer, id);
                 }
+                Op::AllGatherParams { layer } => {
+                    last_gather.insert(layer, id);
+                    // A post-step gather (ZeRO 1–2) redistributes the
+                    // freshly updated owned slices: it must wait for the
+                    // layer's optimizer update when that precedes it.
+                    if let Some(&u) = optim_id.get(&(stage, layer)) {
+                        if u < id {
+                            edges.push((u, id));
+                        }
+                    }
+                }
                 Op::Fwd { layer, mb } => {
                     if layer > 0 {
                         match eff_act(stage, layer - 1, mb) {
@@ -459,6 +487,9 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                     }
                     if let Some(&r) = last_restore.get(&layer) {
                         edges.push((r, id));
+                    }
+                    if let Some(&g) = last_gather.get(&layer) {
+                        edges.push((g, id));
                     }
                 }
                 Op::Bwd { layer, mb } => {
@@ -477,6 +508,9 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                     }
                     if let Some(&r) = last_restore.get(&layer) {
                         edges.push((r, id));
+                    }
+                    if let Some(&g) = last_gather.get(&layer) {
+                        edges.push((g, id));
                     }
                 }
                 Op::SendAct { layer, mb } => match eff_act(stage, layer, mb) {
@@ -500,10 +534,12 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
                         edges.push((p, id));
                     }
                 }
-                Op::ReduceGrad { layer } => match bwd_ids.get(&(stage, layer)) {
-                    Some(ids) => edges.extend(ids.iter().map(|&b| (b, id))),
-                    None => missing(format!("backward ops of layer {layer}")),
-                },
+                Op::ReduceGrad { layer } | Op::ReduceScatterGrad { layer } => {
+                    match bwd_ids.get(&(stage, layer)) {
+                        Some(ids) => edges.extend(ids.iter().map(|&b| (b, id))),
+                        None => missing(format!("backward ops of layer {layer}")),
+                    }
+                }
                 Op::OptimStep { layer } => {
                     if let Some(&r) = reduce_id.get(&(stage, layer)) {
                         edges.push((r, id));
@@ -588,6 +624,7 @@ pub fn lower(s: &Schedule) -> Result<ScheduleProgram, Vec<ScheduleError>> {
         tp: s.tp,
         partitioned: s.partitioned,
         offloaded: s.offloaded,
+        zero: s.zero,
         ops,
         queues,
         preds,
@@ -626,7 +663,16 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, partition: bool) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true }
+        ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            tp: 1,
+            partition,
+            offload: false,
+            data_parallel: true,
+            zero: 0,
+        }
     }
 
     #[test]
@@ -729,6 +775,7 @@ mod tests {
             tp: 1,
             partitioned: false,
             offloaded: false,
+            zero: 0,
         };
         let errs = lower(&s).unwrap_err();
         assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");
@@ -762,6 +809,7 @@ mod tests {
             tp: 1,
             partitioned: false,
             offloaded: false,
+            zero: 0,
         };
         let p = lower(&s).expect("per-stream model accepts this schedule");
         assert!(
@@ -828,6 +876,59 @@ mod tests {
         let tarb1 = p.find(|o| *o == Op::TensorAllReduce { layer: 1, mb: 0, bwd: true }).unwrap();
         let bwd0 = p.find(|o| *o == Op::Bwd { layer: 0, mb: 0 }).unwrap();
         assert!(p.preds_of(bwd0).contains(&tarb1));
+        p.check_inorder_executable().unwrap();
+    }
+
+    #[test]
+    fn zero2_reduce_scatter_feeds_optim_and_post_step_gather() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.zero = 2;
+        let p = lower(&modular_pipeline(&sp)).unwrap();
+        assert_eq!(p.zero, 2);
+        for l in 0..8 {
+            let rs = p.find(|o| *o == Op::ReduceScatterGrad { layer: l }).unwrap();
+            // The reduce-scatter waits for every local backward.
+            assert_eq!(p.preds_of(rs).len(), 8, "layer {l}");
+            // The optimizer step consumes the owned gradient slice.
+            let optim = p.find(|o| *o == Op::OptimStep { layer: l }).unwrap();
+            assert_eq!(p.preds_of(optim), &[rs][..], "layer {l}");
+            // The post-step gather redistributes the updated slice.
+            let gather = p.find(|o| *o == Op::AllGatherParams { layer: l }).unwrap();
+            assert_eq!(p.preds_of(gather), &[optim][..], "layer {l}");
+        }
+        p.check_inorder_executable().unwrap();
+    }
+
+    #[test]
+    fn zero3_gather_before_use_is_wired_like_restore() {
+        let mut sp = spec(8, 4, 8, false);
+        sp.zero = 3;
+        let p = lower(&modular_pipeline(&sp)).unwrap();
+        // Every Fwd/Bwd depends on the latest preceding gather of its
+        // layer; the pre-use gathers precede the optimizer step, so no
+        // OptimStep edge (and no cycle) exists.
+        for node in p.ops.iter() {
+            if let Op::Fwd { layer, .. } | Op::Bwd { layer, .. } = node.op {
+                let gathers: Vec<u32> = p
+                    .preds_of(node.id)
+                    .iter()
+                    .copied()
+                    .filter(|&x| matches!(p.ops[x as usize].op, Op::AllGatherParams { .. }))
+                    .collect();
+                assert_eq!(gathers.len(), 1, "{}", node.op);
+                assert!(matches!(
+                    p.ops[gathers[0] as usize].op,
+                    Op::AllGatherParams { layer: l } if l == layer
+                ));
+            }
+            if let Op::AllGatherParams { .. } = node.op {
+                // Stage-3 gathers precede the step: no OptimStep pred.
+                assert!(p
+                    .preds_of(node.id)
+                    .iter()
+                    .all(|&x| !matches!(p.ops[x as usize].op, Op::OptimStep { .. })));
+            }
+        }
         p.check_inorder_executable().unwrap();
     }
 

@@ -101,6 +101,7 @@ pub fn prefill_pipeline(spec: &ScheduleSpec) -> Schedule {
         tp: spec.tp,
         partitioned: false,
         offloaded: false,
+        zero: 0,
     }
 }
 
@@ -153,6 +154,7 @@ pub fn decode_waves(spec: &ScheduleSpec, tokens: usize) -> Schedule {
         tp: spec.tp,
         partitioned: false,
         offloaded: false,
+        zero: 0,
     }
 }
 
@@ -169,7 +171,16 @@ mod tests {
     use super::*;
 
     fn spec(d_l: usize, n_l: usize, n_mu: usize, tp: usize) -> ScheduleSpec {
-        ScheduleSpec { d_l, n_l, n_mu, tp, partition: false, offload: false, data_parallel: false }
+        ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            tp,
+            partition: false,
+            offload: false,
+            data_parallel: false,
+            zero: 0,
+        }
     }
 
     #[test]

@@ -56,6 +56,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         }
     }
 
@@ -73,6 +74,7 @@ mod tests {
                             partition,
                             offload,
                             data_parallel: true,
+                            zero: 0,
                         };
                         if n_l == 1 {
                             validate(&layered_ga(&sp)).expect("layered");
@@ -102,6 +104,7 @@ mod tests {
                             partition,
                             offload,
                             data_parallel: true,
+                            zero: 0,
                         };
                         validate(&interleaved_1f1b(&sp, chunks))
                             .unwrap_or_else(|e| panic!("{d_l}/{n_l}/{n_mu} v={chunks}: {e:?}"));
@@ -156,6 +159,7 @@ mod tests {
             tp: 1,
             partitioned: false,
             offloaded: false,
+            zero: 0,
         };
         let errs = validate(&s).unwrap_err();
         assert!(errs.iter().any(|e| matches!(e, ScheduleError::Cycle { .. })), "{errs:?}");

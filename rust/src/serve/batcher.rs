@@ -66,6 +66,7 @@ impl<'a> ServeCosts<'a> {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         }
     }
 
@@ -83,6 +84,7 @@ impl<'a> ServeCosts<'a> {
             b_mu: tokens_per_fwd as f64 / self.shape.d_s as f64,
             offload: false,
             partition: false,
+            zero: 0,
         };
         CostTable::new(self.shape, &cfg, self.cluster)
     }

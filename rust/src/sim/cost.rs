@@ -21,6 +21,12 @@ pub struct CostTable {
     pub send_act: f64,
     pub send_grad: f64,
     pub reduce_grad: f64,
+    /// ZeRO ≥2 gradient reduce-scatter: the first half of the ring
+    /// all-reduce, so exactly half its bytes and rounds.
+    pub reduce_scatter_grad: f64,
+    /// ZeRO parameter all-gather (post-step for stages 1–2, before use
+    /// for stage 3): the second half of the ring all-reduce.
+    pub all_gather_params: f64,
     pub restore_params: f64,
     pub offload_store: f64,
     pub optim_step: f64,
@@ -51,6 +57,8 @@ pub struct WireBytes {
     pub send_act: f64,
     pub send_grad: f64,
     pub reduce_grad: f64,
+    pub reduce_scatter_grad: f64,
+    pub all_gather_params: f64,
     pub restore_params: f64,
     pub offload_store: f64,
     pub tp_all_reduce_fwd: f64,
@@ -64,6 +72,8 @@ impl WireBytes {
             Op::SendAct { .. } => self.send_act,
             Op::SendGrad { .. } => self.send_grad,
             Op::ReduceGrad { .. } => self.reduce_grad,
+            Op::ReduceScatterGrad { .. } => self.reduce_scatter_grad,
+            Op::AllGatherParams { .. } => self.all_gather_params,
             Op::RestoreParams { .. } => self.restore_params,
             Op::OffloadStore { .. } => self.offload_store,
             Op::TensorAllReduce { bwd, .. } => {
@@ -156,6 +166,17 @@ impl CostTable {
         let store_bytes = if cfg.offload { restore_bytes } else { 0.0 };
         let offload_store = store_bytes / cpu_bw;
 
+        // ZeRO collectives: a reduce-scatter is the first half of the
+        // ring all-reduce, the parameter all-gather the second — each
+        // moves 2 bytes · (n_b−1)/n_b per parameter over n_b−1 rounds.
+        // Their sum equals the plain all-reduce, which is the stage-2
+        // invariant the traffic tables assert.
+        let zero_half_bytes = if cfg.zero > 0 && n_b > 1.0 { 2.0 * p_l / n_a * ring } else { 0.0 };
+        let zero_half = zero_half_bytes / inter_bw
+            + if cfg.zero > 0 && n_b > 1.0 { ring_rounds * inter_lat } else { 0.0 };
+        let reduce_scatter_grad = zero_half;
+        let all_gather_params = zero_half;
+
         // Tensor-parallel all-reduces (C.4.3): six per layer per
         // micro-batch — 2 forward, 4 backward (recompute included) —
         // amortised into one op per phase. The reduced tensor is the
@@ -185,6 +206,8 @@ impl CostTable {
             send_act: act_bytes,
             send_grad: act_bytes,
             reduce_grad: if n_b > 1.0 || cfg.partition { reduce_bytes } else { 0.0 },
+            reduce_scatter_grad: zero_half_bytes,
+            all_gather_params: zero_half_bytes,
             // Both restore paths move bytes when both apply (the duration
             // takes the max because the links run in parallel; the volume
             // is the sum).
@@ -200,6 +223,8 @@ impl CostTable {
             send_act,
             send_grad,
             reduce_grad,
+            reduce_scatter_grad,
+            all_gather_params,
             restore_params,
             offload_store,
             optim_step,
@@ -227,6 +252,8 @@ impl CostTable {
             // wire time is charged on the sender side.
             Op::RecvAct { .. } | Op::RecvGrad { .. } => 0.0,
             Op::ReduceGrad { .. } => self.reduce_grad,
+            Op::ReduceScatterGrad { .. } => self.reduce_scatter_grad,
+            Op::AllGatherParams { .. } => self.all_gather_params,
             Op::RestoreParams { .. } => self.restore_params,
             Op::OffloadStore { .. } => self.offload_store,
             Op::OptimStep { .. } => self.optim_step,
@@ -274,6 +301,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition: true,
+            zero: 0,
         };
         (shape, cfg, ClusterSpec::reference())
     }
@@ -338,6 +366,34 @@ mod tests {
             (measured / closed - 1.0).abs() < 0.01,
             "tp overhead {measured:.5} vs closed form {closed:.5}"
         );
+    }
+
+    #[test]
+    fn zero_reduce_scatter_plus_gather_equals_all_reduce() {
+        let (shape, mut cfg, cluster) = setup();
+        cfg.partition = false;
+        cfg.strategy = Strategy::Baseline;
+        let plain = CostTable::new(&shape, &cfg, &cluster);
+        cfg.zero = 2;
+        let z = CostTable::new(&shape, &cfg, &cluster);
+        // Stage-2 invariant: splitting the all-reduce into its two ring
+        // halves moves exactly the same total volume and time.
+        let rs = Op::ReduceScatterGrad { layer: 0 };
+        let ag = Op::AllGatherParams { layer: 0 };
+        let ar = Op::ReduceGrad { layer: 0 };
+        assert!(z.wire_bytes(&rs) > 0.0);
+        assert!(
+            (z.wire_bytes(&rs) + z.wire_bytes(&ag) - plain.wire_bytes(&ar)).abs() < 1e-9,
+            "reduce-scatter + all-gather must equal the all-reduce volume"
+        );
+        assert!((z.duration(&rs) + z.duration(&ag) - plain.duration(&ar)).abs() < 1e-12);
+        // Element accounting follows the same convention.
+        assert!(
+            (z.wire_elements(&rs) + z.wire_elements(&ag) - plain.wire_elements(&ar)).abs() < 1e-9
+        );
+        // zero = 0 prices the ops at nothing (they are never emitted).
+        assert_eq!(plain.wire_bytes(&rs), 0.0);
+        assert_eq!(plain.duration(&ag), 0.0);
     }
 
     #[test]

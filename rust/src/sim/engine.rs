@@ -168,7 +168,8 @@ impl SimResult {
             .fold(0.0, f64::max)
     }
 
-    /// Largest gap (seconds) between consecutive `ReduceGrad` completions
+    /// Largest gap (seconds) between consecutive gradient-reduction
+    /// completions (`ReduceGrad`, or `ReduceScatterGrad` under ZeRO ≥2)
     /// — small for LGA (spread over the backward pass), large for
     /// standard GA (bunched at the end). Needs a recorded timeline
     /// (`record_timeline: true`); reports 0 otherwise.
@@ -176,7 +177,7 @@ impl SimResult {
         let mut ends: Vec<f64> = self
             .timeline
             .iter()
-            .filter(|t| matches!(t.op, Op::ReduceGrad { .. }))
+            .filter(|t| matches!(t.op, Op::ReduceGrad { .. } | Op::ReduceScatterGrad { .. }))
             .map(|t| t.end)
             .collect();
         if ends.len() < 2 {
@@ -562,6 +563,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition,
+            zero: 0,
         };
         CostTable::new(&shape, &cfg, &ClusterSpec::reference())
     }
@@ -576,6 +578,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let s = standard_ga(&sp);
         let r = simulate(&s, &costs(1, 1, 4, false));
@@ -602,6 +605,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let s = standard_ga(&sp);
         let r = simulate(&s, &compute_only(&costs(1, 4, 8, false)));
@@ -623,6 +627,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let s = modular_pipeline(&sp);
         let r = simulate(&s, &compute_only(&costs(1, 4, 8, false)));
@@ -646,6 +651,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let s = modular_pipeline(&sp);
         let p = crate::schedule::lower(&s).unwrap();
@@ -667,6 +673,7 @@ mod tests {
             partition: true,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         let s = modular_pipeline(&sp);
         let p = crate::schedule::lower(&s).unwrap();
@@ -694,6 +701,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         let s = standard_ga(&sp);
         let p = crate::schedule::lower(&s).unwrap();
@@ -722,6 +730,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let naive = simulate(&standard_ga(&sp), &c);
         let modular = simulate(&modular_pipeline(&sp), &c);
@@ -750,6 +759,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let c = compute_only(&costs(1, 4, 8, false));
         let fb = simulate(&one_f_one_b(&sp), &c).bubble_fraction();
@@ -776,6 +786,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition: false,
+            zero: 0,
         };
         let c2 = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
         assert!(c2.tp_all_reduce_fwd > 0.0 && c2.tp_all_reduce_bwd > 0.0);
@@ -787,6 +798,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let tp_run = simulate(&modular_pipeline(&sp), &c2);
         sp.tp = 1;
@@ -815,6 +827,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let c = costs(1, 4, 16, false);
         let gpipe = simulate(&standard_ga(&sp), &c);
@@ -840,6 +853,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         let c = costs(8, 1, 8, false);
         let std_r = simulate(&standard_ga(&sp), &c);
@@ -867,6 +881,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let c = costs(1, 4, 4, false);
         let r = simulate(&modular_pipeline(&sp), &c);
@@ -911,6 +926,7 @@ mod tests {
             partition: true,
             offload: true,
             data_parallel: true,
+            zero: 0,
         };
         let p = lower(&modular_pipeline(&sp)).unwrap();
         (p, costs(4, 4, 4, true))

@@ -114,6 +114,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let s = if modular { modular_pipeline(&sp) } else { standard_ga(&sp) };
         let cfg = TrainConfig {
@@ -125,6 +126,7 @@ mod tests {
             b_mu: 1.0,
             offload: false,
             partition: false,
+            zero: 0,
         };
         let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &ClusterSpec::reference());
         render(&simulate(&s, &costs), 100)
@@ -151,6 +153,7 @@ mod tests {
             partition: false,
             offload: false,
             data_parallel: false,
+            zero: 0,
         };
         let program = lower(&decode_waves(&sp, 3)).unwrap();
         let cfg = TrainConfig {
@@ -162,6 +165,7 @@ mod tests {
             b_mu: 1.0 / 256.0,
             offload: false,
             partition: false,
+            zero: 0,
         };
         let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &ClusterSpec::reference());
         let result = simulate_program(&program, &costs);

@@ -32,7 +32,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
+use crate::costmodel::{MemoryBreakdown, Strategy, TrainConfig};
 use crate::elastic::cluster_schedule;
+use crate::hardware::ClusterSpec;
 use crate::model::XModel;
 use crate::sim::Xorshift;
 
@@ -83,6 +85,36 @@ fn clamp_to_divisor(g: usize, target: usize) -> usize {
     (1..=g).filter(|d| g % d == 0 && *d <= target.max(1)).max().unwrap_or(1)
 }
 
+/// Grow a revived data-parallel degree to the smallest divisor of `g`
+/// (at least `n_b`) whose re-sharded optimizer state fits `budget`
+/// bytes per device. The elastic suggestion is throughput-driven and
+/// knows nothing about state feasibility: shrinking dp concentrates
+/// the 1/dp ZeRO (or partition) shards onto fewer devices, and a
+/// revive that cannot hold its own optimizer state is dead on arrival.
+fn clamp_to_state_budget(model: &XModel, g: usize, n_b: usize, budget: f64) -> usize {
+    let shape = model.shape();
+    (n_b..=g)
+        .filter(|d| g % d == 0)
+        .find(|&d| {
+            let cfg = TrainConfig {
+                strategy: Strategy::Improved,
+                n_b: d,
+                n_l: 1,
+                n_a: 1,
+                n_mu: g / d,
+                b_mu: 1.0,
+                offload: false,
+                partition: false,
+                // Stages 1–2 are the most state-hungry sharded shape
+                // (params replicated, only the moments split 1/dp), so
+                // a dp that holds them holds every stage.
+                zero: 2,
+            };
+            MemoryBreakdown::evaluate(&shape, &cfg).state <= budget
+        })
+        .unwrap_or(g)
+}
+
 /// Generate a deterministic chaos schedule: `kills` rank kills at
 /// seeded steps, each reviving under a topology suggested by the §8.1
 /// elastic cluster schedule at that point of training (clamped to a
@@ -95,14 +127,19 @@ pub fn seeded_plan(seed: u64, steps: usize, n_b: usize, n_mu: usize, kills: usiz
     let span = steps.saturating_sub(1).max(1);
     let mut rng = Xorshift::new(seed);
     // The elastic schedule says how many workers training *wants* at
-    // each progress fraction; a kill at step s revives onto that size.
-    let sched = cluster_schedule(&XModel::new(32), g, steps.max(1), 0.05);
+    // each progress fraction; a kill at step s revives onto that size,
+    // grown if needed until the re-sharded optimizer state fits the
+    // reference device budget (the clamp draws nothing from the rng,
+    // so old seeds replay the same fault sequence).
+    let model = XModel::new(32);
+    let budget = ClusterSpec::reference().gpu.memory_bytes;
+    let sched = cluster_schedule(&model, g, steps.max(1), 0.05);
     let mut events = Vec::with_capacity(kills + 1);
     for _ in 0..kills {
         let at_step = 1 + (rng.next_u64() as usize) % span;
         let rank = (rng.next_u64() as usize) % g;
         let suggested = sched[at_step.min(sched.len() - 1)].1;
-        let n_b2 = clamp_to_divisor(g, suggested);
+        let n_b2 = clamp_to_state_budget(&model, g, clamp_to_divisor(g, suggested), budget);
         let tp = 1 + (rng.next_u64() % 2) as usize;
         events.push(ChaosEvent::Kill {
             at_step,
@@ -362,6 +399,25 @@ mod tests {
         assert_eq!(clamp_to_divisor(8, 1), 1);
         assert_eq!(clamp_to_divisor(8, 0), 1);
         assert_eq!(clamp_to_divisor(6, 4), 3);
+    }
+
+    #[test]
+    fn state_budget_clamp_grows_dp_until_the_shards_fit() {
+        let model = XModel::new(32);
+        // A generous budget leaves the suggestion alone.
+        assert_eq!(clamp_to_state_budget(&model, 8, 2, f64::INFINITY), 2);
+        // A budget that only fits the fully-spread shards forces dp up
+        // to the full group.
+        assert_eq!(clamp_to_state_budget(&model, 8, 1, 0.0), 8);
+        // In between, the clamp lands on the smallest divisor whose
+        // zero-2 state term fits: (4 + 8/dp)·p per device.
+        let p = model.params();
+        let mid = (4.0 + 8.0 / 4.0) * p; // fits at dp = 4, not below
+        assert_eq!(clamp_to_state_budget(&model, 8, 1, mid), 4);
+        // The result always divides the global batch.
+        for b in [0.0, mid, f64::INFINITY] {
+            assert_eq!(8 % clamp_to_state_budget(&model, 8, 1, b), 0);
+        }
     }
 
     #[test]

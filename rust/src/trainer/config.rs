@@ -53,6 +53,12 @@ pub struct TrainerConfig {
     pub policy: Policy,
     /// ZeRO-3-style state partition over the data-parallel group.
     pub partition: bool,
+    /// ZeRO stage (0–3, Rajbhandari et al.) over the data-parallel
+    /// group: stage ≥1 shards the Adam moments 1/dp and rebuilds full
+    /// params with a post-step all-gather, stage ≥2 reduce-scatters the
+    /// gradients instead of all-reducing, stage 3 gathers params before
+    /// each use (FSDP-style). Mutually exclusive with `partition`.
+    pub zero: u8,
     /// Stream the training state to a checkpoint store after every
     /// optimizer step (§8.2 real-time checkpoints): the schedule gains
     /// RestoreParams/OffloadStore ops and the workers execute them.
@@ -83,6 +89,7 @@ impl TrainerConfig {
             force_tp_emulation: false,
             policy: Policy::Improved,
             partition: false,
+            zero: 0,
             offload: false,
             store_dir: None,
             resume: false,
@@ -102,6 +109,7 @@ impl TrainerConfig {
             partition: self.partition,
             offload: self.offload,
             data_parallel: self.n_b > 1,
+            zero: self.zero,
         };
         match (self.policy, self.n_l) {
             (Policy::Improved, 1) => layered_ga(&spec),
@@ -148,6 +156,26 @@ mod tests {
         assert_eq!(
             s.count(|o| matches!(o, crate::schedule::Op::TensorAllReduce { .. })),
             2 * 2 * 2,
+        );
+    }
+
+    #[test]
+    fn zero_flag_reaches_the_schedule() {
+        let mut c = TrainerConfig::quick("tiny");
+        c.n_mu = 2;
+        c.n_b = 2;
+        c.zero = 2;
+        let s = c.build_schedule(2);
+        assert_eq!(s.zero, 2);
+        assert_eq!(
+            s.count(|o| matches!(o, crate::schedule::Op::ReduceScatterGrad { .. })),
+            2,
+            "one reduce-scatter per layer"
+        );
+        assert_eq!(
+            s.count(|o| matches!(o, crate::schedule::Op::AllGatherParams { .. })),
+            2,
+            "one post-step gather per layer"
         );
     }
 

@@ -146,6 +146,11 @@ fn prepare(cfg: &TrainerConfig) -> Result<Prepared> {
         cfg.n_l
     );
     anyhow::ensure!(cfg.tp >= 1, "tensor-parallel degree must be at least 1");
+    anyhow::ensure!(cfg.zero <= 3, "ZeRO stages are 0-3, got {}", cfg.zero);
+    anyhow::ensure!(
+        cfg.zero == 0 || !cfg.partition,
+        "--zero and --partition are mutually exclusive ways to shard the state"
+    );
     // Sharded vs emulated tensor parallelism, decided once for every
     // worker: truly sharded compute needs the manifest's `_tp<d>`
     // half-layer artifacts and per-shard shapes.
@@ -251,6 +256,7 @@ fn worker_ctx(cfg: &TrainerConfig, p: &Prepared, world: CommWorld) -> WorkerCtx 
         start_step: p.start_step,
         lr: cfg.lr,
         partition: cfg.partition,
+        zero: cfg.zero,
         offload: cfg.offload,
         tp_sharded: p.tp_sharded,
         ckpt_tp: p.ckpt_tp,

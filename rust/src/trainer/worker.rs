@@ -73,6 +73,11 @@ pub struct WorkerCtx {
     pub start_step: usize,
     pub lr: LrSchedule,
     pub partition: bool,
+    /// ZeRO stage (0–3) over the dp group: stage ≥1 sizes the Adam
+    /// moments to the owned 1/dp range (the schedule carries the
+    /// matching `ReduceScatterGrad`/`AllGatherParams` ops). Mutually
+    /// exclusive with `partition`.
+    pub zero: u8,
     /// Whether the schedule streams real-time checkpoints
     /// (`OffloadStore` ops write to `store`).
     pub offload: bool,
@@ -299,6 +304,8 @@ fn store_full_slot(
         global_mbs,
         tp: tp as u64,
         tp_rank: tp_rank as u64,
+        zero: 0,
+        dp_rank: 0,
         params: params.to_vec(),
         m: m.to_vec(),
         v: v.to_vec(),
@@ -380,7 +387,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
         };
         params.insert(l, mine);
         grads.insert(l, vec![0.0; slot_total]);
-        let n = if ctx.partition && n_b > 1 {
+        let n = if (ctx.partition || ctx.zero >= 1) && n_b > 1 {
             let (a, b) = shard.owned_range(dp_rank);
             b - a
         } else {
@@ -460,7 +467,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                 }
             };
             params.insert(l, p);
-            let a = if ctx.partition && n_b > 1 {
+            let a = if (ctx.partition || ctx.zero >= 1) && n_b > 1 {
                 let (lo, hi) = shard.owned_range(dp_rank);
                 Adam::from_state(
                     AdamConfig::default(),
@@ -580,6 +587,18 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
             match op {
                 Op::RestoreParams { layer } => {
                     if ctx.partition && n_b > 1 {
+                        ctx.world.dp_group().all_gather_owned(params.get_mut(&layer).unwrap());
+                        param_cache.remove(&(layer, 0));
+                        param_cache.remove(&(layer, 1));
+                    }
+                }
+                Op::AllGatherParams { layer } => {
+                    // ZeRO 1–2 post-step gather (redistributes the owned
+                    // 1/dp slices each rank just updated) and ZeRO 3
+                    // gather-before-use share one op: both rebuild the
+                    // full parameter buffer from the dp group's owned
+                    // chunks, identical to the partition's RestoreParams.
+                    if n_b > 1 {
                         ctx.world.dp_group().all_gather_owned(params.get_mut(&layer).unwrap());
                         param_cache.remove(&(layer, 0));
                         param_cache.remove(&(layer, 1));
@@ -875,6 +894,24 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         }
                     }
                 }
+                Op::ReduceScatterGrad { layer } => {
+                    // ZeRO ≥2: each rank keeps only the fully-reduced
+                    // owned chunk — the same ring rounds as the
+                    // all-reduce's first half, so the owned values are
+                    // bitwise the all-reduce's (the zero ↔ zero=0 parity
+                    // hinges on this; see collective::ring).
+                    let g = grads.get_mut(&layer).unwrap();
+                    let scale = 1.0 / (n_b as f32 * n_mu as f32);
+                    for v in g.iter_mut() {
+                        *v *= scale;
+                    }
+                    if let Some(sl) = &slayout {
+                        tp_reduce_spans(ctx.world.tp_group(), g, sl.grad_tp_spans());
+                    }
+                    if n_b > 1 {
+                        ctx.world.dp_group().reduce_scatter(g);
+                    }
+                }
                 Op::OptimStep { layer } => {
                     let lr = ctx.lr.lr(step as u64);
                     let p = params.get_mut(&layer).unwrap();
@@ -899,7 +936,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                             *v *= scale;
                         }
                     }
-                    if ctx.partition && n_b > 1 {
+                    if (ctx.partition || ctx.zero >= 1) && n_b > 1 {
                         let (lo, hi) = shard.owned_range(dp_rank);
                         a.step(&mut p[lo..hi], &g[lo..hi], lr);
                     } else {
@@ -933,7 +970,7 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                         .context("offload schedule without a checkpoint store")?;
                     let global_mbs = (n_b * n_mu) as u64;
                     let slot = slot_layer(d_l, state_tp_rank, layer);
-                    if ctx.partition && n_b > 1 {
+                    if (ctx.partition || ctx.zero >= 1) && n_b > 1 {
                         let (lo, hi) = shard.owned_range(dp_rank);
                         let (am, av, at) = adam.get(&layer).unwrap().state();
                         store.put(&StateRecord {
@@ -946,6 +983,8 @@ pub fn run_worker(mut ctx: WorkerCtx) -> Result<WorkerStats> {
                             global_mbs,
                             tp: state_tp as u64,
                             tp_rank: state_tp_rank as u64,
+                            zero: ctx.zero as u64,
+                            dp_rank: dp_rank as u64,
                             params: params[&layer][lo..hi].to_vec(),
                             m: am.to_vec(),
                             v: av.to_vec(),

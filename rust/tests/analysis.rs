@@ -20,7 +20,16 @@ use lga_mpp::schedule::{
 use lga_mpp::sim::{CostTable, WireBytes};
 
 fn spec(d_l: usize, n_l: usize, n_mu: usize, tp: usize) -> ScheduleSpec {
-    ScheduleSpec { d_l, n_l, n_mu, tp, partition: false, offload: false, data_parallel: true }
+    ScheduleSpec {
+        d_l,
+        n_l,
+        n_mu,
+        tp,
+        partition: false,
+        offload: false,
+        data_parallel: true,
+        zero: 0,
+    }
 }
 
 fn program(s: &Schedule) -> ScheduleProgram {
@@ -37,6 +46,7 @@ fn costs_for(sp: &ScheduleSpec, dp: usize) -> CostTable {
         b_mu: 1.0,
         offload: sp.offload,
         partition: sp.partition,
+        zero: 0,
     };
     CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
 }
@@ -211,6 +221,7 @@ fn all_generators_compose_to_accepted_worlds() {
                         partition,
                         offload,
                         data_parallel: dp > 1,
+                        zero: 0,
                     };
                     let schedules: Vec<(&str, Option<Schedule>)> = vec![
                         ("standard_ga", Some(standard_ga(&sp))),
@@ -237,6 +248,7 @@ fn all_generators_compose_to_accepted_worlds() {
                             b_mu: 1.0,
                             offload,
                             partition,
+                            zero: 0,
                         };
                         let memory = MemoryBreakdown::evaluate(&shape, &cfg);
                         let budget =
@@ -285,6 +297,7 @@ fn serving_grid_composes_to_accepted_worlds() {
                     partition: false,
                     offload: false,
                     data_parallel: false,
+                    zero: 0,
                 };
                 let kv =
                     KvCacheModel::new(&shape, stages, tp, DType::F32, cluster.gpu.memory_bytes);
@@ -303,6 +316,7 @@ fn serving_grid_composes_to_accepted_worlds() {
                         b_mu: tokens as f64 / shape.d_s as f64,
                         offload: false,
                         partition: false,
+                        zero: 0,
                     };
                     let costs = CostTable::new(&shape, &cfg, &cluster);
                     let budget = MemoryModel::serving(&kv, &costs, cap, context, tokens);

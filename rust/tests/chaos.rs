@@ -63,6 +63,7 @@ fn offloaded_program() -> (ScheduleProgram, CostTable) {
         partition: true,
         offload: true,
         data_parallel: true,
+        zero: 0,
     };
     let cfg = TrainConfig {
         strategy: Strategy::Improved,
@@ -73,6 +74,7 @@ fn offloaded_program() -> (ScheduleProgram, CostTable) {
         b_mu: 1.0,
         offload: true,
         partition: true,
+        zero: 0,
     };
     let costs = CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference());
     let p = lower(&modular_pipeline(&spec)).expect("offloaded modular pipeline lowers");

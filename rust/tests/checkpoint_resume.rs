@@ -43,6 +43,7 @@ fn figure2_restore_store_ratio_on_the_offload_path() {
         partition: false,
         offload: true,
         data_parallel: true,
+        zero: 0,
     };
     let std_p = lower(&standard_ga(&spec)).expect("standard lowers");
     let mod_p = lower(&modular_pipeline(&spec)).expect("modular lowers");

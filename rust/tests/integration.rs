@@ -27,6 +27,7 @@ fn simulator_validates_costmodel_bubble() {
                 b_mu: 1.0,
                 offload: false,
                 partition: false,
+                zero: 0,
             };
             let spec = ScheduleSpec {
                 d_l: shape.d_l,
@@ -36,6 +37,7 @@ fn simulator_validates_costmodel_bubble() {
                 partition: false,
                 offload: false,
                 data_parallel: false,
+                zero: 0,
             };
             let sched = if improved { modular_pipeline(&spec) } else { standard_ga(&spec) };
             validate(&sched).unwrap();
@@ -81,6 +83,7 @@ fn planned_improved_config_simulates_efficiently() {
         partition: cfg.partition,
         offload: cfg.offload,
         data_parallel: cfg.n_b > 1,
+        zero: 0,
     };
     let sched = modular_pipeline(&spec);
     let costs = CostTable::new(&model.shape(), &cfg, &cluster);
@@ -146,6 +149,7 @@ fn simulator_memory_matches_costmodel_checkpoints() {
         b_mu,
         offload: false,
         partition: false,
+        zero: 0,
     };
     let spec = ScheduleSpec {
         d_l: shape.d_l,
@@ -155,6 +159,7 @@ fn simulator_memory_matches_costmodel_checkpoints() {
         partition: false,
         offload: false,
         data_parallel: false,
+        zero: 0,
     };
     let costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
     let r = simulate(&standard_ga(&spec), &costs);
@@ -183,6 +188,7 @@ fn estimate_monotonicity_properties() {
         b_mu: 1.0,
         offload: false,
         partition: true,
+        zero: 0,
     };
     let e1 = estimate(&model, &base, &cluster);
     let mut tp = base;
@@ -207,8 +213,16 @@ fn property_random_schedules_validate_and_simulate() {
         let n_l = [1usize, 2, 4, 8, 16][rng.below(5)];
         let n_mu = n_l + rng.below(12);
         let partition = rng.below(2) == 1;
-        let spec =
-            ScheduleSpec { d_l: 16, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true };
+        let spec = ScheduleSpec {
+            d_l: 16,
+            n_l,
+            n_mu,
+            tp: 1,
+            partition,
+            offload: false,
+            data_parallel: true,
+            zero: 0,
+        };
         let cfg = TrainConfig {
             strategy: Strategy::Improved,
             n_b: 4,
@@ -218,6 +232,7 @@ fn property_random_schedules_validate_and_simulate() {
             b_mu: 1.0,
             offload: false,
             partition,
+            zero: 0,
         };
         let costs = CostTable::new(&shape, &cfg, &ClusterSpec::reference());
         let schedules = if n_l == 1 {

@@ -77,6 +77,7 @@ fn cost_table(n_b: usize, n_l: usize, n_mu: usize, partition: bool) -> CostTable
         b_mu: 1.0,
         offload: false,
         partition,
+        zero: 0,
     };
     CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
 }
@@ -87,8 +88,16 @@ fn timeline_off_reports_bit_identical_metrics() {
     let shapes: [(usize, usize, usize, bool); 4] =
         [(16, 4, 8, false), (64, 8, 16, true), (160, 5, 32, true), (128, 32, 128, false)];
     for (d_l, n_l, n_mu, partition) in shapes {
-        let spec =
-            ScheduleSpec { d_l, n_l, n_mu, tp: 1, partition, offload: false, data_parallel: true };
+        let spec = ScheduleSpec {
+            d_l,
+            n_l,
+            n_mu,
+            tp: 1,
+            partition,
+            offload: false,
+            data_parallel: true,
+            zero: 0,
+        };
         let costs = cost_table(8, n_l, n_mu, partition);
         for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
             let program = lower(&schedule).expect("generated schedules lower");
@@ -129,6 +138,7 @@ fn offload_cost_table(n_l: usize, n_mu: usize) -> CostTable {
         b_mu: 1.0,
         offload: true,
         partition: false,
+        zero: 0,
     };
     CostTable::new(&XModel::new(32).shape(), &cfg, &ClusterSpec::reference())
 }
@@ -147,6 +157,7 @@ fn offload_only_specs_emit_and_charge_restores_and_stores() {
         partition: false,
         offload: true,
         data_parallel: false,
+        zero: 0,
     };
     let costs = offload_cost_table(4, 8);
     assert!(costs.restore_params > 0.0, "offload restores must not be free");
@@ -186,6 +197,7 @@ fn non_offload_programs_are_unchanged() {
             partition,
             offload: false,
             data_parallel: true,
+            zero: 0,
         };
         for schedule in [modular_pipeline(&spec), standard_ga(&spec), one_f_one_b(&spec)] {
             let p = lower(&schedule).expect("lowers");
@@ -322,6 +334,7 @@ fn calibrated_link_changes_wire_costs_and_plan_pricing() {
         b_mu: 1.0,
         offload: false,
         partition: true,
+        zero: 0,
     };
     let shape = XModel::new(32).shape();
     let tq = CostTable::new(&shape, &cfg, &quoted);
@@ -348,6 +361,7 @@ fn calibrated_link_changes_wire_costs_and_plan_pricing() {
         b_mu: 1.0,
         offload: false,
         partition: false,
+        zero: 0,
     };
     let eq = estimate(&model, &net_bound, &quoted);
     let em = estimate(&model, &net_bound, &measured);
@@ -374,6 +388,7 @@ fn scratch_reuse_across_programs_changes_nothing() {
         partition: true,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let spec_b = ScheduleSpec {
         d_l: 16,
@@ -383,6 +398,7 @@ fn scratch_reuse_across_programs_changes_nothing() {
         partition: false,
         offload: false,
         data_parallel: true,
+        zero: 0,
     };
     let prog_a = lower(&modular_pipeline(&spec_a)).unwrap();
     let prog_b = lower(&standard_ga(&spec_b)).unwrap();
@@ -407,4 +423,51 @@ fn scratch_reuse_across_programs_changes_nothing() {
         assert_eq!(b.peak_memory, ref_b.peak_memory);
         scratch.recycle(b);
     }
+}
+
+#[test]
+fn zero_pinned_search_preserves_parity_and_unlocks_memory_bound_configs() {
+    // The zero axis must not disturb the frozen legacy grid: pinning
+    // zero = 0 (or not pinning) is exactly the unrestricted search.
+    // Pinning zero > 0 re-prices the same grid with the optimizer
+    // state sharded 1/dp — which makes memory-bound configurations
+    // feasible that no full-state plan can inhabit.
+    use lga_mpp::costmodel::{MemoryBreakdown, ParallelismMenu};
+    use lga_mpp::planner::{search_fastest_zero, statically_valid};
+
+    let cluster = ClusterSpec::reference();
+    let model = XModel::new(64);
+    let menu = ParallelismMenu::THREE_D;
+    let legacy = search_fastest(&model, &cluster, Strategy::Improved, menu);
+    let z0 = search_fastest_zero(&model, &cluster, Strategy::Improved, menu, Some(0));
+    let unpinned = search_fastest_zero(&model, &cluster, Strategy::Improved, menu, None);
+    assert_eq!(legacy.as_ref().map(|p| p.cfg), z0.map(|p| p.cfg));
+    assert_eq!(legacy.map(|p| p.cfg), unpinned.map(|p| p.cfg));
+
+    // X_58 on the data-parallel-only menu is memory-bound: zero = 0
+    // shards nothing, so the 12 B/param state (~88 GiB) exceeds the
+    // 80 GiB device at *any* dp, while ZeRO-2 splits the moments 1/dp
+    // and fits.
+    let model = XModel::new(58);
+    let menu = ParallelismMenu::DATA;
+    let plan = search_fastest_zero(&model, &cluster, Strategy::Improved, menu, Some(2))
+        .expect("a zero-2 plan fits the memory-bound config");
+    assert_eq!(plan.cfg.zero, 2);
+    assert!(!plan.cfg.partition, "the two state shardings are mutually exclusive");
+    assert!(plan.cfg.n_b > 1, "sharding needs a dp group");
+    let budget = cluster.gpu.memory_bytes;
+    let m2 = MemoryBreakdown::evaluate(&model.shape(), &plan.cfg);
+    assert!(m2.gpu_resident(plan.cfg.offload) <= budget);
+    // The identical shape without the sharding cannot live on the
+    // device (offload aside â the point is the resident state).
+    let m0 = MemoryBreakdown::evaluate(&model.shape(), &TrainConfig { zero: 0, ..plan.cfg });
+    assert!(
+        m0.gpu_resident(false) > budget,
+        "zero = 0 resident {:.1} GiB should exceed the {:.1} GiB device",
+        m0.gpu_resident(false) / (1u64 << 30) as f64,
+        budget / (1u64 << 30) as f64
+    );
+    // And the selected plan proves out under the whole-world static
+    // verifier â the same checks `repro verify` runs before launch.
+    statically_valid(&model, &cluster, &plan).expect("zero plan verifies clean");
 }

@@ -34,6 +34,7 @@ fn grid() -> Vec<ScheduleSpec> {
                             partition,
                             offload,
                             data_parallel,
+                            zero: 0,
                         });
                     }
                 }
@@ -186,6 +187,7 @@ fn lowered_programs_simulate_without_deadlock() {
             b_mu: 1.0,
             offload: spec.offload,
             partition: spec.partition,
+            zero: 0,
         };
         let costs = CostTable::new(&XModel::new(16).shape(), &cfg, &cluster);
         for s in generated(&spec) {
@@ -212,6 +214,7 @@ fn program_edges_are_within_arena_and_acyclicity_witness_exists() {
         partition: true,
         offload: true,
         data_parallel: true,
+        zero: 0,
     };
     let p = lower(&modular_pipeline(&spec)).unwrap();
     let n = p.len() as u32;

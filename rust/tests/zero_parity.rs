@@ -1,0 +1,232 @@
+//! ZeRO state-sharding execution parity, memory and resume accounting,
+//! end to end on the real trainer (artifacts-gated; skipped when the
+//! PJRT artifacts are absent).
+//!
+//! The contract mirrors `tp_parity.rs` for the new axis:
+//!
+//! 1. **Bitwise loss parity** — a zero ∈ {1,2,3} run's loss trajectory
+//!    must equal the zero = 0 run's **bit for bit**, including combined
+//!    with pipeline, data and (emulated) tensor parallelism. The ring
+//!    reduce-scatter keeps exactly the chunks the all-reduce would have
+//!    produced, each rank updates only its owned slice, and the
+//!    all-gather redistributes the identical updated values.
+//! 2. **Measured state slope** — per-rank Adam moments shrink to the
+//!    owned 1/dp range (stage ≥ 1), so the measured
+//!    `max_layer_state_bytes` drops from 12 to (4 + 8/dp) bytes per
+//!    parameter while params stay replicated.
+//! 3. **Elastic resume across a zero change** — checkpoints written
+//!    under zero = 2 carry `[lo, hi)` shard provenance; a zero = 0
+//!    resume reassembles the full state and continues the trajectory,
+//!    and the reverse direction re-slices full records to the owned
+//!    range.
+
+use std::path::PathBuf;
+
+use lga_mpp::optim::LrSchedule;
+use lga_mpp::schedule::{lower, Op};
+use lga_mpp::trainer::{train, TrainerConfig};
+
+fn have_artifacts() -> bool {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/tiny/manifest.json").exists()
+}
+
+fn base(steps: usize) -> TrainerConfig {
+    let mut c = TrainerConfig::quick("tiny");
+    c.steps = steps;
+    c.n_mu = 2;
+    c.lr = LrSchedule::constant(3e-3);
+    c
+}
+
+fn assert_bitwise_loss_match(a: &TrainerConfig, b: &TrainerConfig, label: &str) {
+    let ra = train(a).unwrap();
+    let rb = train(b).unwrap();
+    assert_eq!(ra.losses.len(), rb.losses.len(), "{label}");
+    for (i, (x, y)) in ra.losses.iter().zip(&rb.losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label} step {i}: {x} vs {y}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bitwise parity.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_stages_match_zero0_bitwise_single_stage_dp2() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut a = base(6);
+    a.n_b = 2;
+    for z in 1..=3u8 {
+        let mut b = a.clone();
+        b.zero = z;
+        assert_bitwise_loss_match(&a, &b, &format!("zero={z}"));
+    }
+}
+
+#[test]
+fn zero_stages_match_zero0_bitwise_across_pipeline_dp_tp() {
+    if !have_artifacts() {
+        return;
+    }
+    // tiny has 2 layers: modular pipeline x data parallel x (emulated)
+    // tensor parallel — the emulation is bitwise-exact, so the whole
+    // combo must stay bitwise too.
+    for (n_l, n_b, tp) in [(2usize, 2usize, 1usize), (1, 2, 2), (2, 2, 2)] {
+        let mut a = base(4);
+        a.n_l = n_l;
+        a.n_b = n_b;
+        a.tp = tp;
+        a.force_tp_emulation = tp > 1;
+        for z in 1..=3u8 {
+            let mut b = a.clone();
+            b.zero = z;
+            assert_bitwise_loss_match(
+                &a,
+                &b,
+                &format!("n_l={n_l} n_b={n_b} tp={tp} zero={z}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn zero_is_inert_without_data_parallelism() {
+    if !have_artifacts() {
+        return;
+    }
+    // At dp = 1 there is no group to shard over: the schedule emits no
+    // ZeRO ops and the run is the zero = 0 run.
+    let mut cfg = base(2);
+    cfg.zero = 2;
+    let program = lower(&cfg.build_schedule(2)).expect("schedule lowers");
+    assert_eq!(
+        program.count(|o| {
+            matches!(o, Op::ReduceScatterGrad { .. } | Op::AllGatherParams { .. })
+        }),
+        0
+    );
+    let mut plain = base(2);
+    plain.zero = 0;
+    assert_bitwise_loss_match(&plain, &cfg, "dp=1 zero=2");
+    // At dp = 2 the ops appear.
+    let mut dp = cfg.clone();
+    dp.n_b = 2;
+    let program = lower(&dp.build_schedule(2)).expect("schedule lowers");
+    assert!(
+        program.count(|o| {
+            matches!(o, Op::ReduceScatterGrad { .. } | Op::AllGatherParams { .. })
+        }) > 0
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Measured state slope.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_layer_state_shards_the_adam_moments_measured() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut full = base(2);
+    full.n_b = 2;
+    let r0 = train(&full).unwrap();
+    for z in 1..=3u8 {
+        let mut sharded = full.clone();
+        sharded.zero = z;
+        let rz = train(&sharded).unwrap();
+        // Params (4 B/param) stay replicated across the dp group in
+        // this runtime (stage 3 gathers them before every use); the
+        // Adam moments (8 B/param) split 1/dp: 12 -> 4 + 8/2 = 8.
+        let ratio = rz.max_layer_state_bytes as f64 / r0.max_layer_state_bytes as f64;
+        assert!(
+            ratio > 0.64 && ratio < 0.70,
+            "zero={z}: sharded layer state {} vs full {} (ratio {ratio:.4}, want ~2/3)",
+            rz.max_layer_state_bytes,
+            r0.max_layer_state_bytes
+        );
+        assert!(rz.max_state_bytes < r0.max_state_bytes, "zero={z}");
+    }
+    // dp = 1: nothing to shard, identical footprint.
+    let mut solo = base(2);
+    solo.zero = 2;
+    let r1 = train(&solo).unwrap();
+    let rbase = train(&base(2)).unwrap();
+    assert_eq!(r1.max_layer_state_bytes, rbase.max_layer_state_bytes);
+}
+
+// ---------------------------------------------------------------------------
+// Elastic resume across a zero change.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero2_to_zero0_resume_round_trips() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir_down = std::env::temp_dir()
+        .join(format!("lga_zero_resume_down_{}", std::process::id()));
+    let dir_up = std::env::temp_dir()
+        .join(format!("lga_zero_resume_up_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir_down);
+    let _ = std::fs::remove_dir_all(&dir_up);
+
+    // Uninterrupted zero = 0 reference (bitwise-equal to the zero = 2
+    // trajectory by the parity tests above).
+    let mut uninterrupted = base(6);
+    uninterrupted.n_b = 2;
+    let reference = train(&uninterrupted).unwrap();
+
+    // zero = 2 -> zero = 0: the prefix streams [lo, hi) shard records
+    // per dp rank; the resume assembles the complete cover back into
+    // full state.
+    let mut first = base(3);
+    first.n_b = 2;
+    first.zero = 2;
+    first.offload = true;
+    first.store_dir = Some(dir_down.clone());
+    train(&first).unwrap();
+    let mut second = base(6);
+    second.n_b = 2;
+    second.zero = 0;
+    second.offload = true;
+    second.store_dir = Some(dir_down.clone());
+    second.resume = true;
+    let rd = train(&second).unwrap();
+    assert_eq!(rd.start_step, 3, "resume from the last complete step");
+    for (i, (x, y)) in rd.losses.iter().zip(&reference.losses[3..]).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-12,
+            "zero 2->0 resumed step {}: {x} vs {y}",
+            3 + i
+        );
+    }
+
+    // zero = 0 -> zero = 2: full records re-slice to each rank's owned
+    // Adam range.
+    let mut first = base(3);
+    first.n_b = 2;
+    first.offload = true;
+    first.store_dir = Some(dir_up.clone());
+    train(&first).unwrap();
+    let mut second = base(6);
+    second.n_b = 2;
+    second.zero = 2;
+    second.offload = true;
+    second.store_dir = Some(dir_up.clone());
+    second.resume = true;
+    let ru = train(&second).unwrap();
+    assert_eq!(ru.start_step, 3, "resume from the last complete step");
+    for (i, (x, y)) in ru.losses.iter().zip(&reference.losses[3..]).enumerate() {
+        assert!(
+            (x - y).abs() < 1e-12,
+            "zero 0->2 resumed step {}: {x} vs {y}",
+            3 + i
+        );
+    }
+
+    let _ = std::fs::remove_dir_all(&dir_down);
+    let _ = std::fs::remove_dir_all(&dir_up);
+}
